@@ -1,0 +1,54 @@
+//! Heterogeneous-CNN workload (paper Sec. 4.2 "MobileNetV3 Results"):
+//! MSQ on a MobileNetV3-style network — depthwise convolutions and
+//! squeeze-and-excitation blocks are the architecturally hard case for
+//! mixed-precision quantization (tiny per-layer parameter counts, widely
+//! varying sensitivity).
+//!
+//! ```sh
+//! cargo run --release --example mobilenet_msq -- [--epochs 8]
+//! ```
+
+use msq::coordinator::{MsqConfig, Trainer};
+use msq::data::{Dataset, DatasetSpec};
+use msq::runtime::Engine;
+use msq::util::cli::Args;
+use msq::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["epochs", "train-size"]);
+    let eng = Engine::new()?;
+    let pool = ThreadPool::new(ThreadPool::default_size());
+    let ds = Dataset::generate(
+        DatasetSpec::in64_syn(args.opt_usize("train-size", 1024), 256, 42),
+        &pool,
+    );
+    let epochs = args.opt_usize("epochs", 8);
+    let cfg = MsqConfig {
+        model: "mbv3s".into(),
+        method: "msq".into(),
+        epochs,
+        interval: (epochs / 4).max(1), // paper: I = 5 for MobileNetV3
+        gamma: 10.3,                   // paper Table 5's MSQ compression point
+        lam: 5e-4,                     // paper 5e-5 scaled for the short schedule
+        alpha: 0.3,
+        lr0: 0.01,
+        batch: 64,
+        eval_every: (epochs / 2).max(1),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&eng, cfg)?;
+    let report = trainer.run(&ds)?;
+
+    println!("\n=== mobilenet (depthwise + SE) summary ===");
+    println!("final acc  : {:.1}%", report.final_acc * 100.0);
+    println!("compression: {:.2}x (paper: 10.30x @ 73.58%)", report.final_compression);
+    // depthwise vs pointwise final precision — the heterogeneity the paper
+    // highlights: tiny depthwise layers tend to keep more bits
+    let meta = eng.manifest.find("mbv3s", "msq", "train")?;
+    println!("\nper-layer scheme (name: bits):");
+    for (q, &b) in meta.q_layers.iter().zip(&report.final_bits) {
+        println!("  {:>22} [{:>7}] -> {} bits", q.name, q.numel, b);
+    }
+    report.save(&msq::metrics::results_dir().join("mobilenet_msq.json"))?;
+    Ok(())
+}

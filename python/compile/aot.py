@@ -1,0 +1,233 @@
+"""AOT pipeline (S9): lower every (model × method × fn) step graph to HLO
+text and emit the artifact manifest + initial parameters.
+
+HLO **text** (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out-dir`` (default ``artifacts/``):
+
+* ``{model}_{method}_{fn}_b{batch}.hlo.txt`` — one XLA program each
+* ``{model}_{method}.init.npz``              — initial trainable params
+  (entries ``t000.<name>``) and frozen consts (``c000.<name>``), in
+  registration order (the order the artifact's flat inputs expect)
+* ``manifest.json``                          — every artifact's I/O
+  descriptors, q-layer tables, trainable-param counts
+
+Python runs ONCE: ``make artifacts`` skips everything that is already
+up-to-date (mtime vs this package's sources) unless ``--force``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+
+BITSPLIT_MODELS = ["mlp", "resnet20", "resnet18s", "resnet50s"]
+ALL_MODELS = [
+    "mlp", "resnet20", "resnet18s", "resnet50s", "mbv3s",
+    "vit_t", "vit_s", "swinlite", "vit_m",
+]
+FIG6_BATCHES = [64, 128, 512, 1024]
+
+
+def default_jobs(models, large=False, fig6=True):
+    """The full artifact matrix (DESIGN.md per-experiment index)."""
+    jobs = []
+    for model in models:
+        jobs.append(dict(model=model, method="msq", fn="train"))
+        jobs.append(dict(model=model, method="msq", fn="eval"))
+        jobs.append(dict(model=model, method="msq", fn="stats"))
+        jobs.append(dict(model=model, method="msq", fn="hessian"))
+        jobs.append(dict(model=model, method="dorefa", fn="train"))
+        jobs.append(dict(model=model, method="dorefa", fn="eval"))
+        jobs.append(dict(model=model, method="dorefa", fn="stats"))
+        if model in BITSPLIT_MODELS:
+            for method in ("bsq", "csq"):
+                jobs.append(dict(model=model, method=method, fn="train"))
+                jobs.append(dict(model=model, method=method, fn="eval"))
+                jobs.append(dict(model=model, method=method, fn="stats"))
+    # Fig. 6 batch sweep: resnet20 train at several batch sizes per method
+    if fig6 and "resnet20" in models:
+        for b in FIG6_BATCHES:
+            for method in ("msq", "bsq", "csq"):
+                jobs.append(dict(model="resnet20", method=method, fn="train", batch=b))
+    # L1 Pallas-path artifact: proves the kernel composes into AOT e2e
+    if "mlp" in models:
+        jobs.append(dict(model="mlp", method="msq", fn="train", use_pallas=True))
+    if large:
+        for fn in ("train", "eval", "stats", "hessian"):
+            jobs.append(dict(model="vit_base", method="msq", fn=fn))
+    return jobs
+
+
+def job_name(j):
+    from . import models as models_lib
+
+    b = j.get("batch") or models_lib.get_model(j["model"])["batch"]
+    suffix = "_pallas" if j.get("use_pallas") else ""
+    return f"{j['model']}_{j['method']}_{j['fn']}_b{b}{suffix}"
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_one(j, out_dir):
+    """Worker: build + lower one artifact; returns its manifest entry."""
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+    from . import train as train_lib
+
+    t0 = time.time()
+    fn_kind = j["fn"]
+    if fn_kind == "train":
+        fn, specs, meta = train_lib.build_train(
+            j["model"], j["method"], batch=j.get("batch"),
+            use_pallas=j.get("use_pallas", False),
+        )
+    elif fn_kind == "eval":
+        fn, specs, meta = train_lib.build_eval(j["model"], j["method"], batch=j.get("batch"))
+    elif fn_kind == "stats":
+        fn, specs, meta = train_lib.build_stats(j["model"], j["method"])
+    elif fn_kind == "hessian":
+        fn, specs, meta = train_lib.build_hessian(j["model"], batch=j.get("batch"))
+    else:
+        raise ValueError(fn_kind)
+    # keep_unused: the manifest's input list must match the compiled
+    # program 1:1 even when a method ignores an input (e.g. msq ignores
+    # `temp`); jit would silently prune it otherwise.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = job_name(j)
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta["name"] = name
+    meta["file"] = os.path.basename(path)
+    meta["use_pallas"] = bool(j.get("use_pallas", False))
+    meta["lower_seconds"] = round(time.time() - t0, 2)
+    meta["hlo_bytes"] = len(text)
+    return meta
+
+
+def export_init(model, method, out_dir, seed=0):
+    """Initial params npz for one (model, method): t### trainable, c### consts."""
+    import numpy as np
+
+    from . import train as train_lib
+
+    rec = train_lib.record(model, method, seed=seed)
+    arrs = {}
+    ti = ci = 0
+    for s, v in zip([s for s in rec.specs if s.trainable], rec.init_values):
+        arrs[f"t{ti:03d}.{s.name}"] = np.asarray(v, np.float32)
+        ti += 1
+    for s, v in zip([s for s in rec.specs if not s.trainable], rec.init_consts):
+        arrs[f"c{ci:03d}.{s.name}"] = np.asarray(v, np.float32)
+        ci += 1
+    path = os.path.join(out_dir, f"{model}_{method}.init.npz")
+    np.savez(path, **arrs)
+    return os.path.basename(path)
+
+
+def _worker(args):
+    j, out_dir = args
+    try:
+        return build_one(j, out_dir)
+    except Exception as e:  # surface which job failed
+        import traceback
+
+        return dict(error=f"{job_name(j)}: {e}\n{traceback.format_exc()}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="(compat) single-output path; ignored")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=ALL_MODELS)
+    ap.add_argument("--large", action="store_true", help="include vit_base artifacts")
+    ap.add_argument("--no-fig6", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--jobs", type=int, default=max(1, (os.cpu_count() or 4) // 2))
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            old = {a["name"]: a for a in json.load(f).get("artifacts", [])}
+
+    jobs = default_jobs(args.models, large=args.large, fig6=not args.no_fig6)
+    todo, kept = [], []
+    for j in jobs:
+        name = job_name(j)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        if not args.force and name in old and os.path.exists(path):
+            kept.append(old[name])
+        else:
+            todo.append(j)
+    print(f"[aot] {len(jobs)} artifacts: {len(kept)} up-to-date, {len(todo)} to build "
+          f"({args.jobs} workers)", flush=True)
+
+    t0 = time.time()
+    results = []
+    if todo:
+        if args.jobs > 1:
+            ctx = mp.get_context("spawn")
+            with ctx.Pool(args.jobs) as pool:
+                for r in pool.imap_unordered(_worker, [(j, out_dir) for j in todo]):
+                    results.append(r)
+                    if "error" in r:
+                        print("[aot] FAILED:", r["error"], file=sys.stderr, flush=True)
+                    else:
+                        print(f"[aot] built {r['name']} ({r['lower_seconds']}s, "
+                              f"{r['hlo_bytes']//1024} KiB)", flush=True)
+        else:
+            for j in todo:
+                r = _worker((j, out_dir))
+                results.append(r)
+                if "error" in r:
+                    print("[aot] FAILED:", r["error"], file=sys.stderr, flush=True)
+                else:
+                    print(f"[aot] built {r['name']} ({r['lower_seconds']}s)", flush=True)
+    errors = [r for r in results if "error" in r]
+    if errors:
+        sys.exit(1)
+
+    # init params per distinct (model, method)
+    inits = {}
+    pairs = sorted({(j["model"], j["method"]) for j in jobs})
+    for model, method in pairs:
+        key = f"{model}_{method}"
+        path = os.path.join(out_dir, f"{key}.init.npz")
+        if args.force or not os.path.exists(path):
+            inits[key] = export_init(model, method, out_dir)
+            print(f"[aot] init {key}", flush=True)
+        else:
+            inits[key] = os.path.basename(path)
+
+    artifacts = kept + [r for r in results if "error" not in r]
+    artifacts.sort(key=lambda a: a["name"])
+    with open(manifest_path, "w") as f:
+        json.dump(dict(version=1, artifacts=artifacts, inits=inits), f, indent=1)
+    print(f"[aot] wrote manifest with {len(artifacts)} artifacts in "
+          f"{time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

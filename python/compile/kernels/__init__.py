@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for MSQ.
+
+Modules:
+  roundclamp — fused RoundClamp fake-quant + bipartite LSB slice
+  dorefa     — DoReFa baseline quantizer kernel
+  qmatmul    — tiled matmul with fused weight fake-quantization
+  ref        — pure-jnp oracles (correctness ground truth)
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin used
+by the Rust runtime cannot execute Mosaic custom-calls, so interpret mode
+is the executable path; the BlockSpec structure is still the TPU schedule
+(VMEM/MXU analysis in DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import dorefa, qmatmul, ref, roundclamp  # noqa: F401

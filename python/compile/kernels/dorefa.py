@@ -1,0 +1,44 @@
+"""DoReFa quantizer (paper Eq. 1) as a Pallas kernel — the baseline.
+
+Same single-pass VMEM structure as :mod:`roundclamp`; kept separate so the
+Fig. 3 / Fig. 4 quantizer-comparison experiments exercise both kernels
+through identical machinery. Note the scaling factor ``2^n - 1`` (vs
+RoundClamp's ``2^n``): this is precisely the bin misalignment the paper's
+Fig. 3a illustrates, so the kernel is deliberately bit-faithful to it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE_R = 256
+_TILE_C = 256
+
+
+def _kernel(n_ref, w_ref, q_ref):
+    scale = jnp.exp2(n_ref[0]) - 1.0
+    q_ref[...] = jnp.round(scale * w_ref[...]) / scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dorefa_quant(w01, n, interpret: bool = True):
+    """DoReFa-quantize a 2-D [0,1] f32 tensor at runtime bit-width ``n``."""
+    r, c = w01.shape
+    tr, tc = min(_TILE_R, r), min(_TILE_C, c)
+    grid = (pl.cdiv(r, tr), pl.cdiv(c, tc))
+    n = jnp.asarray(n, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(n, w01)

@@ -1,0 +1,94 @@
+"""Quantized matmul: ``x @ fake_quant(w)`` with the fake-quant fused into
+the tile loop — MSQ's compute hot-spot as a Pallas kernel.
+
+GPU→TPU rethink (DESIGN.md §Hardware-Adaptation): a CUDA implementation
+would fuse the weight fake-quant into the tensor-core mainloop prologue
+(dequant in registers after the shared-memory stage). On TPU the analogue
+is: fake-quantize the weight tile *in VMEM* right after the HBM→VMEM copy
+that the BlockSpec schedule issues, then feed the MXU. The quantized
+weight matrix never exists in HBM.
+
+Tiling: (bm, bk) × (bk, bn) with bm=bn=bk=128 — one MXU-shaped tile per
+operand. VMEM per grid step at double buffering:
+  2·(bm·bk + bk·bn + bm·bn)·4 B = 2·3·64 KiB = 384 KiB  (≪ 16 MiB)
+Arithmetic intensity per tile-pair: 2·128³ FLOP / 192 KiB ≈ 21 FLOP/B —
+MXU-bound for K ≥ 512 after amortizing the 8-VPU-op quant prologue.
+
+The K-reduction runs as the innermost grid dimension with a VMEM
+accumulator (standard Pallas revisiting pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BK, BN = 128, 128, 128
+
+
+def _kernel(sn_ref, x_ref, w_ref, o_ref):
+    """Grid (i, j, kk): o[i,j] += x[i,kk] @ rc_fakequant(w[kk,j])."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    scale = sn_ref[0]
+    n = sn_ref[1]
+    levels = jnp.exp2(n)
+    w = w_ref[...]
+    # fake-quant prologue, fused in VMEM (8 VPU ops per MXU tile-pair)
+    w01 = jnp.clip(w / (2.0 * scale) + 0.5, 0.0, 1.0)
+    q = jnp.minimum(jnp.round(levels * w01), levels - 1.0) / (levels - 1.0)
+    wq = (q - 0.5) * (2.0 * scale)
+    o_ref[...] += jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qmatmul(x, w, scale, n, interpret: bool = True):
+    """``x:(M,K) @ fake_quant(w:(K,N); scale, n) -> (M,N)`` f32.
+
+    ``scale`` (per-tensor weight scale) and ``n`` (bit-width) are runtime
+    f32 scalars, carried to the kernel in SMEM.
+    """
+    m, k = x.shape
+    k2, nn = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(BM, m), min(BK, k), min(BN, nn)
+    # Pad every dim to a tile multiple: partial tiles would otherwise read
+    # unmasked garbage along the K reduction (real-TPU OOB semantics).
+    # Zero-padding is exact here — padded x columns/rows contribute 0 to
+    # the contraction, and padded w columns are sliced off the output.
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-nn // bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, nn):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - nn)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    sn = jnp.stack([jnp.asarray(scale, jnp.float32), jnp.asarray(n, jnp.float32)])
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(sn, x, w)
+    return out[:m, :nn]
+
+
+def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Double-buffered VMEM footprint of one grid step, bytes."""
+    return 2 * 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_flops_per_tile(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    return 2 * bm * bk * bn

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has an exact reference here, written with
+plain ``jax.numpy`` ops only (no pallas, no custom_vjp). pytest sweeps
+shapes/dtypes and asserts ``assert_allclose(kernel(x), ref(x))``.
+
+These are *forward-only* oracles: the kernels are used inside
+``quant.py``'s STE wrappers, so gradients never flow through the kernel
+bodies themselves.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def roundclamp_ref(w01, n):
+    """Paper Eq. 4: q_r(w; n) = min(round(2^n w), 2^n - 1) / (2^n - 1)."""
+    n = jnp.asarray(n, w01.dtype)
+    levels = jnp.exp2(n)
+    return jnp.minimum(jnp.round(levels * w01), levels - 1.0) / (levels - 1.0)
+
+
+def dorefa_ref(w01, n):
+    """Paper Eq. 1: q_d(w; n) = round((2^n - 1) w) / (2^n - 1)."""
+    n = jnp.asarray(n, w01.dtype)
+    scale = jnp.exp2(n) - 1.0
+    return jnp.round(scale * w01) / scale
+
+
+def fused_qlsb_ref(w01, n, k):
+    """Fused RoundClamp quantize + bipartite LSB slice (paper Eq. 4+5).
+
+    Returns ``(q_n, b_k)``: ``q_n = roundclamp(w01; n)`` and the sawtooth
+    ``b_k = w01 - code_{n-k}(w01) / 2^{n-k}`` — zero exactly at the centres
+    of the n-bit bins whose k LSBs are zero.
+    """
+    n = jnp.asarray(n, w01.dtype)
+    k = jnp.asarray(k, w01.dtype)
+    lm = jnp.exp2(n - k)
+    target = jnp.minimum(jnp.round(lm * w01), lm - 1.0) / lm
+    return roundclamp_ref(w01, n), w01 - target
+
+
+def qmatmul_ref(x, w, scale, n):
+    """Fake-quantized matmul: x @ fake_quant(w).
+
+    ``w`` is signed; it is mapped to [0,1] with per-tensor ``scale``,
+    RoundClamp-quantized at ``n`` bits, mapped back, then contracted.
+    """
+    w01 = jnp.clip(w / (2.0 * scale) + 0.5, 0.0, 1.0)
+    wq = (roundclamp_ref(w01, n) - 0.5) * (2.0 * scale)
+    return jnp.dot(x, wq, preferred_element_type=jnp.float32)
+
+
+def lsb_nonzero_ref(w01, n, k):
+    """Exact integer-code LSB-nonzero indicator under RoundClamp:
+    ``code_n mod 2^k != 0``."""
+    n = jnp.asarray(n, w01.dtype)
+    k = jnp.asarray(k, w01.dtype)
+    ln = jnp.exp2(n)
+    code_n = jnp.minimum(jnp.round(ln * w01), ln - 1.0)
+    rem = code_n - jnp.exp2(k) * jnp.floor(code_n / jnp.exp2(k))
+    return (rem > 0.5).astype(w01.dtype)

@@ -1,0 +1,287 @@
+"""Model zoo (L2): the architectures the paper evaluates, width/depth-scaled
+where the paper's testbed is ImageNet-scale (DESIGN.md §Substitutions).
+
+All models are functions ``fn(ctx, x) -> logits`` over :class:`nn.Ctx`,
+NHWC inputs. Quantized layers (every conv + fc weight) register in a fixed
+order; that order *is* the layer index used by the Rust coordinator's
+bit-state, the Ω plots, and the final bit-scheme figures.
+
+| name      | paper model        | input      | classes | ~params |
+|-----------|--------------------|------------|---------|---------|
+| mlp       | (quickstart)       | 32×32×3    | 10      | 0.8M    |
+| resnet20  | ResNet-20          | 32×32×3    | 10      | 0.27M   |
+| resnet18s | ResNet-18 (scaled) | 64×64×3    | 100     | 2.8M    |
+| resnet50s | ResNet-50 (scaled) | 64×64×3    | 100     | 1.7M    |
+| mbv3s     | MobileNetV3-L (s)  | 64×64×3    | 100     | 0.9M    |
+| vit_t     | DeiT-T (scaled)    | 64×64×3    | 100     | 0.9M    |
+| vit_s     | DeiT-S (scaled)    | 64×64×3    | 100     | 2.8M    |
+| swinlite  | Swin-T (scaled)    | 64×64×3    | 100     | 1.9M    |
+| vit_m     | e2e driver         | 64×64×3    | 100     | ~11M    |
+| vit_base  | ViT-Base (supp T1) | 64×64×3    | 100     | ~86M    |
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+
+# ---------------------------------------------------------------------------
+# MLP (quickstart / tests)
+# ---------------------------------------------------------------------------
+
+
+def mlp(ctx: nn.Ctx, x):
+    x = x.reshape(x.shape[0], -1)
+    x = ctx.act(jax.nn.relu(nn.dense(ctx, x, 256, "fc1")))
+    x = ctx.act(jax.nn.relu(nn.dense(ctx, x, 128, "fc2")))
+    return nn.dense(ctx, x, 10, "head")
+
+
+# ---------------------------------------------------------------------------
+# ResNets
+# ---------------------------------------------------------------------------
+
+
+def _basic_block(ctx, x, cout, stride, name):
+    h = nn.conv2d(ctx, x, cout, 3, f"{name}.c1", stride=stride)
+    h = ctx.act(jax.nn.relu(nn.groupnorm(ctx, h, f"{name}.n1")))
+    h = nn.conv2d(ctx, h, cout, 3, f"{name}.c2")
+    h = nn.groupnorm(ctx, h, f"{name}.n2")
+    if stride != 1 or x.shape[-1] != cout:
+        # option-A shortcut: stride-subsample + zero-pad channels (no params)
+        s = x[:, ::stride, ::stride, :]
+        pad = cout - s.shape[-1]
+        s = jnp.pad(s, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    else:
+        s = x
+    return ctx.act(jax.nn.relu(h + s))
+
+
+def _basic_block_proj(ctx, x, cout, stride, name):
+    h = nn.conv2d(ctx, x, cout, 3, f"{name}.c1", stride=stride)
+    h = ctx.act(jax.nn.relu(nn.groupnorm(ctx, h, f"{name}.n1")))
+    h = nn.conv2d(ctx, h, cout, 3, f"{name}.c2")
+    h = nn.groupnorm(ctx, h, f"{name}.n2")
+    if stride != 1 or x.shape[-1] != cout:
+        s = nn.conv2d(ctx, x, cout, 1, f"{name}.sc", stride=stride)
+        s = nn.groupnorm(ctx, s, f"{name}.sn")
+    else:
+        s = x
+    return ctx.act(jax.nn.relu(h + s))
+
+
+def _bottleneck(ctx, x, cmid, cout, stride, name):
+    h = nn.conv2d(ctx, x, cmid, 1, f"{name}.c1")
+    h = ctx.act(jax.nn.relu(nn.groupnorm(ctx, h, f"{name}.n1")))
+    h = nn.conv2d(ctx, h, cmid, 3, f"{name}.c2", stride=stride)
+    h = ctx.act(jax.nn.relu(nn.groupnorm(ctx, h, f"{name}.n2")))
+    h = nn.conv2d(ctx, h, cout, 1, f"{name}.c3")
+    h = nn.groupnorm(ctx, h, f"{name}.n3")
+    if stride != 1 or x.shape[-1] != cout:
+        s = nn.conv2d(ctx, x, cout, 1, f"{name}.sc", stride=stride)
+        s = nn.groupnorm(ctx, s, f"{name}.sn")
+    else:
+        s = x
+    return ctx.act(jax.nn.relu(h + s))
+
+
+def resnet20(ctx: nn.Ctx, x):
+    """ResNet-20 (CIFAR scale, paper Table 2): 19 convs + fc = 20 q-layers."""
+    x = nn.conv2d(ctx, x, 16, 3, "stem")
+    x = ctx.act(jax.nn.relu(nn.groupnorm(ctx, x, "stem.n")))
+    for stage, (c, s) in enumerate([(16, 1), (32, 2), (64, 2)]):
+        for b in range(3):
+            x = _basic_block(ctx, x, c, s if b == 0 else 1, f"s{stage}.b{b}")
+    x = nn.global_avgpool(x)
+    return nn.dense(ctx, x, 10, "head")
+
+
+def resnet18s(ctx: nn.Ctx, x):
+    """ResNet-18 scaled to base width 32 (paper Table 1/3 proxy)."""
+    x = nn.conv2d(ctx, x, 32, 3, "stem")
+    x = ctx.act(jax.nn.relu(nn.groupnorm(ctx, x, "stem.n")))
+    for stage, (c, s) in enumerate([(32, 1), (64, 2), (128, 2), (256, 2)]):
+        for b in range(2):
+            x = _basic_block_proj(ctx, x, c, s if b == 0 else 1, f"s{stage}.b{b}")
+    x = nn.global_avgpool(x)
+    return nn.dense(ctx, x, 100, "head")
+
+
+def resnet50s(ctx: nn.Ctx, x):
+    """ResNet-50 scaled to base width 16 (bottleneck blocks)."""
+    x = nn.conv2d(ctx, x, 16, 3, "stem")
+    x = ctx.act(jax.nn.relu(nn.groupnorm(ctx, x, "stem.n")))
+    depths = [3, 4, 6, 3]
+    for stage, (cm, s) in enumerate([(16, 1), (32, 2), (64, 2), (128, 2)]):
+        for b in range(depths[stage]):
+            x = _bottleneck(ctx, x, cm, cm * 4, s if b == 0 else 1, f"s{stage}.b{b}")
+    x = nn.global_avgpool(x)
+    return nn.dense(ctx, x, 100, "head")
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV3-style (depthwise separable + SE, hardswish)
+# ---------------------------------------------------------------------------
+
+# (expansion, cout, kernel, stride, use_se, activation)
+_MBV3_BLOCKS = [
+    (1, 16, 3, 1, True, "relu"),
+    (4, 24, 3, 2, False, "relu"),
+    (3, 24, 3, 1, False, "relu"),
+    (3, 40, 5, 2, True, "hswish"),
+    (3, 40, 5, 1, True, "hswish"),
+    (6, 80, 3, 2, False, "hswish"),
+    (2, 80, 3, 1, False, "hswish"),
+    (6, 112, 3, 1, True, "hswish"),
+    (6, 160, 5, 2, True, "hswish"),
+]
+
+
+def _mb_act(ctx, x, act):
+    return ctx.act(nn.hardswish(x) if act == "hswish" else jax.nn.relu(x))
+
+
+def mbv3s(ctx: nn.Ctx, x):
+    """MobileNetV3-Large, reduced block table (paper Table 5 proxy)."""
+    x = nn.conv2d(ctx, x, 16, 3, "stem", stride=2)
+    x = _mb_act(ctx, nn.groupnorm(ctx, x, "stem.n"), "hswish")
+    for i, (exp, cout, k, s, se, act) in enumerate(_MBV3_BLOCKS):
+        cin = x.shape[-1]
+        cexp = cin * exp
+        name = f"mb{i}"
+        h = x
+        if exp != 1:
+            h = nn.conv2d(ctx, h, cexp, 1, f"{name}.expand")
+            h = _mb_act(ctx, nn.groupnorm(ctx, h, f"{name}.en"), act)
+        h = nn.conv2d(ctx, h, cexp, k, f"{name}.dw", stride=s, groups=cexp)
+        h = _mb_act(ctx, nn.groupnorm(ctx, h, f"{name}.dn"), act)
+        if se:
+            h = nn.se_block(ctx, h, f"{name}.se")
+        h = nn.conv2d(ctx, h, cout, 1, f"{name}.project")
+        h = nn.groupnorm(ctx, h, f"{name}.pn")
+        if s == 1 and cin == cout:
+            h = h + x
+        x = h
+    x = nn.conv2d(ctx, x, 480, 1, "headconv")
+    x = _mb_act(ctx, nn.groupnorm(ctx, x, "headconv.n"), "hswish")
+    x = nn.global_avgpool(x)
+    x = _mb_act(ctx, nn.dense(ctx, x, 640, "pre_head"), "hswish")
+    return nn.dense(ctx, x, 100, "head")
+
+
+# ---------------------------------------------------------------------------
+# Vision transformers
+# ---------------------------------------------------------------------------
+
+
+def _vit(ctx: nn.Ctx, x, dim, depth, heads, patch, classes, mlp_ratio=4):
+    b, h, w, c = x.shape
+    # patch embedding as a strided conv (quantized)
+    x = nn.conv2d(ctx, x, dim, patch, "patch", stride=patch)
+    t = (h // patch) * (w // patch)
+    x = x.reshape(b, t, dim)
+    cls = ctx.fparam("cls", (1, 1, dim), init="trunc02")
+    pos = ctx.fparam("pos", (1, t + 1, dim), init="trunc02")
+    x = jnp.concatenate([jnp.tile(cls, (b, 1, 1)), x], axis=1) + pos
+    for i in range(depth):
+        x = nn.vit_block(ctx, x, heads, mlp_ratio, f"blk{i}")
+    x = nn.layernorm(ctx, x, "norm")
+    return nn.dense(ctx, x[:, 0], classes, "head")
+
+
+def vit_t(ctx, x):
+    """DeiT-T proxy (Table 4)."""
+    return _vit(ctx, x, dim=128, depth=4, heads=4, patch=8, classes=100)
+
+
+def vit_s(ctx, x):
+    """DeiT-S proxy (Table 4)."""
+    return _vit(ctx, x, dim=192, depth=6, heads=6, patch=8, classes=100)
+
+
+def vit_m(ctx, x):
+    """~11M-param transformer for the end-to-end driver (EXPERIMENTS.md)."""
+    return _vit(ctx, x, dim=384, depth=6, heads=6, patch=8, classes=100)
+
+
+def vit_base(ctx, x):
+    """ViT-Base-shaped (dim 768, depth 12) for supp Table 1 / large e2e."""
+    return _vit(ctx, x, dim=768, depth=12, heads=12, patch=8, classes=100)
+
+
+# ---------------------------------------------------------------------------
+# Swin-lite: windowed attention + patch merging (no shifted windows —
+# documented substitution; hierarchy and window locality preserved)
+# ---------------------------------------------------------------------------
+
+
+def _window_attn(ctx, x, heads, win, name):
+    b, h, w, d = x.shape
+    nh, nw = h // win, w // win
+    xw = x.reshape(b, nh, win, nw, win, d).transpose(0, 1, 3, 2, 4, 5)
+    xw = xw.reshape(b * nh * nw, win * win, d)
+    y = nn.mhsa(ctx, xw, heads, name)
+    y = y.reshape(b, nh, nw, win, win, d).transpose(0, 1, 3, 2, 4, 5)
+    return y.reshape(b, h, w, d)
+
+
+def _swin_block(ctx, x, heads, win, name, mlp_ratio=4):
+    b, h, w, d = x.shape
+    sc = x
+    xx = nn.layernorm(ctx, x.reshape(b, h * w, d), f"{name}.ln1").reshape(b, h, w, d)
+    x = sc + _window_attn(ctx, xx, heads, win, f"{name}.attn")
+    sc = x
+    xx = nn.layernorm(ctx, x.reshape(b, h * w, d), f"{name}.ln2")
+    xx = nn.dense(ctx, xx, d * mlp_ratio, f"{name}.fc1")
+    xx = ctx.act(jax.nn.gelu(xx))
+    xx = nn.dense(ctx, xx, d, f"{name}.fc2")
+    return sc + xx.reshape(b, h, w, d)
+
+
+def _patch_merge(ctx, x, name):
+    b, h, w, d = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, d).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, h // 2, w // 2, 4 * d)
+    x = nn.layernorm(ctx, x.reshape(b, -1, 4 * d), f"{name}.ln").reshape(b, h // 2, w // 2, 4 * d)
+    return nn.dense(ctx, x, 2 * d, f"{name}.reduce", bias=False)
+
+
+def swinlite(ctx: nn.Ctx, x):
+    """Swin-T proxy (Table 4): 3 stages, window attention, patch merging."""
+    b = x.shape[0]
+    x = nn.conv2d(ctx, x, 64, 4, "patch", stride=4)  # 16x16 tokens
+    dims_heads = [(64, 2), (128, 4), (256, 8)]
+    for stage, (d, heads) in enumerate(dims_heads):
+        for blk in range(2):
+            x = _swin_block(ctx, x, heads, 4, f"s{stage}.b{blk}")
+        if stage < 2:
+            x = _patch_merge(ctx, x, f"merge{stage}")
+    bsz, h, w, d = x.shape
+    x = nn.layernorm(ctx, x.reshape(bsz, h * w, d), "norm")
+    x = jnp.mean(x, axis=1)
+    return nn.dense(ctx, x, 100, "head")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "mlp": dict(fn=mlp, image=(32, 32, 3), classes=10, batch=256),
+    "resnet20": dict(fn=resnet20, image=(32, 32, 3), classes=10, batch=256),
+    "resnet18s": dict(fn=resnet18s, image=(64, 64, 3), classes=100, batch=64),
+    "resnet50s": dict(fn=resnet50s, image=(64, 64, 3), classes=100, batch=64),
+    "mbv3s": dict(fn=mbv3s, image=(64, 64, 3), classes=100, batch=64),
+    "vit_t": dict(fn=vit_t, image=(64, 64, 3), classes=100, batch=64),
+    "vit_s": dict(fn=vit_s, image=(64, 64, 3), classes=100, batch=64),
+    "swinlite": dict(fn=swinlite, image=(64, 64, 3), classes=100, batch=64),
+    "vit_m": dict(fn=vit_m, image=(64, 64, 3), classes=100, batch=32),
+    "vit_base": dict(fn=vit_base, image=(64, 64, 3), classes=100, batch=8),
+}
+
+
+def get_model(name: str):
+    return MODELS[name]

@@ -1,0 +1,400 @@
+"""Functional NN library with quantization-aware parameter registry (L2).
+
+Models are pure functions ``model_fn(ctx, x) -> logits`` over a :class:`Ctx`
+that owns parameter registration and the method-specific *weight producer*.
+The same model function serves four graph modes:
+
+* ``train`` — fake-quantized forward + LSB L1 regularization terms
+* ``eval``  — fake-quantized forward only
+* ``fp``    — full-precision forward (Hessian probes, FP reference rows)
+* ``stats`` — fake-quantized forward + per-layer β / ‖W_n−W‖² / Σ|B_k|
+
+and four *methods* (weight producers):
+
+* ``msq``    — MSQ: float weight per layer, RoundClamp fake-quant, LSB reg
+* ``dorefa`` — same structure with the DoReFa quantizer (paper baseline)
+* ``bsq``    — explicit bit-split planes per layer (BSQ baseline): the
+  trainable parameter count multiplies by the initial bit-width, which is
+  exactly the memory/time overhead Table 1 measures
+* ``csq``    — bit-split planes + continuous-sparsification gates with a
+  runtime temperature (CSQ baseline)
+
+Everything that changes during training (per-layer bit-widths ``bits``,
+prune-widths ``ks``, λ, lr, activation bits, CSQ temperature) is a runtime
+tensor, so one AOT artifact serves the whole schedule.
+
+Two-phase execution: a *recording* pass (``Ctx.recording=True``) runs the
+model on a dummy batch to register parameter specs and draw initial values
+(numpy RNG, seeded); *replay* passes consume concrete parameters in
+registration order inside the jitted graph.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+
+N0 = 8  # initial bit-width for every quantized layer (paper setting)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    kind: str  # 'qw' | 'plane' | 'wscale' | 'gate' | 'f'  (trainable) | 'sign' (const)
+    q_index: int = -1  # quantized-layer index for 'qw'/'plane'/'sign'/'wscale'/'gate'
+    init: str = "zeros"
+
+    @property
+    def trainable(self) -> bool:
+        return self.kind != "sign"
+
+    def numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass
+class QLayerInfo:
+    name: str
+    shape: tuple
+    numel: int
+
+
+class Ctx:
+    """Parameter registry + model-mode state for one graph construction."""
+
+    def __init__(
+        self,
+        mode: str = "train",
+        method: str = "msq",
+        quantizer: str = "roundclamp",
+        recording: bool = False,
+        params: Optional[list] = None,
+        consts: Optional[list] = None,
+        bits=None,
+        ks=None,
+        n_act=None,
+        temp=None,
+        seed: int = 0,
+        use_pallas: bool = False,
+    ):
+        assert mode in ("train", "eval", "fp", "stats")
+        assert method in ("msq", "dorefa", "bsq", "csq")
+        self.mode = mode
+        self.method = method
+        self.quantizer = "dorefa" if method == "dorefa" else quantizer
+        self.recording = recording
+        self.params = params
+        self.consts = consts
+        self.bits = bits
+        self.ks = ks
+        self.n_act = n_act
+        self.temp = temp
+        self.use_pallas = use_pallas
+        self.specs: list[ParamSpec] = []
+        self.qlayers: list[QLayerInfo] = []
+        self.reg_terms: list = []
+        self.beta: list = []
+        self.qerr: list = []
+        self.init_values: list = []
+        self.init_consts: list = []
+        self._pi = 0  # replay cursor: trainable params
+        self._ci = 0  # replay cursor: consts
+        self._rng = np.random.RandomState(seed)
+        self._names: set = set()
+
+    # -- parameter plumbing -------------------------------------------------
+
+    def _take(self, spec: ParamSpec, init_value):
+        assert spec.name not in self._names, f"duplicate param {spec.name}"
+        self._names.add(spec.name)
+        self.specs.append(spec)
+        if self.recording:
+            if spec.kind == "sign":
+                self.init_consts.append(init_value)
+            else:
+                self.init_values.append(init_value)
+            return jnp.asarray(init_value)
+        if spec.kind == "sign":
+            v = self.consts[self._ci]
+            self._ci += 1
+        else:
+            v = self.params[self._pi]
+            self._pi += 1
+        assert v.shape == spec.shape, f"{spec.name}: {v.shape} != {spec.shape}"
+        return v
+
+    def _init(self, shape, init: str, fan_in: int = 0):
+        if init == "zeros":
+            return np.zeros(shape, np.float32)
+        if init == "ones":
+            return np.ones(shape, np.float32)
+        if init == "he":
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            return self._rng.randn(*shape).astype(np.float32) * std
+        if init == "xavier":
+            std = math.sqrt(1.0 / max(fan_in, 1))
+            return self._rng.randn(*shape).astype(np.float32) * std
+        if init == "trunc02":
+            return np.clip(self._rng.randn(*shape) * 0.02, -0.04, 0.04).astype(np.float32)
+        raise ValueError(init)
+
+    def fparam(self, name: str, shape, init: str = "zeros", fan_in: int = 0):
+        """A non-quantized trainable parameter (norm scales, biases, ...)."""
+        shape = tuple(shape)
+        return self._take(
+            ParamSpec(name, shape, "f", init=init), self._init(shape, init, fan_in)
+        )
+
+    # -- quantized weights (method dispatch) ---------------------------------
+
+    def qweight(self, name: str, shape, fan_in: int, init: str = "he"):
+        """A quantized layer weight, produced per the ctx's method/mode.
+
+        Registers the layer in q-layer order; in quantized modes its
+        bit-width is read from ``self.bits[q_index]`` at runtime.
+        """
+        shape = tuple(shape)
+        qi = len(self.qlayers)
+        self.qlayers.append(QLayerInfo(name, shape, int(np.prod(shape))))
+        if self.method in ("msq", "dorefa"):
+            return self._qweight_fake(name, shape, fan_in, init, qi)
+        return self._qweight_bitsplit(name, shape, fan_in, init, qi)
+
+    def _qweight_fake(self, name, shape, fan_in, init, qi):
+        w = self._take(
+            ParamSpec(name, shape, "qw", q_index=qi, init=init),
+            self._init(shape, init, fan_in),
+        )
+        if self.mode == "fp" or self.recording:
+            return w
+        n = self.bits[qi]
+        scale = jax.lax.stop_gradient(jnp.max(jnp.abs(w))) + 1e-8
+        w01 = quant.to_unit(w, scale)
+        if self.use_pallas and self.quantizer == "roundclamp" and self.mode in ("train", "stats"):
+            # L1 Pallas path: fused quantize + LSB slice, one VMEM pass.
+            # STE / sign-grad re-attached around the kernel call.
+            from .kernels import roundclamp as rc_kernel
+
+            w2d = w01.reshape(-1, shape[-1]) if len(shape) > 1 else w01.reshape(1, -1)
+            qk, bk = rc_kernel.fused_qlsb_ste(w2d, n, self.ks[qi])
+            q, b = qk.reshape(shape), bk.reshape(shape)
+            wq = quant.from_unit(q, scale)
+            self.reg_terms.append(jnp.sum(jnp.abs(b)))
+            if self.mode == "stats":
+                nz = quant.lsb_nonzero(jax.lax.stop_gradient(w01), n, self.ks[qi], self.quantizer)
+                self.beta.append(jnp.mean(nz))
+                self.qerr.append(jnp.sum((wq - w) ** 2))
+            return wq
+        wq = quant.from_unit(quant.quantize01(w01, n, self.quantizer), scale)
+        if self.mode in ("train", "stats"):
+            k = self.ks[qi]
+            b = quant.lsb_proxy(w01, n, k, self.quantizer)
+            self.reg_terms.append(jnp.sum(jnp.abs(b)))
+        if self.mode == "stats":
+            nz = quant.lsb_nonzero(jax.lax.stop_gradient(w01), n, self.ks[qi], self.quantizer)
+            self.beta.append(jnp.mean(nz))
+            self.qerr.append(jnp.sum((wq - w) ** 2))
+        return wq
+
+    def _qweight_bitsplit(self, name, shape, fan_in, init, qi):
+        """BSQ/CSQ: weight = scale * sign * Σ_b m_b(bits) [g_b] 2^{-b-1} round(a_b).
+
+        ``a_b ∈ [0,1]`` are N0 trainable bit-planes (MSB first), ``sign`` a
+        frozen const, ``scale`` a trainable per-layer scalar. Runtime
+        ``bits[qi]`` masks the low planes off (pruning); CSQ multiplies
+        each plane by a gate σ(T·g_b) with runtime temperature T.
+        """
+        w0 = self._init(shape, init, fan_in)
+        sgn = np.where(w0 >= 0, 1.0, -1.0).astype(np.float32)
+        mag01 = np.abs(w0) / (np.abs(w0).max() + 1e-8)
+        # decompose |w|/max into N0 binary planes (MSB first)
+        planes0 = np.zeros((N0,) + tuple(shape), np.float32)
+        resid = mag01.copy()
+        for b in range(N0):
+            planes0[b] = (resid >= 2.0 ** (-(b + 1))).astype(np.float32)
+            resid = resid - planes0[b] * 2.0 ** (-(b + 1))
+        planes = self._take(
+            ParamSpec(f"{name}.planes", (N0,) + shape, "plane", q_index=qi, init="bitsplit"),
+            planes0,
+        )
+        sign = self._take(
+            ParamSpec(f"{name}.sign", shape, "sign", q_index=qi, init="sign"), sgn
+        )
+        wscale = self._take(
+            ParamSpec(f"{name}.scale", (), "wscale", q_index=qi, init="wscale"),
+            np.float32(np.abs(w0).max() + 1e-8),
+        )
+        gates = None
+        if self.method == "csq":
+            gates = self._take(
+                ParamSpec(f"{name}.gates", (N0,), "gate", q_index=qi, init="gate1"),
+                np.full((N0,), 2.0, np.float32),
+            )
+        if self.recording:
+            return jnp.asarray(w0)
+        # runtime plane mask: plane b active iff b < bits[qi]
+        barange = jnp.arange(N0, dtype=jnp.float32)
+        mask = (barange < self.bits[qi]).astype(jnp.float32)
+        a = jnp.clip(planes, 0.0, 1.0)
+        ar = quant.ste_round(a)
+        weights_b = jnp.exp2(-(barange + 1.0))  # plane b contributes 2^-(b+1)
+        bshape = (N0,) + (1,) * len(shape)
+        if self.method == "csq" and self.mode != "fp":
+            g = jax.nn.sigmoid(self.temp * gates)
+            eff = ar * (mask * g * weights_b).reshape(bshape)
+        else:
+            eff = ar * (mask * weights_b).reshape(bshape)
+        mag = jnp.sum(eff, axis=0)
+        w = sign * wscale * mag
+        if self.mode in ("train", "stats"):
+            # bit-level L1: Σ_b |round(a_b)| over active planes (BSQ reg);
+            # CSQ regularizes the gated magnitude instead.
+            if self.method == "csq":
+                g = jax.nn.sigmoid(self.temp * gates)
+                self.reg_terms.append(jnp.sum(jnp.abs(ar) * (mask * g).reshape(bshape)))
+            else:
+                self.reg_terms.append(jnp.sum(jnp.abs(ar) * mask.reshape(bshape)))
+        if self.mode == "stats":
+            # per-plane nonzero rate (LSB plane prunability signal)
+            nz = jnp.mean(jnp.abs(jax.lax.stop_gradient(ar)), axis=tuple(range(1, 1 + len(shape))))
+            self.beta.append(nz)  # (N0,) per layer
+            self.qerr.append(jnp.asarray(0.0))
+        return w
+
+    # -- activations ----------------------------------------------------------
+
+    def act(self, x):
+        """Activation quantization hook (uniform, runtime ``n_act``)."""
+        if self.mode == "fp" or self.recording or self.n_act is None:
+            return x
+        return quant.act_quant(x, self.n_act)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def dense(ctx: Ctx, x, dout: int, name: str, bias: bool = True, quantized: bool = True):
+    din = x.shape[-1]
+    if quantized:
+        w = ctx.qweight(f"{name}.w", (din, dout), fan_in=din)
+    else:
+        w = ctx.fparam(f"{name}.w", (din, dout), init="he", fan_in=din)
+    y = x @ w
+    if bias:
+        y = y + ctx.fparam(f"{name}.b", (dout,))
+    return y
+
+
+def conv2d(
+    ctx: Ctx,
+    x,
+    cout: int,
+    ksize: int,
+    name: str,
+    stride: int = 1,
+    groups: int = 1,
+    bias: bool = False,
+    quantized: bool = True,
+):
+    """NHWC conv with HWIO weights; ``groups=C`` gives depthwise."""
+    cin = x.shape[-1]
+    wshape = (ksize, ksize, cin // groups, cout)
+    fan_in = ksize * ksize * (cin // groups)
+    if quantized:
+        w = ctx.qweight(f"{name}.w", wshape, fan_in=fan_in)
+    else:
+        w = ctx.fparam(f"{name}.w", wshape, init="he", fan_in=fan_in)
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if bias:
+        y = y + ctx.fparam(f"{name}.b", (cout,))
+    return y
+
+
+def groupnorm(ctx: Ctx, x, name: str, groups: int = 8, eps: float = 1e-5):
+    """GroupNorm over NHWC (running-stat-free; quantization-friendly eval)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(n, h, w, c)
+    gamma = ctx.fparam(f"{name}.g", (c,), init="ones")
+    beta = ctx.fparam(f"{name}.b", (c,))
+    return xn * gamma + beta
+
+
+def layernorm(ctx: Ctx, x, name: str, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mean) / jnp.sqrt(var + eps)
+    gamma = ctx.fparam(f"{name}.g", (x.shape[-1],), init="ones")
+    beta = ctx.fparam(f"{name}.b", (x.shape[-1],))
+    return xn * gamma + beta
+
+
+def mhsa(ctx: Ctx, x, heads: int, name: str):
+    """Multi-head self-attention with quantized qkv/proj weights."""
+    b, t, d = x.shape
+    dh = d // heads
+    qkv = dense(ctx, x, 3 * d, f"{name}.qkv", bias=True)
+    qkv = qkv.reshape(b, t, 3, heads, dh).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return dense(ctx, y, d, f"{name}.proj", bias=True)
+
+
+def vit_block(ctx: Ctx, x, heads: int, mlp_ratio: int, name: str):
+    x = x + mhsa(ctx, layernorm(ctx, x, f"{name}.ln1"), heads, f"{name}.attn")
+    h = layernorm(ctx, x, f"{name}.ln2")
+    h = dense(ctx, h, x.shape[-1] * mlp_ratio, f"{name}.fc1")
+    h = ctx.act(jax.nn.gelu(h))
+    h = dense(ctx, h, x.shape[-1], f"{name}.fc2")
+    return x + h
+
+
+def se_block(ctx: Ctx, x, name: str, reduction: int = 4):
+    """Squeeze-and-excitation (MobileNetV3-style, quantized FCs)."""
+    c = x.shape[-1]
+    s = jnp.mean(x, axis=(1, 2))
+    s = jax.nn.relu(dense(ctx, s, max(c // reduction, 4), f"{name}.fc1"))
+    s = jax.nn.sigmoid(dense(ctx, s, c, f"{name}.fc2"))
+    return x * s[:, None, None, :]
+
+
+def hardswish(x):
+    return x * jax.nn.relu6(x + 3.0) / 6.0
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def avgpool2(x):
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

@@ -1,0 +1,221 @@
+"""Quantizers for MSQ (L2, build-time JAX).
+
+Implements the paper's two linear quantizers over weights scaled to [0,1]:
+
+* **RoundClamp** (paper Eq. 4) — the MSQ contribution. Scaling factor of
+  the rounding function is ``2^n`` (not ``2^n - 1``), with a clamp to keep
+  the code in range::
+
+      q_r(w; n) = min(round(2^n * w), 2^n - 1) / (2^n - 1)
+
+  This places the (n-k)-bit bin boundaries at the *midpoints* of the n-bit
+  bins, so a weight with nonzero LSBs can round either up or down to the
+  nearest LSB-zero value (paper Fig. 3b).
+
+* **DoReFa** (paper Eq. 1) — the conventional baseline::
+
+      q_d(w; n) = round((2^n - 1) * w) / (2^n - 1)
+
+Bit-widths are **runtime inputs** (f32 scalars), not Python constants:
+``2^n`` is computed as ``exp2(n)`` inside the graph. This is what lets the
+Rust coordinator prune precision during training against a single AOT
+artifact, with zero recompiles — the reproduction's analogue of "no
+bit-level splitting".
+
+All quantizers use the straight-through estimator (STE, paper Eq. 2) via
+``jax.custom_vjp``: forward emits the quantized value, backward passes the
+incoming gradient through unchanged.
+
+Weight scaling convention (DESIGN.md §Quantizer math): a layer weight ``W``
+(float, any range) with a fixed per-layer scale ``s`` maps to
+``w01 = clamp(W/(2s) + 1/2, 0, 1)``, is quantized at n bits, and maps back
+with ``W_n = (q - 1/2) * 2s``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Rounding with STE
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_round(x):
+    """round-to-nearest (ties to even, XLA semantics) with identity vjp."""
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Core quantizers on [0, 1] (runtime bit-width)
+# ---------------------------------------------------------------------------
+
+
+def roundclamp01(w01, n):
+    """RoundClamp quantizer on [0,1] weights, paper Eq. 4, STE backward.
+
+    ``n`` may be a traced f32 scalar (runtime bit-width).
+    """
+    n = jnp.asarray(n, jnp.float32)
+    levels = jnp.exp2(n)  # 2^n
+    code = jnp.minimum(ste_round(levels * w01), levels - 1.0)
+    return code / (levels - 1.0)
+
+
+def dorefa01(w01, n):
+    """DoReFa quantizer on [0,1] weights, paper Eq. 1, STE backward."""
+    n = jnp.asarray(n, jnp.float32)
+    scale = jnp.exp2(n) - 1.0  # 2^n - 1
+    return ste_round(scale * w01) / scale
+
+
+def quantize01(w01, n, quantizer: str):
+    if quantizer == "roundclamp":
+        return roundclamp01(w01, n)
+    if quantizer == "dorefa":
+        return dorefa01(w01, n)
+    raise ValueError(f"unknown quantizer {quantizer!r}")
+
+
+# ---------------------------------------------------------------------------
+# Bipartite bit slicing (paper Sec. 3.1)
+# ---------------------------------------------------------------------------
+
+
+def lsb_proxy(w01, n, k, quantizer: str = "roundclamp"):
+    """Continuous LSB value ``B_k`` in [0,1]-scale, paper Eq. 5.
+
+    A weight's k LSBs are zero iff its n-bit code is ``2^k · j``, i.e. iff
+    ``w01`` lies in the bin centred at ``t_j = j / 2^{n-k}`` (RoundClamp
+    bins of width ``1/2^n`` around ``2^k·j/2^n = t_j``). Eq. 5's continuous
+    proxy is the sawtooth ``B_k = w01 - t_{j(w01)}``, where the MSB code
+    ``j(w01)`` is assigned by the chosen quantizer's (n-k)-bit bin
+    placement:
+
+    * RoundClamp: ``j = min(round(2^{n-k} w), 2^{n-k}-1)``, target
+      ``j / 2^{n-k}``. Basin boundaries fall exactly at the midpoints of
+      the n-bit bins with nonzero LSBs (paper Fig. 3b), so ``sign(B_k)``
+      always points at the *nearest* LSB-zero bin, and the target is that
+      bin's centre.
+    * DoReFa: ``j = round((2^{n-k}-1) w)``, target ``j / (2^{n-k}-1)`` —
+      the misaligned placement of paper Fig. 3a, with the documented
+      pathology (descent direction biased negative, targets that are not
+      LSB-zero under the n-bit code). Implemented faithfully for the
+      Fig. 3/4 comparison experiments.
+
+    The target branch is wrapped in ``stop_gradient`` so that
+    ``d|B_k|/dW == sign(B_k)`` exactly (paper Eq. 7).
+    """
+    n = jnp.asarray(n, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    m = n - k
+    if quantizer == "roundclamp":
+        lm = jnp.exp2(m)
+        target = jnp.minimum(jnp.round(lm * w01), lm - 1.0) / lm
+    elif quantizer == "dorefa":
+        sc = jnp.exp2(m) - 1.0
+        target = jnp.round(sc * w01) / sc
+    else:
+        raise ValueError(f"unknown quantizer {quantizer!r}")
+    return w01 - jax.lax.stop_gradient(target)
+
+
+def lsb_nonzero(w01, n, k, quantizer: str = "roundclamp"):
+    """Indicator (f32 0/1) that the k LSBs of the n-bit code are nonzero —
+    i.e. that pruning k bits would change this weight.
+
+    ``code_n mod 2^k != 0``; β_l (Algorithm 1 line 16) is the mean of this
+    over a layer. Non-differentiable diagnostic — callers wrap in
+    stop_gradient.
+    """
+    n = jnp.asarray(n, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    ln = jnp.exp2(n)
+    if quantizer == "dorefa":
+        code_n = jnp.round((ln - 1.0) * w01)
+    else:
+        code_n = jnp.minimum(jnp.round(ln * w01), ln - 1.0)
+    rem = code_n - jnp.exp2(k) * jnp.floor(code_n / jnp.exp2(k))
+    return (rem > 0.5).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Signed-weight fake quantization (layer-facing API)
+# ---------------------------------------------------------------------------
+
+
+def to_unit(w, scale):
+    """Map a signed weight tensor to [0,1] with per-layer scale ``s``."""
+    return jnp.clip(w / (2.0 * scale) + 0.5, 0.0, 1.0)
+
+
+def from_unit(w01, scale):
+    """Inverse of :func:`to_unit` (on the quantized lattice)."""
+    return (w01 - 0.5) * (2.0 * scale)
+
+
+def fake_quant(w, scale, n, quantizer: str = "roundclamp"):
+    """Fake-quantize a signed weight tensor at runtime bit-width ``n``.
+
+    Forward: W -> (q(w01; n) - 1/2) * 2s.  Backward: STE (identity through
+    the round; the clip in ``to_unit`` masks gradients outside range, the
+    standard DoReFa-style clipped STE).
+    """
+    return from_unit(quantize01(to_unit(w, scale), n, quantizer), scale)
+
+
+def act_quant(x, n_act):
+    """Uniform activation quantization on [0, 1] after a clip (PACT-like).
+
+    ``n_act <= 0`` (runtime scalar) disables quantization. Activations are
+    clipped to [0, alpha] with alpha = 1 (post-normalization activations in
+    our models are O(1)); quantized with DoReFa-style uniform bins.
+    """
+    n_act = jnp.asarray(n_act, jnp.float32)
+    x01 = jnp.clip(x, 0.0, 1.0)
+    # guard the divisor: at n_act <= 0 the quantized branch is unused, but
+    # an unguarded 0-divisor still poisons the backward pass with NaNs.
+    scale = jnp.maximum(jnp.exp2(n_act) - 1.0, 1.0)
+    xq = ste_round(scale * x01) / scale
+    return jnp.where(n_act > 0.5, xq + (x - x01), x)
+
+
+# ---------------------------------------------------------------------------
+# Regularizer (paper Eq. 6/8)
+# ---------------------------------------------------------------------------
+
+
+def lsb_l1(w, scale, n, k, quantizer: str = "roundclamp"):
+    """Σ|B_k| for one layer, in [0,1] weight scale (paper Eq. 6)."""
+    return jnp.sum(jnp.abs(lsb_proxy(to_unit(w, scale), n, k, quantizer)))
+
+
+__all__ = [
+    "ste_round",
+    "roundclamp01",
+    "dorefa01",
+    "quantize01",
+    "lsb_proxy",
+    "lsb_nonzero",
+    "to_unit",
+    "from_unit",
+    "fake_quant",
+    "act_quant",
+    "lsb_l1",
+]

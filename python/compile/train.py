@@ -1,0 +1,316 @@
+"""Step-function builders (L2): the four AOT-compiled graphs per
+(model × method) — train / eval / stats / hessian.
+
+Each builder returns ``(fn, arg_specs, meta)``:
+
+* ``fn`` — a pure function over *flat positional tensors* (params first, in
+  registration order), so the Rust coordinator can drive it through the
+  PJRT bridge without any pytree knowledge;
+* ``arg_specs`` — ``jax.ShapeDtypeStruct`` per argument (lowering inputs);
+* ``meta`` — the manifest fragment: input/output descriptors with roles,
+  quantized-layer table, trainable-parameter count.
+
+The MSQ training objective (paper Eq. 8)::
+
+    L = CE(W_n) + λ Σ_l |B_k^{(l)}|
+
+is optimized with SGD + momentum 0.9 (paper Sec. 4.1 uses SGD; the cosine
+learning-rate schedule lives in the Rust coordinator — ``lr`` is a runtime
+input). For BSQ/CSQ the same objective form applies with their bit-level
+regularizers (``nn.Ctx`` produces the method's ``reg_terms``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import models as models_lib
+from . import nn
+
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0  # global-norm clip
+
+
+# ---------------------------------------------------------------------------
+# Recording pass: specs + initial values
+# ---------------------------------------------------------------------------
+
+
+def record(model_name: str, method: str = "msq", seed: int = 0):
+    """Run the model once in recording mode; returns the populated Ctx."""
+    m = models_lib.get_model(model_name)
+    ctx = nn.Ctx(mode="train", method=method, recording=True, seed=seed)
+    x = jnp.zeros((2,) + tuple(m["image"]), jnp.float32)
+    with jax.disable_jit():
+        m["fn"](ctx, x)
+    return ctx
+
+
+def _specs_meta(ctx: nn.Ctx):
+    trainable = [s for s in ctx.specs if s.trainable]
+    consts = [s for s in ctx.specs if not s.trainable]
+    return trainable, consts
+
+
+def _input_descs(trainable, consts, extra):
+    descs = []
+    for s in trainable:
+        descs.append(dict(name=s.name, shape=list(s.shape), dtype="f32", role="param",
+                          kind=s.kind, q_index=s.q_index))
+    for s in consts:
+        descs.append(dict(name=s.name, shape=list(s.shape), dtype="f32", role="const",
+                          kind=s.kind, q_index=s.q_index))
+    descs.extend(extra)
+    return descs
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build_train(model_name: str, method: str, quantizer: str = "roundclamp",
+                batch: Optional[int] = None, use_pallas: bool = False):
+    """fn(params..., consts..., momenta..., bits, ks, lam, lr, temp, n_act, x, y)
+       -> (new_params..., new_momenta..., loss, ce, correct)"""
+    m = models_lib.get_model(model_name)
+    rec = record(model_name, method)
+    trainable, consts = _specs_meta(rec)
+    nt, nc, lq = len(trainable), len(consts), len(rec.qlayers)
+    b = batch or m["batch"]
+    img, ncls = tuple(m["image"]), m["classes"]
+
+    def fn(*args):
+        params = list(args[:nt])
+        cvals = list(args[nt : nt + nc])
+        momenta = list(args[nt + nc : 2 * nt + nc])
+        bits, ks, lam, lr, temp, n_act, x, y = args[2 * nt + nc :]
+
+        def loss_fn(params):
+            ctx = nn.Ctx(mode="train", method=method, quantizer=quantizer,
+                         params=params, consts=cvals, bits=bits, ks=ks,
+                         n_act=n_act, temp=temp, use_pallas=use_pallas)
+            logits = m["fn"](ctx, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+            reg = jnp.sum(jnp.stack([jnp.sum(r) for r in ctx.reg_terms])) if ctx.reg_terms else 0.0
+            correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+            return ce + lam * reg, (ce, correct)
+
+        (loss, (ce, correct)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # global grad-norm clipping (stabilizes the aggressive-λ and
+        # high-lr regimes; standard QAT practice)
+        gsq = sum(jnp.sum(g * g) for g in grads)
+        gscale = jnp.minimum(1.0, GRAD_CLIP / (jnp.sqrt(gsq) + 1e-12))
+        new_m = [MOMENTUM * mo + gscale * g for mo, g in zip(momenta, grads)]
+        new_p = [p - lr * mo for p, mo in zip(params, new_m)]
+        return tuple(new_p) + tuple(new_m) + (loss, ce, correct)
+
+    arg_specs = (
+        [_sds(s.shape) for s in trainable]
+        + [_sds(s.shape) for s in consts]
+        + [_sds(s.shape) for s in trainable]
+        + [_sds((lq,)), _sds((lq,)), _sds(()), _sds(()), _sds(()), _sds(()),
+           _sds((b,) + img), _sds((b,), jnp.int32)]
+    )
+    extra = (
+        [dict(name=s.name + ".m", shape=list(s.shape), dtype="f32", role="momentum",
+              kind=s.kind, q_index=s.q_index) for s in trainable]
+        + [dict(name="bits", shape=[lq], dtype="f32", role="bits"),
+           dict(name="ks", shape=[lq], dtype="f32", role="ks"),
+           dict(name="lam", shape=[], dtype="f32", role="hyper"),
+           dict(name="lr", shape=[], dtype="f32", role="hyper"),
+           dict(name="temp", shape=[], dtype="f32", role="hyper"),
+           dict(name="n_act", shape=[], dtype="f32", role="hyper"),
+           dict(name="x", shape=[b] + list(img), dtype="f32", role="data"),
+           dict(name="y", shape=[b], dtype="i32", role="data")]
+    )
+    inputs = _input_descs(trainable, consts, extra)
+    outputs = (
+        [dict(name=s.name, shape=list(s.shape), dtype="f32", role="param") for s in trainable]
+        + [dict(name=s.name + ".m", shape=list(s.shape), dtype="f32", role="momentum")
+           for s in trainable]
+        + [dict(name="loss", shape=[], dtype="f32", role="metric"),
+           dict(name="ce", shape=[], dtype="f32", role="metric"),
+           dict(name="correct", shape=[], dtype="f32", role="metric")]
+    )
+    meta = _meta(model_name, method, "train", b, rec, trainable, consts, inputs, outputs)
+    return fn, arg_specs, meta
+
+
+def build_eval(model_name: str, method: str, quantizer: str = "roundclamp",
+               batch: Optional[int] = None):
+    """fn(params..., consts..., bits, temp, n_act, x, y) -> (ce_sum, correct)"""
+    m = models_lib.get_model(model_name)
+    rec = record(model_name, method)
+    trainable, consts = _specs_meta(rec)
+    nt, nc, lq = len(trainable), len(consts), len(rec.qlayers)
+    b = batch or m["batch"]
+    img = tuple(m["image"])
+
+    def fn(*args):
+        params = list(args[:nt])
+        cvals = list(args[nt : nt + nc])
+        bits, temp, n_act, x, y = args[nt + nc :]
+        ctx = nn.Ctx(mode="eval", method=method, quantizer=quantizer,
+                     params=params, consts=cvals, bits=bits,
+                     ks=jnp.ones((lq,), jnp.float32), n_act=n_act, temp=temp)
+        logits = m["fn"](ctx, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce_sum = -jnp.sum(jnp.take_along_axis(logp, y[:, None], axis=1))
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return ce_sum, correct
+
+    arg_specs = (
+        [_sds(s.shape) for s in trainable]
+        + [_sds(s.shape) for s in consts]
+        + [_sds((lq,)), _sds(()), _sds(()), _sds((b,) + img), _sds((b,), jnp.int32)]
+    )
+    extra = [dict(name="bits", shape=[lq], dtype="f32", role="bits"),
+             dict(name="temp", shape=[], dtype="f32", role="hyper"),
+             dict(name="n_act", shape=[], dtype="f32", role="hyper"),
+             dict(name="x", shape=[b] + list(img), dtype="f32", role="data"),
+             dict(name="y", shape=[b], dtype="i32", role="data")]
+    inputs = _input_descs(trainable, consts, extra)
+    outputs = [dict(name="ce_sum", shape=[], dtype="f32", role="metric"),
+               dict(name="correct", shape=[], dtype="f32", role="metric")]
+    meta = _meta(model_name, method, "eval", b, rec, trainable, consts, inputs, outputs)
+    return fn, arg_specs, meta
+
+
+def build_stats(model_name: str, method: str, quantizer: str = "roundclamp"):
+    """Per-layer LSB statistics for the pruning decision (Algorithm 1).
+
+    msq/dorefa: fn(params..., consts..., bits, ks) -> (beta[Lq], qerr[Lq], reg[Lq])
+    bsq/csq:    fn(params..., consts..., bits, temp) -> (plane_nz[Lq,N0],)
+    """
+    m = models_lib.get_model(model_name)
+    rec = record(model_name, method)
+    trainable, consts = _specs_meta(rec)
+    nt, nc, lq = len(trainable), len(consts), len(rec.qlayers)
+    img = tuple(m["image"])
+    bitsplit = method in ("bsq", "csq")
+
+    def fn(*args):
+        params = list(args[:nt])
+        cvals = list(args[nt : nt + nc])
+        if bitsplit:
+            bits, temp = args[nt + nc :]
+            ks = jnp.ones((lq,), jnp.float32)
+        else:
+            bits, ks = args[nt + nc :]
+            temp = jnp.asarray(1.0, jnp.float32)
+        ctx = nn.Ctx(mode="stats", method=method, quantizer=quantizer,
+                     params=params, consts=cvals, bits=bits, ks=ks,
+                     n_act=None, temp=temp)
+        x = jnp.zeros((1,) + img, jnp.float32)
+        m["fn"](ctx, x)
+        if bitsplit:
+            return (jnp.stack(ctx.beta),)  # (Lq, N0)
+        beta = jnp.stack(ctx.beta)
+        qerr = jnp.stack(ctx.qerr)
+        reg = jnp.stack([jnp.sum(r) for r in ctx.reg_terms])
+        return beta, qerr, reg
+
+    tail = [_sds((lq,)), _sds(())] if bitsplit else [_sds((lq,)), _sds((lq,))]
+    arg_specs = [_sds(s.shape) for s in trainable] + [_sds(s.shape) for s in consts] + tail
+    extra = ([dict(name="bits", shape=[lq], dtype="f32", role="bits"),
+              dict(name="temp", shape=[], dtype="f32", role="hyper")] if bitsplit else
+             [dict(name="bits", shape=[lq], dtype="f32", role="bits"),
+              dict(name="ks", shape=[lq], dtype="f32", role="ks")])
+    inputs = _input_descs(trainable, consts, extra)
+    if bitsplit:
+        outputs = [dict(name="plane_nz", shape=[lq, nn.N0], dtype="f32", role="metric")]
+    else:
+        outputs = [dict(name="beta", shape=[lq], dtype="f32", role="metric"),
+                   dict(name="qerr", shape=[lq], dtype="f32", role="metric"),
+                   dict(name="reg", shape=[lq], dtype="f32", role="metric")]
+    meta = _meta(model_name, method, "stats", 1, rec, trainable, consts, inputs, outputs)
+    return fn, arg_specs, meta
+
+
+def build_hessian(model_name: str, batch: Optional[int] = None):
+    """Hutchinson probe (HAWQ-V2, paper Eq. 9 input): one Rademacher hvp.
+
+    fn(params..., x, y, seed) -> vhv[Lq]: per-layer vᵀ H v of the CE loss
+    of the *full-precision* forward w.r.t. that layer's weights. The Rust
+    coordinator averages probes and forms Ω_l = Tr(H_l)·‖W_n−W‖².
+    Built for the msq param structure (one float tensor per q-layer).
+    """
+    m = models_lib.get_model(model_name)
+    rec = record(model_name, "msq")
+    trainable, _ = _specs_meta(rec)
+    nt, lq = len(trainable), len(rec.qlayers)
+    b = batch or max(m["batch"] // 4, 8)
+    img = tuple(m["image"])
+    qw_idx = [i for i, s in enumerate(trainable) if s.kind == "qw"]
+    q_of = {i: s.q_index for i, s in enumerate(trainable) if s.kind == "qw"}
+
+    def fn(*args):
+        params = list(args[:nt])
+        x, y, seed = args[nt], args[nt + 1], args[nt + 2]
+
+        def ce_of_qw(qws):
+            full = list(params)
+            for j, i in enumerate(qw_idx):
+                full[i] = qws[j]
+            ctx = nn.Ctx(mode="fp", method="msq", params=full,
+                         consts=[], bits=None, ks=None, n_act=None)
+            logits = m["fn"](ctx, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+        qws = [params[i] for i in qw_idx]
+        key = jax.random.PRNGKey(seed)
+        vs = []
+        for j, w in enumerate(qws):
+            kj = jax.random.fold_in(key, j)
+            vs.append(jax.random.rademacher(kj, w.shape, dtype=jnp.float32))
+        g_fn = jax.grad(ce_of_qw)
+        _, hv = jax.jvp(g_fn, (qws,), (vs,))
+        vhv = jnp.zeros((lq,), jnp.float32)
+        for j, i in enumerate(qw_idx):
+            vhv = vhv.at[q_of[i]].add(jnp.sum(vs[j] * hv[j]))
+        return (vhv,)
+
+    arg_specs = ([_sds(s.shape) for s in trainable]
+                 + [_sds((b,) + img), _sds((b,), jnp.int32), _sds((), jnp.int32)])
+    extra = [dict(name="x", shape=[b] + list(img), dtype="f32", role="data"),
+             dict(name="y", shape=[b], dtype="i32", role="data"),
+             dict(name="seed", shape=[], dtype="i32", role="seed")]
+    inputs = _input_descs(trainable, [], extra)
+    outputs = [dict(name="vhv", shape=[lq], dtype="f32", role="metric")]
+    meta = _meta(model_name, "msq", "hessian", b, rec, trainable, [], inputs, outputs)
+    return fn, arg_specs, meta
+
+
+# ---------------------------------------------------------------------------
+# Manifest fragments
+# ---------------------------------------------------------------------------
+
+
+def _meta(model_name, method, fn_name, batch, rec, trainable, consts, inputs, outputs):
+    m = models_lib.get_model(model_name)
+    return dict(
+        model=model_name,
+        method=method,
+        fn=fn_name,
+        batch=batch,
+        image=list(m["image"]),
+        classes=m["classes"],
+        num_q_layers=len(rec.qlayers),
+        q_layers=[dict(name=q.name, shape=list(q.shape), numel=q.numel) for q in rec.qlayers],
+        trainable_params=int(sum(s.numel() for s in trainable)),
+        num_trainable=len(trainable),
+        num_consts=len(consts),
+        inputs=inputs,
+        outputs=outputs,
+    )

@@ -1,0 +1,209 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every kernel must match its
+``ref.py`` oracle to float32 tolerance. This is the CORE correctness
+signal for the compute layer — the AOT artifacts embed exactly these
+computations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dorefa, qmatmul, ref, roundclamp
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _uniform(key, shape, lo=0.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# roundclamp fused kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 300),
+    n=st.integers(2, 8),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_qlsb_matches_ref(rows, cols, n, k, seed):
+    w = _uniform(seed, (rows, cols))
+    q, b = roundclamp.fused_qlsb(w, float(n), float(k))
+    qr, br = ref.fused_qlsb_ref(w, float(n), float(k))
+    np.testing.assert_allclose(q, qr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(b, br, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 6, 8])
+def test_roundclamp_range(n):
+    w = _uniform(0, (64, 64))
+    q, _ = roundclamp.fused_qlsb(w, float(n), 1.0)
+    assert float(jnp.min(q)) >= 0.0
+    assert float(jnp.max(q)) <= 1.0
+    # values land on the 1/(2^n - 1) lattice
+    codes = np.asarray(q) * (2**n - 1)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_lsb_zero_on_lsbzero_bin_centres():
+    """B_k vanishes exactly at the centres of the LSB-zero n-bit bins,
+    w = j / 2^{n-k} (whose n-bit RoundClamp code is exactly 2^k * j)."""
+    n, k = 4, 1
+    j = jnp.arange(2 ** (n - k), dtype=jnp.float32)
+    w = jnp.tile(j / (2.0 ** (n - k)), (8, 1))
+    _, b = roundclamp.fused_qlsb(w, float(n), float(k))
+    np.testing.assert_allclose(b, 0.0, atol=1e-6)
+    # and those centres indeed have zero LSBs under the n-bit code
+    nz = ref.lsb_nonzero_ref(w, float(n), float(k))
+    np.testing.assert_allclose(nz, 0.0)
+
+
+def test_lsb_sign_points_to_nearest_lsbzero_bin():
+    """sign(B_k) is the descent direction onto the LSB-zero bins.
+
+    n=3, k=1: targets are {0, 1/4, 1/2, 3/4}; basin boundaries sit at the
+    midpoints of the odd n-bit bins (paper Fig. 3b): (j+0.5)/4 = 3/8, ...
+    """
+    n, k = 3, 1
+    w = jnp.array([[0.22, 0.28, 0.45, 0.55]], dtype=jnp.float32)
+    _, b = roundclamp.fused_qlsb(w, float(n), float(k))
+    b = np.asarray(b)[0]
+    # 0.22 < 1/4 < 0.28 (both inside basin j=1: [0.125, 0.375))
+    assert b[0] < 0 and b[1] > 0
+    # 0.45 < 1/2 < 0.55 (both inside basin j=2: [0.375, 0.625))
+    assert b[2] < 0 and b[3] > 0
+
+
+def test_lsb_basin_boundaries_at_odd_bin_midpoints():
+    """Fig. 3b property: the MSB-code switch happens at the midpoint of the
+    n-bit bins with nonzero LSBs, so odd codes can round up OR down."""
+    n, k = 3, 1
+    eps = 1e-3
+    # n-bit code 3's bin is [2.5/8, 3.5/8); its midpoint is 3/8.
+    lo = jnp.array([[3.0 / 8.0 - eps]], dtype=jnp.float32)
+    hi = jnp.array([[3.0 / 8.0 + eps]], dtype=jnp.float32)
+    _, b_lo = roundclamp.fused_qlsb(lo, float(n), float(k))
+    _, b_hi = roundclamp.fused_qlsb(hi, float(n), float(k))
+    # below the midpoint: target 1/4 (B>0, descend); above: target 1/2 (B<0)
+    assert float(b_lo[0, 0]) > 0.0
+    assert float(b_hi[0, 0]) < 0.0
+
+
+# ---------------------------------------------------------------------------
+# dorefa kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 300),
+    n=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dorefa_matches_ref(rows, cols, n, seed):
+    w = _uniform(seed, (rows, cols))
+    q = dorefa.dorefa_quant(w, float(n))
+    np.testing.assert_allclose(q, ref.dorefa_ref(w, float(n)), rtol=1e-6, atol=1e-6)
+
+
+def test_dorefa_bin_misalignment_vs_roundclamp():
+    """Fig. 3a vs 3b: under RoundClamp, every weight whose n-bit code has
+    zero LSBs also has B_k == 0 (codes align across precisions); under
+    DoReFa some LSB-zero codes still carry nonzero B_k (misaligned bins).
+    """
+    import sys
+
+    sys.path.insert(0, __file__.rsplit("/tests", 1)[0])
+    from compile import quant
+
+    n, k = 3.0, 1.0
+    w = jnp.linspace(0.0, 1.0, 2001).reshape(1, -1)
+    ln = 2.0**n
+    # --- RoundClamp: targets are LSB-zero bin centres, so inside every
+    # LSB-zero bin |B_k| <= half a bin width.
+    code_rc = np.minimum(np.round(ln * np.asarray(w)), ln - 1.0)
+    zero_rc = (code_rc % 2.0**k) == 0
+    _, b_rc = roundclamp.fused_qlsb(w, n, k)
+    assert (np.abs(np.asarray(b_rc))[zero_rc] <= 0.5 / ln + 1e-6).all()
+    # --- DoReFa: on a macroscopic fraction of its *LSB-zero* codes the
+    # regularizer target lies outside the bin (|B| > half width) — the
+    # paper's "even has a gradient for 110, which should not exist".
+    code_df = np.round((ln - 1.0) * np.asarray(w))
+    zero_df = (code_df % 2.0**k) == 0
+    b_df = np.abs(np.asarray(quant.lsb_proxy(w, n, k, "dorefa")))
+    frac_bad = (b_df[zero_df] > 0.5 / (ln - 1.0) + 1e-6).mean()
+    assert frac_bad > 0.10
+    # --- and RoundClamp's descent is balanced on the interior nonzero-LSB
+    # bins (codes 1,3,5 — excluding the clamped top bin), while DoReFa's is
+    # biased negative ("induce the value of W to be constantly smaller").
+    interior_rc = (code_rc % 2.0**k != 0) & (code_rc < ln - 1.0)
+    s_rc = np.sign(np.asarray(b_rc))[interior_rc]
+    assert abs(s_rc.mean()) < 0.1
+    interior_df = (code_df % 2.0**k != 0) & (code_df < ln - 1.0)
+    s_df = np.sign(np.asarray(quant.lsb_proxy(w, n, k, "dorefa")))[interior_df]
+    assert s_df.mean() > 0.3
+
+
+# ---------------------------------------------------------------------------
+# qmatmul kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n_out=st.integers(1, 200),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n_out, bits, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n_out)) * 0.4
+    o = qmatmul.qmatmul(x, w, 1.0, float(bits))
+    orf = ref.qmatmul_ref(x, w, 1.0, float(bits))
+    np.testing.assert_allclose(o, orf, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128), (130, 257, 190)])
+def test_qmatmul_tile_boundaries(shape):
+    m, k, n_out = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n_out)) * 0.3
+    np.testing.assert_allclose(
+        qmatmul.qmatmul(x, w, 0.9, 4.0),
+        ref.qmatmul_ref(x, w, 0.9, 4.0),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_qmatmul_high_bits_approaches_fp():
+    """At 8 bits the fake-quant error is small; the product should be close
+    to the unquantized matmul (sanity on scale handling)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.normal(kx, (64, 128))
+    w = jax.random.normal(kw, (128, 64)) * 0.25
+    o = qmatmul.qmatmul(x, w, 1.0, 8.0)
+    fp = x @ w
+    err = float(jnp.max(jnp.abs(o - fp)) / (jnp.max(jnp.abs(fp)) + 1e-9))
+    assert err < 0.05
+
+
+def test_vmem_budgets():
+    """TPU VMEM budget assertions from DESIGN.md §Hardware-Adaptation."""
+    assert qmatmul.vmem_bytes() <= 512 * 1024
+    assert roundclamp.vmem_bytes() <= 2 * 1024 * 1024

@@ -1,0 +1,109 @@
+"""Quantizer library (L2 `quant.py`) tests: STE gradients, bipartite
+slicing, regularizer gradient identity (paper Eq. 7), activation quant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(quant.ste_round(x) * 3.0))(jnp.array([0.2, 1.7]))
+    np.testing.assert_allclose(g, [3.0, 3.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_quantize01_in_range_and_on_lattice(n, seed):
+    w = jax.random.uniform(jax.random.PRNGKey(seed), (64,))
+    for qname in ("roundclamp", "dorefa"):
+        q = quant.quantize01(w, float(n), qname)
+        assert float(jnp.min(q)) >= 0.0 and float(jnp.max(q)) <= 1.0
+        codes = np.asarray(q) * (2**n - 1)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_lsb_l1_gradient_is_sign(paper_eq7_tol=1e-6):
+    """d(Σ|B_k|)/dW must be exactly sign(B_k)/(2s) (Eq. 7, chain through
+    the [0,1] mapping)."""
+    w = jnp.array([0.1, -0.2, 0.31, 0.07])
+    scale = 1.0
+
+    def reg(w):
+        return quant.lsb_l1(w, scale, 8.0, 1.0)
+
+    g = jax.grad(reg)(w)
+    w01 = quant.to_unit(w, scale)
+    b = quant.lsb_proxy(w01, 8.0, 1.0)
+    expect = jnp.sign(b) / (2.0 * scale)
+    np.testing.assert_allclose(g, expect, atol=paper_eq7_tol)
+
+
+def test_fake_quant_ste_gradient_passes_through():
+    w = jnp.linspace(-0.4, 0.4, 9)
+
+    def f(w):
+        return jnp.sum(quant.fake_quant(w, 0.5, 4.0) * 2.0)
+
+    g = jax.grad(f)(w)
+    # inside the clip range the STE passes the gradient through, up to
+    # RoundClamp's inherent 2^n/(2^n - 1) scale (the quantizer multiplies
+    # by 2^n but normalizes by 2^n - 1; -> 1 as n grows)
+    np.testing.assert_allclose(g, 2.0 * 16.0 / 15.0, atol=1e-5)
+
+
+def test_fake_quant_clipped_region_masks_gradient():
+    w = jnp.array([-5.0, 5.0])  # far outside 2*scale
+    g = jax.grad(lambda w: jnp.sum(quant.fake_quant(w, 0.5, 4.0)))(w)
+    np.testing.assert_allclose(g, 0.0, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), k=st.integers(1, 2), seed=st.integers(0, 9999))
+def test_lsb_nonzero_rate_falls_when_snapped(n, k, seed):
+    """Snapping weights onto the LSB-zero bin centres must zero β."""
+    if n - k < 1:
+        return
+    m = n - k
+    w01 = jax.random.uniform(jax.random.PRNGKey(seed), (256,))
+    snapped = jnp.minimum(jnp.round(w01 * 2**m), 2**m - 1) / (2**m)
+    nz = quant.lsb_nonzero(snapped, float(n), float(k))
+    assert float(jnp.mean(nz)) == 0.0
+
+
+def test_act_quant_off_is_identity():
+    x = jnp.array([-0.5, 0.2, 0.9, 1.4])
+    np.testing.assert_allclose(quant.act_quant(x, 0.0), x)
+
+
+def test_act_quant_quantizes_clipped_range():
+    x = jnp.linspace(0.0, 1.0, 33)
+    q = quant.act_quant(x, 2.0)
+    lattice = np.asarray(q) * 3.0
+    np.testing.assert_allclose(lattice, np.round(lattice), atol=1e-5)
+
+
+def test_act_quant_gradient_finite_at_zero_bits():
+    g = jax.grad(lambda x: jnp.sum(quant.act_quant(x, 0.0)))(jnp.array([0.3, 0.7]))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_dorefa_bias_vs_roundclamp_balance():
+    """Fig. 4a mechanism: dorefa's reg-descent sign is biased positive
+    (pushes W down), roundclamp's is balanced (interior bins)."""
+    w01 = jnp.linspace(0.001, 0.999, 4001)
+    n, k = 3.0, 1.0
+    code_rc = np.minimum(np.round(8.0 * np.asarray(w01)), 7.0)
+    inner_rc = (code_rc % 2 == 1) & (code_rc < 7)
+    s_rc = np.sign(np.asarray(quant.lsb_proxy(w01, n, k, "roundclamp")))[inner_rc]
+    code_df = np.round(7.0 * np.asarray(w01))
+    inner_df = (code_df % 2 == 1) & (code_df < 7)
+    s_df = np.sign(np.asarray(quant.lsb_proxy(w01, n, k, "dorefa")))[inner_df]
+    assert abs(s_rc.mean()) < 0.1
+    assert abs(s_df.mean()) > 0.3

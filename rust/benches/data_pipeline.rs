@@ -1,0 +1,44 @@
+//! Data-pipeline bench: synthetic dataset generation throughput and the
+//! steady-state batcher (augmentation included). Batch assembly must stay
+//! well under the step time (§Perf target: < 10% of step wallclock).
+
+use msq::bench::{bench, save};
+use msq::data::{Batcher, Dataset, DatasetSpec};
+use msq::util::threadpool::ThreadPool;
+
+fn main() {
+    let pool = ThreadPool::new(ThreadPool::default_size());
+    let mut results = Vec::new();
+
+    let r = bench("generate cifar-syn 2048 imgs", 1, 3, || {
+        let ds = Dataset::generate(DatasetSpec::cifar_syn(2048, 64, 1), &pool);
+        std::hint::black_box(ds.train_x.len());
+    });
+    r.report(Some((2048.0, "img")));
+    results.push(r);
+
+    let ds = Dataset::generate(DatasetSpec::cifar_syn(4096, 256, 2), &pool);
+    let mut b = Batcher::new(&ds, 256, 3, true);
+    let r = bench("batcher.next b256 (augmented)", 3, 50, || {
+        std::hint::black_box(b.next().x.len());
+    });
+    r.report(Some((256.0, "img")));
+    results.push(r);
+
+    let mut b2 = Batcher::new(&ds, 256, 3, false);
+    let r = bench("batcher.next b256 (no aug)", 3, 50, || {
+        std::hint::black_box(b2.next().x.len());
+    });
+    r.report(Some((256.0, "img")));
+    results.push(r);
+
+    let ds64 = Dataset::generate(DatasetSpec::in64_syn(512, 64, 4), &pool);
+    let mut b3 = Batcher::new(&ds64, 64, 3, true);
+    let r = bench("batcher.next b64 in64 (augmented)", 3, 50, || {
+        std::hint::black_box(b3.next().x.len());
+    });
+    r.report(Some((64.0, "img")));
+    results.push(r);
+
+    save("data_pipeline.csv", &results);
+}

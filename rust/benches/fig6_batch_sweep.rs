@@ -1,0 +1,10 @@
+//! Bench target for paper Fig. 6: time/epoch vs batch size per method.
+//! Full sweep: `experiments fig6 --preset full`.
+
+use msq::exp::{tables, Preset};
+use msq::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new()?;
+    tables::fig6(&eng, Preset::Smoke)
+}

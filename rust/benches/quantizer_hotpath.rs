@@ -1,0 +1,40 @@
+//! L3 hot-path micro-bench: host-side quantizer math (compression
+//! accounting, β estimation, Fig.-4 histograms run over full weight
+//! tensors every pruning interval).
+
+use msq::bench::{bench, save};
+use msq::quant;
+use msq::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let n = 1 << 20; // 1M weights — resnet18s scale
+    let w: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let mut out = Vec::with_capacity(n);
+    let mut results = Vec::new();
+
+    let r = bench("fake_quant_slice 1M f32 @8bit", 2, 10, || {
+        quant::fake_quant_slice(&w, 8.0, &mut out);
+        std::hint::black_box(&out);
+    });
+    r.report(Some((n as f64, "elem")));
+    results.push(r);
+
+    let r = bench("beta_slice 1M f32 (n=8,k=1)", 2, 10, || {
+        std::hint::black_box(quant::beta_slice(&w, 8.0, 1.0));
+    });
+    r.report(Some((n as f64, "elem")));
+    results.push(r);
+
+    let r = bench("lsb_proxy_roundclamp 1M", 2, 10, || {
+        let mut acc = 0f32;
+        for &x in &w {
+            acc += quant::lsb_proxy_roundclamp(quant::to_unit(x, 0.5), 8.0, 1.0).abs();
+        }
+        std::hint::black_box(acc);
+    });
+    r.report(Some((n as f64, "elem")));
+    results.push(r);
+
+    save("quantizer_hotpath.csv", &results);
+}

@@ -1,0 +1,63 @@
+//! PJRT bridge bench: what the L3 hot loop pays per step *around* the XLA
+//! computation — literal creation, argument assembly, execution, tuple
+//! decomposition, scalar readback. Run on the mlp artifact so the compute
+//! itself is small and the bridge overhead is visible.
+
+use msq::bench::{bench, save};
+use msq::data::{Batcher, Dataset, DatasetSpec};
+use msq::runtime::{engine, Engine, ModelState};
+use msq::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new()?;
+    let meta = eng.manifest.find("mlp", "msq", "train")?.clone();
+    let mut state = ModelState::init(&eng.manifest, &meta)?;
+    let pool = ThreadPool::new(2);
+    let ds = Dataset::generate(DatasetSpec::cifar_syn(1024, 64, 5), &pool);
+    let mut batcher = Batcher::new(&ds, meta.batch, 1, false);
+    let lq = meta.num_q_layers;
+    let bits = engine::lit_f32(&vec![8.0; lq], &[lq])?;
+    let ks = engine::lit_f32(&vec![1.0; lq], &[lq])?;
+    let img = meta.image.clone();
+    let b = batcher.next();
+    let mut results = Vec::new();
+
+    // literal creation cost for one batch
+    let r = bench("lit_f32 batch 256x32x32x3", 3, 50, || {
+        std::hint::black_box(
+            engine::lit_f32(&b.x, &[meta.batch, img[0], img[1], img[2]]).unwrap(),
+        );
+    });
+    r.report(Some((b.x.len() as f64, "elem")));
+    results.push(r);
+
+    // full train step (bridge + compute)
+    let x = engine::lit_f32(&b.x, &[meta.batch, img[0], img[1], img[2]])?;
+    let y = engine::lit_i32(&b.y, &[meta.batch])?;
+    let r = bench("mlp train_step e2e (b256)", 3, 30, || {
+        state
+            .train_step(&eng, &meta, &bits, &ks, 5e-5, 0.01, 1.0, 0.0, &x, &y)
+            .unwrap();
+    });
+    r.report(Some((meta.batch as f64, "img")));
+    results.push(r);
+
+    // eval step
+    let emeta = eng.manifest.find("mlp", "msq", "eval")?.clone();
+    let r = bench("mlp eval_step e2e (b256)", 3, 30, || {
+        state.eval_step(&eng, &emeta, &bits, 1.0, 0.0, &x, &y).unwrap();
+    });
+    r.report(Some((meta.batch as f64, "img")));
+    results.push(r);
+
+    // stats step (pruning-interval cost)
+    let smeta = eng.manifest.find("mlp", "msq", "stats")?.clone();
+    let r = bench("mlp stats_step", 3, 30, || {
+        state.stats_step(&eng, &smeta, &bits, &ks).unwrap();
+    });
+    r.report(None);
+    results.push(r);
+
+    save("runtime_bridge.csv", &results);
+    Ok(())
+}

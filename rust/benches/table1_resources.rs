@@ -1,0 +1,12 @@
+//! Bench target for paper Table 1: training resource usage per method
+//! (trainable params exact, step time measured, peak RSS). The full
+//! version is `experiments table1 --preset full`; this smoke variant keeps
+//! `cargo bench` fast.
+
+use msq::exp::{tables, Preset};
+use msq::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new()?;
+    tables::table1(&eng, Preset::Smoke)
+}

@@ -1,0 +1,76 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`bench_n`]: warmup, timed iterations, mean / p50 / p95 / throughput
+//! reporting, and a CSV row under `results/bench/` for regression diffing.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self, unit_per_iter: Option<(f64, &str)>) {
+        let thr = unit_per_iter
+            .map(|(n, u)| format!("  {:>10.1} {u}/s", n / self.mean_s))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3}, min {:.3}){}",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.min_s * 1e3,
+            thr
+        );
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.6e},{:.6e},{:.6e}",
+            self.name, self.iters, self.mean_s, self.p50_s, self.p95_s
+        )
+    }
+}
+
+/// Run `f` for `warmup` + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len().max(1) as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: percentile(&times, 50.0),
+        p95_s: percentile(&times, 95.0),
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Write a set of results to `results/bench/<file>.csv`.
+pub fn save(file: &str, results: &[BenchResult]) {
+    let dir = crate::metrics::results_dir().join("bench");
+    let _ = std::fs::create_dir_all(&dir);
+    let mut s = String::from("name,iters,mean_s,p50_s,p95_s\n");
+    for r in results {
+        s.push_str(&r.csv_row());
+        s.push('\n');
+    }
+    let _ = std::fs::write(dir.join(file), s);
+}

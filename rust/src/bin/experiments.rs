@@ -1,0 +1,61 @@
+//! `experiments` — regenerate every paper table and figure.
+//!
+//! ```text
+//! experiments all                 # everything at the quick preset
+//! experiments table1 [--preset smoke|quick|full]
+//! experiments table2 | table3 | table4 | table5
+//! experiments fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | fig9
+//! experiments supp_lambda | supp_vitbase | perf
+//! ```
+//!
+//! Results land under `results/` as CSV/JSON; paper-style tables print to
+//! stdout. EXPERIMENTS.md records paper-vs-measured per experiment.
+
+use anyhow::Result;
+
+use msq::exp::{tables, Preset};
+use msq::runtime::Engine;
+use msq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["preset"]);
+    let preset = Preset::parse(args.opt("preset").unwrap_or("quick"));
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let eng = Engine::new()?;
+    println!("[experiments] {} @ preset {}", which, preset.name());
+    match which {
+        "table1" => tables::table1(&eng, preset)?,
+        "table2" => tables::table2(&eng, preset)?,
+        "table3" => tables::table3(&eng, preset)?,
+        "table4" => tables::table4(&eng, preset)?,
+        "table5" => tables::table5(&eng, preset)?,
+        "fig3" => tables::fig3(&eng)?,
+        "fig4" => tables::fig4(&eng, preset)?,
+        "fig5" => tables::fig5(&eng, preset)?,
+        "fig6" => tables::fig6(&eng, preset)?,
+        "fig7" | "fig8" | "fig78" => tables::fig78(&eng, preset)?,
+        "fig9" => tables::fig9(&eng, preset)?,
+        "supp_lambda" => tables::supp_lambda(&eng, preset)?,
+        "supp_vitbase" => tables::supp_vitbase(&eng, preset)?,
+        "perf" => tables::perf_probe(&eng)?,
+        "all" => {
+            tables::fig3(&eng)?;
+            tables::table1(&eng, preset)?;
+            tables::fig6(&eng, preset)?;
+            tables::table2(&eng, preset)?;
+            tables::fig4(&eng, preset)?;
+            tables::fig5(&eng, preset)?;
+            tables::fig78(&eng, preset)?;
+            tables::fig9(&eng, preset)?;
+            tables::supp_lambda(&eng, preset)?;
+            tables::table3(&eng, preset)?;
+            tables::table4(&eng, preset)?;
+            tables::table5(&eng, preset)?;
+        }
+        _ => {
+            eprintln!("usage: experiments <all|table1..5|fig3..9|supp_lambda|supp_vitbase|perf> \
+                       [--preset smoke|quick|full]");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Per-layer bit-state manager: the mutable mixed-precision scheme.
+//!
+//! Owns `q_l` (current bit-width) and `p_l` (prune width, the Hessian-
+//! assigned `k` of the bipartite slice) per quantized layer, and renders
+//! them as the `bits` / `ks` runtime literals the artifacts consume.
+
+use anyhow::Result;
+
+use crate::quant::compression::BitScheme;
+use crate::runtime::engine;
+
+#[derive(Clone, Debug)]
+pub struct BitState {
+    pub scheme: BitScheme,
+    /// prune width p_l per layer (1 or 2; the `k` fed to the LSB slice)
+    pub prune_bits: Vec<u8>,
+    /// floor: layers never drop below this width
+    pub min_bits: u8,
+}
+
+impl BitState {
+    pub fn new(n0: u8, sizes: &[usize]) -> BitState {
+        BitState {
+            scheme: BitScheme::uniform(n0, sizes),
+            prune_bits: vec![1; sizes.len()],
+            min_bits: 1,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.scheme.num_layers()
+    }
+
+    pub fn bits_f32(&self) -> Vec<f32> {
+        self.scheme.bits.iter().map(|&b| b as f32).collect()
+    }
+
+    /// ks for the LSB slice, clamped so n - k >= min_bits.
+    pub fn ks_f32(&self) -> Vec<f32> {
+        self.scheme
+            .bits
+            .iter()
+            .zip(&self.prune_bits)
+            .map(|(&b, &p)| p.min(b.saturating_sub(self.min_bits)).max(1) as f32)
+            .collect()
+    }
+
+    pub fn bits_literal(&self) -> Result<xla::Literal> {
+        let v = self.bits_f32();
+        engine::lit_f32(&v, &[v.len()])
+    }
+
+    pub fn ks_literal(&self) -> Result<xla::Literal> {
+        let v = self.ks_f32();
+        engine::lit_f32(&v, &[v.len()])
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.scheme.compression()
+    }
+
+    /// Can layer `l` still be pruned by its prune width?
+    pub fn prunable(&self, l: usize) -> bool {
+        self.scheme.bits[l] > self.min_bits
+    }
+
+    /// Prune layer `l` by its assigned width; returns bits removed.
+    pub fn prune_layer(&mut self, l: usize) -> u8 {
+        let before = self.scheme.bits[l];
+        let k = self.prune_bits[l].min(before.saturating_sub(self.min_bits));
+        if k == 0 {
+            return 0;
+        }
+        self.scheme.prune(l, k);
+        before - self.scheme.bits[l]
+    }
+
+    /// Hessian-aware prune-width assignment (paper Sec. 3.2): layers with
+    /// Ω below the mean get p = 2, the rest p = 1.
+    pub fn assign_prune_bits(&mut self, omega: &[f32]) {
+        let mean = omega.iter().copied().sum::<f32>() / omega.len().max(1) as f32;
+        for (p, &o) in self.prune_bits.iter_mut().zip(omega) {
+            *p = if o < mean { 2 } else { 1 };
+        }
+    }
+
+    pub fn reset_prune_bits(&mut self) {
+        self.prune_bits.iter_mut().for_each(|p| *p = 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state() {
+        let s = BitState::new(8, &[100, 200, 300]);
+        assert_eq!(s.bits_f32(), vec![8.0, 8.0, 8.0]);
+        assert_eq!(s.ks_f32(), vec![1.0, 1.0, 1.0]);
+        assert!((s.compression() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_respects_floor() {
+        let mut s = BitState::new(2, &[10]);
+        s.prune_bits[0] = 2;
+        let removed = s.prune_layer(0);
+        assert_eq!(removed, 1); // floor at 1 bit
+        assert_eq!(s.scheme.bits[0], 1);
+        assert_eq!(s.prune_layer(0), 0);
+    }
+
+    #[test]
+    fn hessian_assignment() {
+        let mut s = BitState::new(8, &[10, 10, 10]);
+        s.assign_prune_bits(&[1.0, 5.0, 0.5]); // mean = 2.1667
+        assert_eq!(s.prune_bits, vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn ks_never_exceed_headroom() {
+        let mut s = BitState::new(3, &[10]);
+        s.prune_bits[0] = 2;
+        assert_eq!(s.ks_f32(), vec![2.0]);
+        s.scheme.bits[0] = 2;
+        assert_eq!(s.ks_f32(), vec![1.0]); // only 1 bit of headroom above floor
+    }
+}

@@ -1,0 +1,224 @@
+//! BSQ baseline (S7): explicit bit-split training (Yang et al. 2021).
+//!
+//! Every quantized layer's weight is N0 trainable bit-planes (+ frozen
+//! sign + per-layer scale) — 8× the trainable parameters of MSQ, which is
+//! exactly the overhead Table 1 / Fig. 6 measure. Training induces
+//! bit-level sparsity with an L1 regularizer on the *rounded* plane
+//! values; every interval the LSB-most active plane of a layer is hard-
+//! pruned (deactivated via the runtime `bits` mask) when its nonzero rate
+//! falls below α. Re-quantization after pruning is implicit (remaining
+//! planes keep training).
+
+use anyhow::Result;
+
+use super::bitstate::BitState;
+use super::report::{PruneEvent, RunReport};
+use super::schedule::cosine_lr;
+use super::trainer::MsqConfig;
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{engine, ArtifactMeta, Engine, ModelState};
+use crate::util::timer::{peak_rss_bytes, Timer};
+
+pub const N0: usize = 8;
+
+pub struct BsqTrainer<'e> {
+    pub eng: &'e Engine,
+    pub cfg: MsqConfig,
+    pub train_meta: ArtifactMeta,
+    pub eval_meta: ArtifactMeta,
+    pub stats_meta: ArtifactMeta,
+    pub state: ModelState,
+    pub bitstate: BitState,
+    method: &'static str,
+}
+
+impl<'e> BsqTrainer<'e> {
+    pub fn new(eng: &'e Engine, cfg: MsqConfig) -> Result<BsqTrainer<'e>> {
+        Self::with_method(eng, cfg, "bsq")
+    }
+
+    pub(crate) fn with_method(
+        eng: &'e Engine,
+        cfg: MsqConfig,
+        method: &'static str,
+    ) -> Result<BsqTrainer<'e>> {
+        let train_meta = eng
+            .manifest
+            .find_batch(&cfg.model, method, "train", cfg.batch)
+            .or_else(|_| eng.manifest.find(&cfg.model, method, "train"))?
+            .clone();
+        let eval_meta = eng.manifest.find(&cfg.model, method, "eval")?.clone();
+        let stats_meta = eng.manifest.find(&cfg.model, method, "stats")?.clone();
+        let state = ModelState::init(&eng.manifest, &train_meta)?;
+        let bitstate = BitState::new(cfg.n0, &train_meta.q_sizes());
+        Ok(BsqTrainer { eng, cfg, train_meta, eval_meta, stats_meta, state, bitstate, method })
+    }
+
+    /// CSQ temperature for this step (1.0 for plain BSQ).
+    fn temperature(&self, step: usize, total: usize) -> f32 {
+        if self.method == "csq" {
+            super::schedule::csq_temperature(step, total, 100.0)
+        } else {
+            1.0
+        }
+    }
+
+    pub fn run(&mut self, ds: &Dataset) -> Result<RunReport> {
+        let cfg = self.cfg.clone();
+        let timer = Timer::start();
+        let mut report = RunReport {
+            label: format!("{}_{}", cfg.model, self.method),
+            model: cfg.model.clone(),
+            method: self.method.into(),
+            epochs: cfg.epochs,
+            trainable_params: self.state.trainable_params(),
+            ..Default::default()
+        };
+        let batch = self.train_meta.batch;
+        let mut batcher = Batcher::new(ds, batch, cfg.seed, true);
+        let steps_per_epoch = batcher.batches_per_epoch();
+        let total_steps = steps_per_epoch * cfg.epochs;
+        let img = self.train_meta.image.clone();
+        let mut gamma_reached = false;
+        let mut lam = cfg.lam;
+        let mut step = 0usize;
+        let mut step_time = 0f64;
+
+        for epoch in 0..cfg.epochs {
+            let bits_l = self.bitstate.bits_literal()?;
+            let ks_l = self.bitstate.ks_literal()?; // unused by graph semantics, same shape
+            let mut ep_loss = 0f64;
+            let mut ep_corr = 0f64;
+            for _ in 0..steps_per_epoch {
+                let b = batcher.next();
+                let x = engine::lit_f32(&b.x, &[batch, img[0], img[1], img[2]])?;
+                let y = engine::lit_i32(&b.y, &[batch])?;
+                let lr = cosine_lr(cfg.lr0, step, total_steps, 0.05, 0.0);
+                let temp = self.temperature(step, total_steps);
+                let st = Timer::start();
+                let (loss, _ce, corr) = self.state.train_step(
+                    self.eng,
+                    &self.train_meta.clone(),
+                    &bits_l,
+                    &ks_l,
+                    lam,
+                    lr,
+                    temp,
+                    cfg.n_act,
+                    &x,
+                    &y,
+                )?;
+                step_time += st.seconds();
+                ep_loss += loss as f64;
+                ep_corr += corr as f64;
+                step += 1;
+            }
+            report.train_loss.push((ep_loss / steps_per_epoch as f64) as f32);
+            report.train_acc.push((ep_corr / (steps_per_epoch * batch) as f64) as f32);
+
+            let due = cfg.interval > 0 && (epoch + 1) % cfg.interval == 0;
+            if due && !gamma_reached && cfg.gamma > 0.0 {
+                self.prune_round(epoch, step, total_steps, &mut report)?;
+                if self.bitstate.compression() >= cfg.gamma {
+                    gamma_reached = true;
+                    lam = 0.0;
+                    report.gamma_reached_epoch = Some(epoch);
+                }
+            }
+
+            let do_eval = (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0)
+                || epoch + 1 == cfg.epochs;
+            if do_eval {
+                let (eacc, eloss) = self.evaluate(ds)?;
+                report.eval_epochs.push(epoch);
+                report.eval_acc.push(eacc);
+                report.eval_loss.push(eloss);
+                report.best_acc = report.best_acc.max(eacc);
+                if cfg.verbose {
+                    println!(
+                        "[{}] epoch {epoch:3} loss {:.4} eval-acc {:.3} comp {:.2}x",
+                        report.label,
+                        report.train_loss.last().unwrap(),
+                        eacc,
+                        self.bitstate.compression()
+                    );
+                }
+            }
+        }
+        report.steps = step;
+        report.final_bits = self.bitstate.scheme.bits.clone();
+        report.final_compression = self.bitstate.compression();
+        report.final_acc = report.eval_acc.last().copied().unwrap_or(0.0);
+        report.total_seconds = timer.seconds();
+        report.step_seconds_mean = step_time / step.max(1) as f64;
+        report.peak_rss_bytes = peak_rss_bytes().unwrap_or(0);
+        Ok(report)
+    }
+
+    /// Bit-plane pruning: deactivate a layer's lowest active plane when
+    /// its nonzero rate < α (ascending-rate order, stop at Γ).
+    fn prune_round(
+        &mut self,
+        epoch: usize,
+        step: usize,
+        total_steps: usize,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let bits_l = self.bitstate.bits_literal()?;
+        let temp = self.temperature(step, total_steps);
+        let plane_nz =
+            self.state.plane_stats_step(self.eng, &self.stats_meta, &bits_l, temp)?; // (Lq*N0)
+        let lq = self.bitstate.num_layers();
+        // per-layer rate of the lowest ACTIVE plane
+        let mut lsb_rate = vec![1f32; lq];
+        for l in 0..lq {
+            let active = self.bitstate.scheme.bits[l] as usize;
+            if active > 0 {
+                lsb_rate[l] = plane_nz[l * N0 + (active - 1)];
+            }
+        }
+        let bits_before = self.bitstate.scheme.bits.clone();
+        let mut order: Vec<usize> = (0..lq).collect();
+        order.sort_by(|&a, &b| lsb_rate[a].partial_cmp(&lsb_rate[b]).unwrap());
+        for &l in &order {
+            if self.bitstate.compression() >= cfg.gamma {
+                break;
+            }
+            if lsb_rate[l] < cfg.alpha && self.bitstate.prunable(l) {
+                self.bitstate.scheme.prune(l, 1);
+            }
+        }
+        report.prune_events.push(PruneEvent {
+            epoch,
+            beta: lsb_rate,
+            omega: vec![0.0; lq],
+            bits_before,
+            bits_after: self.bitstate.scheme.bits.clone(),
+            prune_bits: vec![1; lq],
+            compression: self.bitstate.compression(),
+        });
+        Ok(())
+    }
+
+    pub fn evaluate(&self, ds: &Dataset) -> Result<(f32, f32)> {
+        let meta = self.eval_meta.clone();
+        let batch = meta.batch;
+        let bits_l = self.bitstate.bits_literal()?;
+        let n = ds.test_y.len();
+        anyhow::ensure!(n % batch == 0, "test split not divisible by eval batch");
+        let img = &meta.image;
+        let helper = Batcher::new(ds, batch, 0, false);
+        let mut correct = 0f64;
+        let mut loss = 0f64;
+        for tb in helper.test_batches(batch) {
+            let x = engine::lit_f32(&tb.x, &[batch, img[0], img[1], img[2]])?;
+            let y = engine::lit_i32(&tb.y, &[batch])?;
+            let (ce_sum, corr) =
+                self.state.eval_step(self.eng, &meta, &bits_l, 1.0, self.cfg.n_act, &x, &y)?;
+            correct += corr as f64;
+            loss += ce_sum as f64;
+        }
+        Ok(((correct / n as f64) as f32, (loss / n as f64) as f32))
+    }
+}

@@ -1,0 +1,25 @@
+//! CSQ baseline (S8): continuous-sparsification bit-split training
+//! (Xiao et al., DAC 2023).
+//!
+//! Same bit-split parameterization as BSQ plus per-(layer, plane) gates
+//! `σ(T·g)` whose temperature `T` ramps 1 → 100 over training (the
+//! continuous-sparsification smoothing of both bit training and precision
+//! adjustment). Precision reduction happens when a gate saturates low;
+//! the trainer mirrors that by pruning a layer's lowest active plane when
+//! its *gated* nonzero rate crosses α. Reuses `BsqTrainer`'s loop with
+//! `method = "csq"` (the artifact differs: gates are extra trainable
+//! params and the regularizer is gate-weighted).
+
+use anyhow::Result;
+
+use super::bsq::BsqTrainer;
+use super::trainer::MsqConfig;
+use crate::runtime::Engine;
+
+pub struct CsqTrainer;
+
+impl CsqTrainer {
+    pub fn new(eng: &Engine, cfg: MsqConfig) -> Result<BsqTrainer<'_>> {
+        BsqTrainer::with_method(eng, cfg, "csq")
+    }
+}

@@ -1,0 +1,73 @@
+//! Hessian scheduler (S6): Hutchinson trace probes → per-layer Ω (Eq. 9).
+//!
+//! `Tr(H_l)` is estimated with Rademacher probes through the AOT
+//! `hessian_step` artifact (one hvp per probe, per-layer vᵀHv read back);
+//! the coordinator multiplies by the layer's quantization error
+//! ‖W_n − W‖² (from `stats_step`) to form Ω_l. Probes are drawn on fresh
+//! training batches, matching HAWQ-V2 practice.
+
+use anyhow::Result;
+
+use crate::data::Batcher;
+use crate::runtime::{engine, ArtifactMeta, Engine, ModelState};
+use crate::util::prng::Rng;
+
+pub struct HessianEstimator {
+    pub probes: usize,
+    rng: Rng,
+}
+
+impl HessianEstimator {
+    pub fn new(probes: usize, seed: u64) -> Self {
+        HessianEstimator { probes, rng: Rng::new(seed ^ 0x4E55_1A4) }
+    }
+
+    /// Per-layer Hessian-trace estimates (mean of vᵀHv over probes).
+    pub fn trace(
+        &mut self,
+        eng: &Engine,
+        state: &ModelState,
+        meta: &ArtifactMeta,
+        batcher: &mut Batcher,
+    ) -> Result<Vec<f32>> {
+        let lq = meta.num_q_layers;
+        let mut acc = vec![0f64; lq];
+        let b = meta.batch;
+        let img_elems: usize = meta.image.iter().product();
+        for _ in 0..self.probes {
+            // a fresh batch per probe; the hessian artifact's batch may be
+            // smaller than the train batch — truncate deterministically.
+            let batch = batcher.next();
+            let x = engine::lit_f32(
+                &batch.x[..b * img_elems],
+                &[b, meta.image[0], meta.image[1], meta.image[2]],
+            )?;
+            let y_slice: Vec<i32> = batch.y[..b].to_vec();
+            let y = engine::lit_i32(&y_slice, &[b])?;
+            let seed = (self.rng.next_u32() & 0x7FFF_FFFF) as i32;
+            let vhv = state.hessian_step(eng, meta, &x, &y, seed)?;
+            for (a, v) in acc.iter_mut().zip(&vhv) {
+                *a += *v as f64;
+            }
+        }
+        Ok(acc.into_iter().map(|a| (a / self.probes.max(1) as f64) as f32).collect())
+    }
+}
+
+/// Ω_l = Tr(H_l) · ‖W_n − W‖² (paper Eq. 9). `qerr` comes from
+/// `stats_step` under the *current* precision, so Ω tracks the scheme as
+/// it evolves (paper Fig. 5a→5b).
+pub fn omega(trace: &[f32], qerr: &[f32]) -> Vec<f32> {
+    trace.iter().zip(qerr).map(|(&t, &e)| (t.max(0.0)) * e).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omega_formula() {
+        let o = omega(&[2.0, -1.0, 4.0], &[0.5, 3.0, 0.25]);
+        assert_eq!(o, vec![1.0, 0.0, 1.0]); // negative traces clamped
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator (S11): the paper's training system.
+//!
+//! `Trainer` drives Algorithm 1 end-to-end against the AOT artifacts:
+//!
+//! 1. every step: `train_step` with `L = CE + λ·Σ|B_k|` (λ, lr, per-layer
+//!    bits/ks all runtime inputs);
+//! 2. every pruning interval `I` (while compression γ < target Γ):
+//!    * `stats_step` → per-layer LSB-nonzero rate β_l;
+//!    * Hutchinson probes → Tr(H_l); Ω_l = Tr(H_l)·‖W_n−W‖² (Eq. 9);
+//!    * prune layers with β_l < α by p_l bits, ascending-β order, stopping
+//!      as soon as γ ≥ Γ (final-round sorted pruning);
+//!    * reassign p_l ∈ {1,2} by Ω_l vs mean(Ω) (Hessian-aware aggressive
+//!      pruning — skipped when `use_hessian = false` for the Fig. 7/8
+//!      ablation);
+//! 3. once γ ≥ Γ: λ := 0, pruning stops, training continues as plain QAT.
+//!
+//! The BSQ and CSQ baselines (`bsq.rs`, `csq.rs`) run the same loop shape
+//! over their bit-split artifacts with their own pruning policies.
+
+pub mod bitstate;
+pub mod bsq;
+pub mod csq;
+pub mod hessian;
+pub mod report;
+pub mod schedule;
+pub mod trainer;
+
+pub use bitstate::BitState;
+pub use report::{PruneEvent, RunReport};
+pub use schedule::{cosine_lr, csq_temperature};
+pub use trainer::{MsqConfig, Trainer};

@@ -1,0 +1,113 @@
+//! Run report: everything the paper's tables/figures need from one
+//! training run, serializable to JSON under `results/`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// One pruning event (feeds Fig. 5/7/9 and supp Fig. 1).
+#[derive(Clone, Debug)]
+pub struct PruneEvent {
+    pub epoch: usize,
+    pub beta: Vec<f32>,
+    pub omega: Vec<f32>,
+    pub bits_before: Vec<u8>,
+    pub bits_after: Vec<u8>,
+    pub prune_bits: Vec<u8>,
+    pub compression: f64,
+}
+
+/// Full history of one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub model: String,
+    pub method: String,
+    pub epochs: usize,
+    pub steps: usize,
+    pub train_loss: Vec<f32>,
+    pub train_acc: Vec<f32>,
+    pub eval_epochs: Vec<usize>,
+    pub eval_acc: Vec<f32>,
+    pub eval_loss: Vec<f32>,
+    pub prune_events: Vec<PruneEvent>,
+    pub final_bits: Vec<u8>,
+    pub final_compression: f64,
+    pub final_acc: f32,
+    pub best_acc: f32,
+    pub trainable_params: usize,
+    pub total_seconds: f64,
+    pub step_seconds_mean: f64,
+    pub peak_rss_bytes: u64,
+    pub gamma_reached_epoch: Option<usize>,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .prune_events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("epoch", Json::Num(e.epoch as f64)),
+                    ("beta", Json::arr_f32(&e.beta)),
+                    ("omega", Json::arr_f32(&e.omega)),
+                    (
+                        "bits_before",
+                        Json::Arr(e.bits_before.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ),
+                    (
+                        "bits_after",
+                        Json::Arr(e.bits_after.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ),
+                    (
+                        "prune_bits",
+                        Json::Arr(e.prune_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ),
+                    ("compression", Json::Num(e.compression)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("train_loss", Json::arr_f32(&self.train_loss)),
+            ("train_acc", Json::arr_f32(&self.train_acc)),
+            (
+                "eval_epochs",
+                Json::Arr(self.eval_epochs.iter().map(|&e| Json::Num(e as f64)).collect()),
+            ),
+            ("eval_acc", Json::arr_f32(&self.eval_acc)),
+            ("eval_loss", Json::arr_f32(&self.eval_loss)),
+            ("prune_events", Json::Arr(events)),
+            (
+                "final_bits",
+                Json::Arr(self.final_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("final_compression", Json::Num(self.final_compression)),
+            ("final_acc", Json::Num(self.final_acc as f64)),
+            ("best_acc", Json::Num(self.best_acc as f64)),
+            ("trainable_params", Json::Num(self.trainable_params as f64)),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("step_seconds_mean", Json::Num(self.step_seconds_mean)),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
+            (
+                "gamma_reached_epoch",
+                self.gamma_reached_epoch.map(|e| Json::Num(e as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}

@@ -1,0 +1,63 @@
+//! Learning-rate and temperature schedules.
+//!
+//! The paper uses SGD with a warm-start cosine annealing schedule
+//! (Sec. 4.1); CSQ additionally anneals a continuous-sparsification
+//! temperature. Both live here, host-side — lr/temp are runtime scalars
+//! fed to the artifacts each step.
+
+/// Warm-start cosine: linear warmup over `warmup` fraction of training,
+/// then cosine decay from `lr0` to `lr0 * floor_frac`.
+pub fn cosine_lr(lr0: f32, step: usize, total_steps: usize, warmup_frac: f32, floor_frac: f32) -> f32 {
+    let total = total_steps.max(1) as f32;
+    let warm = (warmup_frac * total).max(1.0);
+    let s = step as f32;
+    if s < warm {
+        return lr0 * (s + 1.0) / warm;
+    }
+    let t = ((s - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    lr0 * (floor_frac + (1.0 - floor_frac) * cos)
+}
+
+/// CSQ temperature: exponential ramp 1 → t_max over training (continuous
+/// sparsification; gates harden as T grows).
+pub fn csq_temperature(step: usize, total_steps: usize, t_max: f32) -> f32 {
+    let t = (step as f32 / total_steps.max(1) as f32).clamp(0.0, 1.0);
+    t_max.powf(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let lr0 = 0.1;
+        let total = 1000;
+        // warming up
+        assert!(cosine_lr(lr0, 0, total, 0.05, 0.0) < lr0 * 0.1);
+        // peak right after warmup
+        let peak = cosine_lr(lr0, 50, total, 0.05, 0.0);
+        assert!(peak > 0.95 * lr0, "{peak}");
+        // decayed at the end
+        let tail = cosine_lr(lr0, 999, total, 0.05, 0.0);
+        assert!(tail < 0.01 * lr0, "{tail}");
+        // monotone decreasing after warmup
+        let a = cosine_lr(lr0, 200, total, 0.05, 0.0);
+        let b = cosine_lr(lr0, 600, total, 0.05, 0.0);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn floor_respected() {
+        let tail = cosine_lr(0.1, 1000, 1000, 0.0, 0.1);
+        assert!(tail >= 0.01 - 1e-6);
+    }
+
+    #[test]
+    fn temperature_ramps() {
+        assert!((csq_temperature(0, 100, 100.0) - 1.0).abs() < 1e-5);
+        assert!((csq_temperature(100, 100, 100.0) - 100.0).abs() < 1e-3);
+        assert!(csq_temperature(50, 100, 100.0) > 5.0);
+    }
+}

@@ -1,0 +1,327 @@
+//! The MSQ trainer: Algorithm 1 over the AOT artifacts.
+//!
+//! Also runs the `dorefa` method (same artifact family with the DoReFa
+//! quantizer) and *uniform fixed-bit QAT* (λ = 0, no pruning) for the
+//! tables' uniform baselines.
+
+use anyhow::{bail, Result};
+
+use super::bitstate::BitState;
+use super::hessian::{omega, HessianEstimator};
+use super::report::{PruneEvent, RunReport};
+use super::schedule::cosine_lr;
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{engine, ArtifactMeta, Engine, ModelState};
+use crate::util::timer::{peak_rss_bytes, Timer};
+
+/// Full configuration of one training run (paper Sec. 4.1 + supp Table 2).
+#[derive(Clone, Debug)]
+pub struct MsqConfig {
+    pub model: String,
+    /// "msq" | "dorefa" (quantizer baseline) — bsq/csq have their own trainers
+    pub method: String,
+    /// λ, the LSB L1 strength (0 disables regularization)
+    pub lam: f32,
+    /// α, the β threshold for pruning a layer
+    pub alpha: f32,
+    /// I, the pruning interval in epochs
+    pub interval: usize,
+    /// Γ, the target compression ratio (0 disables pruning → uniform QAT)
+    pub gamma: f64,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr0: f32,
+    /// activation bits (0 = full precision activations)
+    pub n_act: f32,
+    /// initial per-layer precision
+    pub n0: u8,
+    pub use_hessian: bool,
+    pub hessian_probes: usize,
+    pub seed: u64,
+    /// evaluate every k epochs (0 = only at the end)
+    pub eval_every: usize,
+    /// starting bits override (e.g. fixed 4-bit uniform baseline)
+    pub fixed_bits: Option<u8>,
+    /// scale λ by 2^(n0 − avg_bits): the LSB sawtooth's basin width
+    /// doubles per pruned bit while its gradient stays ±λ, so constant λ
+    /// sparsifies exponentially slower at low precision. The paper
+    /// absorbs this with 400-epoch schedules; compressed schedules keep
+    /// the *rate* constant instead (DESIGN.md §Deviations).
+    pub adaptive_lam: bool,
+    pub verbose: bool,
+}
+
+impl Default for MsqConfig {
+    fn default() -> Self {
+        MsqConfig {
+            model: "resnet20".into(),
+            method: "msq".into(),
+            lam: 5e-5,
+            alpha: 0.3,
+            interval: 20,
+            gamma: 16.0,
+            epochs: 60,
+            batch: 256,
+            lr0: 0.1,
+            n_act: 0.0,
+            n0: 8,
+            use_hessian: true,
+            hessian_probes: 4,
+            seed: 42,
+            eval_every: 5,
+            fixed_bits: None,
+            adaptive_lam: true,
+            verbose: true,
+        }
+    }
+}
+
+pub struct Trainer<'e> {
+    pub eng: &'e Engine,
+    pub cfg: MsqConfig,
+    pub train_meta: ArtifactMeta,
+    pub eval_meta: ArtifactMeta,
+    pub stats_meta: Option<ArtifactMeta>,
+    pub hess_meta: Option<ArtifactMeta>,
+    pub state: ModelState,
+    pub bitstate: BitState,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(eng: &'e Engine, cfg: MsqConfig) -> Result<Trainer<'e>> {
+        if cfg.method != "msq" && cfg.method != "dorefa" {
+            bail!("Trainer handles msq/dorefa; use BsqTrainer/CsqTrainer for {}", cfg.method);
+        }
+        let train_meta =
+            eng.manifest.find_batch(&cfg.model, &cfg.method, "train", cfg.batch).or_else(|_| {
+                eng.manifest.find(&cfg.model, &cfg.method, "train")
+            })?.clone();
+        let eval_meta = eng.manifest.find(&cfg.model, &cfg.method, "eval")?.clone();
+        let stats_meta = eng.manifest.find(&cfg.model, &cfg.method, "stats").ok().cloned();
+        let hess_meta = eng.manifest.find(&cfg.model, "msq", "hessian").ok().cloned();
+        let state = ModelState::init(&eng.manifest, &train_meta)?;
+        let mut bitstate = BitState::new(cfg.n0, &train_meta.q_sizes());
+        if let Some(fb) = cfg.fixed_bits {
+            bitstate.scheme.bits.iter_mut().for_each(|b| *b = fb);
+        }
+        Ok(Trainer { eng, cfg, train_meta, eval_meta, stats_meta, hess_meta, state, bitstate })
+    }
+
+    /// Run the full schedule on `ds`; returns the report.
+    pub fn run(&mut self, ds: &Dataset) -> Result<RunReport> {
+        let cfg = self.cfg.clone();
+        let timer = Timer::start();
+        let mut report = RunReport {
+            label: format!("{}_{}", cfg.model, cfg.method),
+            model: cfg.model.clone(),
+            method: cfg.method.clone(),
+            epochs: cfg.epochs,
+            trainable_params: self.state.trainable_params(),
+            ..Default::default()
+        };
+
+        let batch = self.train_meta.batch;
+        let mut batcher = Batcher::new(ds, batch, cfg.seed, true);
+        // a separate stream for hessian probe batches
+        let mut hess_batcher =
+            Batcher::new(ds, batch.max(self.hess_batch()), cfg.seed ^ 0x4E55, true);
+        let steps_per_epoch = batcher.batches_per_epoch();
+        let total_steps = steps_per_epoch * cfg.epochs;
+        let mut hess = HessianEstimator::new(cfg.hessian_probes, cfg.seed);
+
+        let img = self.train_meta.image.clone();
+        let train_meta = self.train_meta.clone();
+        let mut gamma_reached = self.bitstate.compression() >= cfg.gamma && cfg.gamma > 0.0;
+        let mut lam = if gamma_reached || cfg.gamma <= 0.0 { if cfg.gamma <= 0.0 { cfg.lam } else { 0.0 } } else { cfg.lam };
+        let mut step = 0usize;
+        let mut step_time_acc = 0f64;
+
+        for epoch in 0..cfg.epochs {
+            let mut ep_loss = 0f64;
+            let mut ep_correct = 0f64;
+            let bits_l = self.bitstate.bits_literal()?;
+            let ks_l = self.bitstate.ks_literal()?;
+            let eff_lam = if cfg.adaptive_lam && lam > 0.0 {
+                lam * 2f32.powf(cfg.n0 as f32 - self.bitstate.scheme.avg_bits() as f32)
+            } else {
+                lam
+            };
+            for _ in 0..steps_per_epoch {
+                let b = batcher.next();
+                let x = engine::lit_f32(&b.x, &[batch, img[0], img[1], img[2]])?;
+                let y = engine::lit_i32(&b.y, &[batch])?;
+                let lr = cosine_lr(cfg.lr0, step, total_steps, 0.05, 0.0);
+                let st = Timer::start();
+                let (loss, _ce, correct) = self.state.train_step(
+                    self.eng,
+                    &train_meta,
+                    &bits_l,
+                    &ks_l,
+                    eff_lam,
+                    lr,
+                    1.0,
+                    cfg.n_act,
+                    &x,
+                    &y,
+                )?;
+                step_time_acc += st.seconds();
+                ep_loss += loss as f64;
+                ep_correct += correct as f64;
+                step += 1;
+            }
+            report.train_loss.push((ep_loss / steps_per_epoch as f64) as f32);
+            report.train_acc.push((ep_correct / (steps_per_epoch * batch) as f64) as f32);
+
+            // ---- pruning interval (Algorithm 1 lines 10..35) -------------
+            let due = cfg.interval > 0 && (epoch + 1) % cfg.interval == 0;
+            if due && !gamma_reached && cfg.gamma > 0.0 {
+                self.prune_round(epoch, &mut hess, &mut hess_batcher, &mut report)?;
+                if self.bitstate.compression() >= cfg.gamma {
+                    gamma_reached = true;
+                    lam = 0.0; // stop regularization; pure QAT from here
+                    report.gamma_reached_epoch = Some(epoch);
+                    if cfg.verbose {
+                        println!(
+                            "[{}] Γ reached at epoch {epoch}: comp {:.2}x — QAT phase",
+                            report.label,
+                            self.bitstate.compression()
+                        );
+                    }
+                }
+            }
+
+            // ---- eval -----------------------------------------------------
+            let do_eval = (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0)
+                || epoch + 1 == cfg.epochs;
+            if do_eval {
+                let (eacc, eloss) = self.evaluate(ds)?;
+                report.eval_epochs.push(epoch);
+                report.eval_acc.push(eacc);
+                report.eval_loss.push(eloss);
+                report.best_acc = report.best_acc.max(eacc);
+                if cfg.verbose {
+                    println!(
+                        "[{}] epoch {epoch:3} loss {:.4} train-acc {:.3} eval-acc {:.3} comp {:.2}x",
+                        report.label,
+                        report.train_loss.last().unwrap(),
+                        report.train_acc.last().unwrap(),
+                        eacc,
+                        self.bitstate.compression()
+                    );
+                }
+            }
+        }
+
+        report.steps = step;
+        report.final_bits = self.bitstate.scheme.bits.clone();
+        report.final_compression = self.bitstate.compression();
+        report.final_acc = report.eval_acc.last().copied().unwrap_or(0.0);
+        report.total_seconds = timer.seconds();
+        report.step_seconds_mean = step_time_acc / step.max(1) as f64;
+        report.peak_rss_bytes = peak_rss_bytes().unwrap_or(0);
+        Ok(report)
+    }
+
+    fn hess_batch(&self) -> usize {
+        self.hess_meta.as_ref().map(|m| m.batch).unwrap_or(8)
+    }
+
+    /// One pruning round: stats → Ω → ascending-β prune → p reassignment.
+    fn prune_round(
+        &mut self,
+        epoch: usize,
+        hess: &mut HessianEstimator,
+        hess_batcher: &mut Batcher,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let stats_meta = match &self.stats_meta {
+            Some(m) => m.clone(),
+            None => return Ok(()),
+        };
+        let bits_l = self.bitstate.bits_literal()?;
+        let ks_l = self.bitstate.ks_literal()?;
+        let (beta, qerr, _reg) = self.state.stats_step(self.eng, &stats_meta, &bits_l, &ks_l)?;
+
+        // Hessian trace → Ω (or uniform Ω when the ablation disables it)
+        let om = if cfg.use_hessian {
+            if let Some(hm) = self.hess_meta.clone() {
+                let tr = hess.trace(self.eng, &self.state, &hm, hess_batcher)?;
+                omega(&tr, &qerr)
+            } else {
+                vec![1.0; beta.len()]
+            }
+        } else {
+            vec![1.0; beta.len()]
+        };
+
+        let bits_before = self.bitstate.scheme.bits.clone();
+        // ascending-β order; prune while β < α and γ < Γ (lines 19..27)
+        let mut order: Vec<usize> = (0..beta.len()).collect();
+        order.sort_by(|&a, &b| beta[a].partial_cmp(&beta[b]).unwrap());
+        for &l in &order {
+            if self.bitstate.compression() >= cfg.gamma {
+                break;
+            }
+            if beta[l] < cfg.alpha && self.bitstate.prunable(l) {
+                self.bitstate.prune_layer(l);
+            }
+        }
+        // Hessian-aware prune-width reassignment for the *next* round
+        if cfg.use_hessian {
+            self.bitstate.assign_prune_bits(&om);
+        } else {
+            self.bitstate.reset_prune_bits();
+        }
+
+        report.prune_events.push(PruneEvent {
+            epoch,
+            beta,
+            omega: om,
+            bits_before,
+            bits_after: self.bitstate.scheme.bits.clone(),
+            prune_bits: self.bitstate.prune_bits.clone(),
+            compression: self.bitstate.compression(),
+        });
+        Ok(())
+    }
+
+    /// Export the trained model as a physically bit-packed `.msqpack`
+    /// (realizes the reported compression as actual bytes; the packed file
+    /// re-imports through [`crate::quant::pack::PackedModel::load`] +
+    /// [`crate::runtime::ModelState::set_q_weights`]).
+    pub fn export_packed(&self, path: &std::path::Path) -> Result<crate::quant::pack::PackedModel> {
+        let mut model = crate::quant::pack::PackedModel::default();
+        for (q, layer) in self.train_meta.q_layers.iter().enumerate() {
+            let w = self.state.q_weights(q)?;
+            let bits = self.bitstate.scheme.bits[q];
+            model.layers.push(crate::quant::pack::pack_layer(&layer.name, &w, bits));
+        }
+        model.save(path)?;
+        Ok(model)
+    }
+
+    /// Full test-split evaluation: (top-1 acc, mean ce).
+    pub fn evaluate(&self, ds: &Dataset) -> Result<(f32, f32)> {
+        let meta = self.eval_meta.clone();
+        let batch = meta.batch;
+        let bits_l = self.bitstate.bits_literal()?;
+        let n = ds.test_y.len();
+        if n % batch != 0 {
+            bail!("test split ({n}) must be divisible by eval batch ({batch})");
+        }
+        let img = &meta.image;
+        let helper = Batcher::new(ds, batch, 0, false);
+        let mut correct = 0f64;
+        let mut loss = 0f64;
+        for tb in helper.test_batches(batch) {
+            let x = engine::lit_f32(&tb.x, &[batch, img[0], img[1], img[2]])?;
+            let y = engine::lit_i32(&tb.y, &[batch])?;
+            let (ce_sum, corr) =
+                self.state.eval_step(self.eng, &meta, &bits_l, 1.0, self.cfg.n_act, &x, &y)?;
+            correct += corr as f64;
+            loss += ce_sum as f64;
+        }
+        Ok(((correct / n as f64) as f32, (loss / n as f64) as f32))
+    }
+}

@@ -1,0 +1,187 @@
+//! Epoch batcher: deterministic shuffling, augmentation, fixed-size
+//! batches (AOT artifacts have static batch dims — the tail partial batch
+//! is wrapped around, standard for synthetic/epoch-based training).
+
+use super::synthetic::Dataset;
+use crate::util::prng::Rng;
+
+/// One training batch, NHWC images + labels, ready for the PJRT bridge.
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub size: usize,
+}
+
+pub struct Batcher<'d> {
+    ds: &'d Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+    augment: bool,
+}
+
+impl<'d> Batcher<'d> {
+    pub fn new(ds: &'d Dataset, batch: usize, seed: u64, augment: bool) -> Self {
+        let mut b = Batcher {
+            ds,
+            batch,
+            order: (0..ds.train_y.len()).collect(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+            augment,
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Rng::new(self.seed ^ self.epoch.wrapping_mul(0xA55A_5AA5));
+        self.order = (0..self.ds.train_y.len()).collect();
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Batches per epoch (ceil).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.train_y.len().div_ceil(self.batch)
+    }
+
+    /// Next batch; advances the epoch (with reshuffle) when exhausted.
+    pub fn next(&mut self) -> Batch {
+        let spec = &self.ds.spec;
+        let e = spec.image_elems();
+        let mut x = Vec::with_capacity(self.batch * e);
+        let mut y = Vec::with_capacity(self.batch);
+        let mut aug_rng = Rng::new(
+            self.seed ^ 0xAE61 ^ self.epoch.wrapping_mul(31).wrapping_add(self.cursor as u64),
+        );
+        for j in 0..self.batch {
+            let idx = self.order[(self.cursor + j) % self.order.len()];
+            y.push(self.ds.train_y[idx]);
+            let img = self.ds.image(true, idx);
+            if self.augment {
+                push_augmented(img, spec.height, spec.width, spec.channels, &mut aug_rng, &mut x);
+            } else {
+                x.extend_from_slice(img);
+            }
+        }
+        self.cursor += self.batch;
+        if self.cursor >= self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        Batch { x, y, size: self.batch }
+    }
+
+    /// Iterate the *test* split in fixed-size batches (tail wrapped).
+    pub fn test_batches(&self, batch: usize) -> Vec<Batch> {
+        let spec = &self.ds.spec;
+        let e = spec.image_elems();
+        let n = self.ds.test_y.len();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let mut x = Vec::with_capacity(batch * e);
+            let mut y = Vec::with_capacity(batch);
+            for j in 0..batch {
+                let idx = (i + j) % n;
+                x.extend_from_slice(self.ds.image(false, idx));
+                y.push(self.ds.test_y[idx]);
+            }
+            // only the first (n - i).min(batch) entries are fresh
+            out.push(Batch { x, y, size: batch });
+            i += batch;
+        }
+        out
+    }
+}
+
+/// Random horizontal flip + ±2px shift with edge padding (CIFAR-style).
+fn push_augmented(img: &[f32], h: usize, w: usize, c: usize, rng: &mut Rng, out: &mut Vec<f32>) {
+    let flip = rng.next_u64() & 1 == 1;
+    let dx = rng.below(5) as isize - 2;
+    let dy = rng.below(5) as isize - 2;
+    for y in 0..h {
+        let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+        for x in 0..w {
+            let xx = if flip { w - 1 - x } else { x };
+            let sx = (xx as isize + dx).clamp(0, w as isize - 1) as usize;
+            let base = (sy * w + sx) * c;
+            out.extend_from_slice(&img[base..base + c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetSpec;
+    use crate::util::threadpool::ThreadPool;
+
+    fn ds() -> Dataset {
+        let pool = ThreadPool::new(2);
+        Dataset::generate(DatasetSpec::cifar_syn(100, 40, 7), &pool)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = ds();
+        let mut b = Batcher::new(&d, 32, 1, false);
+        let batch = b.next();
+        assert_eq!(batch.x.len(), 32 * 32 * 32 * 3);
+        assert_eq!(batch.y.len(), 32);
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let d = ds();
+        let mut b = Batcher::new(&d, 50, 1, false);
+        assert_eq!(b.batches_per_epoch(), 2);
+        let e0b0 = b.next();
+        let _ = b.next();
+        assert_eq!(b.epoch(), 1);
+        let e1b0 = b.next();
+        assert_ne!(e0b0.y, e1b0.y); // different shuffle
+    }
+
+    #[test]
+    fn augmentation_preserves_shape_and_changes_pixels() {
+        let d = ds();
+        let mut plain = Batcher::new(&d, 8, 1, false);
+        let mut aug = Batcher::new(&d, 8, 1, true);
+        let bp = plain.next();
+        let ba = aug.next();
+        assert_eq!(bp.x.len(), ba.x.len());
+        assert_eq!(bp.y, ba.y); // same order, same labels
+        assert_ne!(bp.x, ba.x); // pixels moved
+    }
+
+    #[test]
+    fn test_batches_cover_split() {
+        let d = ds();
+        let b = Batcher::new(&d, 16, 1, false);
+        let tbs = b.test_batches(16);
+        assert_eq!(tbs.len(), 3); // ceil(40 / 16)
+        assert!(tbs.iter().all(|t| t.y.len() == 16));
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let d = ds();
+        let mut b1 = Batcher::new(&d, 16, 9, true);
+        let mut b2 = Batcher::new(&d, 16, 9, true);
+        for _ in 0..5 {
+            let x1 = b1.next();
+            let x2 = b2.next();
+            assert_eq!(x1.x, x2.x);
+            assert_eq!(x1.y, x2.y);
+        }
+    }
+}

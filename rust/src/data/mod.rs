@@ -1,0 +1,14 @@
+//! Synthetic dataset substrate (S12) + the batch pipeline.
+//!
+//! The paper trains on CIFAR-10 / ImageNet; offline we generate
+//! *procedural* class-conditional image datasets with enough structure
+//! that quantized CNNs/ViTs must learn real multi-scale features (see
+//! `synthetic.rs`). Every method sees the identical deterministic stream,
+//! which is what the paper's comparisons require (DESIGN.md
+//! §Substitutions).
+
+pub mod batcher;
+pub mod synthetic;
+
+pub use batcher::{Batch, Batcher};
+pub use synthetic::{Dataset, DatasetSpec};

@@ -1,0 +1,11 @@
+//! Experiment harness (S15): shared runners behind the `experiments`
+//! binary and the benches. One function per paper table/figure, each
+//! writing machine-readable rows under `results/` and printing the
+//! paper-style table.
+
+pub mod presets;
+pub mod runners;
+pub mod tables;
+
+pub use presets::Preset;
+pub use runners::{measure_steps, run_method, StepCost};

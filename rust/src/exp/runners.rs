@@ -1,0 +1,95 @@
+//! Shared experiment runners: full training runs and step-cost probes.
+
+use anyhow::Result;
+
+use crate::coordinator::bsq::BsqTrainer;
+use crate::coordinator::csq::CsqTrainer;
+use crate::coordinator::{MsqConfig, RunReport, Trainer};
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{engine, Engine, ModelState};
+use crate::util::timer::{peak_rss_bytes, Timer};
+
+/// Run one full training with the right trainer for `cfg.method`.
+pub fn run_method(eng: &Engine, cfg: MsqConfig, ds: &Dataset) -> Result<RunReport> {
+    match cfg.method.as_str() {
+        "bsq" => BsqTrainer::new(eng, cfg)?.run(ds),
+        "csq" => CsqTrainer::new(eng, cfg)?.run(ds),
+        _ => Trainer::new(eng, cfg)?.run(ds),
+    }
+}
+
+/// Step-cost probe result (Table 1 / Fig. 6 raw material).
+#[derive(Clone, Debug)]
+pub struct StepCost {
+    pub model: String,
+    pub method: String,
+    pub batch: usize,
+    pub trainable_params: usize,
+    pub step_seconds: f64,
+    pub steps_measured: usize,
+    pub peak_rss_bytes: u64,
+    pub compile_seconds: f64,
+}
+
+impl StepCost {
+    pub fn time_per_epoch(&self, train_size: usize) -> f64 {
+        self.step_seconds * (train_size as f64 / self.batch as f64).ceil()
+    }
+
+    pub fn images_per_second(&self) -> f64 {
+        self.batch as f64 / self.step_seconds.max(1e-12)
+    }
+}
+
+/// Measure the steady-state train-step cost of (model, method, batch):
+/// `warmup` discarded steps, then `steps` timed steps on real batches.
+pub fn measure_steps(
+    eng: &Engine,
+    model: &str,
+    method: &str,
+    batch: usize,
+    ds: &Dataset,
+    warmup: usize,
+    steps: usize,
+) -> Result<StepCost> {
+    let meta = eng
+        .manifest
+        .find_batch(model, method, "train", batch)
+        .or_else(|_| eng.manifest.find(model, method, "train"))?
+        .clone();
+    let batch = meta.batch;
+    let mut state = ModelState::init(&eng.manifest, &meta)?;
+    let lq = meta.num_q_layers;
+    let bits = engine::lit_f32(&vec![8.0; lq], &[lq])?;
+    let ks = engine::lit_f32(&vec![1.0; lq], &[lq])?;
+    let mut batcher = Batcher::new(ds, batch, 7, false);
+    let img = meta.image.clone();
+    let compile_before = *eng.compile_seconds.borrow();
+
+    let mut run_one = |state: &mut ModelState| -> Result<f64> {
+        let b = batcher.next();
+        let x = engine::lit_f32(&b.x, &[batch, img[0], img[1], img[2]])?;
+        let y = engine::lit_i32(&b.y, &[batch])?;
+        let t = Timer::start();
+        state.train_step(eng, &meta, &bits, &ks, 5e-5, 0.01, 1.0, 0.0, &x, &y)?;
+        Ok(t.seconds())
+    };
+
+    for _ in 0..warmup {
+        run_one(&mut state)?;
+    }
+    let mut total = 0.0;
+    for _ in 0..steps {
+        total += run_one(&mut state)?;
+    }
+    Ok(StepCost {
+        model: model.into(),
+        method: method.into(),
+        batch,
+        trainable_params: meta.trainable_params,
+        step_seconds: total / steps.max(1) as f64,
+        steps_measured: steps,
+        peak_rss_bytes: peak_rss_bytes().unwrap_or(0),
+        compile_seconds: *eng.compile_seconds.borrow() - compile_before,
+    })
+}

@@ -1,0 +1,31 @@
+//! # MSQ — Memory-Efficient Bit Sparsification Quantization
+//!
+//! A Rust + JAX + Pallas reproduction of *MSQ: Memory-Efficient Bit
+//! Sparsification Quantization* (CS.LG 2025), structured as a three-layer
+//! stack (DESIGN.md):
+//!
+//! * **L3 (this crate)** — the training coordinator: Algorithm 1's
+//!   schedule (LSB L1 regularization → β-thresholded pruning →
+//!   Hessian-aware prune-bit assignment → final-round sorted pruning →
+//!   post-Γ QAT), plus baselines (DoReFa, BSQ, CSQ), datasets, metrics,
+//!   and the experiment harness regenerating every paper table/figure.
+//! * **L2** — JAX model graphs, AOT-lowered once to HLO text
+//!   (`python/compile/`); bit-widths are *runtime tensors*, so a single
+//!   compiled executable serves the entire mixed-precision schedule.
+//! * **L1** — Pallas kernels for the quantization hot-spot
+//!   (`python/compile/kernels/`).
+//!
+//! Python never runs at training time: the `runtime` module loads the HLO
+//! artifacts through PJRT and the coordinator drives them from Rust.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use coordinator::{MsqConfig, Trainer};
+pub use runtime::{Engine, ModelState};

@@ -1,0 +1,258 @@
+//! `msq` — the training coordinator CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! msq train --model resnet20 --method msq --epochs 60 --gamma 16 [...]
+//! msq eval-init --model resnet20            # sanity: eval at init
+//! msq info                                  # list artifacts
+//! ```
+
+use anyhow::Result;
+
+use msq::coordinator::bsq::BsqTrainer;
+use msq::coordinator::csq::CsqTrainer;
+use msq::coordinator::{MsqConfig, Trainer};
+use msq::data::{Dataset, DatasetSpec};
+use msq::metrics;
+use msq::runtime::Engine;
+use msq::util::cli::Args;
+use msq::util::threadpool::ThreadPool;
+
+const VALUE_OPTS: &[&str] = &[
+    "model", "method", "epochs", "batch", "lam", "alpha", "interval", "gamma", "lr", "n-act",
+    "seed", "train-size", "test-size", "eval-every", "fixed-bits", "probes", "out", "config",
+    "set", "export", "packed",
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(VALUE_OPTS);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(),
+        Some("eval-init") => cmd_eval_init(&args),
+        Some("eval-packed") => cmd_eval_packed(&args),
+        _ => {
+            eprintln!(
+                "usage: msq <train|info|eval-init> [--model M] [--method msq|dorefa|bsq|csq]\n\
+                 [--epochs N] [--batch B] [--lam L] [--alpha A] [--interval I] [--gamma G]\n\
+                 [--lr LR] [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
+                 [--train-size N] [--test-size N] [--seed S] [--out results/run.json]"
+            );
+            Ok(())
+        }
+    }
+}
+
+pub fn config_from_args(args: &Args) -> MsqConfig {
+    // layering: per-model defaults < --config file < --set overrides < flags
+    let mut file_cfg = msq::util::config::Config::default();
+    if let Some(path) = args.opt("config") {
+        match msq::util::config::Config::load(std::path::Path::new(path)) {
+            Ok(c) => file_cfg = c,
+            Err(e) => eprintln!("[msq] config {path}: {e}"),
+        }
+    }
+    for s in args.opts("set") {
+        if let Err(e) = file_cfg.set(s) {
+            eprintln!("[msq] --set {s}: {e}");
+        }
+    }
+    let model = args
+        .opt("model")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| file_cfg.str_or("model", "resnet20").to_string());
+    let mut cfg = MsqConfig {
+        model: model.clone(),
+        method: args.opt("method").unwrap_or("msq").to_string(),
+        ..Default::default()
+    };
+    // per-model defaults from the paper's supp Table 2
+    match model.as_str() {
+        "resnet20" => {
+            cfg.interval = 20;
+            cfg.lam = 5e-5;
+            cfg.alpha = 0.3;
+        }
+        "mlp" => {
+            cfg.interval = 20;
+            cfg.lam = 5e-5;
+            cfg.alpha = 0.3;
+            cfg.lr0 = 0.02; // no normalization layers: keep SGD stable
+        }
+        "resnet18s" | "resnet50s" => {
+            cfg.interval = 10;
+            cfg.lam = 5e-5;
+            cfg.alpha = 0.3;
+            cfg.lr0 = 0.01;
+        }
+        "mbv3s" => {
+            cfg.interval = 5;
+            cfg.lam = 5e-5;
+            cfg.alpha = 0.3;
+            cfg.lr0 = 0.01;
+        }
+        "vit_t" => {
+            cfg.interval = 5;
+            cfg.lam = 8e-6;
+            cfg.alpha = 0.35;
+            cfg.lr0 = 0.01;
+            cfg.n_act = 8.0;
+        }
+        "vit_s" | "swinlite" | "vit_m" | "vit_base" => {
+            cfg.interval = 8;
+            cfg.lam = 5e-6;
+            cfg.alpha = 0.35;
+            cfg.lr0 = 0.01;
+            cfg.n_act = 8.0;
+        }
+        _ => {}
+    }
+    // config-file values override model defaults
+    cfg.method = file_cfg.str_or("method", &cfg.method).to_string();
+    cfg.lam = file_cfg.f32_or("train.lam", cfg.lam);
+    cfg.alpha = file_cfg.f32_or("train.alpha", cfg.alpha);
+    cfg.interval = file_cfg.usize_or("train.interval", cfg.interval);
+    cfg.lr0 = file_cfg.f32_or("train.lr", cfg.lr0);
+    cfg.n_act = file_cfg.f32_or("train.n_act", cfg.n_act);
+    cfg.epochs = file_cfg.usize_or("train.epochs", 60);
+    cfg.gamma = file_cfg.f32_or("train.gamma", 16.0) as f64;
+    cfg.use_hessian = file_cfg.bool_or("hessian.enable", true);
+    cfg.hessian_probes = file_cfg.usize_or("hessian.probes", 4);
+    // CLI flags override everything
+    cfg.epochs = args.opt_usize("epochs", cfg.epochs);
+    cfg.batch = args.opt_usize("batch", if model == "resnet20" || model == "mlp" { 256 } else { 64 });
+    cfg.lam = args.opt_f32("lam", cfg.lam);
+    cfg.alpha = args.opt_f32("alpha", cfg.alpha);
+    cfg.interval = args.opt_usize("interval", cfg.interval);
+    cfg.gamma = args.opt_f32("gamma", cfg.gamma as f32) as f64;
+    cfg.lr0 = args.opt_f32("lr", cfg.lr0);
+    cfg.n_act = args.opt_f32("n-act", cfg.n_act);
+    cfg.seed = args.opt_u64("seed", 42);
+    cfg.eval_every = args.opt_usize("eval-every", 5);
+    if args.flag("no-hessian") {
+        cfg.use_hessian = false;
+    }
+    cfg.hessian_probes = args.opt_usize("probes", cfg.hessian_probes);
+    cfg.verbose = !args.flag("quiet");
+    if let Some(fb) = args.opt("fixed-bits") {
+        cfg.fixed_bits = fb.parse().ok();
+    }
+    cfg
+}
+
+pub fn dataset_for(model: &str, args: &Args) -> Dataset {
+    let pool = ThreadPool::new(ThreadPool::default_size());
+    let (train, test) = match model {
+        "resnet20" | "mlp" => (
+            args.opt_usize("train-size", 10_240),
+            args.opt_usize("test-size", 2_048),
+        ),
+        _ => (args.opt_usize("train-size", 4_096), args.opt_usize("test-size", 1_024)),
+    };
+    let seed = args.opt_u64("seed", 42);
+    let spec = match model {
+        "resnet20" | "mlp" => DatasetSpec::cifar_syn(train, test, seed),
+        _ => DatasetSpec::in64_syn(train, test, seed),
+    };
+    Dataset::generate(spec, &pool)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let eng = Engine::new()?;
+    let ds = dataset_for(&cfg.model, args);
+    println!(
+        "[msq] {} / {} — {} train, {} test, Γ={:.2}, λ={:.1e}, α={}, I={}",
+        cfg.model, cfg.method, ds.train_y.len(), ds.test_y.len(), cfg.gamma, cfg.lam,
+        cfg.alpha, cfg.interval
+    );
+    let mut packed_info = None;
+    let report = match cfg.method.as_str() {
+        "bsq" => BsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
+        "csq" => CsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
+        _ => {
+            let mut t = Trainer::new(&eng, cfg.clone())?;
+            let r = t.run(&ds)?;
+            if let Some(path) = args.opt("export") {
+                let p = std::path::PathBuf::from(path);
+                let m = t.export_packed(&p)?;
+                packed_info = Some((p, m.payload_bytes(), m.compression()));
+            }
+            r
+        }
+    };
+    if let Some((p, bytes, comp)) = &packed_info {
+        println!(
+            "[msq] packed model -> {} ({} bytes payload, realized {:.2}x vs fp32)",
+            p.display(),
+            bytes,
+            comp
+        );
+    }
+    println!(
+        "[msq] done: acc {:.3} (best {:.3}) comp {:.2}x params {} time {}",
+        report.final_acc,
+        report.best_acc,
+        report.final_compression,
+        report.trainable_params,
+        metrics::fmt_duration(report.total_seconds)
+    );
+    println!("[msq] final bit scheme: {:?}", report.final_bits);
+    let out = args
+        .opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| metrics::results_dir().join(format!("{}.json", report.label)));
+    report.save(&out)?;
+    println!("[msq] report -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let eng = Engine::new()?;
+    let mut t = metrics::Table::new(&["artifact", "model", "method", "fn", "batch", "params", "q-layers"]);
+    for a in eng.manifest.artifacts.values() {
+        t.row(&[
+            a.name.clone(),
+            a.model.clone(),
+            a.method.clone(),
+            a.fn_kind.clone(),
+            a.batch.to_string(),
+            a.trainable_params.to_string(),
+            a.num_q_layers.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Load a `.msqpack` model into a fresh state and evaluate it — proves
+/// the packed format round-trips through the serving path.
+fn cmd_eval_packed(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let packed_path = args.opt("packed").expect("--packed path.msqpack required");
+    let eng = Engine::new()?;
+    let ds = dataset_for(&cfg.model, args);
+    let packed = msq::quant::pack::PackedModel::load(std::path::Path::new(packed_path))?;
+    let mut trainer = Trainer::new(&eng, cfg)?;
+    for (q, layer) in packed.layers.iter().enumerate() {
+        let w = msq::quant::pack::unpack_layer(layer);
+        trainer.state.set_q_weights(q, &w)?;
+        trainer.bitstate.scheme.bits[q] = layer.bits;
+    }
+    let (acc, loss) = trainer.evaluate(&ds)?;
+    println!(
+        "[msq] packed eval: acc {acc:.4} loss {loss:.4} (payload {} bytes, {:.2}x)",
+        packed.payload_bytes(),
+        packed.compression()
+    );
+    Ok(())
+}
+
+fn cmd_eval_init(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let eng = Engine::new()?;
+    let ds = dataset_for(&cfg.model, args);
+    let trainer = Trainer::new(&eng, cfg)?;
+    let (acc, loss) = trainer.evaluate(&ds)?;
+    println!("[msq] init eval: acc {acc:.4} loss {loss:.4}");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Metrics sinks (S13): CSV + JSONL writers and the run report.
+//!
+//! Every experiment writes machine-readable rows under `results/` so the
+//! paper tables/figures regenerate from files, plus a human-readable
+//! summary on stdout.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only CSV writer with a fixed header.
+pub struct Csv {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Csv> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path).with_context(|| format!("{path:?}"))?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols);
+        writeln!(self.w, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        let s: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        self.row(&s)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Append-only JSONL writer.
+pub struct Jsonl {
+    w: BufWriter<File>,
+}
+
+impl Jsonl {
+    pub fn create(path: &Path) -> Result<Jsonl> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(Jsonl { w: BufWriter::new(File::create(path).with_context(|| format!("{path:?}"))?) })
+    }
+
+    pub fn write(&mut self, v: &Json) -> Result<()> {
+        writeln!(self.w, "{}", v.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Results directory: `$MSQ_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var("MSQ_RESULTS").map(PathBuf::from).unwrap_or_else(|_| "results".into())
+}
+
+/// Format seconds as h/m/s for table output.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.2}h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{secs:.1}s")
+    }
+}
+
+/// Simple fixed-width table printer for paper-style rows.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:width$} ", c, width = widths.get(i).copied().unwrap_or(4)));
+            }
+            s.push('|');
+            s
+        };
+        println!("{}", line(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("msq_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        c.rowf(&[1.0, 2.5]).unwrap();
+        c.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(fmt_duration(5.0), "5.0s");
+        assert_eq!(fmt_duration(120.0), "2.0m");
+        assert_eq!(fmt_duration(7200.0), "2.00h");
+    }
+}

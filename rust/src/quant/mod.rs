@@ -1,0 +1,204 @@
+//! Rust mirror of the quantizer math (S1/S2) — bit-exact with
+//! `python/compile/quant.py`.
+//!
+//! The graph-side quantizers live in the AOT artifacts; this module exists
+//! for everything the coordinator does *outside* the graph: compression
+//! accounting, bit-scheme reporting, Fig. 3's analytic quantizer maps,
+//! weight-distribution histograms (Fig. 4), and the cross-language
+//! numerics tests (rust vs the pytest oracle, exercised in
+//! `rust/tests/integration.rs`).
+
+pub mod compression;
+pub mod pack;
+
+/// Round half to even (matches XLA/jnp.round semantics).
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// RoundClamp quantizer on [0,1] (paper Eq. 4).
+#[inline]
+pub fn roundclamp01(w: f32, n: f32) -> f32 {
+    let levels = n.exp2();
+    (round_ties_even(levels * w)).min(levels - 1.0) / (levels - 1.0)
+}
+
+/// DoReFa quantizer on [0,1] (paper Eq. 1).
+#[inline]
+pub fn dorefa01(w: f32, n: f32) -> f32 {
+    let scale = n.exp2() - 1.0;
+    round_ties_even(scale * w) / scale
+}
+
+/// Integer code of the RoundClamp quantizer at `n` bits.
+#[inline]
+pub fn roundclamp_code(w: f32, n: f32) -> u32 {
+    let levels = n.exp2();
+    (round_ties_even(levels * w)).min(levels - 1.0).max(0.0) as u32
+}
+
+/// Continuous LSB proxy B_k under RoundClamp (paper Eq. 5, [0,1] scale):
+/// distance to the centre of the nearest LSB-zero n-bit bin.
+#[inline]
+pub fn lsb_proxy_roundclamp(w: f32, n: f32, k: f32) -> f32 {
+    let lm = (n - k).exp2();
+    let target = (round_ties_even(lm * w)).min(lm - 1.0) / lm;
+    w - target
+}
+
+/// B_k under the DoReFa bin placement (paper Fig. 3a pathology).
+#[inline]
+pub fn lsb_proxy_dorefa(w: f32, n: f32, k: f32) -> f32 {
+    let sc = (n - k).exp2() - 1.0;
+    let target = round_ties_even(sc * w) / sc;
+    w - target
+}
+
+/// Are the k LSBs of the n-bit RoundClamp code nonzero?
+#[inline]
+pub fn lsb_nonzero(w: f32, n: f32, k: f32) -> bool {
+    let code = roundclamp_code(w, n);
+    let kk = k as u32;
+    code % (1u32 << kk) != 0
+}
+
+/// Map a signed weight to [0,1] with per-layer scale `s` (DESIGN.md).
+#[inline]
+pub fn to_unit(w: f32, scale: f32) -> f32 {
+    (w / (2.0 * scale) + 0.5).clamp(0.0, 1.0)
+}
+
+/// Inverse of `to_unit` on the quantized lattice.
+#[inline]
+pub fn from_unit(w01: f32, scale: f32) -> f32 {
+    (w01 - 0.5) * 2.0 * scale
+}
+
+/// Fake-quantize a signed slice at `n` bits (RoundClamp), per-tensor
+/// max-abs scale — the host-side twin of `quant.fake_quant`.
+pub fn fake_quant_slice(w: &[f32], n: f32, out: &mut Vec<f32>) {
+    let scale = w.iter().fold(0.0f32, |a, &x| a.max(x.abs())) + 1e-8;
+    out.clear();
+    out.extend(w.iter().map(|&x| from_unit(roundclamp01(to_unit(x, scale), n), scale)));
+}
+
+/// β for a signed slice: fraction of weights whose k LSBs are nonzero.
+pub fn beta_slice(w: &[f32], n: f32, k: f32) -> f32 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    let scale = w.iter().fold(0.0f32, |a, &x| a.max(x.abs())) + 1e-8;
+    let nz = w.iter().filter(|&&x| lsb_nonzero(to_unit(x, scale), n, k)).count();
+    nz as f32 / w.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundclamp_range_and_lattice() {
+        for n in 2..=8 {
+            for i in 0..=1000 {
+                let w = i as f32 / 1000.0;
+                let q = roundclamp01(w, n as f32);
+                assert!((0.0..=1.0).contains(&q), "n={n} w={w} q={q}");
+                let code = q * ((1 << n) - 1) as f32;
+                assert!((code - code.round()).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn lsb_zero_at_bin_centres() {
+        let (n, k) = (4.0, 1.0);
+        let m = 2u32.pow(3);
+        for j in 0..m {
+            let w = j as f32 / m as f32;
+            assert!(lsb_proxy_roundclamp(w, n, k).abs() < 1e-6);
+            assert!(!lsb_nonzero(w, n, k), "j={j}");
+        }
+    }
+
+    #[test]
+    fn basin_midpoint_switch() {
+        // paper Fig. 3b: odd-bin midpoint is where the MSB target switches
+        let (n, k) = (3.0f32, 1.0f32);
+        let eps = 1e-3;
+        assert!(lsb_proxy_roundclamp(3.0 / 8.0 - eps, n, k) > 0.0);
+        assert!(lsb_proxy_roundclamp(3.0 / 8.0 + eps, n, k) < 0.0);
+    }
+
+    #[test]
+    fn dorefa_misalignment() {
+        // fraction of LSB-zero-coded weights whose dorefa target leaves the
+        // bin must be macroscopic (Fig. 3a), and zero under roundclamp
+        let (n, k) = (3.0f32, 1.0f32);
+        let ln = 8.0f32;
+        let mut bad_df = 0;
+        let mut bad_rc = 0;
+        let mut zero_ct = 0;
+        for i in 0..=2000 {
+            let w = i as f32 / 2000.0;
+            let code_rc = roundclamp_code(w, n);
+            if code_rc % 2 == 0 {
+                zero_ct += 1;
+                if lsb_proxy_roundclamp(w, n, k).abs() > 0.5 / ln + 1e-6 {
+                    bad_rc += 1;
+                }
+            }
+            let code_df = round_ties_even((ln - 1.0) * w) as u32;
+            if code_df % 2 == 0 && lsb_proxy_dorefa(w, n, k).abs() > 0.5 / ln + 1e-6 {
+                bad_df += 1;
+            }
+        }
+        assert_eq!(bad_rc, 0);
+        assert!(bad_df * 10 > zero_ct, "dorefa bad {bad_df} of {zero_ct}");
+    }
+
+    #[test]
+    fn unit_roundtrip() {
+        for &w in &[-0.9f32, -0.3, 0.0, 0.4, 0.85] {
+            let u = to_unit(w, 1.0);
+            assert!((from_unit(u, 1.0) - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fake_quant_error_bound() {
+        // max error of n-bit fake-quant is ~ scale / 2^(n-1) per step
+        let w: Vec<f32> = (0..257).map(|i| (i as f32 / 128.0) - 1.0).collect();
+        let mut q = Vec::new();
+        fake_quant_slice(&w, 8.0, &mut q);
+        let maxerr = w.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(maxerr < 2.0 * 2.0 / 255.0, "maxerr {maxerr}");
+    }
+
+    #[test]
+    fn beta_decreases_with_k0() {
+        // k = 0 => no LSBs => beta must be 0
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 / 50.0) - 1.0).collect();
+        assert_eq!(beta_slice(&w, 8.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ties_even_matches_xla() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(3.3), 3.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Artifact manifest: typed view of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One input/output descriptor of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    pub role: String,  // param | const | momentum | bits | ks | hyper | data | seed | metric
+    pub kind: String,  // qw | plane | wscale | gate | f | sign | ""
+    pub q_index: i64,
+}
+
+impl IoDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<IoDesc> {
+        Ok(IoDesc {
+            name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            dtype: j.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+            role: j.get("role").and_then(Json::as_str).unwrap_or_default().to_string(),
+            kind: j.get("kind").and_then(Json::as_str).unwrap_or_default().to_string(),
+            q_index: j.get("q_index").and_then(Json::as_i64).unwrap_or(-1),
+        })
+    }
+}
+
+/// One quantized layer of a model (ordering = layer index everywhere).
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+}
+
+/// One AOT artifact (a single XLA program).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub method: String,
+    pub fn_kind: String,
+    pub batch: usize,
+    pub image: Vec<usize>,
+    pub classes: usize,
+    pub num_q_layers: usize,
+    pub q_layers: Vec<QLayer>,
+    pub trainable_params: usize,
+    pub num_trainable: usize,
+    pub num_consts: usize,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+    pub use_pallas: bool,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let get_str = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        let get_usize = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        let ios = |k: &str| -> Result<Vec<IoDesc>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                .iter()
+                .map(IoDesc::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: get_str("name"),
+            file: get_str("file"),
+            model: get_str("model"),
+            method: get_str("method"),
+            fn_kind: get_str("fn"),
+            batch: get_usize("batch"),
+            image: j
+                .get("image")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            classes: get_usize("classes"),
+            num_q_layers: get_usize("num_q_layers"),
+            q_layers: j
+                .get("q_layers")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|q| QLayer {
+                            name: q.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                            shape: q
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default(),
+                            numel: q.get("numel").and_then(Json::as_usize).unwrap_or(0),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+            trainable_params: get_usize("trainable_params"),
+            num_trainable: get_usize("num_trainable"),
+            num_consts: get_usize("num_consts"),
+            inputs: ios("inputs")?,
+            outputs: ios("outputs")?,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    /// Input index where a given role region starts + its length, by role.
+    pub fn role_range(&self, role: &str) -> (usize, usize) {
+        let start = self.inputs.iter().position(|d| d.role == role);
+        match start {
+            None => (0, 0),
+            Some(s) => {
+                let len = self.inputs[s..].iter().take_while(|d| d.role == role).count();
+                (s, len)
+            }
+        }
+    }
+
+    /// Per-q-layer parameter sizes (for compression accounting).
+    pub fn q_sizes(&self) -> Vec<usize> {
+        self.q_layers.iter().map(|q| q.numel).collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub inits: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = json::parse_file(&dir.join("manifest.json"))
+            .map_err(|e| anyhow!("manifest: {e}"))
+            .context("run `make artifacts` first")?;
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let m = ArtifactMeta::from_json(a)?;
+            artifacts.insert(m.name.clone(), m);
+        }
+        let mut inits = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("inits") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    inits.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, inits })
+    }
+
+    /// Default artifacts dir: `$MSQ_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MSQ_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Find by (model, method, fn) at the default batch.
+    pub fn find(&self, model: &str, method: &str, fn_kind: &str) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .values()
+            .filter(|a| a.model == model && a.method == method && a.fn_kind == fn_kind && !a.use_pallas)
+            .collect();
+        if candidates.is_empty() {
+            bail!("no artifact for {model}/{method}/{fn_kind}");
+        }
+        candidates.sort_by_key(|a| a.batch);
+        // default batch = the one registered by models.py (the manifest has
+        // extra batch variants only for fig6; pick the most common batch)
+        Ok(candidates[candidates.len() / 2])
+    }
+
+    /// Find by (model, method, fn, batch).
+    pub fn find_batch(
+        &self,
+        model: &str,
+        method: &str,
+        fn_kind: &str,
+        batch: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.model == model
+                    && a.method == method
+                    && a.fn_kind == fn_kind
+                    && a.batch == batch
+                    && !a.use_pallas
+            })
+            .ok_or_else(|| anyhow!("no artifact {model}/{method}/{fn_kind} b{batch}"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    pub fn init_path(&self, model: &str, method: &str) -> Result<PathBuf> {
+        let key = format!("{model}_{method}");
+        let f = self
+            .inits
+            .get(&key)
+            .ok_or_else(|| anyhow!("no init for {key}"))?;
+        Ok(self.dir.join(f))
+    }
+}

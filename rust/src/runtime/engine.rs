@@ -1,0 +1,141 @@
+//! Compile-and-execute engine over the PJRT CPU client.
+//!
+//! `Engine` owns the `PjRtClient` and a cache of compiled executables
+//! keyed by artifact name. `run()` takes borrowed input literals (zero
+//! assembly copies) and returns the decomposed output tuple.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl Engine {
+    /// CPU client over the artifacts in `Manifest::default_dir()`.
+    pub fn new() -> Result<Engine> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: &std::path::Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on borrowed literals; returns the flat output
+    /// tuple (the AOT pipeline lowers everything with `return_tuple=True`).
+    pub fn run(&self, meta: &ArtifactMeta, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != meta.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} args, artifact expects {}",
+                meta.name,
+                args.len(),
+                meta.inputs.len()
+            );
+        }
+        let exe = self.load(meta)?;
+        let out = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", meta.name))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", meta.name))?;
+        if parts.len() != meta.outputs.len() {
+            anyhow::bail!(
+                "{}: got {} outputs, manifest says {}",
+                meta.name,
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Drop a cached executable (memory control for batch sweeps).
+    pub fn evict(&self, name: &str) {
+        self.cache.borrow_mut().remove(name);
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 tensor literal with shape.
+pub fn lit_f32(v: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// i32 tensor literal with shape.
+pub fn lit_i32(v: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar read: {e:?}"))?
+        .first()
+        .copied()
+        .context("empty literal")
+}
+
+/// Read a full f32 vector out of a literal.
+pub fn vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("vec read: {e:?}"))
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime (S10): loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the *only* place the stack touches XLA; the coordinator above
+//! it deals in `ModelState` (host parameter literals) and flat metric
+//! vectors. One compiled executable per artifact, cached for the process
+//! lifetime — precision changes are runtime inputs, so the whole training
+//! schedule reuses a single compilation per step-function.
+
+pub mod artifacts;
+pub mod engine;
+pub mod state;
+
+pub use artifacts::{ArtifactMeta, IoDesc, Manifest, QLayer};
+pub use engine::Engine;
+pub use state::ModelState;

@@ -1,0 +1,213 @@
+//! Host-side model state: parameter / const / momentum literals plus the
+//! runtime bit-state vectors, assembled into artifact argument lists.
+
+use anyhow::{anyhow, Context, Result};
+use xla::FromRawBytes;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use super::engine::{self, Engine};
+
+/// The trainable state of one model under one method.
+pub struct ModelState {
+    pub model: String,
+    pub method: String,
+    pub params: Vec<xla::Literal>,
+    pub consts: Vec<xla::Literal>,
+    pub momenta: Vec<xla::Literal>,
+    /// param specs (from the train artifact's input descriptors)
+    pub param_descs: Vec<super::IoDesc>,
+}
+
+impl ModelState {
+    /// Load initial parameters from the artifact init npz; momenta zeroed.
+    pub fn init(manifest: &Manifest, train_meta: &ArtifactMeta) -> Result<ModelState> {
+        let path = manifest.init_path(&train_meta.model, &train_meta.method)?;
+        let entries = xla::Literal::read_npz(&path, &())
+            .map_err(|e| anyhow!("read {path:?}: {e:?}"))?;
+        let mut params = Vec::new();
+        let mut consts = Vec::new();
+        for (name, lit) in entries {
+            if name.starts_with('t') {
+                params.push(lit);
+            } else if name.starts_with('c') {
+                consts.push(lit);
+            }
+        }
+        if params.len() != train_meta.num_trainable || consts.len() != train_meta.num_consts {
+            anyhow::bail!(
+                "{}: init npz has {}/{} tensors, artifact wants {}/{}",
+                train_meta.name,
+                params.len(),
+                consts.len(),
+                train_meta.num_trainable,
+                train_meta.num_consts
+            );
+        }
+        let momenta = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let shape: Vec<usize> = train_meta.inputs[i].shape.clone();
+                let numel: usize = shape.iter().product::<usize>().max(1);
+                engine::lit_f32(&vec![0f32; numel], &shape).with_context(|| format!("momentum {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let _ = &momenta; // shapes validated against descs below
+        let param_descs = train_meta.inputs[..train_meta.num_trainable].to_vec();
+        Ok(ModelState {
+            model: train_meta.model.clone(),
+            method: train_meta.method.clone(),
+            params,
+            consts,
+            momenta,
+            param_descs,
+        })
+    }
+
+    /// Total trainable parameter count (Table 1 "Params").
+    pub fn trainable_params(&self) -> usize {
+        self.param_descs.iter().map(|d| d.numel()).sum()
+    }
+
+    /// Collect the float weights of quantized layer `q` (kind == "qw").
+    pub fn q_weights(&self, q: usize) -> Result<Vec<f32>> {
+        for (i, d) in self.param_descs.iter().enumerate() {
+            if d.kind == "qw" && d.q_index == q as i64 {
+                return engine::vec_f32(&self.params[i]);
+            }
+        }
+        anyhow::bail!("no qw param for layer {q}")
+    }
+
+    /// Replace the float weights of quantized layer `q` (packed-model
+    /// re-import path).
+    pub fn set_q_weights(&mut self, q: usize, w: &[f32]) -> Result<()> {
+        for (i, d) in self.param_descs.iter().enumerate() {
+            if d.kind == "qw" && d.q_index == q as i64 {
+                anyhow::ensure!(w.len() == d.numel(), "layer {q}: {} != {}", w.len(), d.numel());
+                self.params[i] = engine::lit_f32(w, &d.shape)?;
+                return Ok(());
+            }
+        }
+        anyhow::bail!("no qw param for layer {q}")
+    }
+
+    /// Run one training step; updates params/momenta in place, returns
+    /// (loss, ce, correct).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        eng: &Engine,
+        meta: &ArtifactMeta,
+        bits: &xla::Literal,
+        ks: &xla::Literal,
+        lam: f32,
+        lr: f32,
+        temp: f32,
+        n_act: f32,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<(f32, f32, f32)> {
+        let lam_l = engine::lit_scalar_f32(lam);
+        let lr_l = engine::lit_scalar_f32(lr);
+        let temp_l = engine::lit_scalar_f32(temp);
+        let na_l = engine::lit_scalar_f32(n_act);
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() * 2 + self.consts.len() + 8);
+        args.extend(self.params.iter());
+        args.extend(self.consts.iter());
+        args.extend(self.momenta.iter());
+        args.extend([bits, ks, &lam_l, &lr_l, &temp_l, &na_l, x, y]);
+        let mut out = eng.run(meta, &args)?;
+        let nt = self.params.len();
+        let correct = engine::scalar_f32(&out[2 * nt + 2])?;
+        let ce = engine::scalar_f32(&out[2 * nt + 1])?;
+        let loss = engine::scalar_f32(&out[2 * nt])?;
+        // move new params/momenta into place (reverse order pops nothing;
+        // drain keeps ordering)
+        let mut it = out.drain(..);
+        for p in self.params.iter_mut() {
+            *p = it.next().context("missing param output")?;
+        }
+        for m in self.momenta.iter_mut() {
+            *m = it.next().context("missing momentum output")?;
+        }
+        Ok((loss, ce, correct))
+    }
+
+    /// Evaluate on one batch: returns (ce_sum, correct).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_step(
+        &self,
+        eng: &Engine,
+        meta: &ArtifactMeta,
+        bits: &xla::Literal,
+        temp: f32,
+        n_act: f32,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<(f32, f32)> {
+        let temp_l = engine::lit_scalar_f32(temp);
+        let na_l = engine::lit_scalar_f32(n_act);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.consts.iter());
+        args.extend([bits, &temp_l, &na_l, x, y]);
+        let out = eng.run(meta, &args)?;
+        Ok((engine::scalar_f32(&out[0])?, engine::scalar_f32(&out[1])?))
+    }
+
+    /// Per-layer stats (msq/dorefa): (beta, qerr, reg) each of len Lq.
+    pub fn stats_step(
+        &self,
+        eng: &Engine,
+        meta: &ArtifactMeta,
+        bits: &xla::Literal,
+        ks: &xla::Literal,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.consts.iter());
+        args.extend([bits, ks]);
+        let out = eng.run(meta, &args)?;
+        Ok((
+            engine::vec_f32(&out[0])?,
+            engine::vec_f32(&out[1])?,
+            engine::vec_f32(&out[2])?,
+        ))
+    }
+
+    /// Per-(layer, plane) nonzero rates for bsq/csq: shape (Lq, N0) flat.
+    pub fn plane_stats_step(
+        &self,
+        eng: &Engine,
+        meta: &ArtifactMeta,
+        bits: &xla::Literal,
+        temp: f32,
+    ) -> Result<Vec<f32>> {
+        let temp_l = engine::lit_scalar_f32(temp);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.consts.iter());
+        args.extend([bits, &temp_l]);
+        let out = eng.run(meta, &args)?;
+        engine::vec_f32(&out[0])
+    }
+
+    /// One Hutchinson probe: per-layer vᵀHv (len Lq).
+    pub fn hessian_step(
+        &self,
+        eng: &Engine,
+        meta: &ArtifactMeta,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        seed: i32,
+    ) -> Result<Vec<f32>> {
+        let seed_l = engine::lit_scalar_i32(seed);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend([x, y, &seed_l]);
+        let out = eng.run(meta, &args)?;
+        engine::vec_f32(&out[0])
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny argv parser: `--flag`, `--key value`, `--key=value`, positionals.
+//!
+//! Every binary in the repo shares this, so `--help` output and override
+//! syntax (`--set a.b=c`, repeatable) are uniform.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). `value_opts` lists option
+    /// names that consume a following value; anything else after `--` is
+    /// a boolean flag.
+    pub fn parse(argv: &[String], value_opts: &[&str]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    a.options.entry(k.to_string()).or_default().push(v[1..].to_string());
+                } else if value_opts.contains(&stripped) {
+                    i += 1;
+                    let v = argv.get(i).cloned().unwrap_or_default();
+                    a.options.entry(stripped.to_string()).or_default().push(v);
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, value_opts)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opts(&self, name: &str) -> Vec<&str> {
+        self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f32(&self, name: &str, default: f32) -> f32 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed() {
+        let a = Args::parse(
+            &sv(&["table2", "--config", "c.toml", "--set", "a=1", "--set=b=2", "--verbose"]),
+            &["config", "set"],
+        );
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.opt("config"), Some("c.toml"));
+        assert_eq!(a.opts("set"), vec!["a=1", "b=2"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn numeric_opts() {
+        let a = Args::parse(&sv(&["--steps", "100", "--lr=0.5"]), &["steps", "lr"]);
+        assert_eq!(a.opt_usize("steps", 0), 100);
+        assert!((a.opt_f32("lr", 0.0) - 0.5).abs() < 1e-9);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,225 @@
+//! Experiment configuration: a TOML-subset parser + typed config structs.
+//!
+//! Supports the subset we use in `configs/*.toml`: `[section]` headers,
+//! `key = value` with string / float / int / bool / inline arrays, `#`
+//! comments. Every experiment binary takes `--config path.toml` plus
+//! `--set section.key=value` overrides, so runs are reproducible from
+//! files checked into the repo.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        self.as_f64().map(|f| f as f32)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> Value` map (the root section is "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let vtext = line[eq + 1..].trim();
+            let value = parse_value(vtext)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set(&mut self, spec: &str) -> Result<(), String> {
+        let eq = spec.find('=').ok_or("override must be key=value")?;
+        let key = spec[..eq].trim().to_string();
+        let value = parse_value(spec[eq + 1..].trim())?;
+        self.entries.insert(key, value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.as_f32()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(t: &str) -> Result<Value, String> {
+    if t.starts_with('"') {
+        let inner = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word: treat as string (lets users skip quotes for names)
+    if t.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') && !t.is_empty() {
+        return Ok(Value::Str(t.to_string()));
+    }
+    Err(format!("cannot parse value {t:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse(
+            "model = \"resnet20\"\n[train]\nlam = 5e-5\nepochs = 40 # comment\nuse_hessian = true\nbatches = [64, 128]\n",
+        )
+        .unwrap();
+        assert_eq!(c.str_or("model", ""), "resnet20");
+        assert!((c.f32_or("train.lam", 0.0) - 5e-5).abs() < 1e-10);
+        assert_eq!(c.usize_or("train.epochs", 0), 40);
+        assert!(c.bool_or("train.use_hessian", false));
+        match c.get("train.batches").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("a = 1\n").unwrap();
+        c.set("a=2").unwrap();
+        c.set("b.c=hello").unwrap();
+        assert_eq!(c.usize_or("a", 0), 2);
+        assert_eq!(c.str_or("b.c", ""), "hello");
+    }
+
+    #[test]
+    fn bare_words() {
+        let c = Config::parse("method = msq\n").unwrap();
+        assert_eq!(c.str_or("method", ""), "msq");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("no equals sign").is_err());
+        assert!(Config::parse("[unclosed\n").is_err());
+    }
+}

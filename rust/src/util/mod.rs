@@ -1,0 +1,15 @@
+//! Hand-rolled substrates (S14).
+//!
+//! The build is fully offline and the vendored crate set contains only the
+//! `xla` crate's dependencies, so everything a framework normally pulls
+//! from crates.io is implemented here: PRNG, JSON, config parsing, CLI,
+//! thread pool, descriptive statistics, and a property-test harness.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Minimal property-based testing harness (proptest is unavailable
+//! offline). Deterministic, seeded, with iteration counts and shrinking
+//! *reporting* (failing inputs are printed with their case seed so a
+//! failure reproduces exactly).
+//!
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let bits = g.usize_in(2, 8);
+//!     let w = g.f32_in(0.0, 1.0);
+//!     let q = roundclamp(w, bits as f32);
+//!     prop::assert_in(q, 0.0, 1.0)
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() * std).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `property`; panics (with the case seed) on
+/// the first failure. Honors `MSQ_PROP_SEED` for exact reproduction of a
+/// single failing case.
+pub fn check<F>(cases: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("MSQ_PROP_SEED") {
+        let seed: u64 = s.parse().expect("MSQ_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), case_seed: seed };
+        if let Err(msg) = property(&mut g) {
+            panic!("property failed under MSQ_PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut g = Gen { rng: Rng::new(seed), case_seed: seed };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property failed on case {case}/{cases} (reproduce with MSQ_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn assert_in(x: f32, lo: f32, hi: f32) -> Result<(), String> {
+    ensure(x >= lo && x <= hi, format!("{x} not in [{lo}, {hi}]"))
+}
+
+pub fn assert_close(a: f32, b: f32, tol: f32) -> Result<(), String> {
+    ensure((a - b).abs() <= tol, format!("|{a} - {b}| > {tol}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            assert_in(x, 0.0, 1.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(50, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            ensure(x < 0.5, format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen = Vec::new();
+        check(5, |g| {
+            seen.push(g.f32_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check(5, |g| {
+            seen2.push(g.f32_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,146 @@
+//! Descriptive statistics + histogram helpers for metrics and benches.
+
+/// Online mean/variance (Welford) + min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile over a sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Fixed-bin histogram over [lo, hi] (used for Fig. 4 weight dists).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        Histogram { lo, hi, bins: vec![0; nbins.max(1)], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let f = (x - self.lo) / (self.hi - self.lo);
+            let i = ((f * self.bins.len() as f64) as usize).min(self.bins.len() - 1);
+            self.bins[i] += 1;
+        }
+    }
+
+    pub fn push_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers (for CSV export).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Render a compact ASCII sparkline of the distribution.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        self.bins
+            .iter()
+            .map(|&b| GLYPHS[((b as f64 / max as f64) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.var() - 2.5).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 5.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.push(-0.1);
+        h.push(0.05);
+        h.push(0.95);
+        h.push(1.5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[9], 1);
+        assert_eq!(h.total(), 4);
+    }
+}

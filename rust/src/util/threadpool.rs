@@ -1,0 +1,166 @@
+//! Fixed-size thread pool with scoped parallel-for (no rayon offline).
+//!
+//! Used by the data pipeline (parallel synthetic image generation) and the
+//! bench harness. Work stealing is unnecessary at our granularity; a
+//! chunked atomic counter gives near-perfect balance for uniform items.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    outstanding: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pub size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            outstanding: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let mut handles = Vec::with_capacity(size);
+        for _ in 0..size {
+            let sh = shared.clone();
+            handles.push(thread::spawn(move || loop {
+                let job = {
+                    let mut q = sh.queue.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.pop() {
+                            break j;
+                        }
+                        if *sh.shutdown.lock().unwrap() {
+                            return;
+                        }
+                        q = sh.cv.wait(q).unwrap();
+                    }
+                };
+                job();
+                if sh.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _g = sh.done_mx.lock().unwrap();
+                    sh.done_cv.notify_all();
+                }
+            }));
+        }
+        ThreadPool { shared, handles, size }
+    }
+
+    /// Number of worker threads matching the machine (leaves 2 for PJRT).
+    pub fn default_size() -> usize {
+        thread::available_parallelism().map(|n| n.get().saturating_sub(2).max(1)).unwrap_or(4)
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.outstanding.fetch_add(1, Ordering::AcqRel);
+        self.shared.queue.lock().unwrap().push(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while self.shared.outstanding.load(Ordering::Acquire) > 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Parallel-for over `n` items: `f(i)` runs once per `i`, chunked over
+    /// the pool; blocks until complete. `f` must be `Sync` (shared).
+    pub fn par_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let counter = AtomicUsize::new(0);
+        let chunk = (n / (self.size * 4)).max(1);
+        thread::scope(|s| {
+            for _ in 0..self.size.min(n) {
+                s.spawn(|| loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        f(i);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn submit_and_wait() {
+        let pool = ThreadPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let s = sum.clone();
+            pool.submit(move || {
+                s.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn par_for_covers_all() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_for_empty() {
+        let pool = ThreadPool::new(2);
+        pool.par_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn reuse_after_wait() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            let cc = c.clone();
+            pool.submit(move || {
+                cc.fetch_add(1, Ordering::Relaxed);
+            });
+            pool.wait();
+        }
+        assert_eq!(c.load(Ordering::Relaxed), 3);
+    }
+}

@@ -1,0 +1,68 @@
+//! Wallclock timing + a process peak-RSS probe (Table 1 "Peak Memory").
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Peak resident-set size of this process in bytes (Linux: VmHWM).
+///
+/// Table 1 reports peak GPU memory per method; on our CPU-PJRT testbed the
+/// equivalent is peak host RSS, dominated by the parameter/momentum
+/// buffers and XLA temp allocations — the same quantity the bit-splitting
+/// multiplication inflates.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current RSS in bytes (VmRSS).
+pub fn rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn rss_available_on_linux() {
+        assert!(peak_rss_bytes().unwrap_or(0) > 0);
+        assert!(rss_bytes().unwrap_or(0) > 0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Property-based tests on coordinator invariants (hand-rolled harness,
+//! `msq::util::prop`). These run without artifacts — pure state-machine
+//! properties of the bit-state, pruning, compression accounting,
+//! schedules, config/JSON substrates, and the data pipeline.
+
+use msq::coordinator::bitstate::BitState;
+use msq::coordinator::schedule::{cosine_lr, csq_temperature};
+use msq::data::{Batcher, Dataset, DatasetSpec};
+use msq::quant;
+use msq::quant::compression::BitScheme;
+use msq::util::config::Config;
+use msq::util::json;
+use msq::util::prng::Rng;
+use msq::util::prop::{self, ensure};
+use msq::util::threadpool::ThreadPool;
+
+// ---------------------------------------------------------------------------
+// BitState / pruning invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bits_monotone_nonincreasing() {
+    prop::check(300, |g| {
+        let layers = g.usize_in(1, 30);
+        let sizes: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 100_000)).collect();
+        let mut st = BitState::new(8, &sizes);
+        let mut prev = st.scheme.bits.clone();
+        for _ in 0..g.usize_in(1, 40) {
+            let l = g.usize_in(0, layers - 1);
+            st.prune_bits[l] = if g.bool() { 1 } else { 2 };
+            st.prune_layer(l);
+            for (a, b) in st.scheme.bits.iter().zip(&prev) {
+                ensure(a <= b, format!("bits increased: {a} > {b}"))?;
+            }
+            ensure(st.scheme.bits.iter().all(|&b| b >= 1), "bits below floor")?;
+            prev = st.scheme.bits.clone();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_monotone_under_pruning() {
+    prop::check(200, |g| {
+        let layers = g.usize_in(1, 20);
+        let sizes: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 10_000)).collect();
+        let mut st = BitState::new(8, &sizes);
+        let mut prev = st.compression();
+        for _ in 0..g.usize_in(1, 30) {
+            let l = g.usize_in(0, layers - 1);
+            st.prune_layer(l);
+            let c = st.compression();
+            ensure(c >= prev - 1e-9, format!("compression decreased {prev} -> {c}"))?;
+            prev = c;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ks_respect_headroom() {
+    prop::check(300, |g| {
+        let layers = g.usize_in(1, 20);
+        let sizes: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 1000)).collect();
+        let mut st = BitState::new(g.usize_in(2, 8) as u8, &sizes);
+        for _ in 0..g.usize_in(0, 20) {
+            let l = g.usize_in(0, layers - 1);
+            st.prune_bits[l] = g.usize_in(1, 2) as u8;
+            st.prune_layer(l);
+        }
+        for (l, k) in st.ks_f32().iter().enumerate() {
+            let b = st.scheme.bits[l] as f32;
+            ensure(*k >= 1.0, "k < 1")?;
+            ensure(
+                b - *k >= st.min_bits as f32 || b <= st.min_bits as f32,
+                format!("layer {l}: k {k} leaves no headroom at {b} bits"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hessian_assignment_partition() {
+    // every layer gets p in {1,2}; below-mean omega <=> p == 2
+    prop::check(200, |g| {
+        let layers = g.usize_in(1, 32);
+        let sizes: Vec<usize> = (0..layers).map(|_| 10).collect();
+        let mut st = BitState::new(8, &sizes);
+        let omega: Vec<f32> = (0..layers).map(|_| g.f32_in(0.0, 10.0)).collect();
+        st.assign_prune_bits(&omega);
+        let mean = omega.iter().sum::<f32>() / layers as f32;
+        for (l, (&p, &o)) in st.prune_bits.iter().zip(&omega).enumerate() {
+            ensure(p == 1 || p == 2, format!("layer {l}: p = {p}"))?;
+            ensure(
+                (o < mean) == (p == 2),
+                format!("layer {l}: omega {o} mean {mean} p {p}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_avg_bits_bounds() {
+    prop::check(200, |g| {
+        let layers = g.usize_in(1, 16);
+        let sizes: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 5000)).collect();
+        let bits: Vec<u8> = (0..layers).map(|_| g.usize_in(1, 8) as u8).collect();
+        let scheme = BitScheme { bits: bits.clone(), sizes };
+        let avg = scheme.avg_bits();
+        let lo = *bits.iter().min().unwrap() as f64;
+        let hi = *bits.iter().max().unwrap() as f64;
+        ensure(avg >= lo - 1e-9 && avg <= hi + 1e-9, format!("avg {avg} not in [{lo},{hi}]"))?;
+        ensure(
+            (scheme.compression() - 32.0 / avg).abs() < 1e-6,
+            "compression != 32/avg_bits",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer invariants (host mirror)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_roundclamp_idempotent_on_codes() {
+    // quantizing an already-quantized *code* (in bin-centre space) is stable
+    prop::check(500, |g| {
+        let n = g.usize_in(2, 8) as f32;
+        let w = g.f32_in(0.0, 1.0);
+        let q1 = quant::roundclamp01(w, n);
+        ensure((0.0..=1.0).contains(&q1), format!("q out of range: {q1}"))?;
+        let code = quant::roundclamp_code(w, n);
+        ensure(code < (1u32 << n as u32), "code overflow")
+    });
+}
+
+#[test]
+fn prop_lsb_proxy_bounded_by_basin() {
+    // |B_k| <= half the (n-k)-bit basin width, except the clamped top basin
+    prop::check(500, |g| {
+        let n = g.usize_in(3, 8) as f32;
+        let k = g.usize_in(1, 2) as f32;
+        let w = g.f32_in(0.0, 1.0);
+        let b = quant::lsb_proxy_roundclamp(w, n, k);
+        let m = n - k;
+        let basin = 1.0 / (m.exp2());
+        let top = 1.0 - (m.exp2() - 1.0) / m.exp2();
+        let bound = 0.5 * basin + top + 1e-6;
+        ensure(b.abs() <= bound, format!("|B|={} > {bound} (n={n},k={k},w={w})", b.abs()))
+    });
+}
+
+#[test]
+fn prop_beta_in_unit_interval() {
+    prop::check(200, |g| {
+        let len = g.usize_in(1, 4096);
+        let w = g.vec_normal(len, 0.2);
+        let n = g.usize_in(2, 8) as f32;
+        let beta = quant::beta_slice(&w, n, 1.0);
+        ensure((0.0..=1.0).contains(&beta), format!("beta {beta}"))
+    });
+}
+
+#[test]
+fn prop_fake_quant_error_bounded() {
+    prop::check(100, |g| {
+        let len = g.usize_in(2, 2048);
+        let std = g.f32_in(0.01, 2.0);
+        let w = g.vec_normal(len, std);
+        let n = g.usize_in(2, 8) as f32;
+        let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
+        let mut out = Vec::new();
+        quant::fake_quant_slice(&w, n, &mut out);
+        // max error of the affine fake-quant: one bin of the [0,1] grid
+        // (clamped top bin can double it), mapped back = 2s * (1/(2^n - 1))
+        let bound = 2.0 * scale * 2.0 / (n.exp2() - 1.0) + 1e-5;
+        for (a, b) in w.iter().zip(&out) {
+            ensure((a - b).abs() <= bound, format!("err {} > {bound}", (a - b).abs()))?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cosine_lr_bounds_and_decay() {
+    prop::check(300, |g| {
+        let lr0 = g.f32_in(1e-4, 1.0);
+        let total = g.usize_in(10, 10_000);
+        let s = g.usize_in(0, total);
+        let lr = cosine_lr(lr0, s, total, 0.05, 0.0);
+        ensure(lr >= -1e-9 && lr <= lr0 * (1.0 + 1e-6), format!("lr {lr} out of [0, {lr0}]"))
+    });
+}
+
+#[test]
+fn prop_temperature_monotone() {
+    prop::check(100, |g| {
+        let total = g.usize_in(2, 1000);
+        let a = g.usize_in(0, total - 1);
+        let b = g.usize_in(a, total);
+        let ta = csq_temperature(a, total, 100.0);
+        let tb = csq_temperature(b, total, 100.0);
+        ensure(tb >= ta - 1e-5, format!("T not monotone: {ta} -> {tb}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Substrates under randomized input
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    prop::check(200, |g| {
+        // build a random nested value, print, reparse, compare
+        fn build(g: &mut prop::Gen, depth: usize) -> json::Json {
+            if depth == 0 || g.usize_in(0, 3) == 0 {
+                match g.usize_in(0, 3) {
+                    0 => json::Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                    1 => json::Json::Bool(g.bool()),
+                    2 => json::Json::Str(format!("s{}", g.usize_in(0, 9999))),
+                    _ => json::Json::Null,
+                }
+            } else if g.bool() {
+                json::Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect())
+            } else {
+                json::Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+        let v = build(g, 3);
+        let back = json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        ensure(back == v, "json roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_config_overrides_win() {
+    prop::check(100, |g| {
+        let base = g.f32_in(0.0, 10.0);
+        let over = g.f32_in(0.0, 10.0);
+        let mut c = Config::parse(&format!("x = {base}\n")).map_err(|e| e)?;
+        c.set(&format!("x={over}")).map_err(|e| e)?;
+        prop::assert_close(c.f32_or("x", -1.0), over, 1e-4)
+    });
+}
+
+#[test]
+fn prop_prng_shuffle_preserves_multiset() {
+    prop::check(100, |g| {
+        let len = g.usize_in(0, 200);
+        let mut v: Vec<usize> = (0..len).collect();
+        let mut rng = Rng::new(g.case_seed);
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        ensure(sorted == (0..len).collect::<Vec<_>>(), "shuffle lost elements")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data pipeline integration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_epoch_covers_every_index() {
+    let pool = ThreadPool::new(2);
+    let ds = Dataset::generate(DatasetSpec::cifar_syn(96, 32, 3), &pool);
+    let mut b = Batcher::new(&ds, 32, 1, false);
+    let mut labels_seen = Vec::new();
+    for _ in 0..b.batches_per_epoch() {
+        labels_seen.extend(b.next().y);
+    }
+    // one epoch must present the train labels exactly as a multiset
+    let mut expected = ds.train_y.clone();
+    let mut got = labels_seen;
+    expected.sort();
+    got.sort();
+    assert_eq!(expected, got);
+}
+
+#[test]
+fn dataset_splits_disjoint_content() {
+    // train and test renders must differ (different split tag streams)
+    let pool = ThreadPool::new(2);
+    let ds = Dataset::generate(DatasetSpec::cifar_syn(64, 64, 9), &pool);
+    assert_ne!(ds.train_x[..3072], ds.test_x[..3072]);
+}
+
+#[test]
+fn failure_injection_bad_manifest_rejected() {
+    // corrupted manifest must error, not panic
+    let dir = std::env::temp_dir().join("msq_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(msq::runtime::Manifest::load(&dir).is_err());
+    // empty-but-valid manifest loads with zero artifacts
+    std::fs::write(dir.join("manifest.json"), r#"{"version":1,"artifacts":[],"inits":{}}"#)
+        .unwrap();
+    let m = msq::runtime::Manifest::load(&dir).unwrap();
+    assert_eq!(m.artifacts.len(), 0);
+    assert!(m.find("x", "msq", "train").is_err());
+}

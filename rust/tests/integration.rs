@@ -1,0 +1,196 @@
+//! Cross-module integration tests that don't need artifacts: quant math
+//! fixtures (cross-checked against the python oracle's closed forms),
+//! trainer wiring over mocked manifests, metrics plumbing, and the
+//! Fig. 3 analytic claims.
+
+use msq::quant;
+use msq::util::json;
+
+// ---------------------------------------------------------------------------
+// Cross-language quantizer fixtures. The expected values are the closed
+// forms from python/compile/quant.py (verified by pytest); any drift
+// between the Rust mirror and the graph math breaks the coordinator's
+// compression accounting.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn roundclamp_fixture_values() {
+    // q_r(w; 3) = min(round(8w), 7) / 7
+    let cases = [
+        (0.0f32, 0.0f32),
+        (0.06f32, 0.0f32),          // round(0.48) = 0
+        (0.07f32, 1.0 / 7.0),       // round(0.56) = 1
+        (0.4375f32, 4.0 / 7.0),     // round(3.5) = 4 (ties to even)
+        (0.95f32, 1.0f32),          // round(7.6) = 8 -> clamp 7
+        (1.0f32, 1.0f32),
+    ];
+    for (w, expect) in cases {
+        let q = quant::roundclamp01(w, 3.0);
+        assert!((q - expect).abs() < 1e-6, "q_r({w}) = {q}, want {expect}");
+    }
+}
+
+#[test]
+fn dorefa_fixture_values() {
+    // q_d(w; 3) = round(7w) / 7
+    let cases = [(0.0f32, 0.0f32), (0.07f32, 0.0f32), (0.08f32, 1.0 / 7.0), (1.0f32, 1.0f32)];
+    for (w, expect) in cases {
+        let q = quant::dorefa01(w, 3.0);
+        assert!((q - expect).abs() < 1e-6, "q_d({w}) = {q}, want {expect}");
+    }
+}
+
+#[test]
+fn lsb_proxy_fixture_values() {
+    // n=3, k=1: target = min(round(4w), 3)/4; B = w - target
+    let cases = [
+        (0.25f32, 0.0f32),
+        (0.30f32, 0.05f32),
+        (0.20f32, -0.05f32),
+        (0.375f32 - 1e-4, 0.375f32 - 1e-4 - 0.25f32),
+        (0.375f32 + 1e-4, 0.375f32 + 1e-4 - 0.5f32),
+    ];
+    for (w, expect) in cases {
+        let b = quant::lsb_proxy_roundclamp(w, 3.0, 1.0);
+        assert!((b - expect).abs() < 1e-5, "B({w}) = {b}, want {expect}");
+    }
+}
+
+#[test]
+fn fig3_claims_hold_numerically() {
+    // paper Fig. 3: under roundclamp, *every* LSB-zero coded weight has its
+    // regularizer target inside its own bin; under dorefa a macroscopic
+    // fraction does not ("gradient for 110 which should not exist").
+    let n = 3.0f32;
+    let k = 1.0f32;
+    let ln = 8.0f32;
+    let mut df_bad = 0usize;
+    let mut rc_bad = 0usize;
+    let mut zero_bins = 0usize;
+    for i in 0..=4000 {
+        let w = i as f32 / 4000.0;
+        let code_rc = quant::roundclamp_code(w, n);
+        if code_rc % 2 == 0 {
+            zero_bins += 1;
+            if quant::lsb_proxy_roundclamp(w, n, k).abs() > 0.5 / ln + 1e-6 {
+                rc_bad += 1;
+            }
+        }
+        let code_df = quant::round_ties_even((ln - 1.0) * w) as u32;
+        if code_df % 2 == 0 && quant::lsb_proxy_dorefa(w, n, k).abs() > 0.5 / ln + 1e-6 {
+            df_bad += 1;
+        }
+    }
+    assert_eq!(rc_bad, 0, "roundclamp target left an LSB-zero bin");
+    assert!(df_bad as f64 > 0.05 * zero_bins as f64, "dorefa bad {df_bad}/{zero_bins}");
+}
+
+#[test]
+fn dorefa_negative_bias_matches_fig4a() {
+    // the paper's Fig. 4a explanation: dorefa's descent direction over
+    // nonzero-LSB weights is biased (pushes weights down → spike at 0),
+    // roundclamp's is balanced on interior bins.
+    let n = 3.0f32;
+    let k = 1.0f32;
+    let ln = 8.0f32;
+    let mut df_sign = 0f64;
+    let mut df_n = 0usize;
+    let mut rc_sign = 0f64;
+    let mut rc_n = 0usize;
+    for i in 0..=4000 {
+        let w = i as f32 / 4000.0;
+        let code_df = quant::round_ties_even((ln - 1.0) * w) as u32;
+        if code_df % 2 == 1 && code_df < 7 {
+            df_sign += quant::lsb_proxy_dorefa(w, n, k).signum() as f64;
+            df_n += 1;
+        }
+        let code_rc = quant::roundclamp_code(w, n);
+        if code_rc % 2 == 1 && code_rc < 7 {
+            rc_sign += quant::lsb_proxy_roundclamp(w, n, k).signum() as f64;
+            rc_n += 1;
+        }
+    }
+    let df_mean = df_sign / df_n as f64;
+    let rc_mean = rc_sign / rc_n as f64;
+    assert!(df_mean.abs() > 0.3, "dorefa bias {df_mean} too small");
+    assert!(rc_mean.abs() < 0.1, "roundclamp bias {rc_mean} too large");
+}
+
+// ---------------------------------------------------------------------------
+// Report / metrics plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_report_json_roundtrip() {
+    use msq::coordinator::{PruneEvent, RunReport};
+    let mut r = RunReport {
+        label: "t".into(),
+        model: "resnet20".into(),
+        method: "msq".into(),
+        epochs: 2,
+        steps: 10,
+        train_loss: vec![1.0, 0.5],
+        final_bits: vec![4, 3, 8],
+        final_compression: 8.0,
+        ..Default::default()
+    };
+    r.prune_events.push(PruneEvent {
+        epoch: 1,
+        beta: vec![0.1, 0.5, 0.9],
+        omega: vec![1.0, 2.0, 3.0],
+        bits_before: vec![8, 8, 8],
+        bits_after: vec![4, 3, 8],
+        prune_bits: vec![2, 1, 1],
+        compression: 8.0,
+    });
+    let text = r.to_json().to_string();
+    let parsed = json::parse(&text).unwrap();
+    assert_eq!(parsed.get("model").unwrap().as_str(), Some("resnet20"));
+    assert_eq!(
+        parsed.path(&["prune_events", "0", "bits_after", "1"]).unwrap().as_usize(),
+        Some(3)
+    );
+    assert_eq!(parsed.get("final_compression").unwrap().as_f64(), Some(8.0));
+}
+
+#[test]
+fn table_printer_handles_ragged_rows() {
+    let mut t = msq::metrics::Table::new(&["a", "b"]);
+    t.row(&["x".into(), "yyyy".into()]);
+    t.row(&["longer".into(), "z".into()]);
+    t.print(); // must not panic
+}
+
+#[test]
+fn csv_escaping_not_needed_for_numeric_rows() {
+    let dir = std::env::temp_dir().join("msq_int_csv");
+    let path = dir.join("rows.csv");
+    let mut c = msq::metrics::Csv::create(&path, &["x", "y"]).unwrap();
+    c.rowf(&[1.5, -2.0]).unwrap();
+    c.rowf(&[f64::NAN, 0.0]).unwrap(); // NaN prints as NaN; readers treat as missing
+    c.flush().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("x,y\n1.5,-2\n"));
+}
+
+// ---------------------------------------------------------------------------
+// Compression accounting against the paper's published numbers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paper_compression_targets_reproduced() {
+    use msq::quant::compression::BitScheme;
+    // Table 2 footnote: Γ = 16.00 and 10.67 ≈ 2- and 3-bit average widths
+    let s = BitScheme::uniform(2, &[270_000]);
+    assert!((s.compression() - 16.0).abs() < 1e-9);
+    let s = BitScheme::uniform(3, &[270_000]);
+    assert!((s.compression() - 10.6667).abs() < 1e-3);
+    // mixed scheme: resnet20-like 20 layers, half at 2, half at 4 bits,
+    // equal sizes -> avg 3 bits -> 10.67x
+    let sizes = vec![13_500usize; 20];
+    let mut s = BitScheme::uniform(4, &sizes);
+    for l in 0..10 {
+        s.prune(l, 2);
+    }
+    assert!((s.compression() - 32.0 / 3.0).abs() < 1e-6);
+}
