@@ -1,0 +1,119 @@
+//! Serving throughput bench: closed-loop load against `serve::Server`
+//! over a packed mixed-precision MLP, recording req/s and latency
+//! percentiles to `BENCH_serve.json` (plus the usual CSV row under
+//! `results/bench/`).
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput            # default 4000 reqs
+//! MSQ_BENCH_REQUESTS=500 cargo bench --bench serve_throughput
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use msq::bench::{bench, save};
+use msq::quant::pack::PackedModel;
+use msq::serve::{ServableModel, Server, ServerConfig};
+use msq::util::json::Json;
+use msq::util::prng::Rng;
+use msq::util::stats::percentile;
+
+/// Random He-initialized MLP, quantized + packed at the given widths.
+fn synth_model(dims: &[usize], bits: &[u8], seed: u64) -> ServableModel {
+    let pm = PackedModel::synth_mlp(dims, bits, seed).expect("synth model");
+    ServableModel::from_packed("bench-mlp", &pm, dims[0]).expect("servable")
+}
+
+fn main() {
+    let dims = [3072usize, 512, 128, 10];
+    let bits = [4u8, 3, 8];
+    let requests: usize = std::env::var("MSQ_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4000);
+    let clients = 8usize;
+
+    let model = Arc::new(synth_model(&dims, &bits, 42));
+    println!(
+        "serve_throughput: {:?} @ bits {:?} — payload {} B ({:.2}x vs fp32), {} reqs x {} clients",
+        dims,
+        bits,
+        model.payload_bytes(),
+        model.compression(),
+        requests,
+        clients
+    );
+
+    // --- kernel-level: batched forward pass, decode amortized over batch
+    let mut results = Vec::new();
+    let mut rng = Rng::new(7);
+    for batch in [1usize, 8, 32] {
+        let x: Vec<f32> = (0..batch * dims[0]).map(|_| rng.normal()).collect();
+        let m = model.clone();
+        let r = bench(&format!("infer_batch b={batch}"), 2, 20, || {
+            std::hint::black_box(m.infer_batch(&x, batch, None).unwrap());
+        });
+        r.report(Some((batch as f64, "req")));
+        results.push(r);
+    }
+
+    // --- system-level: dynamic batching under closed-loop load
+    let cfg = ServerConfig::default();
+    let server = Server::start(model.clone(), cfg);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    let per_client = requests.div_ceil(clients);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let model = &model;
+            let latencies = &latencies;
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                let mut local = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..model.input_dim).map(|_| rng.normal()).collect();
+                    if let Ok(resp) = server.infer_blocking(x) {
+                        local.push(resp.latency.as_secs_f64());
+                    }
+                }
+                latencies.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let lats = latencies.into_inner().unwrap();
+    let completed = lats.len();
+    let rps = completed as f64 / wall.max(1e-9);
+    let (p50, p95, p99) =
+        (percentile(&lats, 50.0), percentile(&lats, 95.0), percentile(&lats, 99.0));
+    println!(
+        "closed loop: {completed} reqs in {wall:.2}s -> {rps:.0} req/s | \
+         p50 {:.3} ms p95 {:.3} ms p99 {:.3} ms",
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3
+    );
+    println!("server view: {}", server.metrics.report(server.queue_depth()));
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("dims", Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("bits", Json::Arr(bits.iter().map(|&b| Json::Num(b as f64)).collect())),
+        ("payload_bytes", Json::Num(model.payload_bytes() as f64)),
+        ("compression", Json::Num(model.compression())),
+        ("requests", Json::Num(requests as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("rps", Json::Num(rps)),
+        ("p50_ms", Json::Num(p50 * 1e3)),
+        ("p95_ms", Json::Num(p95 * 1e3)),
+        ("p99_ms", Json::Num(p99 * 1e3)),
+        ("server", server.metrics.snapshot(server.queue_depth())),
+    ]);
+    std::fs::write("BENCH_serve.json", out.to_string() + "\n").expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+    server.shutdown();
+    save("serve_throughput.csv", &results);
+}

@@ -4,9 +4,11 @@
 //! assigned `k` of the bipartite slice) per quantized layer, and renders
 //! them as the `bits` / `ks` runtime literals the artifacts consume.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 use crate::quant::compression::BitScheme;
+#[cfg(feature = "pjrt")]
 use crate::runtime::engine;
 
 #[derive(Clone, Debug)]
@@ -45,11 +47,13 @@ impl BitState {
             .collect()
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn bits_literal(&self) -> Result<xla::Literal> {
         let v = self.bits_f32();
         engine::lit_f32(&v, &[v.len()])
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn ks_literal(&self) -> Result<xla::Literal> {
         let v = self.ks_f32();
         engine::lit_f32(&v, &[v.len()])

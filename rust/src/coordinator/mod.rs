@@ -18,14 +18,19 @@
 //! over their bit-split artifacts with their own pruning policies.
 
 pub mod bitstate;
+#[cfg(feature = "pjrt")]
 pub mod bsq;
+#[cfg(feature = "pjrt")]
 pub mod csq;
+#[cfg(feature = "pjrt")]
 pub mod hessian;
 pub mod report;
 pub mod schedule;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use bitstate::BitState;
 pub use report::{PruneEvent, RunReport};
 pub use schedule::{cosine_lr, csq_temperature};
+#[cfg(feature = "pjrt")]
 pub use trainer::{MsqConfig, Trainer};

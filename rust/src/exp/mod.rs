@@ -4,8 +4,11 @@
 //! paper-style table.
 
 pub mod presets;
+#[cfg(feature = "pjrt")]
 pub mod runners;
+#[cfg(feature = "pjrt")]
 pub mod tables;
 
 pub use presets::Preset;
+#[cfg(feature = "pjrt")]
 pub use runners::{measure_steps, run_method, StepCost};

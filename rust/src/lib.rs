@@ -17,6 +17,12 @@
 //!
 //! Python never runs at training time: the `runtime` module loads the HLO
 //! artifacts through PJRT and the coordinator drives them from Rust.
+//!
+//! Deployment side, the `serve` module executes packed `.msqpack` models
+//! (produced by `quant::pack`) with pure-Rust quantized kernels and a
+//! dynamic request batcher — zero XLA/PJRT linkage, so the default
+//! feature set builds and serves fully offline. The XLA-backed training
+//! path is gated behind the `pjrt` cargo feature.
 
 pub mod bench;
 pub mod coordinator;
@@ -25,7 +31,11 @@ pub mod exp;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
+#[cfg(feature = "pjrt")]
 pub use coordinator::{MsqConfig, Trainer};
+#[cfg(feature = "pjrt")]
 pub use runtime::{Engine, ModelState};
+pub use serve::{ModelRegistry, ServableModel, Server, ServerConfig};

@@ -1,26 +1,47 @@
-//! `msq` — the training coordinator CLI (L3 leader entrypoint).
+//! `msq` — the coordinator CLI (L3 leader entrypoint).
 //!
 //! ```text
 //! msq train --model resnet20 --method msq --epochs 60 --gamma 16 [...]
 //! msq eval-init --model resnet20            # sanity: eval at init
 //! msq info                                  # list artifacts
+//! msq pack-synth --dims 3072,256,10 --bits 4,8 --out demo.msqpack
+//! msq serve --model mlp --packed demo.msqpack [--requests N]
 //! ```
+//!
+//! `train` / `info` / `eval-*` drive the XLA runtime and need the `pjrt`
+//! feature; `pack-synth` and `serve` run on the default feature set with
+//! zero XLA linkage (the pure-Rust `serve` subsystem).
 
-use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
 
+use anyhow::{bail, Context, Result};
+
+#[cfg(feature = "pjrt")]
 use msq::coordinator::bsq::BsqTrainer;
+#[cfg(feature = "pjrt")]
 use msq::coordinator::csq::CsqTrainer;
+#[cfg(feature = "pjrt")]
 use msq::coordinator::{MsqConfig, Trainer};
+#[cfg(feature = "pjrt")]
 use msq::data::{Dataset, DatasetSpec};
+#[cfg(feature = "pjrt")]
 use msq::metrics;
+use msq::quant::pack::PackedModel;
+#[cfg(feature = "pjrt")]
 use msq::runtime::Engine;
+use msq::serve::{InferResponse, ServableModel, Server, ServerConfig, SubmitError};
 use msq::util::cli::Args;
+use msq::util::json::{self, Json};
+use msq::util::prng::Rng;
+#[cfg(feature = "pjrt")]
 use msq::util::threadpool::ThreadPool;
 
 const VALUE_OPTS: &[&str] = &[
     "model", "method", "epochs", "batch", "lam", "alpha", "interval", "gamma", "lr", "n-act",
     "seed", "train-size", "test-size", "eval-every", "fixed-bits", "probes", "out", "config",
-    "set", "export", "packed",
+    "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
+    "queue-cap", "threads", "input-dim", "dims", "bits",
 ];
 
 fn main() -> Result<()> {
@@ -30,18 +51,308 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(),
         Some("eval-init") => cmd_eval_init(&args),
         Some("eval-packed") => cmd_eval_packed(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("pack-synth") => cmd_pack_synth(&args),
         _ => {
             eprintln!(
-                "usage: msq <train|info|eval-init> [--model M] [--method msq|dorefa|bsq|csq]\n\
-                 [--epochs N] [--batch B] [--lam L] [--alpha A] [--interval I] [--gamma G]\n\
-                 [--lr LR] [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
-                 [--train-size N] [--test-size N] [--seed S] [--out results/run.json]"
+                "usage: msq <train|info|eval-init|eval-packed|serve|pack-synth>\n\
+                 train:      [--model M] [--method msq|dorefa|bsq|csq] [--epochs N] [--batch B]\n\
+                 \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
+                 \x20           [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
+                 \x20           [--train-size N] [--test-size N] [--seed S] [--out run.json]\n\
+                 \x20           [--export model.msqpack]   (needs --features pjrt)\n\
+                 serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
+                 \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
+                 \x20           [--threads 0] [--requests N --concurrency C] [--json]\n\
+                 \x20           (no --requests: JSONL requests on stdin, responses on stdout)\n\
+                 pack-synth: [--dims 3072,256,10] [--bits 4,8] [--seed S] --out demo.msqpack"
             );
             Ok(())
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving path (default feature set — no XLA)
+// ---------------------------------------------------------------------------
+
+/// Input width the synthetic datasets feed each model family (flattened
+/// NHWC), used when `--input-dim` is not given.
+fn default_input_dim(model: &str) -> usize {
+    match model {
+        "resnet20" | "mlp" => 32 * 32 * 3,
+        _ => 64 * 64 * 3,
+    }
+}
+
+fn server_config(args: &Args) -> ServerConfig {
+    ServerConfig {
+        max_batch: args.opt_usize("max-batch", 32),
+        max_delay: Duration::from_millis(args.opt_u64("max-delay-ms", 5)),
+        queue_cap: args.opt_usize("queue-cap", 1024),
+        threads: args.opt_usize("threads", 0),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let packed = args.opt("packed").context("--packed model.msqpack required")?;
+    let name = args.opt("model").unwrap_or("mlp").to_string();
+    let input_dim = args.opt_usize("input-dim", default_input_dim(&name));
+    let model =
+        std::sync::Arc::new(ServableModel::load(&name, Path::new(packed), input_dim)?);
+    eprintln!(
+        "[serve] {}: {} layers, {} -> {}, payload {} B ({:.2}x vs fp32), bits {:?}",
+        model.name,
+        model.layers.len(),
+        model.input_dim,
+        model.output_dim(),
+        model.payload_bytes(),
+        model.compression(),
+        model.layers.iter().map(|l| l.bits).collect::<Vec<_>>(),
+    );
+    let server = Server::start(model.clone(), server_config(args));
+    let requests = args.opt_usize("requests", 0);
+    if requests > 0 {
+        serve_synthetic(
+            &server,
+            &model,
+            requests,
+            args.opt_usize("concurrency", 8).max(1),
+            args.opt_u64("seed", 42),
+        );
+    } else {
+        serve_stdin(&server)?;
+    }
+    eprintln!("[serve] {}", server.metrics.report(server.queue_depth()));
+    if args.flag("json") {
+        println!("{}", server.metrics.snapshot(server.queue_depth()).to_string());
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// Closed-loop synthetic load: `concurrency` in-process clients issue
+/// exactly `n` blocking inferences between them (QueueFull sheds count
+/// as issued — they show up in the `rejected` metric, not `completed`).
+fn serve_synthetic(server: &Server, model: &ServableModel, n: usize, clients: usize, seed: u64) {
+    eprintln!("[serve] synthetic load: {n} requests over {clients} clients");
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            // distribute the remainder so the total is exactly n
+            let per_client = n / clients + usize::from(c < n % clients);
+            s.spawn(move || {
+                let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..model.input_dim).map(|_| rng.normal()).collect();
+                    match server.infer_blocking(x) {
+                        Ok(_) | Err(SubmitError::QueueFull { .. }) => {}
+                        Err(e) => {
+                            eprintln!("[serve] client {c}: {e}");
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// JSONL request/response loop: one request per stdin line, either a
+/// bare input array or `{"id": .., "input": [..]}`. Responses stream to
+/// stdout in input order; submission is pipelined so batches still form.
+fn serve_stdin(server: &Server) -> Result<()> {
+    use std::collections::VecDeque;
+    use std::io::BufRead;
+
+    let stdin = std::io::stdin();
+    let mut inflight = VecDeque::new();
+    let mut lineno = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        lineno += 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                println!(r#"{{"line":{lineno},"error":"parse: {e}"}}"#);
+                continue;
+            }
+        };
+        let (id, input_json) = match &parsed {
+            Json::Arr(_) => (Json::Num(lineno as f64), &parsed),
+            obj => (
+                obj.get("id").cloned().unwrap_or(Json::Num(lineno as f64)),
+                match obj.get("input") {
+                    Some(v) => v,
+                    None => {
+                        println!(r#"{{"line":{lineno},"error":"missing input"}}"#);
+                        continue;
+                    }
+                },
+            ),
+        };
+        let input = match input_json.as_arr() {
+            Some(arr) => {
+                let nums: Vec<f32> =
+                    arr.iter().filter_map(Json::as_f64).map(|v| v as f32).collect();
+                if nums.len() != arr.len() {
+                    // reject, don't silently drop elements and misalign
+                    println!("{}", err_json(&id, "input must be an array of numbers"));
+                    continue;
+                }
+                nums
+            }
+            None => {
+                println!("{}", err_json(&id, "input must be an array of numbers"));
+                continue;
+            }
+        };
+        loop {
+            match server.submit(input.clone()) {
+                Ok(rx) => {
+                    inflight.push_back((id, rx));
+                    break;
+                }
+                Err(SubmitError::QueueFull { .. }) => {
+                    // backpressure: block on the oldest in-flight request
+                    if let Some((rid, rx)) = inflight.pop_front() {
+                        print_response(&rid, rx.recv().ok());
+                    }
+                }
+                Err(e) => {
+                    println!("{}", err_json(&id, &e.to_string()));
+                    break;
+                }
+            }
+        }
+        drain_ready(&mut inflight);
+    }
+    for (rid, rx) in inflight {
+        print_response(&rid, rx.recv().ok());
+    }
+    Ok(())
+}
+
+/// In-flight stdin requests: (response id, per-request channel).
+type Inflight = std::collections::VecDeque<(Json, std::sync::mpsc::Receiver<InferResponse>)>;
+
+/// Print every already-completed response at the front of the in-flight
+/// queue (non-blocking), so stdout streams during a long-lived session
+/// and `inflight` stays bounded instead of growing until EOF.
+fn drain_ready(inflight: &mut Inflight) {
+    use std::sync::mpsc::TryRecvError;
+    while let Some((_, rx)) = inflight.front() {
+        match rx.try_recv() {
+            Ok(resp) => {
+                let (rid, _) = inflight.pop_front().unwrap();
+                print_response(&rid, Some(resp));
+            }
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                let (rid, _) = inflight.pop_front().unwrap();
+                print_response(&rid, None);
+            }
+        }
+    }
+}
+
+fn err_json(id: &Json, msg: &str) -> String {
+    Json::obj(vec![("id", id.clone()), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn print_response(id: &Json, resp: Option<InferResponse>) {
+    match resp {
+        Some(r) => {
+            let v = Json::obj(vec![
+                ("id", id.clone()),
+                ("argmax", Json::Num(r.argmax as f64)),
+                ("logits", Json::arr_f32(&r.logits)),
+                ("latency_ms", Json::Num(r.latency.as_secs_f64() * 1e3)),
+                ("batch", Json::Num(r.batch_size as f64)),
+            ]);
+            println!("{}", v.to_string());
+        }
+        None => println!("{}", err_json(id, "server dropped request")),
+    }
+}
+
+/// Generate a random MLP at the given layer widths, quantize + pack it —
+/// a self-contained way to produce a `.msqpack` for serve/bench demos
+/// without the XLA training path.
+fn cmd_pack_synth(args: &Args) -> Result<()> {
+    let dims: Vec<usize> = args
+        .opt("dims")
+        .unwrap_or("3072,256,10")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().with_context(|| format!("bad dim {s:?}")))
+        .collect::<Result<_>>()?;
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        bail!("--dims needs >= 2 nonzero comma-separated widths, got {dims:?}");
+    }
+    let bits: Vec<u8> = args
+        .opt("bits")
+        .unwrap_or("4")
+        .split(',')
+        .map(|s| s.trim().parse::<u8>().with_context(|| format!("bad bits {s:?}")))
+        .collect::<Result<_>>()?;
+    let nlayers = dims.len() - 1;
+    let bits: Vec<u8> = if bits.len() == 1 {
+        vec![bits[0]; nlayers]
+    } else if bits.len() == nlayers {
+        bits
+    } else {
+        bail!("--bits needs 1 or {} values, got {}", nlayers, bits.len());
+    };
+    if bits.iter().any(|&b| !(1..=8).contains(&b)) {
+        bail!("--bits values must be in 1..=8 for serving, got {bits:?}");
+    }
+    let out = args.opt("out").unwrap_or("model.msqpack");
+    let pm = PackedModel::synth_mlp(&dims, &bits, args.opt_u64("seed", 42))?;
+    pm.save(Path::new(out))?;
+    println!(
+        "[pack-synth] {} layers {:?} @ bits {:?} -> {} ({} B payload, {:.2}x vs fp32)",
+        nlayers,
+        dims,
+        bits,
+        out,
+        pm.payload_bytes(),
+        pm.compression()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Training path (requires --features pjrt)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_required(cmd: &str) -> Result<()> {
+    bail!("`msq {cmd}` drives the XLA runtime — rebuild with `--features pjrt`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    pjrt_required("train")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info() -> Result<()> {
+    pjrt_required("info")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval_init(_args: &Args) -> Result<()> {
+    pjrt_required("eval-init")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval_packed(_args: &Args) -> Result<()> {
+    pjrt_required("eval-packed")
+}
+
+#[cfg(feature = "pjrt")]
 pub fn config_from_args(args: &Args) -> MsqConfig {
     // layering: per-model defaults < --config file < --set overrides < flags
     let mut file_cfg = msq::util::config::Config::default();
@@ -119,7 +430,8 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
     cfg.hessian_probes = file_cfg.usize_or("hessian.probes", 4);
     // CLI flags override everything
     cfg.epochs = args.opt_usize("epochs", cfg.epochs);
-    cfg.batch = args.opt_usize("batch", if model == "resnet20" || model == "mlp" { 256 } else { 64 });
+    let default_batch = if model == "resnet20" || model == "mlp" { 256 } else { 64 };
+    cfg.batch = args.opt_usize("batch", default_batch);
     cfg.lam = args.opt_f32("lam", cfg.lam);
     cfg.alpha = args.opt_f32("alpha", cfg.alpha);
     cfg.interval = args.opt_usize("interval", cfg.interval);
@@ -139,6 +451,7 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
     cfg
 }
 
+#[cfg(feature = "pjrt")]
 pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     let pool = ThreadPool::new(ThreadPool::default_size());
     let (train, test) = match model {
@@ -156,6 +469,7 @@ pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     Dataset::generate(spec, &pool)
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
     let eng = Engine::new()?;
@@ -206,9 +520,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info() -> Result<()> {
     let eng = Engine::new()?;
-    let mut t = metrics::Table::new(&["artifact", "model", "method", "fn", "batch", "params", "q-layers"]);
+    let mut t =
+        metrics::Table::new(&["artifact", "model", "method", "fn", "batch", "params", "q-layers"]);
     for a in eng.manifest.artifacts.values() {
         t.row(&[
             a.name.clone(),
@@ -225,16 +541,17 @@ fn cmd_info() -> Result<()> {
 }
 
 /// Load a `.msqpack` model into a fresh state and evaluate it — proves
-/// the packed format round-trips through the serving path.
+/// the packed format round-trips through the training eval path.
+#[cfg(feature = "pjrt")]
 fn cmd_eval_packed(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
-    let packed_path = args.opt("packed").expect("--packed path.msqpack required");
+    let packed_path = args.opt("packed").context("--packed path.msqpack required")?;
     let eng = Engine::new()?;
     let ds = dataset_for(&cfg.model, args);
     let packed = msq::quant::pack::PackedModel::load(std::path::Path::new(packed_path))?;
     let mut trainer = Trainer::new(&eng, cfg)?;
     for (q, layer) in packed.layers.iter().enumerate() {
-        let w = msq::quant::pack::unpack_layer(layer);
+        let w = msq::quant::pack::unpack_layer(layer)?;
         trainer.state.set_q_weights(q, &w)?;
         trainer.bitstate.scheme.bits[q] = layer.bits;
     }
@@ -247,6 +564,7 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval_init(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
     let eng = Engine::new()?;

@@ -3,6 +3,11 @@
 //! Every experiment writes machine-readable rows under `results/` so the
 //! paper tables/figures regenerate from files, plus a human-readable
 //! summary on stdout.
+//!
+//! The serving subsystem adds two streaming primitives: [`LatencyHist`]
+//! (log-bucketed histogram answering p50/p95/p99 in O(1) memory) and
+//! [`RateCounter`] (sliding-window event rate). Both are plain data —
+//! `serve::ServeMetrics` wraps them in the locks it needs.
 
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
@@ -126,6 +131,172 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming percentiles + rates (serving metrics)
+// ---------------------------------------------------------------------------
+
+/// Number of log-spaced sub-buckets per octave (2^(1/4) ≈ 19% worst-case
+/// relative error on a reported percentile — HDR-histogram style).
+const HIST_SUB: f64 = 4.0;
+/// Bucket 0 floor: 1 µs. 112 buckets * 1/4 octave ≈ 2^28 µs ≈ 268 s cap.
+const HIST_BUCKETS: usize = 112;
+
+/// Log-bucketed streaming histogram over positive durations (seconds).
+///
+/// `record` is O(1) and allocation-free; `percentile` walks the fixed
+/// bucket array. Exact min/max are tracked so single-value and tail
+/// queries clamp to observed data rather than bucket midpoints.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        let us = seconds * 1e6;
+        if us <= 1.0 {
+            return 0;
+        }
+        ((us.log2() * HIST_SUB) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric representative value (seconds) of bucket `i`.
+    fn bucket_value(i: usize) -> f64 {
+        2f64.powf((i as f64 + 0.5) / HIST_SUB) * 1e-6
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        self.buckets[Self::bucket_of(seconds)] += 1;
+        self.count += 1;
+        self.sum += seconds;
+        self.min = self.min.min(seconds);
+        self.max = self.max.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Streaming percentile estimate (p in [0, 100]), seconds. Worst-case
+    /// relative error is one sub-bucket (≈19%); exact for 0/1 samples and
+    /// for p = 0 / p = 100 (tracked min/max).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Sliding-window event-rate counter: events/sec averaged over the last
+/// `window` whole seconds. Timestamps are caller-supplied monotonic
+/// seconds (e.g. `Instant::elapsed().as_secs_f64()` from a fixed epoch),
+/// which keeps the type deterministic under test.
+#[derive(Clone, Debug)]
+pub struct RateCounter {
+    window: usize,
+    /// (absolute second, count) — a slot is live iff its second is within
+    /// the query window, so stale slots need no eager zeroing.
+    slots: Vec<(u64, u64)>,
+    total: u64,
+}
+
+impl RateCounter {
+    pub fn new(window_secs: usize) -> Self {
+        let window = window_secs.max(1);
+        RateCounter { window, slots: vec![(u64::MAX, 0); window], total: 0 }
+    }
+
+    pub fn add(&mut self, t_secs: f64, n: u64) {
+        let sec = t_secs.max(0.0) as u64;
+        let slot = (sec as usize) % self.window;
+        if self.slots[slot].0 != sec {
+            self.slots[slot] = (sec, 0);
+        }
+        self.slots[slot].1 += n;
+        self.total += n;
+    }
+
+    /// Events/sec over the window ending at `t_secs` (inclusive second).
+    pub fn rate(&self, t_secs: f64) -> f64 {
+        let now = t_secs.max(0.0) as u64;
+        let lo = (now + 1).saturating_sub(self.window as u64);
+        let sum: u64 = self
+            .slots
+            .iter()
+            .filter(|(s, _)| *s >= lo && *s <= now)
+            .map(|(_, c)| c)
+            .sum();
+        sum as f64 / self.window as f64
+    }
+
+    /// Lifetime event count (not windowed).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +317,71 @@ mod tests {
         assert_eq!(fmt_duration(5.0), "5.0s");
         assert_eq!(fmt_duration(120.0), "2.0m");
         assert_eq!(fmt_duration(7200.0), "2.00h");
+    }
+
+    #[test]
+    fn latency_hist_empty_and_single() {
+        let mut h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        h.record(0.025);
+        // one sample: every percentile clamps to the exact observation
+        assert_eq!(h.percentile(1.0), 0.025);
+        assert_eq!(h.percentile(50.0), 0.025);
+        assert_eq!(h.percentile(99.0), 0.025);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_within_resolution() {
+        let mut h = LatencyHist::new();
+        // uniform 1..=1000 ms
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.25, "p50 {p50}");
+        assert!((p95 - 0.95).abs() / 0.95 < 0.25, "p95 {p95}");
+        assert!((p99 - 0.99).abs() / 0.99 < 0.25, "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert_eq!(h.percentile(100.0), 1.0); // exact max
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_hist_ignores_garbage() {
+        let mut h = LatencyHist::new();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        h.record(1e9); // clamps into the last bucket, still counted
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), 1e9);
+    }
+
+    #[test]
+    fn rate_counter_window() {
+        let mut r = RateCounter::new(10);
+        for s in 0..10 {
+            r.add(s as f64 + 0.5, 5); // 5 events/sec for 10 s
+        }
+        assert_eq!(r.total(), 50);
+        assert!((r.rate(9.5) - 5.0).abs() < 1e-9);
+        // 5 seconds idle: half the window has aged out
+        assert!((r.rate(14.5) - 2.5).abs() < 1e-9);
+        // far future: everything aged out
+        assert_eq!(r.rate(1000.0), 0.0);
+    }
+
+    #[test]
+    fn rate_counter_slot_reuse() {
+        let mut r = RateCounter::new(2);
+        r.add(0.0, 3);
+        r.add(2.0, 4); // same slot as t=0 (2 % 2 == 0), must overwrite
+        assert!((r.rate(2.9) - 2.0).abs() < 1e-9); // only the 4 in window, /2
+        assert_eq!(r.total(), 7);
     }
 }

@@ -32,6 +32,38 @@ pub struct PackedLayer {
     pub data: Vec<u8>,
 }
 
+impl PackedLayer {
+    /// Exact payload size the (bits, numel) header implies; `None` if the
+    /// product overflows (a corrupt header, not a real model).
+    pub fn expected_bytes(&self) -> Option<usize> {
+        self.numel.checked_mul(self.bits as usize).map(|b| b.div_ceil(8))
+    }
+
+    /// Header/payload consistency check shared by `unpack_layer` and the
+    /// serving registry: bit-width in range, payload neither truncated nor
+    /// oversized. Overflow-safe against corrupt headers.
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=16).contains(&self.bits) {
+            bail!("layer {:?}: bits {} outside 1..=16", self.name, self.bits);
+        }
+        let expect = match self.expected_bytes() {
+            Some(b) => b,
+            None => bail!("layer {:?}: implausible numel {}", self.name, self.numel),
+        };
+        if self.data.len() != expect {
+            bail!(
+                "layer {:?}: truncated or oversized payload — {} bytes, header implies {expect} \
+                 ({} x {}-bit codes)",
+                self.name,
+                self.data.len(),
+                self.numel,
+                self.bits
+            );
+        }
+        Ok(())
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct PackedModel {
     pub layers: Vec<PackedLayer>,
@@ -68,7 +100,7 @@ impl BitWriter {
 }
 
 /// Bit-level reader matching `BitWriter`.
-struct BitReader<'a> {
+pub(crate) struct BitReader<'a> {
     data: &'a [u8],
     pos: usize,
     cur: u64,
@@ -76,11 +108,11 @@ struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
-    fn new(data: &'a [u8]) -> Self {
+    pub(crate) fn new(data: &'a [u8]) -> Self {
         BitReader { data, pos: 0, cur: 0, nbits: 0 }
     }
 
-    fn pull(&mut self, bits: u8) -> u32 {
+    pub(crate) fn pull(&mut self, bits: u8) -> u32 {
         while self.nbits < bits as u32 {
             let b = self.data.get(self.pos).copied().unwrap_or(0);
             self.cur |= (b as u64) << self.nbits;
@@ -114,15 +146,40 @@ pub fn pack_layer_scaled(name: &str, w: &[f32], bits: u8, scale: f32) -> PackedL
 }
 
 /// Unpack a layer back to float weights (RoundClamp dequantization).
-pub fn unpack_layer(l: &PackedLayer) -> Vec<f32> {
+/// Errors (never panics) when the payload is truncated relative to the
+/// `numel`/`bits` header.
+pub fn unpack_layer(l: &PackedLayer) -> Result<Vec<f32>> {
+    l.validate()?;
     let mut br = BitReader::new(&l.data);
     let denom = (2f32.powi(l.bits as i32) - 1.0).max(1.0);
-    (0..l.numel)
+    Ok((0..l.numel)
         .map(|_| from_unit(br.pull(l.bits) as f32 / denom, l.scale))
-        .collect()
+        .collect())
 }
 
 impl PackedModel {
+    /// Random He-initialized MLP packed at the given layer widths — the
+    /// shared demo/bench/test substrate behind `msq pack-synth`, the
+    /// `serve_throughput` bench, and the serve e2e tests. `bits[l]`
+    /// quantizes the `dims[l] -> dims[l+1]` layer.
+    pub fn synth_mlp(dims: &[usize], bits: &[u8], seed: u64) -> Result<PackedModel> {
+        if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+            bail!("synth_mlp: need >= 2 nonzero widths, got {dims:?}");
+        }
+        if bits.len() != dims.len() - 1 {
+            bail!("synth_mlp: {} bit-widths for {} layers", bits.len(), dims.len() - 1);
+        }
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut pm = PackedModel::default();
+        for l in 0..dims.len() - 1 {
+            let (cin, cout) = (dims[l], dims[l + 1]);
+            let std = (2.0 / cin as f32).sqrt(); // He init: keeps logits sane
+            let w: Vec<f32> = (0..cin * cout).map(|_| rng.normal() * std).collect();
+            pm.layers.push(pack_layer(&format!("fc{l}"), &w, bits[l]));
+        }
+        Ok(pm)
+    }
+
     /// Physical payload bytes (what the compression ratio is about).
     pub fn payload_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.data.len()).sum()
@@ -187,7 +244,16 @@ impl PackedModel {
             layers.push(PackedLayer { name, bits, scale, numel, data: Vec::new() });
         }
         for l in layers.iter_mut() {
-            let nbytes = (l.numel * l.bits as usize).div_ceil(8);
+            let nbytes = match l.expected_bytes() {
+                // payload can't exceed the file either way
+                Some(b) if b <= bytes.len() => b,
+                _ => bail!(
+                    "layer {:?}: implausible numel {} for {} file bytes",
+                    l.name,
+                    l.numel,
+                    bytes.len()
+                ),
+            };
             l.data = take(&mut p, nbytes)?.to_vec();
         }
         Ok(PackedModel { layers })
@@ -220,7 +286,7 @@ mod tests {
             let mut prev = p1.clone();
             let mut converged = false;
             for _ in 0..(1usize << bits) + 1 {
-                let wv = unpack_layer(&prev);
+                let wv = unpack_layer(&prev).unwrap();
                 let next = pack_layer_scaled("l", &wv, bits, p1.scale);
                 // monotone: codes never decrease cycle-over-cycle
                 let mut ra = super::BitReader::new(&prev.data);
@@ -244,7 +310,7 @@ mod tests {
     fn quantization_error_bounded() {
         let w = rand_weights(4096, 7);
         let packed = pack_layer("l", &w, 8);
-        let back = unpack_layer(&packed);
+        let back = unpack_layer(&packed).unwrap();
         let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
         let bound = 2.0 * scale * 2.0 / 255.0;
         for (a, b) in w.iter().zip(&back) {
@@ -301,7 +367,105 @@ mod tests {
         let w = rand_weights(77, 9);
         let p = pack_layer("l", &w, 1);
         assert_eq!(p.data.len(), 10); // ceil(77/8)
-        let back = unpack_layer(&p);
+        let back = unpack_layer(&p).unwrap();
         assert_eq!(back.len(), 77);
+    }
+
+    #[test]
+    fn prop_roundtrip_code_exact_any_bits_any_length() {
+        // bits 1..=8, lengths chosen to hit non-byte-aligned stream ends:
+        // unpacked floats must equal the dequantization of the per-element
+        // codes computed independently, and the payload must be bit-exact
+        // in size with zeroed trailing padding bits.
+        crate::util::prop::check(200, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let n = g.usize_in(0, 67);
+            let w = g.vec_normal(n, 0.3);
+            let p = pack_layer("l", &w, bits);
+            crate::util::prop::ensure(
+                p.data.len() == (n * bits as usize).div_ceil(8),
+                format!("payload {} for n={n} bits={bits}", p.data.len()),
+            )?;
+            let back = unpack_layer(&p).map_err(|e| e.to_string())?;
+            crate::util::prop::ensure(back.len() == n, "length mismatch")?;
+            let denom = (2f32.powi(bits as i32) - 1.0).max(1.0);
+            for (i, &x) in w.iter().enumerate() {
+                let code = roundclamp_code(to_unit(x, p.scale), bits as f32);
+                let expect = from_unit(code as f32 / denom, p.scale);
+                crate::util::prop::ensure(
+                    back[i] == expect,
+                    format!("elem {i}: {} != {expect} (bits {bits})", back[i]),
+                )?;
+            }
+            // trailing padding bits of the last byte must be zero
+            let used_bits = n * bits as usize;
+            if used_bits % 8 != 0 {
+                let last = *p.data.last().unwrap();
+                let pad_mask = !((1u16 << (used_bits % 8)) - 1) as u8;
+                crate::util::prop::ensure(
+                    last & pad_mask == 0,
+                    format!("nonzero padding bits {last:#010b}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_layer_roundtrips_through_file() {
+        let mut m = PackedModel::default();
+        m.layers.push(pack_layer("empty", &[], 4));
+        m.layers.push(pack_layer("tail", &rand_weights(13, 5), 3)); // 39 bits: unaligned
+        let path = std::env::temp_dir().join("msq_pack_empty.msqpack");
+        m.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        assert_eq!(back.layers[0].numel, 0);
+        assert!(back.layers[0].data.is_empty());
+        assert_eq!(unpack_layer(&back.layers[0]).unwrap(), Vec::<f32>::new());
+        assert_eq!(unpack_layer(&back.layers[1]).unwrap().len(), 13);
+    }
+
+    #[test]
+    fn truncated_payload_is_error_not_panic() {
+        let mut p = pack_layer("l", &rand_weights(40, 2), 3);
+        p.data.pop();
+        let err = unpack_layer(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // oversized payloads are rejected too (corrupt header vs payload)
+        let mut q = pack_layer("l", &rand_weights(8, 2), 2);
+        q.data.push(0);
+        assert!(unpack_layer(&q).is_err());
+
+        // bits outside the packable range
+        let bad =
+            PackedLayer { name: "b".into(), bits: 17, scale: 1.0, numel: 1, data: vec![0; 3] };
+        assert!(unpack_layer(&bad).is_err());
+
+        // overflow-scale numel in a corrupt header: error, not a panic
+        let huge = PackedLayer {
+            name: "h".into(),
+            bits: 8,
+            scale: 1.0,
+            numel: usize::MAX / 4,
+            data: Vec::new(),
+        };
+        assert!(unpack_layer(&huge).is_err());
+    }
+
+    #[test]
+    fn truncated_file_is_error_not_panic() {
+        let mut m = PackedModel::default();
+        m.layers.push(pack_layer("a", &rand_weights(100, 4), 5));
+        let path = std::env::temp_dir().join("msq_pack_trunc.msqpack");
+        m.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // chop the file at several points: header, layer table, payload
+        for cut in [4usize, 9, 20, full.len() - 1] {
+            std::fs::write(&path, &full[..cut.min(full.len())]).unwrap();
+            assert!(PackedModel::load(&path).is_err(), "cut at {cut} must fail");
+        }
+        std::fs::write(&path, &full).unwrap();
+        assert!(PackedModel::load(&path).is_ok());
     }
 }

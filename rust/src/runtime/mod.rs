@@ -8,9 +8,13 @@
 //! schedule reuses a single compilation per step-function.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod state;
 
 pub use artifacts::{ArtifactMeta, IoDesc, Manifest, QLayer};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
+#[cfg(feature = "pjrt")]
 pub use state::ModelState;

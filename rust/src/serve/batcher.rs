@@ -1,0 +1,385 @@
+//! Dynamic request batching with deadline flush and admission control.
+//!
+//! Requests enter a bounded queue; a dedicated dispatcher thread flushes
+//! a batch when either trigger fires:
+//!
+//! * **size** — `max_batch` requests are waiting, or
+//! * **deadline** — the *oldest* waiting request has been queued for
+//!   `max_delay` (so a lone request never waits longer than the SLA even
+//!   when traffic is too thin to fill a batch).
+//!
+//! Admission control is at submit time: beyond `queue_cap` waiting
+//! requests the submit fails fast with [`SubmitError::QueueFull`]
+//! (backpressure — callers retry or shed) instead of growing an
+//! unbounded queue. Each request carries its own response channel, so
+//! results map back to the issuing request by construction, regardless
+//! of how the dispatcher groups batches.
+//!
+//! The batcher is generic over the batch executor (`BatchFn`), keeping
+//! it unit-testable without weights; `serve::Server` plugs in the
+//! quantized forward pass.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Flush as soon as this many requests are waiting.
+    pub max_batch: usize,
+    /// Flush when the oldest waiting request reaches this age.
+    pub max_delay: Duration,
+    /// Admission limit on waiting requests (backpressure threshold).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 32, max_delay: Duration::from_millis(5), queue_cap: 1024 }
+    }
+}
+
+/// Completed inference, delivered on the per-request channel.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    /// Monotone admission sequence number.
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Index of the max logit (the predicted class).
+    pub argmax: usize,
+    /// How many requests shared the flushed batch.
+    pub batch_size: usize,
+    /// Queue + compute time, submit to response.
+    pub latency: Duration,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — shed or retry later.
+    QueueFull { depth: usize, cap: usize },
+    /// Input length doesn't match the model's input dimension.
+    BadInput { got: usize, want: usize },
+    /// Batcher is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth, cap } => {
+                write!(f, "queue full ({depth}/{cap} waiting)")
+            }
+            SubmitError::BadInput { got, want } => {
+                write!(f, "input has {got} values, model expects {want}")
+            }
+            SubmitError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+/// Batch executor: inputs (one `Vec<f32>` per request, flush order) to
+/// logits (same length and order).
+pub type BatchFn = dyn Fn(Vec<Vec<f32>>) -> Vec<Vec<f32>> + Send + 'static;
+
+/// Per-response observer (latency/occupancy metrics hook).
+pub type CompletionHook = dyn Fn(&InferResponse) + Send + 'static;
+
+struct Pending {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+    tx: Sender<InferResponse>,
+}
+
+struct State {
+    queue: VecDeque<Pending>,
+    closed: bool,
+    next_id: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+pub struct DynamicBatcher {
+    shared: Arc<Shared>,
+    cfg: BatchConfig,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatchConfig, run: Box<BatchFn>) -> DynamicBatcher {
+        Self::with_hook(cfg, run, None)
+    }
+
+    pub fn with_hook(
+        cfg: BatchConfig,
+        run: Box<BatchFn>,
+        hook: Option<Box<CompletionHook>>,
+    ) -> DynamicBatcher {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false, next_id: 0 }),
+            cv: Condvar::new(),
+        });
+        let sh = shared.clone();
+        let wcfg = cfg.clone();
+        let worker = thread::Builder::new()
+            .name("msq-serve-batcher".into())
+            .spawn(move || dispatcher(sh, wcfg, run, hook))
+            .expect("spawn batcher thread");
+        DynamicBatcher { shared, cfg, worker: Some(worker) }
+    }
+
+    /// Enqueue one request; the returned channel yields its response.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.queue.len() >= self.cfg.queue_cap {
+            return Err(SubmitError::QueueFull { depth: st.queue.len(), cap: self.cfg.queue_cap });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.queue.push_back(Pending { id, input, enqueued: Instant::now(), tx });
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Requests currently waiting (not yet flushed into a batch).
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Total requests ever admitted.
+    pub fn admitted(&self) -> u64 {
+        self.shared.state.lock().unwrap().next_id
+    }
+
+    /// Stop accepting requests, flush what's queued, join the worker.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn dispatcher(
+    shared: Arc<Shared>,
+    cfg: BatchConfig,
+    run: Box<BatchFn>,
+    hook: Option<Box<CompletionHook>>,
+) {
+    loop {
+        // Phase 1: wait until a flush trigger fires, then drain a batch.
+        let mut batch: Vec<Pending> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.queue.is_empty() {
+                    if st.closed {
+                        return;
+                    }
+                    st = shared.cv.wait(st).unwrap();
+                    continue;
+                }
+                if st.queue.len() >= cfg.max_batch || st.closed {
+                    break; // size trigger (or final drain on shutdown)
+                }
+                let deadline = st.queue.front().unwrap().enqueued + cfg.max_delay;
+                let now = Instant::now();
+                if now >= deadline {
+                    break; // deadline trigger
+                }
+                st = shared.cv.wait_timeout(st, deadline - now).unwrap().0;
+            }
+            let take = st.queue.len().min(cfg.max_batch);
+            st.queue.drain(..take).collect()
+        };
+
+        // Phase 2: execute outside the lock — submitters stay unblocked.
+        let inputs: Vec<Vec<f32>> =
+            batch.iter_mut().map(|p| std::mem::take(&mut p.input)).collect();
+        let n = batch.len();
+        let outputs = run(inputs);
+        debug_assert_eq!(outputs.len(), n, "BatchFn must preserve arity");
+        for (p, logits) in batch.into_iter().zip(outputs) {
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let resp = InferResponse {
+                id: p.id,
+                logits,
+                argmax,
+                batch_size: n,
+                latency: p.enqueued.elapsed(),
+            };
+            if let Some(h) = &hook {
+                h(&resp);
+            }
+            let _ = p.tx.send(resp); // receiver may have gone away; fine
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo executor: logits = input, so tests can verify request↔response
+    /// mapping end to end.
+    fn echo() -> Box<BatchFn> {
+        Box::new(|inputs| inputs)
+    }
+
+    fn recv(rx: &Receiver<InferResponse>) -> InferResponse {
+        rx.recv_timeout(Duration::from_secs(10)).expect("response within 10s")
+    }
+
+    #[test]
+    fn size_trigger_flushes_full_batch() {
+        // deadline far away: only the size trigger can flush
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_delay: Duration::from_secs(600),
+            queue_cap: 64,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(vec![i as f32]).unwrap()).collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let r = recv(rx);
+            assert_eq!(r.batch_size, 4);
+            assert_eq!(r.logits, vec![i as f32]);
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        // batch can hold 1000: only the deadline can flush 2 requests
+        let cfg = BatchConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_millis(100),
+            queue_cap: 64,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        let rx1 = b.submit(vec![1.0]).unwrap();
+        let rx2 = b.submit(vec![2.0]).unwrap();
+        let r1 = recv(&rx1);
+        let r2 = recv(&rx2);
+        assert_eq!(r1.batch_size, 2);
+        assert_eq!(r2.batch_size, 2);
+        assert!(r1.latency >= Duration::from_millis(90), "flushed early: {:?}", r1.latency);
+        assert_eq!(r1.logits, vec![1.0]);
+        assert_eq!(r2.logits, vec![2.0]);
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_capacity() {
+        // executor blocks until released, pinning the worker mid-batch
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let run: Box<BatchFn> = Box::new(move |inputs| {
+            started_tx.send(()).unwrap();
+            gate_rx.lock().unwrap().recv().unwrap();
+            inputs
+        });
+        let cfg = BatchConfig { max_batch: 1, max_delay: Duration::ZERO, queue_cap: 2 };
+        let b = DynamicBatcher::with_hook(cfg, run, None);
+
+        let rx_a = b.submit(vec![0.0]).unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap(); // worker busy on A
+        let rx_b = b.submit(vec![1.0]).unwrap();
+        let rx_c = b.submit(vec![2.0]).unwrap();
+        assert_eq!(b.depth(), 2);
+        // queue at cap while the worker is pinned: next submit is shed
+        match b.submit(vec![3.0]) {
+            Err(SubmitError::QueueFull { depth: 2, cap: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // release A, then B and C (each flush re-blocks on the gate)
+        for _ in 0..3 {
+            gate_tx.send(()).unwrap();
+            let _ = started_rx.recv_timeout(Duration::from_secs(10));
+        }
+        assert_eq!(recv(&rx_a).logits, vec![0.0]);
+        assert_eq!(recv(&rx_b).logits, vec![1.0]);
+        assert_eq!(recv(&rx_c).logits, vec![2.0]);
+    }
+
+    #[test]
+    fn responses_map_to_issuing_request_in_order() {
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 256,
+        };
+        // executor returns input[0] * 2 so mixups are detectable
+        let run: Box<BatchFn> =
+            Box::new(|inputs| inputs.iter().map(|x| vec![x[0] * 2.0]).collect());
+        let b = DynamicBatcher::new(cfg, run);
+        let rxs: Vec<_> = (0..21).map(|i| b.submit(vec![i as f32]).unwrap()).collect();
+        let mut ids = Vec::new();
+        for (i, rx) in rxs.iter().enumerate() {
+            let r = recv(rx);
+            assert_eq!(r.logits, vec![i as f32 * 2.0], "response crossed requests");
+            ids.push(r.id);
+        }
+        // admission ids are the submit order
+        let expect: Vec<u64> = (0..21).collect();
+        assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn shutdown_flushes_pending_and_rejects_new() {
+        let cfg = BatchConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_secs(600),
+            queue_cap: 64,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        let rx = b.submit(vec![7.0]).unwrap();
+        b.shutdown(); // must not strand the queued request
+        let r = rx.recv_timeout(Duration::from_secs(1)).expect("flush on shutdown");
+        assert_eq!(r.logits, vec![7.0]);
+    }
+
+    #[test]
+    fn completion_hook_sees_every_response() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s2 = seen.clone();
+        let hook: Box<CompletionHook> = Box::new(move |r| s2.lock().unwrap().push(r.id));
+        let cfg = BatchConfig {
+            max_batch: 3,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 64,
+        };
+        let b = DynamicBatcher::with_hook(cfg, echo(), Some(hook));
+        let rxs: Vec<_> = (0..7).map(|i| b.submit(vec![i as f32]).unwrap()).collect();
+        for rx in &rxs {
+            recv(rx);
+        }
+        let mut ids = seen.lock().unwrap().clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..7).collect::<Vec<u64>>());
+    }
+}

@@ -1,0 +1,245 @@
+//! Pure-Rust quantized inference kernels over packed RoundClamp codes.
+//!
+//! The serving path never materializes an f32 weight tensor: `qgemm`
+//! streams the n-bit codes (1..=8 bits, non-byte-aligned, LSB-first —
+//! the exact `quant::pack` layout) out of the packed payload row by row
+//! and folds the affine dequantization out of the inner loop:
+//!
+//! ```text
+//! w = (c / (2^n - 1) - 0.5) · 2s          (RoundClamp dequant, Eq. 4)
+//! y[b,r] = Σ_j w[r,j] x[b,j]
+//!        = α · Σ_j c[r,j] x[b,j] − s · Σ_j x[b,j],   α = 2s / (2^n − 1)
+//! ```
+//!
+//! so the hot loop is a plain code·activation dot product. Rows are
+//! processed in cache-friendly blocks: each block decodes one row at a
+//! time into a small scratch buffer and reuses it across the whole
+//! batch, which is what makes batched serving amortize the bit-decode.
+//! Blocks are independent, so they parallelize over `util::threadpool`
+//! with disjoint output rows.
+
+use crate::util::threadpool::ThreadPool;
+
+/// Rows per parallel work item. Small enough to balance across cores,
+/// large enough that scratch allocation and task dispatch amortize.
+const ROW_BLOCK: usize = 32;
+
+/// Decode `out.len()` consecutive `bits`-wide codes starting at absolute
+/// bit offset `bit_off` of `data` (LSB-first within each byte, matching
+/// `quant::pack::BitWriter`), widening each code to f32.
+///
+/// The caller must guarantee `bit_off + out.len() * bits` bits exist in
+/// `data` (the registry validates payload sizes at load time).
+pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
+    debug_assert!((1..=8).contains(&bits));
+    let mut pos = bit_off / 8;
+    let mut cur: u64 = 0;
+    let mut nbits: u32 = 0;
+    let phase = (bit_off % 8) as u32;
+    if phase != 0 {
+        cur = (data[pos] >> phase) as u64;
+        nbits = 8 - phase;
+        pos += 1;
+    }
+    if bits == 8 && phase == 0 {
+        for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
+            *slot = b as f32;
+        }
+        return;
+    }
+    let width = bits as u32;
+    let mask = (1u64 << width) - 1;
+    for slot in out.iter_mut() {
+        while nbits < width {
+            cur |= (data[pos] as u64) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        *slot = (cur & mask) as f32;
+        cur >>= width;
+        nbits -= width;
+    }
+}
+
+/// Unrolled dot product with 4 independent accumulators (keeps the FP
+/// dependency chain short; identical summation order on every path, so
+/// serial and pooled `qgemm` agree bit-for-bit).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let split = a.len() & !3;
+    let (a4, ar) = a.split_at(split);
+    let (b4, br) = b.split_at(split);
+    let mut acc = [0f32; 4];
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ar.iter().zip(br) {
+        s += x * y;
+    }
+    s
+}
+
+/// Raw output pointer smuggled into the scoped parallel-for. Blocks write
+/// disjoint `(b, r)` cells, so the aliasing is sound (see SAFETY below).
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Quantized GEMM over a packed layer: `out[b*rows + r] = Σ_j w[r,j] ·
+/// x[b*cols + j]` with `w` decoded on the fly from `data`.
+///
+/// `x` is batch-major (`batch` rows of `cols`), `out` is batch-major
+/// (`batch` rows of `rows`). With `pool`, row blocks run in parallel;
+/// results are identical to the serial path.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    assert_eq!(x.len(), batch * cols, "qgemm: x shape");
+    assert_eq!(out.len(), batch * rows, "qgemm: out shape");
+    assert!((1..=8).contains(&bits), "qgemm: bits {bits}");
+    if rows == 0 || batch == 0 {
+        return;
+    }
+    let denom = ((1u32 << bits) - 1).max(1) as f32;
+    let alpha = 2.0 * scale / denom;
+    let xsums: Vec<f32> = (0..batch).map(|b| x[b * cols..(b + 1) * cols].iter().sum()).collect();
+
+    let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
+        let r0 = blk * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        for r in r0..r1 {
+            decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
+            for b in 0..batch {
+                let acc = dot(scratch, &x[b * cols..(b + 1) * cols]);
+                write(b * rows + r, alpha * acc - scale * xsums[b]);
+            }
+        }
+    };
+
+    let nblocks = rows.div_ceil(ROW_BLOCK);
+    match pool {
+        Some(pool) if nblocks > 1 => {
+            let optr = SendPtr(out.as_mut_ptr());
+            let optr = &optr;
+            pool.par_for(nblocks, move |blk| {
+                let mut scratch = vec![0f32; cols];
+                run_block(blk, &mut scratch[..], &mut |idx, v| {
+                    // SAFETY: `idx = b*rows + r` and every row `r` belongs
+                    // to exactly one block, so concurrent blocks write
+                    // disjoint cells of `out`, which outlives the scoped
+                    // par_for. No one reads `out` until par_for returns.
+                    unsafe { *optr.0.add(idx) = v }
+                });
+            });
+        }
+        _ => {
+            let mut scratch = vec![0f32; cols];
+            for blk in 0..nblocks {
+                run_block(blk, &mut scratch[..], &mut |idx, v| out[idx] = v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{pack_layer, unpack_layer};
+    use crate::util::prng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() * 0.5).collect()
+    }
+
+    #[test]
+    fn decode_matches_bitreader_at_any_offset() {
+        for bits in 1u8..=8 {
+            let cols = 13; // 13*bits is non-byte-aligned for most bits
+            let rows = 7;
+            let w = rand_vec(rows * cols, bits as u64);
+            let p = pack_layer("l", &w, bits);
+            // reference: sequential pull of every code
+            let mut br = crate::quant::pack::BitReader::new(&p.data);
+            let reference: Vec<f32> =
+                (0..rows * cols).map(|_| br.pull(bits) as f32).collect();
+            // decode each row independently at its bit offset
+            let mut row = vec![0f32; cols];
+            for r in 0..rows {
+                decode_codes_f32(&p.data, r * cols * bits as usize, bits, &mut row);
+                assert_eq!(&row[..], &reference[r * cols..(r + 1) * cols], "bits {bits} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_dense_reference() {
+        for bits in [1u8, 2, 3, 5, 7, 8] {
+            let (rows, cols, batch) = (19, 37, 3);
+            let w = rand_vec(rows * cols, 100 + bits as u64);
+            let p = pack_layer("l", &w, bits);
+            let wq = unpack_layer(&p).unwrap(); // dequantized lattice weights
+            let x = rand_vec(batch * cols, 200 + bits as u64);
+
+            let mut expect = vec![0f32; batch * rows];
+            for b in 0..batch {
+                for r in 0..rows {
+                    let mut acc = 0f64;
+                    for j in 0..cols {
+                        acc += wq[r * cols + j] as f64 * x[b * cols + j] as f64;
+                    }
+                    expect[b * rows + r] = acc as f32;
+                }
+            }
+
+            let mut got = vec![0f32; batch * rows];
+            qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut got, None);
+            for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert!((g - e).abs() < 1e-3, "bits {bits} idx {i}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_pool_is_bitwise_equal_to_serial() {
+        let (rows, cols, batch) = (101, 64, 4); // > ROW_BLOCK: multiple blocks
+        let w = rand_vec(rows * cols, 7);
+        let p = pack_layer("l", &w, 4);
+        let x = rand_vec(batch * cols, 8);
+        let mut serial = vec![0f32; batch * rows];
+        let mut pooled = vec![0f32; batch * rows];
+        qgemm(&p.data, 4, p.scale, rows, cols, &x, batch, &mut serial, None);
+        let pool = ThreadPool::new(4);
+        qgemm(&p.data, 4, p.scale, rows, cols, &x, batch, &mut pooled, Some(&pool));
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn qgemm_empty_batch_and_rows() {
+        let p = pack_layer("l", &rand_vec(12, 1), 3);
+        let mut out = vec![0f32; 0];
+        qgemm(&p.data, 3, p.scale, 4, 3, &[], 0, &mut out, None);
+        qgemm(&p.data, 3, p.scale, 0, 3, &[0.0; 3], 1, &mut out, None);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+}

@@ -1,0 +1,39 @@
+//! `msq serve` (S16): batched inference serving over packed MSQ models.
+//!
+//! The training stack produces `.msqpack` artifacts — each layer's
+//! weights bit-packed to their mixed-precision RoundClamp codes
+//! (`quant::pack`). This subsystem turns those artifacts into a request
+//! server with **zero XLA/PJRT linkage**, so the deployment story
+//! matches the paper's motivation: mixed-precision models small enough
+//! and cheap enough to execute on resource-constrained hosts.
+//!
+//! Four pieces, composed by [`server::Server`]:
+//!
+//! * [`registry`] — loads `.msqpack` files, derives layer shapes, and
+//!   keeps models resident in packed form (RAM cost = payload bytes);
+//! * [`kernels`] — quantized matmul that decodes the n-bit code stream
+//!   on the fly (1..=8 bits, non-byte-aligned), row-blocked and
+//!   parallelized over `util::threadpool`;
+//! * [`batcher`] — dynamic batching with size- and deadline-triggered
+//!   flush plus queue-capacity admission control;
+//! * [`server`] — the front end wiring model + batcher + [`ServeMetrics`]
+//!   (throughput, p50/p95/p99 latency via `metrics::LatencyHist`).
+//!
+//! ```text
+//! submit(x) ──► bounded queue ──► dispatcher ──► qgemm over packed codes
+//!                  │ (cap)           │ (size | deadline)      │
+//!                  ▼                 ▼                        ▼
+//!             QueueFull          batch of ≤ max_batch    per-request rx
+//! ```
+//!
+//! Entry points: `msq serve --model mlp --packed model.msqpack` (CLI,
+//! stdin JSONL or synthetic load) and the `serve_throughput` bench.
+
+pub mod batcher;
+pub mod kernels;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{BatchConfig, DynamicBatcher, InferResponse, SubmitError};
+pub use registry::{ModelRegistry, QuantLayer, ServableModel};
+pub use server::{ServeMetrics, Server, ServerConfig};

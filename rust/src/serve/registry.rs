@@ -1,0 +1,290 @@
+//! Model registry: packed `.msqpack` models loaded for serving.
+//!
+//! A [`ServableModel`] keeps each layer exactly as packed — the n-bit
+//! code stream plus `(bits, scale)` metadata — so resident model memory
+//! equals the payload the compression ratio advertises (a 2-bit layer
+//! really costs 1/16th of FP32 at serve time, not just on disk). Layer
+//! shapes are not stored in the `.msqpack` header; the registry derives
+//! them MLP-style by chaining dimensions from the declared input width:
+//! `rows_l = numel_l / cols_l`, `cols_{l+1} = rows_l`, rejecting models
+//! whose element counts don't factor.
+//!
+//! [`ModelRegistry`] is the concurrent name → model map the server and
+//! CLI share; models are immutable once loaded (`Arc`), so lookups are
+//! lock-cheap and inference never takes the registry lock.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::kernels;
+use crate::quant::pack::{PackedLayer, PackedModel};
+use crate::util::threadpool::ThreadPool;
+
+/// One packed layer plus its derived matrix shape (`rows` outputs ×
+/// `cols` inputs, row-major code stream).
+pub struct QuantLayer {
+    pub name: String,
+    pub bits: u8,
+    pub scale: f32,
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<u8>,
+}
+
+impl QuantLayer {
+    pub fn from_packed(l: &PackedLayer, cols: usize) -> Result<QuantLayer> {
+        l.validate()?;
+        ensure!(
+            (1..=8).contains(&l.bits),
+            "layer {:?}: serving kernels support 1..=8 bits, got {}",
+            l.name,
+            l.bits
+        );
+        ensure!(cols > 0, "layer {:?}: zero input dimension", l.name);
+        if l.numel == 0 || l.numel % cols != 0 {
+            bail!(
+                "layer {:?}: {} weights do not factor over input dim {} — wrong --input-dim \
+                 or non-MLP topology",
+                l.name,
+                l.numel,
+                cols
+            );
+        }
+        Ok(QuantLayer {
+            name: l.name.clone(),
+            bits: l.bits,
+            scale: l.scale,
+            rows: l.numel / cols,
+            cols,
+            data: l.data.clone(),
+        })
+    }
+
+    /// `out[b*rows + r] = Σ_j dequant(codes[r,j]) · x[b*cols + j]`,
+    /// decoding codes on the fly (see [`kernels::qgemm`]).
+    pub fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], pool: Option<&ThreadPool>) {
+        kernels::qgemm(
+            &self.data, self.bits, self.scale, self.rows, self.cols, x, batch, out, pool,
+        );
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A packed model ready to answer inference requests: an MLP over the
+/// packed layers with ReLU between hidden layers and raw logits out.
+pub struct ServableModel {
+    pub name: String,
+    pub input_dim: usize,
+    pub layers: Vec<QuantLayer>,
+}
+
+impl ServableModel {
+    pub fn from_packed(name: &str, pm: &PackedModel, input_dim: usize) -> Result<ServableModel> {
+        ensure!(!pm.layers.is_empty(), "model {name:?}: packed file has no layers");
+        let mut dim = input_dim;
+        let mut layers = Vec::with_capacity(pm.layers.len());
+        for l in &pm.layers {
+            let q = QuantLayer::from_packed(l, dim).with_context(|| format!("model {name:?}"))?;
+            dim = q.rows;
+            layers.push(q);
+        }
+        Ok(ServableModel { name: name.to_string(), input_dim, layers })
+    }
+
+    pub fn load(name: &str, path: &Path, input_dim: usize) -> Result<ServableModel> {
+        let pm = PackedModel::load(path)?;
+        Self::from_packed(name, &pm, input_dim)
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map(|l| l.rows).unwrap_or(0)
+    }
+
+    /// Resident packed weight bytes (equals the `.msqpack` payload).
+    pub fn payload_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.payload_bytes()).sum()
+    }
+
+    /// What the same weights would cost dense in FP32.
+    pub fn fp32_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols * 4).sum()
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.fp32_bytes() as f64 / self.payload_bytes().max(1) as f64
+    }
+
+    /// Batched forward pass: `x` is `batch` rows of `input_dim`,
+    /// batch-major; returns `batch` rows of `output_dim` logits.
+    pub fn infer_batch(
+        &self,
+        x: &[f32],
+        batch: usize,
+        pool: Option<&ThreadPool>,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            x.len() == batch * self.input_dim,
+            "model {:?}: got {} activations for batch {} x input dim {}",
+            self.name,
+            x.len(),
+            batch,
+            self.input_dim
+        );
+        let mut cur: Vec<f32> = Vec::new();
+        let last = self.layers.len().saturating_sub(1);
+        for (i, layer) in self.layers.iter().enumerate() {
+            // layer 0 reads the caller's buffer directly (no input copy)
+            let src: &[f32] = if i == 0 { x } else { &cur };
+            let mut next = vec![0f32; batch * layer.rows];
+            layer.forward(src, batch, &mut next, pool);
+            if i < last {
+                for v in next.iter_mut() {
+                    *v = v.max(0.0); // ReLU on hidden activations
+                }
+            }
+            cur = next;
+        }
+        Ok(cur)
+    }
+}
+
+/// Concurrent name → model map. Models are `Arc`-shared and immutable;
+/// `get` clones the handle and drops the lock before any inference runs.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<ServableModel>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    pub fn insert(&self, model: ServableModel) -> Arc<ServableModel> {
+        let m = Arc::new(model);
+        self.models.write().unwrap().insert(m.name.clone(), m.clone());
+        m
+    }
+
+    /// Load a `.msqpack` from disk and register it under `name`.
+    pub fn load_file(
+        &self,
+        name: &str,
+        path: &Path,
+        input_dim: usize,
+    ) -> Result<Arc<ServableModel>> {
+        let m = ServableModel::load(name, path, input_dim)
+            .with_context(|| format!("loading {path:?}"))?;
+        Ok(self.insert(m))
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServableModel>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::unpack_layer;
+    use crate::util::prng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() * 0.4).collect()
+    }
+
+    /// 2-layer packed MLP: input_dim -> 4-bit hidden -> 3-bit classes.
+    fn toy_model(input_dim: usize, hidden: usize, classes: usize) -> PackedModel {
+        PackedModel::synth_mlp(&[input_dim, hidden, classes], &[4, 3], 1).unwrap()
+    }
+
+    #[test]
+    fn shape_inference_chains_dims() {
+        let m = ServableModel::from_packed("toy", &toy_model(12, 8, 4), 12).unwrap();
+        assert_eq!(m.layers[0].rows, 8);
+        assert_eq!(m.layers[0].cols, 12);
+        assert_eq!(m.layers[1].rows, 4);
+        assert_eq!(m.layers[1].cols, 8);
+        assert_eq!(m.output_dim(), 4);
+        assert!(m.compression() > 4.0, "{}", m.compression());
+    }
+
+    #[test]
+    fn bad_input_dim_is_rejected() {
+        let err = ServableModel::from_packed("toy", &toy_model(12, 8, 4), 7).unwrap_err();
+        assert!(err.to_string().contains("factor"), "{err}");
+    }
+
+    #[test]
+    fn infer_matches_float_reference() {
+        let pm = toy_model(12, 8, 4);
+        let m = ServableModel::from_packed("toy", &pm, 12).unwrap();
+        let batch = 5;
+        let x = rand_vec(batch * 12, 9);
+
+        // reference: dequantize fully, dense matmuls + ReLU
+        let w1 = unpack_layer(&pm.layers[0]).unwrap();
+        let w2 = unpack_layer(&pm.layers[1]).unwrap();
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let xb = &x[b * 12..(b + 1) * 12];
+            let h: Vec<f32> = (0..8)
+                .map(|r| {
+                    let s: f32 = (0..12).map(|j| w1[r * 12 + j] * xb[j]).sum();
+                    s.max(0.0)
+                })
+                .collect();
+            for r in 0..4 {
+                expect.push((0..8).map(|j| w2[r * 8 + j] * h[j]).sum::<f32>());
+            }
+        }
+
+        let got = m.infer_batch(&x, batch, None).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert!((g - e).abs() < 1e-3, "idx {i}: {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn registry_lifecycle() {
+        let reg = ModelRegistry::new();
+        assert!(reg.get("toy").is_none());
+        let pm = toy_model(6, 4, 2);
+        let m = ServableModel::from_packed("toy", &pm, 6).unwrap();
+        reg.insert(m);
+        assert_eq!(reg.names(), vec!["toy"]);
+        assert_eq!(reg.get("toy").unwrap().output_dim(), 2);
+        assert!(reg.remove("toy"));
+        assert!(!reg.remove("toy"));
+    }
+
+    #[test]
+    fn file_roundtrip_through_registry() {
+        let pm = toy_model(10, 6, 3);
+        let path = std::env::temp_dir().join("msq_registry_test.msqpack");
+        pm.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        let m = reg.load_file("disk", &path, 10).unwrap();
+        assert_eq!(m.output_dim(), 3);
+        // wrong input dim errors cleanly
+        assert!(reg.load_file("bad", &path, 7).is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! The serving front end: model + dynamic batcher + metrics.
+//!
+//! [`Server::start`] owns a [`ServableModel`], a worker [`ThreadPool`]
+//! for intra-batch row parallelism, and a [`DynamicBatcher`] whose
+//! executor runs the quantized forward pass. Requests are submitted with
+//! [`Server::submit`] (async, returns the per-request response channel)
+//! or [`Server::infer_blocking`]; every completion feeds
+//! [`ServeMetrics`], whose snapshot reports throughput and p50/p95/p99
+//! latency through the `metrics` streaming primitives.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyHist, RateCounter};
+use crate::util::json::Json;
+use crate::util::stats::Running;
+use crate::util::threadpool::ThreadPool;
+
+use super::batcher::{BatchConfig, BatchFn, DynamicBatcher, InferResponse, SubmitError};
+use super::registry::ServableModel;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_cap: usize,
+    /// Worker threads for row-parallel kernels (0 = machine default).
+    pub threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(5),
+            queue_cap: 1024,
+            threads: 0,
+        }
+    }
+}
+
+/// Serving metrics: lifetime counters plus streaming latency percentiles
+/// and a sliding-window request rate. All methods take `&self`; the
+/// histogram sits behind a mutex (recording is O(1) under the lock).
+pub struct ServeMetrics {
+    start: Instant,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    latency: Mutex<LatencyHist>,
+    /// Request-weighted batch occupancy (mean batch a request rode in).
+    occupancy: Mutex<Running>,
+    rate: Mutex<RateCounter>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            start: Instant::now(),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHist::new()),
+            occupancy: Mutex::new(Running::new()),
+            rate: Mutex::new(RateCounter::new(10)),
+        }
+    }
+
+    /// Monotonic seconds since server start (the RateCounter clock).
+    pub fn now_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, r: &InferResponse) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(r.latency.as_secs_f64());
+        self.occupancy.lock().unwrap().push(r.batch_size as f64);
+        self.rate.lock().unwrap().add(self.now_secs(), 1);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Percentile of request latency in milliseconds.
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        self.latency.lock().unwrap().percentile(p) * 1e3
+    }
+
+    /// Lifetime mean throughput (completions / uptime).
+    pub fn throughput(&self) -> f64 {
+        let dt = self.now_secs().max(1e-9);
+        self.completed() as f64 / dt
+    }
+
+    /// Machine-readable snapshot (written by the bench and the CLI).
+    pub fn snapshot(&self, queue_depth: usize) -> Json {
+        let lat = self.latency.lock().unwrap();
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.now_secs())),
+            ("submitted", Json::Num(self.submitted() as f64)),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
+            ("queue_depth", Json::Num(queue_depth as f64)),
+            ("rps_lifetime", Json::Num(self.throughput())),
+            ("rps_window", Json::Num(self.rate.lock().unwrap().rate(self.now_secs()))),
+            ("p50_ms", Json::Num(lat.percentile(50.0) * 1e3)),
+            ("p95_ms", Json::Num(lat.percentile(95.0) * 1e3)),
+            ("p99_ms", Json::Num(lat.percentile(99.0) * 1e3)),
+            ("mean_ms", Json::Num(lat.mean() * 1e3)),
+            ("max_ms", Json::Num(lat.max() * 1e3)),
+            ("mean_batch", Json::Num(self.occupancy.lock().unwrap().mean())),
+        ])
+    }
+
+    /// One-line human summary for logs.
+    pub fn report(&self, queue_depth: usize) -> String {
+        format!(
+            "{} ok / {} shed | {:.0} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | \
+             mean batch {:.1} | depth {}",
+            self.completed(),
+            self.rejected(),
+            self.throughput(),
+            self.latency_ms(50.0),
+            self.latency_ms(95.0),
+            self.latency_ms(99.0),
+            self.occupancy.lock().unwrap().mean(),
+            queue_depth,
+        )
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A running inference server over one packed model.
+pub struct Server {
+    pub model: Arc<ServableModel>,
+    pub metrics: Arc<ServeMetrics>,
+    batcher: DynamicBatcher,
+}
+
+impl Server {
+    pub fn start(model: Arc<ServableModel>, cfg: ServerConfig) -> Server {
+        let threads = if cfg.threads == 0 { ThreadPool::default_size() } else { cfg.threads };
+        // width-only pool: par_for spawns scoped threads per batch, so a
+        // resident worker set would idle for the server's lifetime
+        let pool = ThreadPool::scoped(threads);
+        let metrics = Arc::new(ServeMetrics::new());
+        let out_dim = model.output_dim();
+        let in_dim = model.input_dim;
+        let m = model.clone();
+        let run: Box<BatchFn> = Box::new(move |inputs: Vec<Vec<f32>>| {
+            let batch = inputs.len();
+            let mut x = Vec::with_capacity(batch * in_dim);
+            for inp in &inputs {
+                debug_assert_eq!(inp.len(), in_dim); // validated at submit
+                x.extend_from_slice(inp);
+            }
+            match m.infer_batch(&x, batch, Some(&pool)) {
+                Ok(logits) => logits.chunks(out_dim).map(|c| c.to_vec()).collect(),
+                // unreachable with submit-side validation; degrade loudly
+                Err(e) => {
+                    eprintln!("[serve] batch of {batch} failed: {e}");
+                    vec![vec![f32::NAN; out_dim]; batch]
+                }
+            }
+        });
+        let hk = metrics.clone();
+        let hook: Box<super::batcher::CompletionHook> =
+            Box::new(move |r| hk.record_completion(r));
+        let batch_cfg = BatchConfig {
+            max_batch: cfg.max_batch.max(1),
+            max_delay: cfg.max_delay,
+            queue_cap: cfg.queue_cap.max(1),
+        };
+        let batcher = DynamicBatcher::with_hook(batch_cfg, run, Some(hook));
+        Server { model, metrics, batcher }
+    }
+
+    /// Validate + enqueue; the receiver yields this request's response.
+    /// Every presented request counts as `submitted`; failures (bad
+    /// input, shed, shutdown) additionally count as `rejected`, so
+    /// `completed + rejected == submitted` once the queue drains.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        self.metrics.record_submit();
+        if input.len() != self.model.input_dim {
+            self.metrics.record_reject();
+            return Err(SubmitError::BadInput { got: input.len(), want: self.model.input_dim });
+        }
+        self.batcher.submit(input).map_err(|e| {
+            self.metrics.record_reject();
+            e
+        })
+    }
+
+    /// Submit and wait for the response (closed-loop clients, tests).
+    pub fn infer_blocking(&self, input: Vec<f32>) -> Result<InferResponse, SubmitError> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Drain the queue, stop the dispatcher, join workers.
+    pub fn shutdown(self) {
+        self.batcher.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::PackedModel;
+    use crate::util::prng::Rng;
+
+    fn toy_server(max_batch: usize, queue_cap: usize) -> Server {
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let model = Arc::new(ServableModel::from_packed("toy", &pm, 6).unwrap());
+        let cfg = ServerConfig {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+            queue_cap,
+            threads: 2,
+        };
+        Server::start(model, cfg)
+    }
+
+    #[test]
+    fn serves_blocking_requests_and_counts_them() {
+        let s = toy_server(8, 64);
+        let mut r = Rng::new(9);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..6).map(|_| r.normal()).collect();
+            let resp = s.infer_blocking(x).unwrap();
+            assert_eq!(resp.logits.len(), 3);
+            assert!(resp.argmax < 3);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(s.metrics.completed(), 20);
+        assert_eq!(s.metrics.rejected(), 0);
+        assert!(s.metrics.latency_ms(99.0) > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_dim_rejected_before_queue() {
+        let s = toy_server(8, 64);
+        match s.submit(vec![0.0; 5]) {
+            Err(SubmitError::BadInput { got: 5, want: 6 }) => {}
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        assert_eq!(s.metrics.rejected(), 1);
+        assert_eq!(s.metrics.completed(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        let s = Arc::new(toy_server(16, 4096));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let sv = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut r = Rng::new(100 + t);
+                let mut ok = 0u32;
+                for _ in 0..50 {
+                    let x: Vec<f32> = (0..6).map(|_| r.normal()).collect();
+                    if sv.infer_blocking(x).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        assert_eq!(s.metrics.completed(), 200);
+        let snap = s.metrics.snapshot(s.queue_depth()).to_string();
+        assert!(snap.contains("\"p99_ms\""), "{snap}");
+    }
+}

@@ -111,6 +111,7 @@ impl Json {
 
     // -- writer ---------------------------------------------------------------
 
+    #[allow(clippy::inherent_to_string)] // tiny hand-rolled JSON: no Display on purpose
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

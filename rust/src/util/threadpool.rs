@@ -62,12 +62,31 @@ impl ThreadPool {
         ThreadPool { shared, handles, size }
     }
 
+    /// A width-only pool for `par_for` callers: records the parallelism
+    /// target but spawns **no resident workers** (`par_for` uses scoped
+    /// threads internally, so resident workers would sit idle for the
+    /// pool's lifetime — the serving path uses this). `submit`/`wait`
+    /// are not available on a scoped pool.
+    pub fn scoped(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            outstanding: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        ThreadPool { shared, handles: Vec::new(), size }
+    }
+
     /// Number of worker threads matching the machine (leaves 2 for PJRT).
     pub fn default_size() -> usize {
         thread::available_parallelism().map(|n| n.get().saturating_sub(2).max(1)).unwrap_or(4)
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        debug_assert!(!self.handles.is_empty(), "submit on a scoped (worker-less) pool");
         self.shared.outstanding.fetch_add(1, Ordering::AcqRel);
         self.shared.queue.lock().unwrap().push(Box::new(f));
         self.shared.cv.notify_one();
@@ -75,6 +94,7 @@ impl ThreadPool {
 
     /// Block until every submitted job has finished.
     pub fn wait(&self) {
+        debug_assert!(!self.handles.is_empty(), "wait on a scoped (worker-less) pool");
         let mut g = self.shared.done_mx.lock().unwrap();
         while self.shared.outstanding.load(Ordering::Acquire) > 0 {
             g = self.shared.done_cv.wait(g).unwrap();
@@ -148,6 +168,17 @@ mod tests {
     fn par_for_empty() {
         let pool = ThreadPool::new(2);
         pool.par_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn scoped_pool_par_for_without_workers() {
+        let pool = ThreadPool::scoped(3);
+        assert_eq!(pool.size, 3);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! `make artifacts`). These exercise the full L1+L2+L3 composition: PJRT
 //! load/compile, training-step numerics, stats, Hessian probes, the
 //! bit-split baselines, and the Pallas-kernel artifact.
+#![cfg(feature = "pjrt")]
 
 use msq::data::{Batcher, Dataset, DatasetSpec};
 use msq::runtime::{engine, Engine, ModelState};
@@ -271,7 +272,7 @@ fn packed_export_roundtrips_through_eval() {
     }
     let mut state2 = ModelState::init(&eng.manifest, &tmeta).unwrap();
     for q in 0..lq {
-        let w = msq::quant::pack::unpack_layer(&packed.layers[q]);
+        let w = msq::quant::pack::unpack_layer(&packed.layers[q]).unwrap();
         state2.set_q_weights(q, &w).unwrap();
     }
 

@@ -1,0 +1,105 @@
+//! End-to-end serving test on the default (no-XLA) feature set:
+//! pack → save `.msqpack` → registry load → `Server` → batched
+//! responses, verified against the direct forward pass.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use msq::quant::pack::PackedModel;
+use msq::serve::{ModelRegistry, Server, ServerConfig, SubmitError};
+use msq::util::prng::Rng;
+
+fn synth_packed(dims: &[usize], bits: &[u8], seed: u64) -> PackedModel {
+    PackedModel::synth_mlp(dims, bits, seed).unwrap()
+}
+
+#[test]
+fn packed_file_serves_end_to_end() {
+    // mixed precision on purpose: 5-bit hidden, 3-bit output layer
+    let pm = synth_packed(&[24, 16, 4], &[5, 3], 11);
+    let path = std::env::temp_dir().join("msq_serve_e2e.msqpack");
+    pm.save(&path).unwrap();
+
+    let reg = ModelRegistry::new();
+    let model = reg.load_file("e2e", &path, 24).unwrap();
+    assert_eq!(model.output_dim(), 4);
+    assert_eq!(reg.get("e2e").unwrap().payload_bytes(), model.payload_bytes());
+
+    let server = Server::start(
+        model.clone(),
+        ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 256,
+            threads: 2,
+        },
+    );
+
+    // async-submit a wave of requests so dynamic batches actually form
+    let mut rng = Rng::new(5);
+    let inputs: Vec<Vec<f32>> =
+        (0..40).map(|_| (0..24).map(|_| rng.normal()).collect()).collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+
+    for (x, rx) in inputs.iter().zip(&rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("response");
+        // row-blocked qgemm is batch-size invariant: the served logits are
+        // bitwise equal to a direct single-request forward pass
+        let expect = model.infer_batch(x, 1, None).unwrap();
+        assert_eq!(resp.logits, expect, "served logits diverge from direct inference");
+        assert!(resp.argmax < 4);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+    }
+    assert_eq!(server.metrics.completed(), 40);
+    assert_eq!(server.metrics.rejected(), 0);
+    assert!(server.metrics.latency_ms(50.0) > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn registry_hosts_independent_servers() {
+    let a = synth_packed(&[6, 3], &[2], 1);
+    let b = synth_packed(&[10, 8, 5], &[4, 4], 2);
+    let pa = std::env::temp_dir().join("msq_serve_a.msqpack");
+    let pb = std::env::temp_dir().join("msq_serve_b.msqpack");
+    a.save(&pa).unwrap();
+    b.save(&pb).unwrap();
+
+    let reg = ModelRegistry::new();
+    reg.load_file("a", &pa, 6).unwrap();
+    reg.load_file("b", &pb, 10).unwrap();
+    assert_eq!(reg.names(), vec!["a", "b"]);
+
+    let sa = Server::start(reg.get("a").unwrap(), ServerConfig::default());
+    let sb = Server::start(reg.get("b").unwrap(), ServerConfig::default());
+    let ra = sa.infer_blocking(vec![0.5; 6]).unwrap();
+    let rb = sb.infer_blocking(vec![0.5; 10]).unwrap();
+    assert_eq!(ra.logits.len(), 3);
+    assert_eq!(rb.logits.len(), 5);
+
+    // dimension mismatch is rejected per-model
+    match sa.infer_blocking(vec![0.0; 10]) {
+        Err(SubmitError::BadInput { got: 10, want: 6 }) => {}
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    sa.shutdown();
+    sb.shutdown();
+
+    // registry eviction drops the name but running servers keep their Arc
+    assert!(reg.remove("a"));
+    assert!(reg.get("a").is_none());
+}
+
+#[test]
+fn all_supported_bit_widths_serve() {
+    for bits in 1u8..=8 {
+        let pm = synth_packed(&[9, 7, 2], &[bits, bits], 30 + bits as u64);
+        let model =
+            Arc::new(msq::serve::ServableModel::from_packed("w", &pm, 9).unwrap());
+        let server = Server::start(model, ServerConfig::default());
+        let r = server.infer_blocking(vec![0.3; 9]).unwrap();
+        assert_eq!(r.logits.len(), 2, "bits {bits}");
+        assert!(r.logits.iter().all(|v| v.is_finite()), "bits {bits}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,141 @@
+//! Offline shim of the `anyhow` crate (S14 substrate policy: the build
+//! must work with no crates.io access).
+//!
+//! Implements the subset the repo uses — `Error`, `Result`, `anyhow!`,
+//! `bail!`, `ensure!`, and the `Context` extension trait on `Result` /
+//! `Option` — backed by a plain message string with a "caused by" chain
+//! rendered into the message at wrap time. Swap this path dependency for
+//! the real crate if the build ever goes online; every call site is
+//! source-compatible.
+
+use std::fmt;
+
+/// String-backed error value. Deliberately does NOT implement
+/// `std::error::Error`, which is what makes the blanket `From` below
+/// coherent (same trick the real crate uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro target).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format-string error constructor: `anyhow!("bad layer {i}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let wrapped = r.with_context(|| "writing".to_string()).unwrap_err();
+        assert!(wrapped.to_string().starts_with("writing: "));
+
+        let none: Option<u8> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+}
