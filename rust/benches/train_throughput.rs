@@ -1,0 +1,82 @@
+//! Native training throughput bench: timed `train_step`s over the
+//! synthetic dataset (the `msq train --backend native` hot path),
+//! recording steps/sec, step latency percentiles, and peak RSS to
+//! `BENCH_train.json` (plus the usual CSV row under `results/bench/`).
+//!
+//! ```sh
+//! cargo bench --bench train_throughput              # default 60 steps
+//! MSQ_BENCH_TRAIN_STEPS=20 cargo bench --bench train_throughput
+//! ```
+
+use msq::bench::{bench, save};
+use msq::data::{Batcher, Dataset, DatasetSpec};
+use msq::native::NativeBackend;
+use msq::runtime::Backend;
+use msq::util::json::Json;
+use msq::util::threadpool::ThreadPool;
+use msq::util::timer::peak_rss_bytes;
+
+fn main() {
+    let steps: usize = std::env::var("MSQ_BENCH_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let batch = 64usize;
+    let hidden = [256usize, 128];
+
+    let pool = ThreadPool::new(2);
+    let ds = Dataset::generate(DatasetSpec::cifar_syn(2048, 256, 42), &pool);
+    let mut backend =
+        NativeBackend::mlp("mlp", "msq", ds.spec.image_elems(), &hidden, 10, batch, 42, 0)
+            .expect("backend");
+    let params = backend.trainable_params();
+    println!(
+        "train_throughput: mlp 3072->{hidden:?}->10 ({params} params), batch {batch}, {steps} steps"
+    );
+
+    let mut batcher = Batcher::new(&ds, batch, 7, true);
+    let bits = vec![8f32; backend.num_q_layers()];
+    let ks = vec![1f32; backend.num_q_layers()];
+    let elems = ds.spec.image_elems();
+
+    let mut results = Vec::new();
+    // quantized forward/backward/update, the Algorithm-1 inner loop
+    let r = bench("train_step b=64 8-bit", 3, steps, || {
+        let b = batcher.next();
+        backend
+            .train_step(&bits, &ks, 5e-5, 0.02, 0.0, &b.x[..batch * elems], &b.y[..batch])
+            .expect("train step");
+    });
+    r.report(Some((batch as f64, "img")));
+    let steps_per_sec = 1.0 / r.mean_s;
+    results.push(r);
+
+    // one FD Hutchinson probe = two float backward passes
+    let rf = bench("hessian_probe b=64", 2, (steps / 4).max(4), || {
+        let b = batcher.next();
+        backend.hessian_step(&b.x[..batch * elems], &b.y[..batch], 1).expect("probe");
+    });
+    rf.report(None);
+    results.push(rf);
+
+    let rss = peak_rss_bytes().unwrap_or(0);
+    let r0 = &results[0];
+    let out = Json::obj(vec![
+        ("bench", Json::Str("train_throughput".into())),
+        ("batch", Json::Num(batch as f64)),
+        ("params", Json::Num(params as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("steps_per_sec", Json::Num(steps_per_sec)),
+        ("imgs_per_sec", Json::Num(steps_per_sec * batch as f64)),
+        ("step_ms_mean", Json::Num(r0.mean_s * 1e3)),
+        ("step_ms_p50", Json::Num(r0.p50_s * 1e3)),
+        ("step_ms_p95", Json::Num(r0.p95_s * 1e3)),
+        ("peak_rss_bytes", Json::Num(rss as f64)),
+    ]);
+    std::fs::write("BENCH_train.json", out.to_string() + "\n").expect("write BENCH_train.json");
+    println!(
+        "wrote BENCH_train.json ({steps_per_sec:.1} steps/s, peak rss {:.1} MiB)",
+        rss as f64 / (1024.0 * 1024.0)
+    );
+    save("train_throughput.csv", &results);
+}

@@ -1,15 +1,17 @@
 //! Hessian scheduler (S6): Hutchinson trace probes → per-layer Ω (Eq. 9).
 //!
-//! `Tr(H_l)` is estimated with Rademacher probes through the AOT
-//! `hessian_step` artifact (one hvp per probe, per-layer vᵀHv read back);
-//! the coordinator multiplies by the layer's quantization error
-//! ‖W_n − W‖² (from `stats_step`) to form Ω_l. Probes are drawn on fresh
-//! training batches, matching HAWQ-V2 practice.
+//! `Tr(H_l)` is estimated with Rademacher probes through
+//! [`Backend::hessian_step`] (one hvp per probe, per-layer vᵀHv read
+//! back — an AOT artifact on the XLA path, a finite-difference hvp on
+//! the native path); the coordinator multiplies by the layer's
+//! quantization error ‖W_n − W‖² (from `stats_step`) to form Ω_l.
+//! Probes are drawn on fresh training batches, matching HAWQ-V2
+//! practice.
 
 use anyhow::Result;
 
 use crate::data::Batcher;
-use crate::runtime::{engine, ArtifactMeta, Engine, ModelState};
+use crate::runtime::backend::Backend;
 use crate::util::prng::Rng;
 
 pub struct HessianEstimator {
@@ -23,29 +25,21 @@ impl HessianEstimator {
     }
 
     /// Per-layer Hessian-trace estimates (mean of vᵀHv over probes).
-    pub fn trace(
+    pub fn trace<B: Backend>(
         &mut self,
-        eng: &Engine,
-        state: &ModelState,
-        meta: &ArtifactMeta,
+        backend: &mut B,
         batcher: &mut Batcher,
     ) -> Result<Vec<f32>> {
-        let lq = meta.num_q_layers;
+        let lq = backend.num_q_layers();
         let mut acc = vec![0f64; lq];
-        let b = meta.batch;
-        let img_elems: usize = meta.image.iter().product();
+        let b = backend.hess_batch();
+        let elems = backend.input_elems();
         for _ in 0..self.probes {
-            // a fresh batch per probe; the hessian artifact's batch may be
+            // a fresh batch per probe; the backend's hessian batch may be
             // smaller than the train batch — truncate deterministically.
             let batch = batcher.next();
-            let x = engine::lit_f32(
-                &batch.x[..b * img_elems],
-                &[b, meta.image[0], meta.image[1], meta.image[2]],
-            )?;
-            let y_slice: Vec<i32> = batch.y[..b].to_vec();
-            let y = engine::lit_i32(&y_slice, &[b])?;
-            let seed = (self.rng.next_u32() & 0x7FFF_FFFF) as i32;
-            let vhv = state.hessian_step(eng, meta, &x, &y, seed)?;
+            let seed = self.rng.next_u64();
+            let vhv = backend.hessian_step(&batch.x[..b * elems], &batch.y[..b], seed)?;
             for (a, v) in acc.iter_mut().zip(&vhv) {
                 *a += *v as f64;
             }

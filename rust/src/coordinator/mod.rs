@@ -1,6 +1,8 @@
 //! L3 coordinator (S11): the paper's training system.
 //!
-//! `Trainer` drives Algorithm 1 end-to-end against the AOT artifacts:
+//! `Trainer` drives Algorithm 1 end-to-end against any execution
+//! [`Backend`](crate::runtime::backend::Backend) — the pure-Rust native
+//! backend by default, the AOT/PJRT artifacts with `--features pjrt`:
 //!
 //! 1. every step: `train_step` with `L = CE + λ·Σ|B_k|` (λ, lr, per-layer
 //!    bits/ks all runtime inputs);
@@ -22,15 +24,12 @@ pub mod bitstate;
 pub mod bsq;
 #[cfg(feature = "pjrt")]
 pub mod csq;
-#[cfg(feature = "pjrt")]
 pub mod hessian;
 pub mod report;
 pub mod schedule;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use bitstate::BitState;
 pub use report::{PruneEvent, RunReport};
 pub use schedule::{cosine_lr, csq_temperature};
-#[cfg(feature = "pjrt")]
 pub use trainer::{MsqConfig, Trainer};

@@ -19,6 +19,22 @@ pub struct PruneEvent {
     pub compression: f64,
 }
 
+impl PruneEvent {
+    /// One-line human-readable form for the training log.
+    pub fn summary(&self) -> String {
+        let beta: Vec<String> = self.beta.iter().map(|b| format!("{b:.2}")).collect();
+        format!(
+            "prune @ epoch {}: β [{}] bits {:?} -> {:?} (p {:?}) comp {:.2}x",
+            self.epoch,
+            beta.join(" "),
+            self.bits_before,
+            self.bits_after,
+            self.prune_bits,
+            self.compression
+        )
+    }
+}
+
 /// Full history of one run.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {

@@ -1,8 +1,11 @@
-//! The MSQ trainer: Algorithm 1 over the AOT artifacts.
+//! The MSQ trainer: Algorithm 1, generic over the execution [`Backend`].
 //!
-//! Also runs the `dorefa` method (same artifact family with the DoReFa
-//! quantizer) and *uniform fixed-bit QAT* (λ = 0, no pruning) for the
-//! tables' uniform baselines.
+//! The same loop drives the pure-Rust native backend (default build) and
+//! the XLA/PJRT engine (`--features pjrt`) — the backend owns parameters
+//! and step execution; the trainer owns the schedule, the bit-state, and
+//! the pruning policy. Also runs the `dorefa` method (same loop with the
+//! DoReFa quantizer) and *uniform fixed-bit QAT* (λ = 0, no pruning) for
+//! the tables' uniform baselines.
 
 use anyhow::{bail, Result};
 
@@ -11,7 +14,7 @@ use super::hessian::{omega, HessianEstimator};
 use super::report::{PruneEvent, RunReport};
 use super::schedule::cosine_lr;
 use crate::data::{Batcher, Dataset};
-use crate::runtime::{engine, ArtifactMeta, Engine, ModelState};
+use crate::runtime::backend::Backend;
 use crate::util::timer::{peak_rss_bytes, Timer};
 
 /// Full configuration of one training run (paper Sec. 4.1 + supp Table 2).
@@ -76,35 +79,38 @@ impl Default for MsqConfig {
     }
 }
 
-pub struct Trainer<'e> {
-    pub eng: &'e Engine,
+pub struct Trainer<B: Backend> {
+    pub backend: B,
     pub cfg: MsqConfig,
-    pub train_meta: ArtifactMeta,
-    pub eval_meta: ArtifactMeta,
-    pub stats_meta: Option<ArtifactMeta>,
-    pub hess_meta: Option<ArtifactMeta>,
-    pub state: ModelState,
     pub bitstate: BitState,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(eng: &'e Engine, cfg: MsqConfig) -> Result<Trainer<'e>> {
+#[cfg(feature = "pjrt")]
+impl<'e> Trainer<crate::runtime::PjrtBackend<'e>> {
+    /// XLA path: resolve the artifact family for `(cfg.model, cfg.method)`
+    /// and wrap the engine behind the backend trait.
+    pub fn new(eng: &'e crate::runtime::Engine, cfg: MsqConfig) -> Result<Self> {
+        let backend =
+            crate::runtime::PjrtBackend::new(eng, &cfg.model, &cfg.method, cfg.batch)?;
+        Trainer::from_backend(backend, cfg)
+    }
+}
+
+impl<B: Backend> Trainer<B> {
+    /// Wrap any backend; the bit-state starts uniform at `cfg.n0` (or
+    /// `cfg.fixed_bits` for the uniform baselines).
+    pub fn from_backend(backend: B, cfg: MsqConfig) -> Result<Trainer<B>> {
         if cfg.method != "msq" && cfg.method != "dorefa" {
-            bail!("Trainer handles msq/dorefa; use BsqTrainer/CsqTrainer for {}", cfg.method);
+            bail!(
+                "Trainer handles msq/dorefa; use BsqTrainer/CsqTrainer for {}",
+                cfg.method
+            );
         }
-        let train_meta =
-            eng.manifest.find_batch(&cfg.model, &cfg.method, "train", cfg.batch).or_else(|_| {
-                eng.manifest.find(&cfg.model, &cfg.method, "train")
-            })?.clone();
-        let eval_meta = eng.manifest.find(&cfg.model, &cfg.method, "eval")?.clone();
-        let stats_meta = eng.manifest.find(&cfg.model, &cfg.method, "stats").ok().cloned();
-        let hess_meta = eng.manifest.find(&cfg.model, "msq", "hessian").ok().cloned();
-        let state = ModelState::init(&eng.manifest, &train_meta)?;
-        let mut bitstate = BitState::new(cfg.n0, &train_meta.q_sizes());
+        let mut bitstate = BitState::new(cfg.n0, &backend.q_sizes());
         if let Some(fb) = cfg.fixed_bits {
             bitstate.scheme.bits.iter_mut().for_each(|b| *b = fb);
         }
-        Ok(Trainer { eng, cfg, train_meta, eval_meta, stats_meta, hess_meta, state, bitstate })
+        Ok(Trainer { backend, cfg, bitstate })
     }
 
     /// Run the full schedule on `ds`; returns the report.
@@ -116,31 +122,30 @@ impl<'e> Trainer<'e> {
             model: cfg.model.clone(),
             method: cfg.method.clone(),
             epochs: cfg.epochs,
-            trainable_params: self.state.trainable_params(),
+            trainable_params: self.backend.trainable_params(),
             ..Default::default()
         };
 
-        let batch = self.train_meta.batch;
+        let batch = self.backend.batch();
+        let elems = self.backend.input_elems();
         let mut batcher = Batcher::new(ds, batch, cfg.seed, true);
         // a separate stream for hessian probe batches
         let mut hess_batcher =
-            Batcher::new(ds, batch.max(self.hess_batch()), cfg.seed ^ 0x4E55, true);
+            Batcher::new(ds, batch.max(self.backend.hess_batch()), cfg.seed ^ 0x4E55, true);
         let steps_per_epoch = batcher.batches_per_epoch();
         let total_steps = steps_per_epoch * cfg.epochs;
         let mut hess = HessianEstimator::new(cfg.hessian_probes, cfg.seed);
 
-        let img = self.train_meta.image.clone();
-        let train_meta = self.train_meta.clone();
         let mut gamma_reached = self.bitstate.compression() >= cfg.gamma && cfg.gamma > 0.0;
-        let mut lam = if gamma_reached || cfg.gamma <= 0.0 { if cfg.gamma <= 0.0 { cfg.lam } else { 0.0 } } else { cfg.lam };
+        let mut lam = if gamma_reached { 0.0 } else { cfg.lam };
         let mut step = 0usize;
         let mut step_time_acc = 0f64;
 
         for epoch in 0..cfg.epochs {
             let mut ep_loss = 0f64;
             let mut ep_correct = 0f64;
-            let bits_l = self.bitstate.bits_literal()?;
-            let ks_l = self.bitstate.ks_literal()?;
+            let bits = self.bitstate.bits_f32();
+            let ks = self.bitstate.ks_f32();
             let eff_lam = if cfg.adaptive_lam && lam > 0.0 {
                 lam * 2f32.powf(cfg.n0 as f32 - self.bitstate.scheme.avg_bits() as f32)
             } else {
@@ -148,25 +153,20 @@ impl<'e> Trainer<'e> {
             };
             for _ in 0..steps_per_epoch {
                 let b = batcher.next();
-                let x = engine::lit_f32(&b.x, &[batch, img[0], img[1], img[2]])?;
-                let y = engine::lit_i32(&b.y, &[batch])?;
                 let lr = cosine_lr(cfg.lr0, step, total_steps, 0.05, 0.0);
                 let st = Timer::start();
-                let (loss, _ce, correct) = self.state.train_step(
-                    self.eng,
-                    &train_meta,
-                    &bits_l,
-                    &ks_l,
+                let stats = self.backend.train_step(
+                    &bits,
+                    &ks,
                     eff_lam,
                     lr,
-                    1.0,
                     cfg.n_act,
-                    &x,
-                    &y,
+                    &b.x[..batch * elems],
+                    &b.y[..batch],
                 )?;
                 step_time_acc += st.seconds();
-                ep_loss += loss as f64;
-                ep_correct += correct as f64;
+                ep_loss += stats.loss as f64;
+                ep_correct += stats.correct as f64;
                 step += 1;
             }
             report.train_loss.push((ep_loss / steps_per_epoch as f64) as f32);
@@ -201,7 +201,8 @@ impl<'e> Trainer<'e> {
                 report.best_acc = report.best_acc.max(eacc);
                 if cfg.verbose {
                     println!(
-                        "[{}] epoch {epoch:3} loss {:.4} train-acc {:.3} eval-acc {:.3} comp {:.2}x",
+                        "[{}] epoch {epoch:3} loss {:.4} train-acc {:.3} eval-acc {:.3} \
+                         comp {:.2}x",
                         report.label,
                         report.train_loss.last().unwrap(),
                         report.train_acc.last().unwrap(),
@@ -222,10 +223,6 @@ impl<'e> Trainer<'e> {
         Ok(report)
     }
 
-    fn hess_batch(&self) -> usize {
-        self.hess_meta.as_ref().map(|m| m.batch).unwrap_or(8)
-    }
-
     /// One pruning round: stats → Ω → ascending-β prune → p reassignment.
     fn prune_round(
         &mut self,
@@ -234,23 +231,19 @@ impl<'e> Trainer<'e> {
         hess_batcher: &mut Batcher,
         report: &mut RunReport,
     ) -> Result<()> {
-        let cfg = &self.cfg;
-        let stats_meta = match &self.stats_meta {
-            Some(m) => m.clone(),
-            None => return Ok(()),
-        };
-        let bits_l = self.bitstate.bits_literal()?;
-        let ks_l = self.bitstate.ks_literal()?;
-        let (beta, qerr, _reg) = self.state.stats_step(self.eng, &stats_meta, &bits_l, &ks_l)?;
+        let cfg = self.cfg.clone();
+        if !self.backend.supports_stats() {
+            return Ok(());
+        }
+        let bits = self.bitstate.bits_f32();
+        let ks = self.bitstate.ks_f32();
+        let stats = self.backend.stats_step(&bits, &ks)?;
+        let (beta, qerr) = (stats.beta, stats.qerr);
 
         // Hessian trace → Ω (or uniform Ω when the ablation disables it)
-        let om = if cfg.use_hessian {
-            if let Some(hm) = self.hess_meta.clone() {
-                let tr = hess.trace(self.eng, &self.state, &hm, hess_batcher)?;
-                omega(&tr, &qerr)
-            } else {
-                vec![1.0; beta.len()]
-            }
+        let om = if cfg.use_hessian && self.backend.supports_hessian() {
+            let tr = hess.trace(&mut self.backend, hess_batcher)?;
+            omega(&tr, &qerr)
         } else {
             vec![1.0; beta.len()]
         };
@@ -274,7 +267,7 @@ impl<'e> Trainer<'e> {
             self.bitstate.reset_prune_bits();
         }
 
-        report.prune_events.push(PruneEvent {
+        let event = PruneEvent {
             epoch,
             beta,
             omega: om,
@@ -282,43 +275,47 @@ impl<'e> Trainer<'e> {
             bits_after: self.bitstate.scheme.bits.clone(),
             prune_bits: self.bitstate.prune_bits.clone(),
             compression: self.bitstate.compression(),
-        });
+        };
+        if cfg.verbose {
+            println!("[{}_{}] {}", cfg.model, cfg.method, event.summary());
+        }
+        report.prune_events.push(event);
         Ok(())
     }
 
     /// Export the trained model as a physically bit-packed `.msqpack`
     /// (realizes the reported compression as actual bytes; the packed file
     /// re-imports through [`crate::quant::pack::PackedModel::load`] +
-    /// [`crate::runtime::ModelState::set_q_weights`]).
+    /// [`Backend::set_q_weights`]).
     pub fn export_packed(&self, path: &std::path::Path) -> Result<crate::quant::pack::PackedModel> {
         let mut model = crate::quant::pack::PackedModel::default();
-        for (q, layer) in self.train_meta.q_layers.iter().enumerate() {
-            let w = self.state.q_weights(q)?;
+        for q in 0..self.backend.num_q_layers() {
+            let w = self.backend.q_weights(q)?;
             let bits = self.bitstate.scheme.bits[q];
-            model.layers.push(crate::quant::pack::pack_layer(&layer.name, &w, bits));
+            model.layers.push(crate::quant::pack::pack_layer(
+                &self.backend.q_layer_name(q),
+                &w,
+                bits,
+            ));
         }
         model.save(path)?;
         Ok(model)
     }
 
     /// Full test-split evaluation: (top-1 acc, mean ce).
-    pub fn evaluate(&self, ds: &Dataset) -> Result<(f32, f32)> {
-        let meta = self.eval_meta.clone();
-        let batch = meta.batch;
-        let bits_l = self.bitstate.bits_literal()?;
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f32, f32)> {
+        let batch = self.backend.eval_batch();
+        let bits = self.bitstate.bits_f32();
         let n = ds.test_y.len();
         if n % batch != 0 {
             bail!("test split ({n}) must be divisible by eval batch ({batch})");
         }
-        let img = &meta.image;
         let helper = Batcher::new(ds, batch, 0, false);
         let mut correct = 0f64;
         let mut loss = 0f64;
         for tb in helper.test_batches(batch) {
-            let x = engine::lit_f32(&tb.x, &[batch, img[0], img[1], img[2]])?;
-            let y = engine::lit_i32(&tb.y, &[batch])?;
             let (ce_sum, corr) =
-                self.state.eval_step(self.eng, &meta, &bits_l, 1.0, self.cfg.n_act, &x, &y)?;
+                self.backend.eval_step(&bits, self.cfg.n_act, &tb.x, &tb.y)?;
             correct += corr as f64;
             loss += ce_sum as f64;
         }

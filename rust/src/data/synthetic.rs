@@ -59,6 +59,13 @@ impl DatasetSpec {
     pub fn image_elems(&self) -> usize {
         self.height * self.width * self.channels
     }
+
+    /// Flattened input width an MLP-shaped model sees (alias of
+    /// [`image_elems`](Self::image_elems); the native backend and the
+    /// serve registry both chain shapes from this number).
+    pub fn input_dim(&self) -> usize {
+        self.image_elems()
+    }
 }
 
 /// One Gabor/blob component of a class prototype.

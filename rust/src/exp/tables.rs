@@ -11,7 +11,7 @@ use crate::coordinator::MsqConfig;
 use crate::data::{Dataset, DatasetSpec};
 use crate::metrics::{fmt_duration, results_dir, Csv, Table};
 use crate::quant;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, Engine};
 use crate::util::stats::Histogram;
 use crate::util::threadpool::ThreadPool;
 
@@ -328,7 +328,7 @@ pub fn fig4(eng: &Engine, preset: Preset) -> Result<()> {
         let _ = report;
         // histogram of a mid-network layer's weights in [0,1] scale
         let l = tr.bitstate.num_layers() / 2;
-        let w = tr.state.q_weights(l)?;
+        let w = tr.backend.q_weights(l)?;
         let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
         let mut h = Histogram::new(0.0, 1.0, 64);
         for &x in &w {

@@ -15,8 +15,11 @@
 //! * **L1** — Pallas kernels for the quantization hot-spot
 //!   (`python/compile/kernels/`).
 //!
-//! Python never runs at training time: the `runtime` module loads the HLO
-//! artifacts through PJRT and the coordinator drives them from Rust.
+//! Python never runs at training time: the coordinator drives an
+//! execution [`runtime::Backend`] from Rust — either the pure-Rust
+//! `native` backend (default build, zero XLA: tensor/autodiff/SGD in
+//! `src/native/`) or the PJRT engine loading the HLO artifacts
+//! (`--features pjrt`).
 //!
 //! Deployment side, the `serve` module executes packed `.msqpack` models
 //! (produced by `quant::pack`) with pure-Rust quantized kernels and a
@@ -29,13 +32,15 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod metrics;
+pub mod native;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod util;
 
-#[cfg(feature = "pjrt")]
 pub use coordinator::{MsqConfig, Trainer};
+pub use native::NativeBackend;
+pub use runtime::Backend;
 #[cfg(feature = "pjrt")]
 pub use runtime::{Engine, ModelState};
 pub use serve::{ModelRegistry, ServableModel, Server, ServerConfig};

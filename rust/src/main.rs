@@ -1,16 +1,19 @@
 //! `msq` — the coordinator CLI (L3 leader entrypoint).
 //!
 //! ```text
-//! msq train --model resnet20 --method msq --epochs 60 --gamma 16 [...]
+//! msq train --backend native --epochs 60 --gamma 16 [...]
+//! msq train --backend pjrt --model resnet20 [...]   # --features pjrt
+//! msq eval-packed --packed model.msqpack    # packed-model accuracy
 //! msq eval-init --model resnet20            # sanity: eval at init
 //! msq info                                  # list artifacts
 //! msq pack-synth --dims 3072,256,10 --bits 4,8 --out demo.msqpack
 //! msq serve --model mlp --packed demo.msqpack [--requests N]
 //! ```
 //!
-//! `train` / `info` / `eval-*` drive the XLA runtime and need the `pjrt`
-//! feature; `pack-synth` and `serve` run on the default feature set with
-//! zero XLA linkage (the pure-Rust `serve` subsystem).
+//! `train --backend native`, `eval-packed`, `pack-synth` and `serve` all
+//! run on the default feature set with zero XLA linkage; `--backend
+//! pjrt`, `info` and `eval-init` drive the XLA runtime and need the
+//! `pjrt` feature.
 
 use std::path::Path;
 use std::time::Duration;
@@ -21,27 +24,25 @@ use anyhow::{bail, Context, Result};
 use msq::coordinator::bsq::BsqTrainer;
 #[cfg(feature = "pjrt")]
 use msq::coordinator::csq::CsqTrainer;
-#[cfg(feature = "pjrt")]
 use msq::coordinator::{MsqConfig, Trainer};
-#[cfg(feature = "pjrt")]
 use msq::data::{Dataset, DatasetSpec};
-#[cfg(feature = "pjrt")]
 use msq::metrics;
+use msq::native::NativeBackend;
 use msq::quant::pack::PackedModel;
+use msq::runtime::Backend;
 #[cfg(feature = "pjrt")]
 use msq::runtime::Engine;
 use msq::serve::{InferResponse, ServableModel, Server, ServerConfig, SubmitError};
 use msq::util::cli::Args;
 use msq::util::json::{self, Json};
 use msq::util::prng::Rng;
-#[cfg(feature = "pjrt")]
 use msq::util::threadpool::ThreadPool;
 
 const VALUE_OPTS: &[&str] = &[
     "model", "method", "epochs", "batch", "lam", "alpha", "interval", "gamma", "lr", "n-act",
     "seed", "train-size", "test-size", "eval-every", "fixed-bits", "probes", "out", "config",
     "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
-    "queue-cap", "threads", "input-dim", "dims", "bits",
+    "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden",
 ];
 
 fn main() -> Result<()> {
@@ -56,11 +57,14 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: msq <train|info|eval-init|eval-packed|serve|pack-synth>\n\
-                 train:      [--model M] [--method msq|dorefa|bsq|csq] [--epochs N] [--batch B]\n\
+                 train:      [--backend native|pjrt] [--model M] [--method msq|dorefa|bsq|csq]\n\
+                 \x20           [--epochs N] [--batch B] [--hidden 256,128] [--threads T]\n\
                  \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
                  \x20           [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
                  \x20           [--train-size N] [--test-size N] [--seed S] [--out run.json]\n\
-                 \x20           [--export model.msqpack]   (needs --features pjrt)\n\
+                 \x20           [--export model.msqpack]\n\
+                 \x20           (native: pure-Rust MLP training, default build;\n\
+                 \x20            pjrt: XLA artifacts, needs --features pjrt)\n\
                  serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
                  \x20           [--threads 0] [--requests N --concurrency C] [--json]\n\
@@ -323,36 +327,15 @@ fn cmd_pack_synth(args: &Args) -> Result<()> {
     Ok(())
 }
 
+
 // ---------------------------------------------------------------------------
-// Training path (requires --features pjrt)
+// Training path: --backend native (default build) | pjrt (--features pjrt)
 // ---------------------------------------------------------------------------
 
-#[cfg(not(feature = "pjrt"))]
-fn pjrt_required(cmd: &str) -> Result<()> {
-    bail!("`msq {cmd}` drives the XLA runtime — rebuild with `--features pjrt`")
+fn backend_kind(args: &Args) -> &str {
+    args.opt("backend").unwrap_or("native")
 }
 
-#[cfg(not(feature = "pjrt"))]
-fn cmd_train(_args: &Args) -> Result<()> {
-    pjrt_required("train")
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_info() -> Result<()> {
-    pjrt_required("info")
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_eval_init(_args: &Args) -> Result<()> {
-    pjrt_required("eval-init")
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_eval_packed(_args: &Args) -> Result<()> {
-    pjrt_required("eval-packed")
-}
-
-#[cfg(feature = "pjrt")]
 pub fn config_from_args(args: &Args) -> MsqConfig {
     // layering: per-model defaults < --config file < --set overrides < flags
     let mut file_cfg = msq::util::config::Config::default();
@@ -367,10 +350,13 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
             eprintln!("[msq] --set {s}: {e}");
         }
     }
+    // the native backend trains MLPs; the artifact families default to
+    // the paper's resnet20
+    let default_model = if backend_kind(args) == "native" { "mlp" } else { "resnet20" };
     let model = args
         .opt("model")
         .map(|s| s.to_string())
-        .unwrap_or_else(|| file_cfg.str_or("model", "resnet20").to_string());
+        .unwrap_or_else(|| file_cfg.str_or("model", default_model).to_string());
     let mut cfg = MsqConfig {
         model: model.clone(),
         method: args.opt("method").unwrap_or("msq").to_string(),
@@ -448,10 +434,19 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
     if let Some(fb) = args.opt("fixed-bits") {
         cfg.fixed_bits = fb.parse().ok();
     }
+    // short native runs should still reach a pruning round — but only
+    // when the interval came from the per-model default, not from the
+    // user (flag or config file / --set both count as explicit)
+    if backend_kind(args) == "native"
+        && args.opt("interval").is_none()
+        && file_cfg.get("train.interval").is_none()
+        && cfg.interval > cfg.epochs
+    {
+        cfg.interval = cfg.epochs.max(1);
+    }
     cfg
 }
 
-#[cfg(feature = "pjrt")]
 pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     let pool = ThreadPool::new(ThreadPool::default_size());
     let (train, test) = match model {
@@ -469,31 +464,78 @@ pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     Dataset::generate(spec, &pool)
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    match backend_kind(args) {
+        "native" => cmd_train_native(args),
+        "pjrt" => cmd_train_pjrt(args),
+        other => bail!("--backend must be native|pjrt, got {other:?}"),
+    }
+}
+
+/// Build the native MLP backend for `cfg` over the dataset's shape.
+fn native_backend(cfg: &MsqConfig, ds: &Dataset, args: &Args) -> Result<NativeBackend> {
+    if cfg.model != "mlp" {
+        bail!(
+            "--backend native trains MLPs over flattened synthetic images (--model mlp); \
+             use --backend pjrt (--features pjrt) for {:?}",
+            cfg.model
+        );
+    }
+    let hidden: Vec<usize> = args
+        .opt("hidden")
+        .unwrap_or("256,128")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().with_context(|| format!("bad --hidden {s:?}")))
+        .collect::<Result<_>>()?;
+    NativeBackend::mlp(
+        &cfg.model,
+        &cfg.method,
+        ds.spec.input_dim(),
+        &hidden,
+        ds.spec.classes,
+        cfg.batch,
+        cfg.seed,
+        args.opt_usize("threads", 0),
+    )
+}
+
+fn cmd_train_native(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
-    let eng = Engine::new()?;
+    if cfg.method != "msq" && cfg.method != "dorefa" {
+        bail!("--backend native trains msq|dorefa; bsq/csq need --backend pjrt");
+    }
     let ds = dataset_for(&cfg.model, args);
+    let backend = native_backend(&cfg, &ds, args)?;
     println!(
-        "[msq] {} / {} — {} train, {} test, Γ={:.2}, λ={:.1e}, α={}, I={}",
-        cfg.model, cfg.method, ds.train_y.len(), ds.test_y.len(), cfg.gamma, cfg.lam,
-        cfg.alpha, cfg.interval
+        "[msq] {} / {} (native) — {} train, {} test, Γ={:.2}, λ={:.1e}, α={}, I={}, {} params",
+        cfg.model,
+        cfg.method,
+        ds.train_y.len(),
+        ds.test_y.len(),
+        cfg.gamma,
+        cfg.lam,
+        cfg.alpha,
+        cfg.interval,
+        backend.trainable_params(),
     );
-    let mut packed_info = None;
-    let report = match cfg.method.as_str() {
-        "bsq" => BsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
-        "csq" => CsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
-        _ => {
-            let mut t = Trainer::new(&eng, cfg.clone())?;
-            let r = t.run(&ds)?;
-            if let Some(path) = args.opt("export") {
-                let p = std::path::PathBuf::from(path);
-                let m = t.export_packed(&p)?;
-                packed_info = Some((p, m.payload_bytes(), m.compression()));
-            }
-            r
-        }
-    };
+    let mut trainer = Trainer::from_backend(backend, cfg.clone())?;
+    let report = trainer.run(&ds)?;
+    // the native loop always realizes its compression as bytes
+    let export = args
+        .opt("export")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| metrics::results_dir().join(format!("{}.msqpack", report.label)));
+    let pm = trainer.export_packed(&export)?;
+    let packed_info = Some((export, pm.payload_bytes(), pm.compression()));
+    finish_train(args, &report, packed_info)
+}
+
+/// Shared tail of `msq train`: summary lines + the JSON report.
+fn finish_train(
+    args: &Args,
+    report: &msq::coordinator::RunReport,
+    packed_info: Option<(std::path::PathBuf, usize, f64)>,
+) -> Result<()> {
     if let Some((p, bytes, comp)) = &packed_info {
         println!(
             "[msq] packed model -> {} ({} bytes payload, realized {:.2}x vs fp32)",
@@ -520,6 +562,54 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_required(cmd: &str) -> Result<()> {
+    bail!("`msq {cmd}` drives the XLA runtime — rebuild with `--features pjrt`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args) -> Result<()> {
+    pjrt_required("train --backend pjrt")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info() -> Result<()> {
+    pjrt_required("info")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval_init(_args: &Args) -> Result<()> {
+    pjrt_required("eval-init")
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args);
+    let eng = Engine::new()?;
+    let ds = dataset_for(&cfg.model, args);
+    println!(
+        "[msq] {} / {} (pjrt) — {} train, {} test, Γ={:.2}, λ={:.1e}, α={}, I={}",
+        cfg.model, cfg.method, ds.train_y.len(), ds.test_y.len(), cfg.gamma, cfg.lam,
+        cfg.alpha, cfg.interval
+    );
+    let mut packed_info = None;
+    let report = match cfg.method.as_str() {
+        "bsq" => BsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
+        "csq" => CsqTrainer::new(&eng, cfg.clone())?.run(&ds)?,
+        _ => {
+            let mut t = Trainer::new(&eng, cfg.clone())?;
+            let r = t.run(&ds)?;
+            if let Some(path) = args.opt("export") {
+                let p = std::path::PathBuf::from(path);
+                let m = t.export_packed(&p)?;
+                packed_info = Some((p, m.payload_bytes(), m.compression()));
+            }
+            r
+        }
+    };
+    finish_train(args, &report, packed_info)
+}
+
 #[cfg(feature = "pjrt")]
 fn cmd_info() -> Result<()> {
     let eng = Engine::new()?;
@@ -540,22 +630,52 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-/// Load a `.msqpack` model into a fresh state and evaluate it — proves
-/// the packed format round-trips through the training eval path.
-#[cfg(feature = "pjrt")]
+/// Derive the MLP widths a packed model implies (serve-style dim chain).
+fn packed_hidden_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
+    let mut dims = Vec::new();
+    let mut cols = input_dim;
+    for l in &pm.layers {
+        if cols == 0 || l.numel % cols != 0 {
+            bail!("layer {:?}: {} weights do not factor over dim {cols}", l.name, l.numel);
+        }
+        dims.push(l.numel / cols);
+        cols = l.numel / cols;
+    }
+    dims.pop(); // last entry is the class count, not a hidden width
+    Ok(dims)
+}
+
+/// Load a `.msqpack` model into a fresh backend and evaluate it — proves
+/// the packed format round-trips through the training eval path. Works
+/// on both backends; the native path derives the MLP widths from the
+/// packed layer sizes.
 fn cmd_eval_packed(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
     let packed_path = args.opt("packed").context("--packed path.msqpack required")?;
-    let eng = Engine::new()?;
+    let packed = PackedModel::load(Path::new(packed_path))?;
     let ds = dataset_for(&cfg.model, args);
-    let packed = msq::quant::pack::PackedModel::load(std::path::Path::new(packed_path))?;
-    let mut trainer = Trainer::new(&eng, cfg)?;
-    for (q, layer) in packed.layers.iter().enumerate() {
-        let w = msq::quant::pack::unpack_layer(layer)?;
-        trainer.state.set_q_weights(q, &w)?;
-        trainer.bitstate.scheme.bits[q] = layer.bits;
-    }
-    let (acc, loss) = trainer.evaluate(&ds)?;
+    let (acc, loss) = match backend_kind(args) {
+        "native" => {
+            let mut cfg = cfg;
+            cfg.model = "mlp".into();
+            let hidden = packed_hidden_dims(&packed, ds.spec.input_dim())?;
+            let backend = NativeBackend::mlp(
+                &cfg.model,
+                &cfg.method,
+                ds.spec.input_dim(),
+                &hidden,
+                ds.spec.classes,
+                cfg.batch,
+                cfg.seed,
+                args.opt_usize("threads", 0),
+            )?;
+            let mut trainer = Trainer::from_backend(backend, cfg)?;
+            import_packed(&mut trainer, &packed)?;
+            trainer.evaluate(&ds)?
+        }
+        "pjrt" => eval_packed_pjrt(&cfg, &packed, &ds)?,
+        other => bail!("--backend must be native|pjrt, got {other:?}"),
+    };
     println!(
         "[msq] packed eval: acc {acc:.4} loss {loss:.4} (payload {} bytes, {:.2}x)",
         packed.payload_bytes(),
@@ -564,12 +684,35 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Unpack every layer into the trainer's backend + bit-state.
+fn import_packed<B: Backend>(trainer: &mut Trainer<B>, packed: &PackedModel) -> Result<()> {
+    for (q, layer) in packed.layers.iter().enumerate() {
+        let w = msq::quant::pack::unpack_layer(layer)?;
+        trainer.backend.set_q_weights(q, &w)?;
+        trainer.bitstate.scheme.bits[q] = layer.bits;
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn eval_packed_pjrt(_cfg: &MsqConfig, _packed: &PackedModel, _ds: &Dataset) -> Result<(f32, f32)> {
+    bail!("--backend pjrt needs a build with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
+fn eval_packed_pjrt(cfg: &MsqConfig, packed: &PackedModel, ds: &Dataset) -> Result<(f32, f32)> {
+    let eng = Engine::new()?;
+    let mut trainer = Trainer::new(&eng, cfg.clone())?;
+    import_packed(&mut trainer, packed)?;
+    trainer.evaluate(ds)
+}
+
 #[cfg(feature = "pjrt")]
 fn cmd_eval_init(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
     let eng = Engine::new()?;
     let ds = dataset_for(&cfg.model, args);
-    let trainer = Trainer::new(&eng, cfg)?;
+    let mut trainer = Trainer::new(&eng, cfg)?;
     let (acc, loss) = trainer.evaluate(&ds)?;
     println!("[msq] init eval: acc {acc:.4} loss {loss:.4}");
     Ok(())

@@ -1,0 +1,259 @@
+//! Minimal reverse-mode autodiff tape over [`Tensor`].
+//!
+//! One [`Tape`] lives for one forward/backward pass: the backend pushes
+//! leaves (batch, weights, biases), composes the ops in `ops.rs`
+//! (linear, relu, fake-quant STE, softmax-CE), calls
+//! [`Tape::backward`] on the scalar loss, and reads gradients back off
+//! the leaves. Ops are recorded as an enum (no boxed closures), so the
+//! whole graph is inspectable and the backward sweep is a plain reverse
+//! iteration — nodes are created in topological order by construction.
+//!
+//! The RoundClamp/DoReFa fake-quant node uses the straight-through
+//! estimator (paper Sec. 3.1): forward snaps to the n-bit lattice,
+//! backward passes the incoming gradient through unchanged.
+
+use super::ops::{self, Quantizer};
+use super::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+/// Handle to a tape node (index into the tape, valid for its lifetime).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+enum Op {
+    Leaf,
+    /// y = x·Wᵀ + b  (x: m×k, w: n×k, b: 1×n)
+    Linear { x: NodeId, w: NodeId, b: NodeId },
+    Relu { x: NodeId },
+    /// fake-quant with straight-through backward
+    QuantSte { x: NodeId },
+    /// scalar mean cross-entropy; caches probs for the backward
+    SoftmaxCe { logits: NodeId, labels: Vec<i32>, probs: Vec<f32> },
+}
+
+struct Node {
+    t: Tensor,
+    grad: Vec<f32>,
+    op: Op,
+}
+
+/// Result of [`Tape::softmax_ce`]: the scalar loss node plus the batch
+/// statistics every trainer loop wants.
+pub struct CeOut {
+    pub id: NodeId,
+    pub ce_mean: f32,
+    pub correct: f32,
+}
+
+pub struct Tape<'p> {
+    pool: Option<&'p ThreadPool>,
+    nodes: Vec<Node>,
+}
+
+impl<'p> Tape<'p> {
+    pub fn new(pool: Option<&'p ThreadPool>) -> Tape<'p> {
+        Tape { pool, nodes: Vec::new() }
+    }
+
+    fn push(&mut self, t: Tensor, op: Op) -> NodeId {
+        let grad = vec![0f32; t.numel()];
+        self.nodes.push(Node { t, grad, op });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    pub fn leaf(&mut self, t: Tensor) -> NodeId {
+        self.push(t, Op::Leaf)
+    }
+
+    pub fn data(&self, id: NodeId) -> &Tensor {
+        &self.nodes[id.0].t
+    }
+
+    /// Gradient of the last `backward` loss w.r.t. node `id`.
+    pub fn grad(&self, id: NodeId) -> &[f32] {
+        &self.nodes[id.0].grad
+    }
+
+    /// `x·Wᵀ + b` — x: `m×k`, w: `n×k` (row-major out×in), b: `1×n`.
+    pub fn linear(&mut self, x: NodeId, w: NodeId, b: NodeId) -> NodeId {
+        let (m, k) = (self.nodes[x.0].t.rows, self.nodes[x.0].t.cols);
+        let n = self.nodes[w.0].t.rows;
+        assert_eq!(self.nodes[w.0].t.cols, k, "linear: x cols {k} vs w cols");
+        assert_eq!(self.nodes[b.0].t.numel(), n, "linear: bias size");
+        let mut out = Tensor::zeros(m, n);
+        ops::linear_forward(
+            &self.nodes[x.0].t.data,
+            &self.nodes[w.0].t.data,
+            &self.nodes[b.0].t.data,
+            m,
+            k,
+            n,
+            &mut out.data,
+            self.pool,
+        );
+        self.push(out, Op::Linear { x, w, b })
+    }
+
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        let mut out = Tensor::zeros(src.rows, src.cols);
+        ops::relu_forward(&src.data, &mut out.data);
+        self.push(out, Op::Relu { x })
+    }
+
+    /// Fake-quantize at `bits` with per-tensor max-abs scale; backward is
+    /// the straight-through estimator.
+    pub fn quant_ste(&mut self, x: NodeId, bits: f32, q: Quantizer) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        let mut out = Tensor::zeros(src.rows, src.cols);
+        ops::fake_quant_forward(&src.data, bits, q, &mut out.data);
+        self.push(out, Op::QuantSte { x })
+    }
+
+    /// Mean softmax cross-entropy of `m×c` logits against class labels.
+    pub fn softmax_ce(&mut self, logits: NodeId, labels: &[i32]) -> CeOut {
+        let (m, c) = (self.nodes[logits.0].t.rows, self.nodes[logits.0].t.cols);
+        assert_eq!(labels.len(), m, "softmax_ce: {m} rows vs {} labels", labels.len());
+        let mut probs = vec![0f32; m * c];
+        let (ce, correct) =
+            ops::softmax_ce_forward(&self.nodes[logits.0].t.data, labels, m, c, &mut probs);
+        let id = self.push(
+            Tensor::scalar(ce),
+            Op::SoftmaxCe { logits, labels: labels.to_vec(), probs },
+        );
+        CeOut { id, ce_mean: ce, correct }
+    }
+
+    fn acc_grad(&mut self, id: NodeId, buf: &[f32]) {
+        for (g, &d) in self.nodes[id.0].grad.iter_mut().zip(buf) {
+            *g += d;
+        }
+    }
+
+    /// Reverse sweep from scalar node `loss` (seeds d loss/d loss = 1).
+    /// Consumes the recorded ops; leaf gradients stay readable.
+    pub fn backward(&mut self, loss: NodeId) {
+        assert_eq!(self.nodes[loss.0].t.numel(), 1, "backward needs a scalar loss");
+        self.nodes[loss.0].grad[0] = 1.0;
+        for i in (0..=loss.0).rev() {
+            let op = std::mem::replace(&mut self.nodes[i].op, Op::Leaf);
+            // nodes above `i` are already processed, so grad[i] is final
+            let g = std::mem::take(&mut self.nodes[i].grad);
+            match op {
+                Op::Leaf => {
+                    // keep leaf grads readable after the sweep
+                    self.nodes[i].grad = g;
+                }
+                Op::Linear { x, w, b } => {
+                    let (m, k) = (self.nodes[x.0].t.rows, self.nodes[x.0].t.cols);
+                    let n = self.nodes[w.0].t.rows;
+                    let mut dx = vec![0f32; m * k];
+                    ops::linear_backward_input(
+                        &g, &self.nodes[w.0].t.data, m, k, n, &mut dx, self.pool,
+                    );
+                    let mut dw = vec![0f32; n * k];
+                    ops::linear_backward_weight(
+                        &g, &self.nodes[x.0].t.data, m, k, n, &mut dw, self.pool,
+                    );
+                    let mut db = vec![0f32; n];
+                    ops::linear_backward_bias(&g, m, n, &mut db);
+                    self.acc_grad(x, &dx);
+                    self.acc_grad(w, &dw);
+                    self.acc_grad(b, &db);
+                }
+                Op::Relu { x } => {
+                    let mut dx = vec![0f32; g.len()];
+                    ops::relu_backward(&self.nodes[x.0].t.data, &g, &mut dx);
+                    self.acc_grad(x, &dx);
+                }
+                Op::QuantSte { x } => {
+                    // straight-through: pass the gradient unchanged
+                    self.acc_grad(x, &g);
+                }
+                Op::SoftmaxCe { logits, labels, probs } => {
+                    let (m, c) = (self.nodes[logits.0].t.rows, self.nodes[logits.0].t.cols);
+                    let mut dl = vec![0f32; m * c];
+                    ops::softmax_ce_backward(&probs, &labels, m, c, g[0], &mut dl);
+                    self.acc_grad(logits, &dl);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_chain_gradients_match_hand_math() {
+        // y = x·Wᵀ + b with one sample, CE over 2 classes; compare the
+        // logit gradient (p − onehot)/m pushed through the linear op.
+        let mut tape = Tape::new(None);
+        let x = tape.leaf(Tensor::from_vec(1, 3, vec![1.0, -2.0, 0.5]));
+        let w = tape.leaf(Tensor::from_vec(2, 3, vec![0.1, 0.2, 0.3, -0.1, 0.0, 0.4]));
+        let b = tape.leaf(Tensor::from_vec(1, 2, vec![0.05, -0.05]));
+        let y = tape.linear(x, w, b);
+        let out = tape.softmax_ce(y, &[1]);
+        tape.backward(out.id);
+
+        let logits = tape.data(y).data.clone();
+        let z: f32 = logits.iter().map(|&v| v.exp()).sum();
+        let p: Vec<f32> = logits.iter().map(|&v| v.exp() / z).collect();
+        let dlogit = [p[0], p[1] - 1.0];
+        let gw = tape.grad(w);
+        for j in 0..2 {
+            for t in 0..3 {
+                let want = dlogit[j] * tape.data(x).data[t];
+                assert!((gw[j * 3 + t] - want).abs() < 1e-5, "dw[{j},{t}]");
+            }
+        }
+        let gb = tape.grad(b);
+        assert!((gb[0] - dlogit[0]).abs() < 1e-5 && (gb[1] - dlogit[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quant_ste_passes_gradient_through() {
+        // tape A: quantized weights as a leaf; tape B: weights -> STE.
+        // Leaf gradients must agree exactly (the STE contract).
+        let w = vec![0.9f32, -0.4, 0.1, 0.6, -1.0, 0.3];
+        let x = vec![0.5f32, -1.0, 0.25];
+
+        let mut qw = vec![0f32; 6];
+        ops::fake_quant_forward(&w, 3.0, Quantizer::RoundClamp, &mut qw);
+
+        let mut ta = Tape::new(None);
+        let xa = ta.leaf(Tensor::from_vec(1, 3, x.clone()));
+        let wa = ta.leaf(Tensor::from_vec(2, 3, qw));
+        let ba = ta.leaf(Tensor::zeros(1, 2));
+        let ya = ta.linear(xa, wa, ba);
+        let la = ta.softmax_ce(ya, &[0]);
+        ta.backward(la.id);
+
+        let mut tb = Tape::new(None);
+        let xb = tb.leaf(Tensor::from_vec(1, 3, x));
+        let wb = tb.leaf(Tensor::from_vec(2, 3, w));
+        let bb = tb.leaf(Tensor::zeros(1, 2));
+        let wq = tb.quant_ste(wb, 3.0, Quantizer::RoundClamp);
+        let yb = tb.linear(xb, wq, bb);
+        let lb = tb.softmax_ce(yb, &[0]);
+        tb.backward(lb.id);
+
+        assert_eq!(ta.grad(wa), tb.grad(wb));
+    }
+
+    #[test]
+    fn relu_blocks_negative_paths() {
+        let mut tape = Tape::new(None);
+        let x = tape.leaf(Tensor::from_vec(1, 2, vec![-1.0, 2.0]));
+        let r = tape.relu(x);
+        let w = tape.leaf(Tensor::from_vec(2, 2, vec![1.0, 1.0, -1.0, 1.0]));
+        let b = tape.leaf(Tensor::zeros(1, 2));
+        let y = tape.linear(r, w, b);
+        let out = tape.softmax_ce(y, &[0]);
+        tape.backward(out.id);
+        let gx = tape.grad(x);
+        assert_eq!(gx[0], 0.0, "gradient must not flow through a dead relu");
+        assert!(gx[1] != 0.0);
+    }
+}

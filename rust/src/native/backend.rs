@@ -1,0 +1,487 @@
+//! [`NativeBackend`]: the pure-Rust implementation of
+//! [`runtime::backend::Backend`] — Algorithm 1 with zero XLA linkage.
+//!
+//! Models are quantized MLPs over the flattened synthetic images (the
+//! shape family `msq serve` executes): every linear layer's weights pass
+//! through the RoundClamp (or DoReFa) fake-quant STE at that layer's
+//! *runtime* bit-width before the matmul, exactly like the AOT graphs
+//! treat `bits` as an input tensor. Biases stay float. When `n_act > 0`,
+//! hidden activations are fake-quantized the same way after ReLU.
+//!
+//! Hutchinson probes (`hessian_step`) use the finite-difference
+//! Hessian-vector product `Hv ≈ (∇L(θ+εv) − ∇L(θ−εv)) / 2ε` on the
+//! *float* network — the same contract as the AOT hessian artifact,
+//! which also takes only params + batch (no bits).
+
+use anyhow::{bail, ensure, Result};
+
+use super::autograd::Tape;
+use super::ops::{self, Quantizer};
+use super::optim::SgdMomentum;
+use super::tensor::Tensor;
+use crate::quant::{lsb_proxy_dorefa, lsb_proxy_roundclamp, to_unit};
+use crate::runtime::backend::{Backend, LayerStats, StepStats};
+use crate::util::prng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// One dense layer: `out × in` weights (the pack/serve layout), a
+/// zero bias, and the weight momentum buffer.
+///
+/// Biases are **fixed at zero** by design: the `.msqpack` format and
+/// the serve MLP execute bias-free layers, so training biases would
+/// silently diverge the exported artifact (where they'd be dropped)
+/// from the accuracy the trainer reports. The tape still threads a
+/// bias node through every `linear` so the op/backward stays covered.
+struct DenseLayer {
+    name: String,
+    w: Tensor,
+    b: Tensor,
+    vw: Vec<f32>,
+}
+
+/// Per-layer `(dw, db)` gradient buffers.
+type LayerGrads = Vec<(Vec<f32>, Vec<f32>)>;
+
+pub struct NativeBackend {
+    pub model: String,
+    pub method: String,
+    batch: usize,
+    input_dim: usize,
+    classes: usize,
+    layers: Vec<DenseLayer>,
+    opt: SgdMomentum,
+    pool: Option<ThreadPool>,
+    quantizer: Quantizer,
+}
+
+impl NativeBackend {
+    /// Quantized MLP `input_dim → hidden… → classes`, He-initialized
+    /// from `seed`. `threads == 0` sizes the pool to the machine;
+    /// `threads == 1` runs single-threaded (no pool).
+    #[allow(clippy::too_many_arguments)]
+    pub fn mlp(
+        model: &str,
+        method: &str,
+        input_dim: usize,
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<NativeBackend> {
+        let quantizer = match method {
+            "msq" => Quantizer::RoundClamp,
+            "dorefa" => Quantizer::DoReFa,
+            _ => bail!("native backend trains msq/dorefa, got {method:?}"),
+        };
+        ensure!(input_dim > 0 && classes > 1 && batch > 0, "bad mlp config");
+        ensure!(hidden.iter().all(|&h| h > 0), "zero hidden width");
+        let mut rng = Rng::new(seed);
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        let layers = (0..dims.len() - 1)
+            .map(|l| {
+                let (cin, cout) = (dims[l], dims[l + 1]);
+                DenseLayer {
+                    name: format!("fc{l}"),
+                    w: Tensor::he_normal(cout, cin, &mut rng),
+                    b: Tensor::zeros(1, cout),
+                    vw: vec![0f32; cout * cin],
+                }
+            })
+            .collect();
+        let threads = if threads == 0 { ThreadPool::default_size() } else { threads };
+        let pool = (threads > 1).then(|| ThreadPool::new(threads));
+        Ok(NativeBackend {
+            model: model.to_string(),
+            method: method.to_string(),
+            batch,
+            input_dim,
+            classes,
+            layers,
+            opt: SgdMomentum::default(),
+            pool,
+            quantizer,
+        })
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<usize> {
+        ensure!(
+            !x.is_empty() && x.len() % self.input_dim == 0,
+            "input length {} does not factor over input dim {}",
+            x.len(),
+            self.input_dim
+        );
+        let m = x.len() / self.input_dim;
+        ensure!(y.len() == m, "{} labels for batch {m}", y.len());
+        Ok(m)
+    }
+
+    /// Forward + backward on one batch; returns per-layer `(dw, db)`
+    /// plus `(mean_ce, correct)`. `bits` of `None` runs the float
+    /// network (the Hessian-probe contract).
+    fn grads(
+        &self,
+        bits: Option<&[f32]>,
+        n_act: f32,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(LayerGrads, f32, f32)> {
+        let m = self.check_batch(x, y)?;
+        let mut tape = Tape::new(self.pool.as_ref());
+        let mut h = tape.leaf(Tensor::from_vec(m, self.input_dim, x.to_vec()));
+        let last = self.layers.len() - 1;
+        let mut wids = Vec::with_capacity(self.layers.len());
+        for (l, layer) in self.layers.iter().enumerate() {
+            let w = tape.leaf(layer.w.clone());
+            let b = tape.leaf(layer.b.clone());
+            wids.push((w, b));
+            let w_eff = match bits {
+                Some(bits) => tape.quant_ste(w, bits[l], self.quantizer),
+                None => w,
+            };
+            h = tape.linear(h, w_eff, b);
+            if l < last {
+                h = tape.relu(h);
+                if bits.is_some() && n_act > 0.0 {
+                    h = tape.quant_ste(h, n_act, self.quantizer);
+                }
+            }
+        }
+        let out = tape.softmax_ce(h, y);
+        tape.backward(out.id);
+        let grads = wids
+            .into_iter()
+            .map(|(w, b)| (tape.grad(w).to_vec(), tape.grad(b).to_vec()))
+            .collect();
+        Ok((grads, out.ce_mean, out.correct))
+    }
+
+    /// Inference-only forward pass; returns `m × classes` logits.
+    fn forward_logits(&self, bits: Option<&[f32]>, n_act: f32, x: &[f32]) -> Vec<f32> {
+        let m = x.len() / self.input_dim;
+        let last = self.layers.len() - 1;
+        let mut cur = x.to_vec();
+        let mut qw = Vec::new();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let (n, k) = (layer.w.rows, layer.w.cols);
+            let w_eff: &[f32] = match bits {
+                Some(bits) => {
+                    qw.resize(n * k, 0.0);
+                    ops::fake_quant_forward(&layer.w.data, bits[l], self.quantizer, &mut qw);
+                    &qw
+                }
+                None => &layer.w.data,
+            };
+            let mut next = vec![0f32; m * n];
+            ops::linear_forward(&cur, w_eff, &layer.b.data, m, k, n, &mut next, self.pool.as_ref());
+            if l < last {
+                for v in next.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                if bits.is_some() && n_act > 0.0 {
+                    let src = next.clone();
+                    ops::fake_quant_forward(&src, n_act, self.quantizer, &mut next);
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    fn lsb_proxy(&self, w01: f32, n: f32, k: f32) -> f32 {
+        match self.quantizer {
+            Quantizer::RoundClamp => lsb_proxy_roundclamp(w01, n, k),
+            Quantizer::DoReFa => lsb_proxy_dorefa(w01, n, k),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.input_dim
+    }
+
+    fn num_q_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn q_layer_name(&self, q: usize) -> String {
+        self.layers[q].name.clone()
+    }
+
+    fn q_sizes(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.w.numel()).collect()
+    }
+
+    fn trainable_params(&self) -> usize {
+        // biases are frozen at zero (see DenseLayer) — weights only
+        self.layers.iter().map(|l| l.w.numel()).sum()
+    }
+
+    fn q_weights(&self, q: usize) -> Result<Vec<f32>> {
+        ensure!(q < self.layers.len(), "layer {q} out of range");
+        Ok(self.layers[q].w.data.clone())
+    }
+
+    fn set_q_weights(&mut self, q: usize, w: &[f32]) -> Result<()> {
+        ensure!(q < self.layers.len(), "layer {q} out of range");
+        let dst = &mut self.layers[q].w;
+        ensure!(w.len() == dst.numel(), "layer {q}: {} != {}", w.len(), dst.numel());
+        dst.data.copy_from_slice(w);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        bits: &[f32],
+        ks: &[f32],
+        lam: f32,
+        lr: f32,
+        n_act: f32,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<StepStats> {
+        ensure!(bits.len() == self.layers.len(), "bits len {}", bits.len());
+        ensure!(ks.len() == self.layers.len(), "ks len {}", ks.len());
+        let (mut grads, ce, correct) = self.grads(Some(bits), n_act, x, y)?;
+
+        // LSB L1 regularizer: loss += λ·Σ_l mean|B_k|; through the STE,
+        // d|B_k|/dw = sign(B_k)/(2s) (w ↦ [0,1] is affine with slope
+        // 1/(2s); the rounded target contributes no gradient).
+        let mut reg_total = 0f64;
+        if lam != 0.0 {
+            for (l, layer) in self.layers.iter().enumerate() {
+                if ks[l] < 1.0 {
+                    continue;
+                }
+                let scale = layer.w.max_abs() + 1e-8;
+                let numel = layer.w.numel() as f32;
+                let gslope = lam / (2.0 * scale * numel);
+                let mut reg_l = 0f64;
+                for (gw, &wv) in grads[l].0.iter_mut().zip(&layer.w.data) {
+                    let b = self.lsb_proxy(to_unit(wv, scale), bits[l], ks[l]);
+                    reg_l += b.abs() as f64;
+                    *gw += gslope * b.signum();
+                }
+                reg_total += reg_l / numel as f64;
+            }
+        }
+
+        let opt = self.opt;
+        for (layer, (gw, _gb)) in self.layers.iter_mut().zip(&grads) {
+            // bias grads are computed by the tape but not applied: the
+            // packed format has nowhere to put trained biases
+            opt.step(&mut layer.w.data, gw, &mut layer.vw, lr);
+        }
+        let loss = ce + lam * reg_total as f32;
+        Ok(StepStats { loss, ce, correct })
+    }
+
+    fn eval_step(&mut self, bits: &[f32], n_act: f32, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let m = self.check_batch(x, y)?;
+        ensure!(bits.len() == self.layers.len(), "bits len {}", bits.len());
+        let logits = self.forward_logits(Some(bits), n_act, x);
+        let mut probs = vec![0f32; m * self.classes];
+        let (ce_mean, correct) =
+            ops::softmax_ce_forward(&logits, y, m, self.classes, &mut probs);
+        Ok((ce_mean * m as f32, correct))
+    }
+
+    fn supports_stats(&self) -> bool {
+        true
+    }
+
+    fn stats_step(&mut self, bits: &[f32], ks: &[f32]) -> Result<LayerStats> {
+        ensure!(bits.len() == self.layers.len(), "bits len {}", bits.len());
+        let mut stats = LayerStats::default();
+        let mut scratch = Vec::new();
+        for (l, layer) in self.layers.iter().enumerate() {
+            stats.beta.push(crate::quant::beta_slice(&layer.w.data, bits[l], ks[l]));
+            scratch.resize(layer.w.numel(), 0.0);
+            ops::fake_quant_forward(&layer.w.data, bits[l], self.quantizer, &mut scratch);
+            let qerr: f64 = layer
+                .w
+                .data
+                .iter()
+                .zip(&scratch)
+                .map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum();
+            stats.qerr.push(qerr as f32);
+            let scale = layer.w.max_abs() + 1e-8;
+            let reg: f64 = layer
+                .w
+                .data
+                .iter()
+                .map(|&wv| self.lsb_proxy(to_unit(wv, scale), bits[l], ks[l]).abs() as f64)
+                .sum();
+            stats.reg.push((reg / layer.w.numel().max(1) as f64) as f32);
+        }
+        Ok(stats)
+    }
+
+    fn supports_hessian(&self) -> bool {
+        true
+    }
+
+    fn hessian_step(&mut self, x: &[f32], y: &[i32], seed: u64) -> Result<Vec<f32>> {
+        self.check_batch(x, y)?;
+        let mut rng = Rng::new(seed ^ 0x4856_5052);
+        let vs: Vec<Vec<f32>> = self
+            .layers
+            .iter()
+            .map(|l| (0..l.w.numel()).map(|_| rng.rademacher()).collect())
+            .collect();
+        // ε relative to the parameter scale: FD noise ∝ 1/ε, curvature
+        // error ∝ ε — 1e-2·rms sits comfortably between both for f32
+        let sq: f64 = self.layers.iter().map(|l| l.w.sq_norm()).sum();
+        let n: usize = self.layers.iter().map(|l| l.w.numel()).sum();
+        let eps = (1e-2 * (sq / n.max(1) as f64).sqrt()).max(1e-5) as f32;
+
+        let perturb = |layers: &mut Vec<DenseLayer>, sign: f32| {
+            for (layer, v) in layers.iter_mut().zip(&vs) {
+                for (w, &vi) in layer.w.data.iter_mut().zip(v) {
+                    *w += sign * eps * vi;
+                }
+            }
+        };
+        perturb(&mut self.layers, 1.0);
+        let (gp, _, _) = self.grads(None, 0.0, x, y)?;
+        perturb(&mut self.layers, -2.0);
+        let (gm, _, _) = self.grads(None, 0.0, x, y)?;
+        perturb(&mut self.layers, 1.0); // restore
+
+        let mut vhv = Vec::with_capacity(self.layers.len());
+        for ((p, m), v) in gp.iter().zip(&gm).zip(&vs) {
+            let dot: f64 = p
+                .0
+                .iter()
+                .zip(&m.0)
+                .zip(v)
+                .map(|((&a, &b), &vi)| ((a - b) as f64) * vi as f64)
+                .sum();
+            vhv.push((dot / (2.0 * eps as f64)) as f32);
+        }
+        Ok(vhv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> NativeBackend {
+        NativeBackend::mlp("mlp", "msq", 8, &[6], 3, 4, 7, 1).unwrap()
+    }
+
+    fn toy_batch(be: &NativeBackend, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..be.batch() * be.input_elems()).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..be.batch()).map(|_| rng.below(3) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn shapes_and_accessors() {
+        let be = toy();
+        assert_eq!(be.num_q_layers(), 2);
+        assert_eq!(be.q_sizes(), vec![48, 18]);
+        assert_eq!(be.trainable_params(), 48 + 18); // biases frozen at zero
+        assert_eq!(be.q_layer_name(0), "fc0");
+        assert_eq!(be.q_weights(0).unwrap().len(), 48);
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let mut be = toy();
+        let (x, y) = toy_batch(&be, 1);
+        let bits = vec![8.0f32; 2];
+        let ks = vec![1.0f32; 2];
+        let first = be.train_step(&bits, &ks, 0.0, 0.1, 0.0, &x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = be.train_step(&bits, &ks, 0.0, 0.1, 0.0, &x, &y).unwrap();
+        }
+        assert!(
+            last.ce < 0.5 * first.ce,
+            "loss did not drop: {} -> {}",
+            first.ce,
+            last.ce
+        );
+    }
+
+    #[test]
+    fn regularizer_increases_loss_and_moves_weights() {
+        let mut a = toy();
+        let mut b = NativeBackend::mlp("mlp", "msq", 8, &[6], 3, 4, 7, 1).unwrap();
+        let (x, y) = toy_batch(&a, 2);
+        let bits = vec![4.0f32; 2];
+        let ks = vec![1.0f32; 2];
+        let sa = a.train_step(&bits, &ks, 0.0, 0.05, 0.0, &x, &y).unwrap();
+        let sb = b.train_step(&bits, &ks, 0.1, 0.05, 0.0, &x, &y).unwrap();
+        assert!((sa.ce - sb.ce).abs() < 1e-5, "same init, same batch, same ce");
+        assert!(sb.loss > sb.ce, "λ > 0 must add a positive reg term");
+        assert_ne!(a.q_weights(0).unwrap(), b.q_weights(0).unwrap());
+    }
+
+    #[test]
+    fn regularizer_drives_beta_down() {
+        let mut be = toy();
+        let (x, y) = toy_batch(&be, 3);
+        let bits = vec![4.0f32; 2];
+        let ks = vec![1.0f32; 2];
+        let beta0 = be.stats_step(&bits, &ks).unwrap().beta;
+        for _ in 0..150 {
+            be.train_step(&bits, &ks, 0.5, 0.01, 0.0, &x, &y).unwrap();
+        }
+        let beta1 = be.stats_step(&bits, &ks).unwrap().beta;
+        assert!(
+            beta1.iter().sum::<f32>() < beta0.iter().sum::<f32>(),
+            "β did not fall: {beta0:?} -> {beta1:?}"
+        );
+    }
+
+    #[test]
+    fn eval_matches_train_statistics_at_init() {
+        let mut be = toy();
+        let (x, y) = toy_batch(&be, 4);
+        let bits = vec![8.0f32; 2];
+        let (ce_sum, correct) = be.eval_step(&bits, 0.0, &x, &y).unwrap();
+        assert!(ce_sum.is_finite() && ce_sum > 0.0);
+        assert!((0.0..=4.0).contains(&correct));
+    }
+
+    #[test]
+    fn hessian_probe_is_finite_and_restores_weights() {
+        let mut be = toy();
+        let (x, y) = toy_batch(&be, 5);
+        let before = be.q_weights(0).unwrap();
+        let vhv = be.hessian_step(&x, &y, 42).unwrap();
+        assert_eq!(vhv.len(), 2);
+        assert!(vhv.iter().all(|v| v.is_finite()));
+        let after = be.q_weights(0).unwrap();
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() < 1e-5, "weights not restored: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn set_q_weights_roundtrip_and_validation() {
+        let mut be = toy();
+        let w = vec![0.25f32; 48];
+        be.set_q_weights(0, &w).unwrap();
+        assert_eq!(be.q_weights(0).unwrap(), w);
+        assert!(be.set_q_weights(0, &[0.0; 3]).is_err());
+        assert!(be.set_q_weights(9, &w).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! Native pure-Rust training backend (design notes).
+//!
+//! The XLA/PJRT path trains by driving AOT-compiled HLO artifacts, which
+//! requires a real xla-rs vendoring the default build doesn't have. This
+//! module closes the train → pack → serve loop **with zero XLA linkage**:
+//! a small tensor + autodiff subsystem sized exactly to what Algorithm 1
+//! needs, behind the same [`crate::runtime::backend::Backend`] trait the
+//! PJRT engine implements. `msq train --backend native` therefore runs
+//! the paper's full schedule — RoundClamp STE quantization in the
+//! forward pass, LSB L1 bit-sparsity regularization, Hutchinson
+//! Hessian-trace probes driving multi-LSB pruning — on stock hardware,
+//! and its `.msqpack` exports load straight into the `serve` registry.
+//!
+//! Layout (≈ one concept per file):
+//!
+//! * [`tensor`] — row-major rank-≤2 f32 tensors (`batch × dim`
+//!   activations, `out × in` weights, matching the pack/serve layout);
+//! * [`ops`] — forward/backward kernels: transposed-B matmul, bias,
+//!   ReLU, softmax-CE (f64 log-sum-exp), RoundClamp/DoReFa fake-quant
+//!   with the straight-through estimator; matmuls parallelize over
+//!   `util::threadpool`'s resident workers;
+//! * [`autograd`] — a reverse-mode tape over those ops (enum-coded
+//!   graph, no boxed closures; one tape per step);
+//! * [`optim`] — SGD with heavy-ball momentum (the cosine lr schedule
+//!   stays in `coordinator::schedule`, fed per step like the XLA path);
+//! * [`backend`] — [`NativeBackend`]: a quantized MLP over the
+//!   flattened synthetic images implementing `Backend`, including
+//!   per-layer β/‖W_n−W‖² stats and finite-difference Hutchinson
+//!   probes (`Hv ≈ (∇L(θ+εv) − ∇L(θ−εv))/2ε`).
+//!
+//! Deviations from the XLA path, by design: models are MLP-shaped (the
+//! topology the `.msqpack` v1 header can express and `msq serve`
+//! executes) with biases frozen at zero (the packed format has no bias
+//! section, so training them would diverge the exported artifact from
+//! the reported accuracy); activation quantization maps through the
+//! same signed `to_unit` affine as weights; Hessian probes
+//! differentiate twice by finite differences instead of a second
+//! reverse sweep. Gradient
+//! correctness is pinned by finite-difference checks in
+//! `tests/native_grad.rs` (rel. err < 1e-3) and the STE/oracle golden
+//! vectors shared with `python/compile/quant.py`.
+
+pub mod autograd;
+pub mod backend;
+pub mod ops;
+pub mod optim;
+pub mod tensor;
+
+pub use autograd::{CeOut, NodeId, Tape};
+pub use backend::NativeBackend;
+pub use ops::Quantizer;
+pub use tensor::Tensor;

@@ -1,0 +1,332 @@
+//! Forward + backward kernels for the native training backend.
+//!
+//! Plain slice-level math with explicit dimensions; `autograd::Tape`
+//! composes these into a differentiable MLP. Matmul-shaped ops
+//! parallelize over the thread pool's resident workers (rows are
+//! disjoint, so workers write through a shared raw pointer exactly like
+//! the data pipeline's renderer).
+//!
+//! Conventions (see `tensor.rs`): activations `m × k` batch-major,
+//! weights `n × k` row-major (`n` outputs, `k` inputs — the serve/pack
+//! layout), bias `1 × n`, labels `i32` class ids.
+
+use crate::quant::{dorefa01, from_unit, roundclamp01, to_unit};
+use crate::util::threadpool::ThreadPool;
+
+/// Which [0,1] quantizer the fake-quant op applies (paper Eq. 1 vs 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quantizer {
+    RoundClamp,
+    DoReFa,
+}
+
+impl Quantizer {
+    #[inline]
+    pub fn apply(self, w01: f32, bits: f32) -> f32 {
+        match self {
+            Quantizer::RoundClamp => roundclamp01(w01, bits),
+            Quantizer::DoReFa => dorefa01(w01, bits),
+        }
+    }
+}
+
+/// Shared mutable output pointer for row-disjoint parallel writes.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[inline]
+fn par_rows(pool: Option<&ThreadPool>, rows: usize, min_flops: usize, f: impl Fn(usize) + Sync) {
+    match pool {
+        // tiny problems aren't worth a dispatch round-trip
+        Some(p) if rows > 1 && min_flops >= 16_384 => p.par_for(rows, f),
+        _ => {
+            for r in 0..rows {
+                f(r);
+            }
+        }
+    }
+}
+
+/// `out[i,j] = Σ_t x[i,t]·w[j,t] + b[j]` — x is `m×k`, w is `n×k`
+/// (transposed-B matmul: both dots run over contiguous memory).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let optr = SendPtr(out.as_mut_ptr());
+    let optr = &optr;
+    par_rows(pool, m, m * n * k, |i| {
+        let xi = &x[i * k..(i + 1) * k];
+        let orow = unsafe { std::slice::from_raw_parts_mut(optr.get().add(i * n), n) };
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wj = &w[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += xi[t] * wj[t];
+            }
+            *o = acc + b[j];
+        }
+    });
+}
+
+/// `dx[i,t] += Σ_j dy[i,j]·w[j,t]` (rows of `dx` are disjoint).
+pub fn linear_backward_input(
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dx: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let dxp = SendPtr(dx.as_mut_ptr());
+    let dxp = &dxp;
+    par_rows(pool, m, m * n * k, |i| {
+        let dyi = &dy[i * n..(i + 1) * n];
+        let dxi = unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * k), k) };
+        for (j, &g) in dyi.iter().enumerate() {
+            if g == 0.0 {
+                continue;
+            }
+            let wj = &w[j * k..(j + 1) * k];
+            for t in 0..k {
+                dxi[t] += g * wj[t];
+            }
+        }
+    });
+}
+
+/// `dw[j,t] += Σ_i dy[i,j]·x[i,t]` (rows of `dw` are disjoint).
+pub fn linear_backward_weight(
+    dy: &[f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dw.len(), n * k);
+    let dwp = SendPtr(dw.as_mut_ptr());
+    let dwp = &dwp;
+    par_rows(pool, n, m * n * k, |j| {
+        let dwj = unsafe { std::slice::from_raw_parts_mut(dwp.get().add(j * k), k) };
+        for i in 0..m {
+            let g = dy[i * n + j];
+            if g == 0.0 {
+                continue;
+            }
+            let xi = &x[i * k..(i + 1) * k];
+            for t in 0..k {
+                dwj[t] += g * xi[t];
+            }
+        }
+    });
+}
+
+/// `db[j] += Σ_i dy[i,j]`.
+pub fn linear_backward_bias(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(db.len(), n);
+    for i in 0..m {
+        for (j, d) in db.iter_mut().enumerate() {
+            *d += dy[i * n + j];
+        }
+    }
+}
+
+pub fn relu_forward(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v.max(0.0);
+    }
+}
+
+/// `dx[i] += dy[i] · 1[x[i] > 0]`.
+pub fn relu_backward(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    for ((d, &g), &v) in dx.iter_mut().zip(dy).zip(x) {
+        if v > 0.0 {
+            *d += g;
+        }
+    }
+}
+
+/// Softmax cross-entropy over `m × c` logits with integer labels.
+/// Writes the softmax probabilities into `probs` (cached for backward)
+/// and returns `(mean_ce, correct_count)`. The log-sum-exp runs in f64
+/// so gradient checks aren't drowned by accumulation noise.
+pub fn softmax_ce_forward(
+    logits: &[f32],
+    labels: &[i32],
+    m: usize,
+    c: usize,
+    probs: &mut [f32],
+) -> (f32, f32) {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(labels.len(), m);
+    debug_assert_eq!(probs.len(), m * c);
+    let mut ce = 0f64;
+    let mut correct = 0f32;
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut z = 0f64;
+        for &v in row {
+            z += ((v - mx) as f64).exp();
+        }
+        let y = labels[i] as usize;
+        debug_assert!(y < c, "label {y} out of range {c}");
+        ce += z.ln() - (row[y] - mx) as f64;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[argmax] {
+                argmax = j;
+            }
+            probs[i * c + j] = (((v - mx) as f64).exp() / z) as f32;
+        }
+        if argmax == y {
+            correct += 1.0;
+        }
+    }
+    ((ce / m as f64) as f32, correct)
+}
+
+/// `dlogits[i,j] += upstream · (p[i,j] − 1[j == y_i]) / m`.
+pub fn softmax_ce_backward(
+    probs: &[f32],
+    labels: &[i32],
+    m: usize,
+    c: usize,
+    upstream: f32,
+    dlogits: &mut [f32],
+) {
+    let inv_m = upstream / m as f32;
+    for i in 0..m {
+        let y = labels[i] as usize;
+        for j in 0..c {
+            let ind = if j == y { 1.0 } else { 0.0 };
+            dlogits[i * c + j] += inv_m * (probs[i * c + j] - ind);
+        }
+    }
+}
+
+/// Fake-quantize `w` at `bits` with the per-tensor max-abs scale
+/// (`quant::to_unit` / `from_unit` lattice). Returns the scale; the
+/// backward is the straight-through estimator (gradient copies through
+/// unchanged), so there is no paired backward kernel.
+pub fn fake_quant_forward(w: &[f32], bits: f32, q: Quantizer, out: &mut [f32]) -> f32 {
+    let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
+    for (o, &x) in out.iter_mut().zip(w) {
+        *o = from_unit(q.apply(to_unit(x, scale), bits), scale);
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn linear_matches_naive() {
+        let (m, k, n) = (3, 5, 4);
+        let x = rand(m * k, 1);
+        let w = rand(n * k, 2);
+        let b = rand(n, 3);
+        let mut out = vec![0f32; m * n];
+        linear_forward(&x, &w, &b, m, k, n, &mut out, None);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|t| x[i * k + t] * w[j * k + t]).sum::<f32>() + b[j];
+                assert!((out[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_pooled_matches_serial() {
+        let (m, k, n) = (64, 96, 32);
+        let x = rand(m * k, 4);
+        let w = rand(n * k, 5);
+        let b = rand(n, 6);
+        let mut serial = vec![0f32; m * n];
+        let mut pooled = vec![0f32; m * n];
+        linear_forward(&x, &w, &b, m, k, n, &mut serial, None);
+        let pool = ThreadPool::new(4);
+        linear_forward(&x, &w, &b, m, k, n, &mut pooled, Some(&pool));
+        assert_eq!(serial, pooled);
+
+        let dy = rand(m * n, 7);
+        let mut dxs = vec![0f32; m * k];
+        let mut dxp = vec![0f32; m * k];
+        linear_backward_input(&dy, &w, m, k, n, &mut dxs, None);
+        linear_backward_input(&dy, &w, m, k, n, &mut dxp, Some(&pool));
+        assert_eq!(dxs, dxp);
+        let mut dws = vec![0f32; n * k];
+        let mut dwp = vec![0f32; n * k];
+        linear_backward_weight(&dy, &x, m, k, n, &mut dws, None);
+        linear_backward_weight(&dy, &x, m, k, n, &mut dwp, Some(&pool));
+        assert_eq!(dws, dwp);
+    }
+
+    #[test]
+    fn softmax_probs_normalize_and_count_correct() {
+        let logits = vec![2.0, 0.5, -1.0, 0.0, 3.0, 0.0];
+        let labels = vec![0, 1];
+        let mut probs = vec![0f32; 6];
+        let (ce, correct) = softmax_ce_forward(&logits, &labels, 2, 3, &mut probs);
+        assert!(ce > 0.0);
+        assert_eq!(correct, 2.0);
+        for i in 0..2 {
+            let s: f32 = probs[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let x = vec![-1.0, 0.0, 2.0];
+        let mut y = vec![0f32; 3];
+        relu_forward(&x, &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 2.0]);
+        let mut dx = vec![0f32; 3];
+        relu_backward(&x, &[1.0, 1.0, 1.0], &mut dx);
+        assert_eq!(dx, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fake_quant_lattice() {
+        let w = vec![-1.0f32, -0.5, 0.0, 0.25, 1.0];
+        let mut q = vec![0f32; w.len()];
+        let scale = fake_quant_forward(&w, 8.0, Quantizer::RoundClamp, &mut q);
+        assert!((scale - 1.0).abs() < 1e-6);
+        for (a, b) in w.iter().zip(&q) {
+            assert!((a - b).abs() < 2.0 * scale * 2.0 / 255.0, "{a} vs {b}");
+        }
+    }
+}

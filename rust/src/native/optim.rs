@@ -1,0 +1,74 @@
+//! SGD with momentum for the native backend.
+//!
+//! The learning-rate *schedule* (warm-start cosine, paper Sec. 4.1) is
+//! the trainer's job — `coordinator::schedule::cosine_lr` computes the
+//! per-step lr and passes it down through `Backend::train_step`, exactly
+//! as the XLA path feeds lr as a runtime scalar. This module owns the
+//! parameter update itself: classic heavy-ball momentum
+//! `v ← μ·v + g; θ ← θ − lr·v`, matching the artifacts' SGD.
+
+#[derive(Clone, Copy, Debug)]
+pub struct SgdMomentum {
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for SgdMomentum {
+    fn default() -> Self {
+        SgdMomentum { momentum: 0.9, weight_decay: 0.0 }
+    }
+}
+
+impl SgdMomentum {
+    /// One parameter update; `v` is the persistent momentum buffer.
+    pub fn step(&self, w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), v.len());
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        for ((wi, &gi), vi) in w.iter_mut().zip(g).zip(v.iter_mut()) {
+            let grad = gi + wd * *wi;
+            *vi = mu * *vi + grad;
+            *wi -= lr * *vi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_when_momentum_zero() {
+        let opt = SgdMomentum { momentum: 0.0, weight_decay: 0.0 };
+        let mut w = vec![1.0f32, -1.0];
+        let mut v = vec![0f32; 2];
+        opt.step(&mut w, &[0.5, -0.5], &mut v, 0.1);
+        assert!((w[0] - 0.95).abs() < 1e-6);
+        assert!((w[1] + 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let opt = SgdMomentum { momentum: 0.9, weight_decay: 0.0 };
+        let mut w = vec![0f32];
+        let mut v = vec![0f32];
+        opt.step(&mut w, &[1.0], &mut v, 1.0); // v=1, w=-1
+        opt.step(&mut w, &[1.0], &mut v, 1.0); // v=1.9, w=-2.9
+        assert!((w[0] + 2.9).abs() < 1e-6);
+        assert!((v[0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // f(w) = 0.5·w², g = w — momentum SGD must converge to 0
+        let opt = SgdMomentum { momentum: 0.9, weight_decay: 0.0 };
+        let mut w = vec![5.0f32];
+        let mut v = vec![0f32];
+        for _ in 0..200 {
+            let g = [w[0]];
+            opt.step(&mut w, &g, &mut v, 0.05);
+        }
+        assert!(w[0].abs() < 1e-2, "w = {}", w[0]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Dense f32 tensors for the native backend.
+//!
+//! Everything the native MLP trainer touches is rank ≤ 2, so `Tensor` is
+//! a row-major `rows × cols` buffer: activations are `batch × dim`,
+//! weights are `out × in` (matching the `.msqpack` / serve layout), a
+//! bias is `1 × dim`, and a scalar is `1 × 1`. Images enter flattened.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor { rows, cols, data: vec![0f32; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols, "tensor {rows}x{cols} from {} values", data.len());
+        Tensor { rows, cols, data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { rows: 1, cols: 1, data: vec![v] }
+    }
+
+    /// He-normal init for a `out × in` weight matrix (std = √(2/in)).
+    pub fn he_normal(rows: usize, cols: usize, rng: &mut Rng) -> Tensor {
+        let std = (2.0 / cols.max(1) as f32).sqrt();
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Tensor { rows, cols, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Row `r` as a slice (activations: one sample; weights: one output).
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Max-abs value (the per-tensor quantization scale's numerator).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Σ x², accumulated in f64 (quantization-error accounting).
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(Tensor::zeros(2, 2).data, vec![0.0; 4]);
+        assert_eq!(Tensor::scalar(3.5).data, vec![3.5]);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::he_normal(64, 128, &mut rng);
+        let var = t.sq_norm() / t.numel() as f64;
+        let want = 2.0 / 128.0;
+        assert!((var - want).abs() < 0.3 * want, "var {var} vs {want}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(2, 2, vec![0.0; 5]);
+    }
+}

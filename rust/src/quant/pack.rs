@@ -354,6 +354,26 @@ mod tests {
     }
 
     #[test]
+    fn synth_mlp_is_seed_reproducible() {
+        // `msq pack-synth --seed S` threads S straight into weight
+        // generation: identical seeds must produce byte-identical packs
+        // (serve e2e fixtures depend on this), different seeds must not.
+        let dims = [24usize, 16, 4];
+        let bits = [4u8, 3];
+        let a = PackedModel::synth_mlp(&dims, &bits, 42).unwrap();
+        let b = PackedModel::synth_mlp(&dims, &bits, 42).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.data, lb.data);
+            assert_eq!(la.scale, lb.scale);
+        }
+        let c = PackedModel::synth_mlp(&dims, &bits, 43).unwrap();
+        assert!(
+            a.layers.iter().zip(&c.layers).any(|(x, y)| x.data != y.data),
+            "different seeds produced identical packs"
+        );
+    }
+
+    #[test]
     fn corrupt_file_rejected() {
         let path = std::env::temp_dir().join("msq_pack_bad.msqpack");
         std::fs::write(&path, b"NOTPACK!").unwrap();

@@ -1,0 +1,259 @@
+//! The [`Backend`] trait: everything Algorithm 1 needs from an execution
+//! engine, extracted from the PJRT `Engine`/`ModelState` pair so the
+//! coordinator's `Trainer` runs unchanged against either the XLA runtime
+//! (`--features pjrt`) or the pure-Rust native backend (`native::NativeBackend`,
+//! the default build).
+//!
+//! The trait speaks host types only — flat `&[f32]` batches, `i32`
+//! labels, per-layer `bits`/`ks` vectors — mirroring the runtime-input
+//! design of the AOT artifacts (precision is data, not code). Each
+//! implementation owns its parameters, momenta, and whatever device
+//! state it needs; the trainer owns the schedule, the bit-state, and the
+//! pruning policy.
+
+use anyhow::Result;
+
+/// Scalars returned by one optimization step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// full loss: CE + λ·Σ_l mean|B_k|
+    pub loss: f32,
+    /// cross-entropy term alone
+    pub ce: f32,
+    /// correct top-1 predictions in the batch
+    pub correct: f32,
+}
+
+/// Per-layer statistics for a pruning round (each `Vec` has length Lq).
+#[derive(Clone, Debug, Default)]
+pub struct LayerStats {
+    /// β_l: fraction of weights whose k LSBs are nonzero (paper Eq. 6)
+    pub beta: Vec<f32>,
+    /// ‖W_n − W‖² quantization error (the Ω factor, paper Eq. 9)
+    pub qerr: Vec<f32>,
+    /// mean |B_k| regularizer magnitude (diagnostic)
+    pub reg: Vec<f32>,
+}
+
+/// One training/eval engine the coordinator can drive.
+pub trait Backend {
+    /// "native" | "pjrt" — for logs and reports.
+    fn kind(&self) -> &'static str;
+    /// Fixed batch size of `train_step` inputs.
+    fn batch(&self) -> usize;
+    /// Fixed batch size of `eval_step` inputs.
+    fn eval_batch(&self) -> usize {
+        self.batch()
+    }
+    /// Batch size `hessian_step` consumes (probe batches are truncated
+    /// to this length).
+    fn hess_batch(&self) -> usize {
+        self.batch()
+    }
+    /// Flattened elements per input sample (e.g. H·W·C).
+    fn input_elems(&self) -> usize;
+    fn num_q_layers(&self) -> usize;
+    fn q_layer_name(&self, q: usize) -> String;
+    /// Per-quantized-layer weight counts (compression accounting).
+    fn q_sizes(&self) -> Vec<usize>;
+    fn trainable_params(&self) -> usize;
+    /// Float weights of quantized layer `q` (export path).
+    fn q_weights(&self, q: usize) -> Result<Vec<f32>>;
+    /// Replace the float weights of quantized layer `q` (packed-model
+    /// re-import path).
+    fn set_q_weights(&mut self, q: usize, w: &[f32]) -> Result<()>;
+
+    /// One SGD step at the given per-layer precisions: forward with the
+    /// quantizer's STE, LSB L1 regularizer at strength `lam`, parameter
+    /// and momentum update at `lr`.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        bits: &[f32],
+        ks: &[f32],
+        lam: f32,
+        lr: f32,
+        n_act: f32,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<StepStats>;
+
+    /// Evaluate one batch; returns `(ce_sum, correct_count)`.
+    fn eval_step(&mut self, bits: &[f32], n_act: f32, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Whether `stats_step` is available (pruning rounds are skipped
+    /// otherwise, matching the old stats-artifact-missing behavior).
+    fn supports_stats(&self) -> bool;
+    fn stats_step(&mut self, bits: &[f32], ks: &[f32]) -> Result<LayerStats>;
+
+    /// Whether `hessian_step` is available (Ω falls back to uniform).
+    fn supports_hessian(&self) -> bool;
+    /// One Hutchinson probe on the float network: per-layer vᵀHv.
+    fn hessian_step(&mut self, x: &[f32], y: &[i32], seed: u64) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT adapter: the original Engine/ModelState path behind the trait
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtBackend;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use anyhow::{Context, Result};
+
+    use super::{Backend, LayerStats, StepStats};
+    use crate::runtime::artifacts::ArtifactMeta;
+    use crate::runtime::engine::{self, Engine};
+    use crate::runtime::state::ModelState;
+
+    /// XLA-backed [`Backend`]: compiled AOT artifacts driven through the
+    /// PJRT engine, host state in `ModelState` literals.
+    pub struct PjrtBackend<'e> {
+        pub eng: &'e Engine,
+        pub state: ModelState,
+        pub train_meta: ArtifactMeta,
+        pub eval_meta: ArtifactMeta,
+        pub stats_meta: Option<ArtifactMeta>,
+        pub hess_meta: Option<ArtifactMeta>,
+    }
+
+    impl<'e> PjrtBackend<'e> {
+        /// Resolve the artifact family for `(model, method)` at `batch`.
+        pub fn new(
+            eng: &'e Engine,
+            model: &str,
+            method: &str,
+            batch: usize,
+        ) -> Result<PjrtBackend<'e>> {
+            let train_meta = eng
+                .manifest
+                .find_batch(model, method, "train", batch)
+                .or_else(|_| eng.manifest.find(model, method, "train"))?
+                .clone();
+            let eval_meta = eng.manifest.find(model, method, "eval")?.clone();
+            let stats_meta = eng.manifest.find(model, method, "stats").ok().cloned();
+            let hess_meta = eng.manifest.find(model, "msq", "hessian").ok().cloned();
+            let state = ModelState::init(&eng.manifest, &train_meta)?;
+            Ok(PjrtBackend { eng, state, train_meta, eval_meta, stats_meta, hess_meta })
+        }
+
+        fn lit_batch(
+            &self,
+            meta: &ArtifactMeta,
+            x: &[f32],
+            y: &[i32],
+        ) -> Result<(xla::Literal, xla::Literal)> {
+            let img = &meta.image;
+            let xl = engine::lit_f32(x, &[meta.batch, img[0], img[1], img[2]])?;
+            let yl = engine::lit_i32(y, &[meta.batch])?;
+            Ok((xl, yl))
+        }
+    }
+
+    impl Backend for PjrtBackend<'_> {
+        fn kind(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn batch(&self) -> usize {
+            self.train_meta.batch
+        }
+
+        fn eval_batch(&self) -> usize {
+            self.eval_meta.batch
+        }
+
+        fn hess_batch(&self) -> usize {
+            self.hess_meta.as_ref().map(|m| m.batch).unwrap_or(8)
+        }
+
+        fn input_elems(&self) -> usize {
+            self.train_meta.image.iter().product()
+        }
+
+        fn num_q_layers(&self) -> usize {
+            self.train_meta.num_q_layers
+        }
+
+        fn q_layer_name(&self, q: usize) -> String {
+            self.train_meta.q_layers.get(q).map(|l| l.name.clone()).unwrap_or_else(|| {
+                format!("q{q}")
+            })
+        }
+
+        fn q_sizes(&self) -> Vec<usize> {
+            self.train_meta.q_sizes()
+        }
+
+        fn trainable_params(&self) -> usize {
+            self.state.trainable_params()
+        }
+
+        fn q_weights(&self, q: usize) -> Result<Vec<f32>> {
+            self.state.q_weights(q)
+        }
+
+        fn set_q_weights(&mut self, q: usize, w: &[f32]) -> Result<()> {
+            self.state.set_q_weights(q, w)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn train_step(
+            &mut self,
+            bits: &[f32],
+            ks: &[f32],
+            lam: f32,
+            lr: f32,
+            n_act: f32,
+            x: &[f32],
+            y: &[i32],
+        ) -> Result<StepStats> {
+            let meta = self.train_meta.clone();
+            let bits_l = engine::lit_f32(bits, &[bits.len()])?;
+            let ks_l = engine::lit_f32(ks, &[ks.len()])?;
+            let (xl, yl) = self.lit_batch(&meta, x, y)?;
+            let (loss, ce, correct) = self
+                .state
+                .train_step(self.eng, &meta, &bits_l, &ks_l, lam, lr, 1.0, n_act, &xl, &yl)?;
+            Ok(StepStats { loss, ce, correct })
+        }
+
+        fn eval_step(
+            &mut self,
+            bits: &[f32],
+            n_act: f32,
+            x: &[f32],
+            y: &[i32],
+        ) -> Result<(f32, f32)> {
+            let meta = self.eval_meta.clone();
+            let bits_l = engine::lit_f32(bits, &[bits.len()])?;
+            let (xl, yl) = self.lit_batch(&meta, x, y)?;
+            self.state.eval_step(self.eng, &meta, &bits_l, 1.0, n_act, &xl, &yl)
+        }
+
+        fn supports_stats(&self) -> bool {
+            self.stats_meta.is_some()
+        }
+
+        fn stats_step(&mut self, bits: &[f32], ks: &[f32]) -> Result<LayerStats> {
+            let meta = self.stats_meta.clone().context("no stats artifact")?;
+            let bits_l = engine::lit_f32(bits, &[bits.len()])?;
+            let ks_l = engine::lit_f32(ks, &[ks.len()])?;
+            let (beta, qerr, reg) = self.state.stats_step(self.eng, &meta, &bits_l, &ks_l)?;
+            Ok(LayerStats { beta, qerr, reg })
+        }
+
+        fn supports_hessian(&self) -> bool {
+            self.hess_meta.is_some()
+        }
+
+        fn hessian_step(&mut self, x: &[f32], y: &[i32], seed: u64) -> Result<Vec<f32>> {
+            let meta = self.hess_meta.clone().context("no hessian artifact")?;
+            let (xl, yl) = self.lit_batch(&meta, x, y)?;
+            let seed = (seed & 0x7FFF_FFFF) as i32;
+            self.state.hessian_step(self.eng, &meta, &xl, &yl, seed)
+        }
+    }
+}

@@ -2,18 +2,24 @@
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
 //!
 //! This is the *only* place the stack touches XLA; the coordinator above
-//! it deals in `ModelState` (host parameter literals) and flat metric
-//! vectors. One compiled executable per artifact, cached for the process
+//! it deals in the [`backend::Backend`] trait (flat host slices in, flat
+//! metric vectors out), which the PJRT engine implements alongside the
+//! pure-Rust `native` backend. One compiled executable per artifact,
+//! cached for the process
 //! lifetime — precision changes are runtime inputs, so the whole training
 //! schedule reuses a single compilation per step-function.
 
 pub mod artifacts;
+pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod state;
 
 pub use artifacts::{ArtifactMeta, IoDesc, Manifest, QLayer};
+pub use backend::{Backend, LayerStats, StepStats};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 #[cfg(feature = "pjrt")]

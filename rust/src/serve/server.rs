@@ -164,9 +164,9 @@ pub struct Server {
 impl Server {
     pub fn start(model: Arc<ServableModel>, cfg: ServerConfig) -> Server {
         let threads = if cfg.threads == 0 { ThreadPool::default_size() } else { cfg.threads };
-        // width-only pool: par_for spawns scoped threads per batch, so a
-        // resident worker set would idle for the server's lifetime
-        let pool = ThreadPool::scoped(threads);
+        // resident workers: par_for dispatches onto the worker queue, so
+        // each batch pays a queue push instead of a thread spawn
+        let pool = ThreadPool::new(threads);
         let metrics = Arc::new(ServeMetrics::new());
         let out_dim = model.output_dim();
         let in_dim = model.input_dim;

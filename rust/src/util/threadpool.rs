@@ -1,12 +1,31 @@
-//! Fixed-size thread pool with scoped parallel-for (no rayon offline).
+//! Fixed-size thread pool with parallel-for (no rayon offline).
 //!
-//! Used by the data pipeline (parallel synthetic image generation) and the
-//! bench harness. Work stealing is unnecessary at our granularity; a
-//! chunked atomic counter gives near-perfect balance for uniform items.
+//! Used by the data pipeline (parallel synthetic image generation), the
+//! serve hot path (`serve::kernels::qgemm` row blocks), the native
+//! training backend's matmuls, and the bench harness. Work stealing is
+//! unnecessary at our granularity; a chunked atomic counter gives
+//! near-perfect balance for uniform items.
+//!
+//! `par_for` dispatches onto the pool's **resident workers** (one queued
+//! job per participating worker, each draining a shared chunk counter),
+//! so a hot loop that calls it per batch pays a queue push instead of a
+//! thread spawn. The calling thread participates in the chunk loop and,
+//! while waiting for stragglers, helps drain the pool queue — so nested
+//! `par_for` calls from worker threads cannot deadlock. A width-only
+//! pool built with [`ThreadPool::scoped`] has no workers and falls back
+//! to scoped threads per call.
+//!
+//! Panic policy: a panicking *submitted* job is caught and reported on
+//! stderr — it never kills a worker, never strands `wait()`, and never
+//! unwinds a helping `par_for` caller (whose borrow-safety depends on
+//! outliving its dispatched jobs). A panicking `par_for` *body* is
+//! re-raised on the calling thread once every chunk worker has stopped.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -17,6 +36,70 @@ struct Shared {
     outstanding: AtomicUsize,
     done_cv: Condvar,
     done_mx: Mutex<()>,
+}
+
+impl Shared {
+    /// Run one job to completion, catching panics: a panicking submitted
+    /// closure must not kill a resident worker, hang `wait()` (the
+    /// outstanding count still decrements), or — critically — unwind a
+    /// `par_for` caller that is helping drain the queue before its
+    /// lifetime-erased closure borrow is released. The panic is reported
+    /// on stderr instead of propagated.
+    fn run_job(&self, job: Job) {
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            eprintln!("[threadpool] submitted job panicked (swallowed; pool keeps running)");
+        }
+        if self.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.done_mx.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Pop-and-run one queued job if any is ready; returns whether a job
+    /// ran. Used by workers and by `par_for` callers helping while they
+    /// wait (keeps nested `par_for` deadlock-free).
+    fn try_run_one(&self) -> bool {
+        let job = self.queue.lock().unwrap().pop();
+        match job {
+            Some(job) => {
+                self.run_job(job);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Shared state of one `par_for` call, reference-counted so queued jobs
+/// can outlive the call's stack frame (the call still blocks until every
+/// job has finished — see the SAFETY note in `par_for`).
+struct ParShared {
+    counter: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    /// jobs dispatched to the pool that have not finished yet
+    pending: AtomicUsize,
+    pending_mx: Mutex<()>,
+    pending_cv: Condvar,
+    panicked: AtomicBool,
+    /// lifetime-erased borrow of the caller's closure; valid because
+    /// `par_for` does not return before `pending` reaches zero
+    f: &'static (dyn Fn(usize) + Sync),
+}
+
+impl ParShared {
+    /// Drain chunks of the index space until exhausted.
+    fn run_chunks(&self) {
+        loop {
+            let start = self.counter.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            for i in start..(start + self.chunk).min(self.n) {
+                (self.f)(i);
+            }
+        }
+    }
 }
 
 pub struct ThreadPool {
@@ -52,21 +135,16 @@ impl ThreadPool {
                         q = sh.cv.wait(q).unwrap();
                     }
                 };
-                job();
-                if sh.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    let _g = sh.done_mx.lock().unwrap();
-                    sh.done_cv.notify_all();
-                }
+                sh.run_job(job);
             }));
         }
         ThreadPool { shared, handles, size }
     }
 
-    /// A width-only pool for `par_for` callers: records the parallelism
-    /// target but spawns **no resident workers** (`par_for` uses scoped
-    /// threads internally, so resident workers would sit idle for the
-    /// pool's lifetime — the serving path uses this). `submit`/`wait`
-    /// are not available on a scoped pool.
+    /// A width-only pool: records the parallelism target but spawns
+    /// **no resident workers** — `par_for` falls back to scoped threads
+    /// per call. `submit`/`wait` are not available on a scoped pool.
+    /// Prefer [`ThreadPool::new`] anywhere `par_for` runs repeatedly.
     pub fn scoped(size: usize) -> Self {
         let size = size.max(1);
         let shared = Arc::new(Shared {
@@ -103,12 +181,71 @@ impl ThreadPool {
 
     /// Parallel-for over `n` items: `f(i)` runs once per `i`, chunked over
     /// the pool; blocks until complete. `f` must be `Sync` (shared).
+    ///
+    /// On a resident pool this enqueues one job per participating worker
+    /// (no thread spawns); on a scoped pool it spawns scoped threads as
+    /// before. The caller always participates, so the call makes progress
+    /// even when every worker is busy.
     pub fn par_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
         if n == 0 {
             return;
         }
-        let counter = AtomicUsize::new(0);
         let chunk = (n / (self.size * 4)).max(1);
+        if self.handles.is_empty() {
+            self.par_for_scoped(n, chunk, &f);
+            return;
+        }
+
+        let f_dyn: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased borrow is only reachable through `shared`,
+        // and this function does not return until `pending` has dropped
+        // to zero — i.e. until every dispatched job has finished running
+        // `f`. The borrow therefore never outlives the closure.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_dyn) };
+        // caller runs one stream itself; workers cover the rest
+        let helpers = (self.size.min(n.div_ceil(chunk))).saturating_sub(1);
+        let shared = Arc::new(ParShared {
+            counter: AtomicUsize::new(0),
+            n,
+            chunk,
+            pending: AtomicUsize::new(helpers),
+            pending_mx: Mutex::new(()),
+            pending_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            f: f_static,
+        });
+        for _ in 0..helpers {
+            let sh = shared.clone();
+            self.submit(move || {
+                if catch_unwind(AssertUnwindSafe(|| sh.run_chunks())).is_err() {
+                    sh.panicked.store(true, Ordering::Relaxed);
+                }
+                if sh.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _g = sh.pending_mx.lock().unwrap();
+                    sh.pending_cv.notify_all();
+                }
+            });
+        }
+        // participate, then help the pool drain until our jobs are done
+        let caller_panicked = catch_unwind(AssertUnwindSafe(|| shared.run_chunks())).is_err();
+        while shared.pending.load(Ordering::Acquire) > 0 {
+            if !self.shared.try_run_one() {
+                let g = shared.pending_mx.lock().unwrap();
+                if shared.pending.load(Ordering::Acquire) > 0 {
+                    // short timeout: re-check the queue for helpable work
+                    let _ = shared.pending_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                }
+            }
+        }
+        if caller_panicked || shared.panicked.load(Ordering::Relaxed) {
+            panic!("par_for body panicked");
+        }
+    }
+
+    /// Scoped-thread fallback for width-only pools.
+    fn par_for_scoped<F: Fn(usize) + Sync>(&self, n: usize, chunk: usize, f: &F) {
+        let counter = AtomicUsize::new(0);
         thread::scope(|s| {
             for _ in 0..self.size.min(n) {
                 s.spawn(|| loop {
@@ -171,6 +308,38 @@ mod tests {
     }
 
     #[test]
+    fn par_for_repeated_reuses_workers() {
+        // the hot-path usage: many small par_for calls on one pool
+        let pool = ThreadPool::new(4);
+        for round in 0..50usize {
+            let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+            pool.par_for(64, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "round {round} missed items"
+            );
+        }
+    }
+
+    #[test]
+    fn par_for_nested_from_worker_completes() {
+        // a worker blocking in an inner par_for must not deadlock the pool
+        let pool = Arc::new(ThreadPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let p = pool.clone();
+        let t = total.clone();
+        pool.submit(move || {
+            p.par_for(100, |_| {
+                t.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        pool.wait();
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
     fn scoped_pool_par_for_without_workers() {
         let pool = ThreadPool::scoped(3);
         assert_eq!(pool.size, 3);
@@ -179,6 +348,20 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool_or_strand_wait() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.wait(); // must return: outstanding decremented despite panic
+        let c = Arc::new(AtomicUsize::new(0));
+        let cc = c.clone();
+        pool.submit(move || {
+            cc.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait();
+        assert_eq!(c.load(Ordering::Relaxed), 1, "worker died after a panicking job");
     }
 
     #[test]
