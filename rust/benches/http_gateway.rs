@@ -1,0 +1,103 @@
+//! HTTP gateway throughput bench: boots `msq gateway` in-process on an
+//! ephemeral port over a packed mixed-precision MLP, drives it with the
+//! closed-loop `net::loadgen` client (real sockets, real HTTP), and
+//! records p50/p99 latency + req/s to `BENCH_http.json` (plus the usual
+//! CSV row under `results/bench/`).
+//!
+//! ```sh
+//! cargo bench --bench http_gateway                  # default 2000 reqs
+//! MSQ_BENCH_HTTP_REQUESTS=300 cargo bench --bench http_gateway
+//! ```
+
+use std::time::Duration;
+
+use msq::bench::BenchResult;
+use msq::net::loadgen::{self, LoadgenConfig};
+use msq::net::{Gateway, GatewayConfig};
+use msq::quant::pack::PackedModel;
+use msq::serve::ServerConfig;
+use msq::util::json::Json;
+
+fn main() {
+    let dims = [3072usize, 512, 128, 10];
+    let bits = [4u8, 3, 8];
+    let requests: usize = std::env::var("MSQ_BENCH_HTTP_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let concurrency = 8usize;
+
+    let pm = PackedModel::synth_mlp(&dims, &bits, 42).expect("synth model");
+    let path = std::env::temp_dir().join("msq_bench_http.msqpack");
+    pm.save(&path).expect("save pack");
+    println!(
+        "http_gateway: {:?} @ bits {:?} — payload {} B ({:.2}x vs fp32), {} reqs x {} conns",
+        dims,
+        bits,
+        pm.payload_bytes(),
+        pm.compression(),
+        requests,
+        concurrency
+    );
+
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: concurrency + 4,
+            server: ServerConfig::default(),
+            ..Default::default()
+        },
+        &[("mlp".to_string(), path, None)],
+    )
+    .expect("gateway start");
+    let addr = gw.addr().to_string();
+    println!("gateway on {addr}");
+
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        model: "mlp".into(),
+        requests,
+        concurrency,
+        batch: 1,
+        seed: 7,
+        timeout: Duration::from_secs(60),
+    })
+    .expect("loadgen");
+    println!("closed loop: {}", report.summary());
+
+    // server-side view straight off the /metrics state
+    let server_metrics = {
+        let state = gw.state();
+        let names = state.model_names();
+        let server = state.server(&names[0]).expect("model");
+        server.metrics.snapshot(server.queue_depth())
+    };
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("http_gateway".into())),
+        ("dims", Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("bits", Json::Arr(bits.iter().map(|&b| Json::Num(b as f64)).collect())),
+        ("payload_bytes", Json::Num(pm.payload_bytes() as f64)),
+        ("compression", Json::Num(pm.compression())),
+        ("requests", Json::Num(requests as f64)),
+        ("concurrency", Json::Num(concurrency as f64)),
+        ("loadgen", report.to_json()),
+        ("server", server_metrics),
+    ]);
+    std::fs::write("BENCH_http.json", out.to_string() + "\n").expect("write BENCH_http.json");
+    println!("wrote BENCH_http.json");
+
+    // CSV row for regression diffing next to the other benches
+    let r = BenchResult {
+        name: format!("http_infer b=1 c={concurrency}"),
+        iters: report.ok,
+        mean_s: report.mean_ms / 1e3,
+        p50_s: report.p50_ms / 1e3,
+        p95_s: report.p95_ms / 1e3,
+        min_s: 0.0,
+    };
+    r.report(Some((1.0, "req")));
+    msq::bench::save("http_gateway.csv", &[r]);
+
+    gw.shutdown();
+}

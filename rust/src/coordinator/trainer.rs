@@ -288,7 +288,12 @@ impl<B: Backend> Trainer<B> {
     /// re-imports through [`crate::quant::pack::PackedModel::load`] +
     /// [`Backend::set_q_weights`]).
     pub fn export_packed(&self, path: &std::path::Path) -> Result<crate::quant::pack::PackedModel> {
-        let mut model = crate::quant::pack::PackedModel::default();
+        let mut model = crate::quant::pack::PackedModel {
+            // flattened input width — lets serving infer the MLP topology
+            // from the v2 header alone (no --input-dim at deploy time)
+            input_dim: self.backend.input_elems(),
+            ..Default::default()
+        };
         for q in 0..self.backend.num_q_layers() {
             let w = self.backend.q_weights(q)?;
             let bits = self.bitstate.scheme.bits[q];

@@ -23,9 +23,12 @@
 //!
 //! Deployment side, the `serve` module executes packed `.msqpack` models
 //! (produced by `quant::pack`) with pure-Rust quantized kernels and a
-//! dynamic request batcher — zero XLA/PJRT linkage, so the default
-//! feature set builds and serves fully offline. The XLA-backed training
-//! path is gated behind the `pjrt` cargo feature.
+//! dynamic request batcher, and the `net` module puts them on the
+//! network: `msq gateway` is a pure-`std` HTTP/1.1 front-end with
+//! multi-model routing, Prometheus `/metrics`, and zero-downtime
+//! `/admin/reload` — zero XLA/PJRT linkage, so the default feature set
+//! builds and serves fully offline. The XLA-backed training path is
+//! gated behind the `pjrt` cargo feature.
 
 pub mod bench;
 pub mod coordinator;
@@ -33,6 +36,7 @@ pub mod data;
 pub mod exp;
 pub mod metrics;
 pub mod native;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
@@ -40,6 +44,7 @@ pub mod util;
 
 pub use coordinator::{MsqConfig, Trainer};
 pub use native::NativeBackend;
+pub use net::{Gateway, GatewayConfig};
 pub use runtime::Backend;
 #[cfg(feature = "pjrt")]
 pub use runtime::{Engine, ModelState};

@@ -42,7 +42,8 @@ const VALUE_OPTS: &[&str] = &[
     "model", "method", "epochs", "batch", "lam", "alpha", "interval", "gamma", "lr", "n-act",
     "seed", "train-size", "test-size", "eval-every", "fixed-bits", "probes", "out", "config",
     "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
-    "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden",
+    "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden", "host", "port",
+    "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s",
 ];
 
 fn main() -> Result<()> {
@@ -53,10 +54,12 @@ fn main() -> Result<()> {
         Some("eval-init") => cmd_eval_init(&args),
         Some("eval-packed") => cmd_eval_packed(&args),
         Some("serve") => cmd_serve(&args),
+        Some("gateway") => cmd_gateway(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("pack-synth") => cmd_pack_synth(&args),
         _ => {
             eprintln!(
-                "usage: msq <train|info|eval-init|eval-packed|serve|pack-synth>\n\
+                "usage: msq <train|info|eval-init|eval-packed|serve|gateway|loadgen|pack-synth>\n\
                  train:      [--backend native|pjrt] [--model M] [--method msq|dorefa|bsq|csq]\n\
                  \x20           [--epochs N] [--batch B] [--hidden 256,128] [--threads T]\n\
                  \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
@@ -68,7 +71,17 @@ fn main() -> Result<()> {
                  serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
                  \x20           [--threads 0] [--requests N --concurrency C] [--json]\n\
-                 \x20           (no --requests: JSONL requests on stdin, responses on stdout)\n\
+                 \x20           (no --requests: JSONL requests on stdin, responses on stdout;\n\
+                 \x20            --input-dim only overrides the .msqpack v2 header)\n\
+                 gateway:    --packed [name=]model.msqpack … [--host 127.0.0.1] [--port 8080]\n\
+                 \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
+                 \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
+                 \x20           [--threads 0] [--run-secs N]\n\
+                 \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
+                 \x20            GET /metrics, POST /admin/reload; --port 0 = ephemeral)\n\
+                 loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
+                 \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
+                 \x20           [--json]\n\
                  pack-synth: [--dims 3072,256,10] [--bits 4,8] [--seed S] --out demo.msqpack"
             );
             Ok(())
@@ -80,15 +93,6 @@ fn main() -> Result<()> {
 // Serving path (default feature set — no XLA)
 // ---------------------------------------------------------------------------
 
-/// Input width the synthetic datasets feed each model family (flattened
-/// NHWC), used when `--input-dim` is not given.
-fn default_input_dim(model: &str) -> usize {
-    match model {
-        "resnet20" | "mlp" => 32 * 32 * 3,
-        _ => 64 * 64 * 3,
-    }
-}
-
 fn server_config(args: &Args) -> ServerConfig {
     ServerConfig {
         max_batch: args.opt_usize("max-batch", 32),
@@ -98,12 +102,26 @@ fn server_config(args: &Args) -> ServerConfig {
     }
 }
 
+/// `--input-dim` as an explicit override; the `.msqpack` v2 header is
+/// the default source (`serve::registry::resolve_input_dim`).
+fn input_dim_override(args: &Args) -> Result<Option<usize>> {
+    match args.opt("input-dim") {
+        None => Ok(None),
+        Some(s) => {
+            let d: usize = s.parse().with_context(|| format!("bad --input-dim {s:?}"))?;
+            Ok(Some(d))
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let packed = args.opt("packed").context("--packed model.msqpack required")?;
     let name = args.opt("model").unwrap_or("mlp").to_string();
-    let input_dim = args.opt_usize("input-dim", default_input_dim(&name));
-    let model =
-        std::sync::Arc::new(ServableModel::load(&name, Path::new(packed), input_dim)?);
+    let model = std::sync::Arc::new(ServableModel::load(
+        &name,
+        Path::new(packed),
+        input_dim_override(args)?,
+    )?);
     eprintln!(
         "[serve] {}: {} layers, {} -> {}, payload {} B ({:.2}x vs fp32), bits {:?}",
         model.name,
@@ -132,6 +150,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{}", server.metrics.snapshot(server.queue_depth()).to_string());
     }
     server.shutdown();
+    Ok(())
+}
+
+/// `msq gateway` — the HTTP front-end. `--packed [name=]file.msqpack`
+/// is repeatable for multi-model routing; an unnamed pack routes under
+/// `--model` (first pack) or its file stem. `--port 0` binds an
+/// ephemeral port (printed on stdout for scripts). With `--run-secs N`
+/// the gateway drains gracefully after N seconds — the programmatic
+/// SIGTERM-equivalent used by the CI smoke test.
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let packs = args.opts("packed");
+    if packs.is_empty() {
+        bail!("--packed [name=]model.msqpack required (repeat for multi-model routing)");
+    }
+    let override_dim = input_dim_override(args)?;
+    let mut models: Vec<msq::net::ModelSpec> = Vec::new();
+    for (i, spec) in packs.iter().enumerate() {
+        let (name, path) = match spec.split_once('=') {
+            Some((n, p)) => (n.to_string(), p.to_string()),
+            None => {
+                let name = match (i, args.opt("model")) {
+                    (0, Some(m)) => m.to_string(),
+                    _ => msq::net::router::model_name_from_path(Path::new(spec))?,
+                };
+                (name, spec.to_string())
+            }
+        };
+        models.push((name, std::path::PathBuf::from(path), override_dim));
+    }
+    let default_limits = msq::net::Limits::default();
+    let limits = msq::net::Limits {
+        max_body: args.opt_usize("max-body", default_limits.max_body),
+        ..default_limits
+    };
+    let port: u16 = match args.opt("port") {
+        None => 8080,
+        Some(s) => s.parse().with_context(|| format!("bad --port {s:?} (0..=65535)"))?,
+    };
+    let cfg = msq::net::GatewayConfig {
+        host: args.opt_or("host", "127.0.0.1").to_string(),
+        port,
+        max_conns: args.opt_usize("max-conns", 64),
+        read_timeout: Duration::from_millis(args.opt_u64("read-timeout-ms", 250)),
+        limits,
+        server: server_config(args),
+    };
+    let gw = msq::net::Gateway::start(cfg, &models)?;
+    // stdout, machine-parseable (resolves --port 0)
+    println!("[gateway] listening on {}", gw.addr());
+    for info_name in gw.state().model_names() {
+        eprintln!("[gateway] serving /v1/models/{info_name}/infer");
+    }
+    let run_secs = args.opt_u64("run-secs", 0);
+    if run_secs > 0 {
+        std::thread::sleep(Duration::from_secs(run_secs));
+        eprintln!("[gateway] --run-secs {run_secs} elapsed; draining");
+        println!("{}", msq::net::router::render_metrics(gw.state()));
+        gw.shutdown();
+        eprintln!("[gateway] drained cleanly");
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+/// `msq loadgen` — closed-loop HTTP load against a running gateway.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = msq::net::LoadgenConfig {
+        addr: args.opt_or("addr", "127.0.0.1:8080").to_string(),
+        model: args.opt_or("model", "mlp").to_string(),
+        requests: args.opt_usize("requests", 1000),
+        concurrency: args.opt_usize("concurrency", 8),
+        batch: args.opt_usize("batch", 1),
+        seed: args.opt_u64("seed", 42),
+        timeout: Duration::from_secs(args.opt_u64("timeout-s", 30)),
+    };
+    eprintln!(
+        "[loadgen] {} -> {} | {} reqs x {} conns, batch {}",
+        cfg.addr, cfg.model, cfg.requests, cfg.concurrency, cfg.batch
+    );
+    let report = msq::net::loadgen::run(&cfg)?;
+    eprintln!("[loadgen] {}", report.summary());
+    let j = report.to_json();
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, j.to_string() + "\n").with_context(|| format!("writing {out}"))?;
+        eprintln!("[loadgen] wrote {out}");
+    }
+    if args.flag("json") {
+        println!("{}", j.to_string());
+    }
     Ok(())
 }
 
@@ -197,18 +307,10 @@ fn serve_stdin(server: &Server) -> Result<()> {
                 },
             ),
         };
-        let input = match input_json.as_arr() {
-            Some(arr) => {
-                let nums: Vec<f32> =
-                    arr.iter().filter_map(Json::as_f64).map(|v| v as f32).collect();
-                if nums.len() != arr.len() {
-                    // reject, don't silently drop elements and misalign
-                    println!("{}", err_json(&id, "input must be an array of numbers"));
-                    continue;
-                }
-                nums
-            }
+        let input = match input_json.as_f32s() {
+            Some(nums) => nums,
             None => {
+                // strict: mixed arrays are rejected, not silently dropped
                 println!("{}", err_json(&id, "input must be an array of numbers"));
                 continue;
             }
@@ -630,21 +732,6 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-/// Derive the MLP widths a packed model implies (serve-style dim chain).
-fn packed_hidden_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
-    let mut dims = Vec::new();
-    let mut cols = input_dim;
-    for l in &pm.layers {
-        if cols == 0 || l.numel % cols != 0 {
-            bail!("layer {:?}: {} weights do not factor over dim {cols}", l.name, l.numel);
-        }
-        dims.push(l.numel / cols);
-        cols = l.numel / cols;
-    }
-    dims.pop(); // last entry is the class count, not a hidden width
-    Ok(dims)
-}
-
 /// Load a `.msqpack` model into a fresh backend and evaluate it — proves
 /// the packed format round-trips through the training eval path. Works
 /// on both backends; the native path derives the MLP widths from the
@@ -658,7 +745,9 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
         "native" => {
             let mut cfg = cfg;
             cfg.model = "mlp".into();
-            let hidden = packed_hidden_dims(&packed, ds.spec.input_dim())?;
+            // the registry owns the dim-chain derivation (shared with the
+            // serve/gateway paths); the dataset fixes the input width here
+            let hidden = msq::serve::registry::mlp_hidden_dims(&packed, ds.spec.input_dim())?;
             let backend = NativeBackend::mlp(
                 &cfg.model,
                 &cfg.method,

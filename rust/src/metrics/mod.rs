@@ -8,6 +8,10 @@
 //! (log-bucketed histogram answering p50/p95/p99 in O(1) memory) and
 //! [`RateCounter`] (sliding-window event rate). Both are plain data —
 //! `serve::ServeMetrics` wraps them in the locks it needs.
+//!
+//! The gateway scrapes everything through [`Prom`], a Prometheus
+//! text-format (0.0.4) builder: `# TYPE` headers, label escaping, and
+//! summary quantiles rendered from a [`LatencyHist`].
 
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
@@ -200,6 +204,11 @@ impl LatencyHist {
         self.count
     }
 
+    /// Sum of all recorded values (the Prometheus summary `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -297,6 +306,107 @@ impl RateCounter {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Prometheus text exposition (gateway /metrics)
+// ---------------------------------------------------------------------------
+
+/// Prometheus text-format (0.0.4) builder. One `Prom` renders one scrape:
+/// declare each family once with [`Prom::family`], then emit samples.
+///
+/// ```ignore
+/// let mut p = Prom::new();
+/// p.family("msq_requests_total", "counter", "Requests admitted");
+/// p.sample("msq_requests_total", &[("model", "mlp")], 42.0);
+/// let body = p.finish(); // text/plain; version=0.0.4
+/// ```
+#[derive(Default)]
+pub struct Prom {
+    out: String,
+}
+
+impl Prom {
+    pub fn new() -> Prom {
+        Prom::default()
+    }
+
+    /// `# HELP` + `# TYPE` lines for a metric family. `kind` is one of
+    /// `counter`, `gauge`, `summary`, `histogram`, `untyped`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(&help.replace('\\', "\\\\").replace('\n', "\\n"));
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// One sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&Self::escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&Self::fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Render a [`LatencyHist`] as a Prometheus *summary*: one
+    /// `{quantile="…"}` sample per requested quantile plus the `_sum` and
+    /// `_count` series, all in seconds.
+    pub fn summary(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        hist: &LatencyHist,
+        quantiles: &[f64],
+    ) {
+        for &q in quantiles {
+            let qs = Self::fmt_value(q);
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("quantile", &qs));
+            self.sample(name, &ls, hist.percentile(q * 100.0));
+        }
+        self.sample(&format!("{name}_sum"), labels, hist.sum());
+        self.sample(&format!("{name}_count"), labels, hist.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    fn escape_label(v: &str) -> String {
+        v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+    }
+
+    /// Prometheus floats: integral values render without a fraction,
+    /// non-finite values by name.
+    fn fmt_value(v: f64) -> String {
+        if v.is_nan() {
+            "NaN".into()
+        } else if v.is_infinite() {
+            if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+        } else if v == v.trunc() && v.abs() < 1e15 {
+            format!("{}", v as i64)
+        } else {
+            format!("{v}")
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,6 +470,48 @@ mod tests {
         h.record(1e9); // clamps into the last bucket, still counted
         assert_eq!(h.count(), 1);
         assert_eq!(h.percentile(50.0), 1e9);
+    }
+
+    #[test]
+    fn prom_renders_families_and_samples() {
+        let mut p = Prom::new();
+        p.family("msq_up", "gauge", "Is the gateway up");
+        p.sample("msq_up", &[], 1.0);
+        p.family("msq_http_requests_total", "counter", "HTTP responses by code");
+        p.sample("msq_http_requests_total", &[("code", "200"), ("model", "a\"b")], 12.0);
+        let text = p.finish();
+        assert!(text.contains("# TYPE msq_up gauge\n"), "{text}");
+        assert!(text.contains("msq_up 1\n"), "{text}");
+        assert!(
+            text.contains("msq_http_requests_total{code=\"200\",model=\"a\\\"b\"} 12\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn prom_summary_from_latency_hist() {
+        let mut h = LatencyHist::new();
+        for _ in 0..4 {
+            h.record(0.25); // binary-exact: the _sum renders as exactly 1
+        }
+        let mut p = Prom::new();
+        p.family("msq_latency_seconds", "summary", "Request latency");
+        p.summary("msq_latency_seconds", &[("model", "m")], &h, &[0.5, 0.99]);
+        let text = p.finish();
+        let q50 = "msq_latency_seconds{model=\"m\",quantile=\"0.5\"} 0.25\n";
+        let q99 = "msq_latency_seconds{model=\"m\",quantile=\"0.99\"} 0.25\n";
+        assert!(text.contains(q50), "{text}");
+        assert!(text.contains(q99), "{text}");
+        assert!(text.contains("msq_latency_seconds_count{model=\"m\"} 4\n"), "{text}");
+        assert!(text.contains("msq_latency_seconds_sum{model=\"m\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn prom_value_formatting() {
+        assert_eq!(Prom::fmt_value(3.0), "3");
+        assert_eq!(Prom::fmt_value(0.5), "0.5");
+        assert_eq!(Prom::fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(Prom::fmt_value(f64::NAN), "NaN");
     }
 
     #[test]

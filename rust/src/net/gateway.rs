@@ -1,0 +1,324 @@
+//! The gateway runtime: TCP accept loop + per-connection workers on the
+//! resident [`ThreadPool`], over the pure [`router`] logic.
+//!
+//! ```text
+//! accept ─► budget check ──► pool worker: read_request ─► router::handle ─► write
+//!    │         │ (503, close)      │ keep-alive loop, idle tick = read timeout
+//!    ▼         ▼                   ▼
+//! listener   shed             per-model Server (dynamic batcher)
+//! ```
+//!
+//! **Connection budget** — at most `max_conns` connections are open at
+//! once; excess accepts are answered `503` and closed immediately
+//! (cheap shed at the edge, before any parsing). The worker pool has
+//! exactly `max_conns` threads, so an admitted connection always has a
+//! worker.
+//!
+//! **Graceful shutdown** ([`Gateway::shutdown`], the SIGTERM-equivalent)
+//! — sets the drain flag, closes every model's batcher to new
+//! admissions, wakes the accept loop with a self-connection, joins the
+//! connection workers (each notices the flag at its next idle tick or
+//! after its in-flight response), then drops the model servers, whose
+//! batchers flush every in-flight batch before joining. No admitted
+//! request is dropped.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::ServerConfig;
+use crate::util::threadpool::ThreadPool;
+
+use super::http::{HttpReader, Limits, ReadError, Response};
+use super::router::{self, AppState};
+
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind host (default loopback; 0.0.0.0 to expose).
+    pub host: String,
+    /// Bind port; 0 picks an ephemeral port (tests, benches).
+    pub port: u16,
+    /// Connection budget = worker-pool size; accepts beyond it are shed
+    /// with an immediate 503.
+    pub max_conns: usize,
+    /// Keep-alive idle tick: how often a blocked reader wakes to check
+    /// the drain flag (also the mid-request stall timeout).
+    pub read_timeout: Duration,
+    /// HTTP parser limits (line/header/body caps).
+    pub limits: Limits,
+    /// Batcher/kernel config for every model server the gateway starts.
+    pub server: ServerConfig,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            host: "127.0.0.1".into(),
+            port: 8080,
+            max_conns: 64,
+            read_timeout: Duration::from_millis(250),
+            limits: Limits::default(),
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+/// A model to serve at startup: `(route name, .msqpack path, --input-dim
+/// override)`.
+pub type ModelSpec = (String, PathBuf, Option<usize>);
+
+/// A running gateway. Dropping it without calling [`Gateway::shutdown`]
+/// also shuts down (less gracefully ordered but never hanging).
+pub struct Gateway {
+    addr: SocketAddr,
+    state: Arc<AppState>,
+    accept: Option<thread::JoinHandle<()>>,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Gateway {
+    /// Bind, load every model, and start accepting.
+    pub fn start(cfg: GatewayConfig, models: &[ModelSpec]) -> Result<Gateway> {
+        let pool = Arc::new(ThreadPool::new(cfg.max_conns.max(1)));
+        let state = Arc::new(AppState::new(cfg.server.clone(), pool.clone()));
+        for (name, path, dim) in models {
+            state.load_model(name, path, *dim)?;
+        }
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr()?;
+        let accept = {
+            let state = state.clone();
+            let pool = pool.clone();
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name("msq-gateway-accept".into())
+                .spawn(move || accept_loop(listener, state, pool, cfg))
+                .context("spawning accept loop")?
+        };
+        Ok(Gateway { addr, state, accept: Some(accept), pool: Some(pool) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<AppState> {
+        &self.state
+    }
+
+    /// Graceful drain; blocks until every in-flight request finished and
+    /// all threads are joined.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        // 1. flip the flag: routes answer 503, batchers stop admitting
+        self.state.start_drain();
+        // 2. wake the accept loop (it re-checks the flag per connection).
+        // An unspecified bind address (0.0.0.0 / [::]) is not dialable on
+        // every platform — connect to the same-family loopback instead,
+        // and bound the dial so a refused wake cannot stall the join.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(if wake.is_ipv4() {
+                std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+            } else {
+                std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // 3. join connection workers: each exits at its next idle tick
+        //    (read_timeout) or right after its current response
+        if let Some(pool) = self.pool.take() {
+            drop(pool); // state still holds an Arc — only our handle drops
+        }
+        // the pool Arc inside AppState keeps workers alive until every
+        // queued connection job ran; wait for that explicitly
+        self.state.conn_pool.wait();
+        // 4. retire the model servers — Drop flushes each batcher
+        self.state.clear_models();
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.drain();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<AppState>,
+    pool: Arc<ThreadPool>,
+    cfg: GatewayConfig,
+) {
+    for stream in listener.incoming() {
+        if state.draining.load(Ordering::Acquire) {
+            break;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error
+        };
+        state.http.connections_total.fetch_add(1, Ordering::Relaxed);
+        // connection budget: every admitted connection gets a dedicated
+        // worker, so beyond pool capacity we shed instead of queueing
+        let active = state.http.connections_active.load(Ordering::Acquire);
+        if active >= cfg.max_conns as u64 {
+            state.http.connections_rejected.fetch_add(1, Ordering::Relaxed);
+            state.http.record_response(503);
+            let _ = Response::error(503, "connection budget exhausted — retry")
+                .header("Retry-After", "1")
+                .write_to(&mut stream, false);
+            continue; // stream drops → close
+        }
+        state.http.connections_active.fetch_add(1, Ordering::AcqRel);
+        let st = state.clone();
+        let conn_cfg = ConnConfig {
+            read_timeout: cfg.read_timeout,
+            limits: cfg.limits.clone(),
+        };
+        pool.submit(move || {
+            handle_conn(stream, &st, &conn_cfg);
+            st.http.connections_active.fetch_sub(1, Ordering::AcqRel);
+        });
+    }
+}
+
+struct ConnConfig {
+    read_timeout: Duration,
+    limits: Limits,
+}
+
+/// One connection's keep-alive loop: parse → route → respond, until the
+/// peer closes, a protocol error forces a close, or drain is signalled.
+fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = HttpReader::new(stream);
+    loop {
+        match reader.read_request(&cfg.limits) {
+            Ok(req) => {
+                let resp = router::handle(state, &req);
+                state.http.record_response(resp.status);
+                // drain closes the connection after the in-flight response
+                let keep = req.keep_alive() && !state.draining.load(Ordering::Acquire);
+                if resp.write_to(&mut writer, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Err(ReadError::Idle) => {
+                if state.draining.load(Ordering::Acquire) {
+                    return; // idle keep-alive connection during drain
+                }
+            }
+            Err(ReadError::Closed) => return,
+            Err(ReadError::Bad { status, msg }) => {
+                state.http.record_response(status);
+                let _ = Response::error(status, &msg).write_to(&mut writer, false);
+                return; // stream state unknown after a parse error
+            }
+            Err(ReadError::Io(_)) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::PackedModel;
+    use crate::util::json;
+    use std::io::Write as _;
+
+    fn toy_gateway(max_conns: usize) -> Gateway {
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_gateway_unit.msqpack");
+        pm.save(&path).unwrap();
+        let cfg = GatewayConfig {
+            port: 0,
+            max_conns,
+            read_timeout: Duration::from_millis(50),
+            server: ServerConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 64,
+                threads: 1,
+            },
+            ..Default::default()
+        };
+        Gateway::start(cfg, &[("toy".to_string(), path, None)]).unwrap()
+    }
+
+    fn roundtrip(addr: SocketAddr, method: &str, target: &str, body: &[u8]) -> (u16, Vec<u8>) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        super::super::http::write_request(&mut s, method, target, Some("application/json"), body)
+            .unwrap();
+        let mut r = HttpReader::new(s);
+        r.read_response(&Limits::default()).unwrap()
+    }
+
+    #[test]
+    fn serves_and_shuts_down_cleanly() {
+        let gw = toy_gateway(8);
+        let addr = gw.addr();
+        let (code, body) = roundtrip(addr, "GET", "/healthz", b"");
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+        let (code, body) = roundtrip(addr, "POST", "/v1/models/toy/infer", b"[[0,0,0,0,0,0]]");
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.path(&["outputs", "0"]).unwrap().as_arr().unwrap().len(), 3);
+        gw.shutdown(); // must drain and join without hanging
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_socket() {
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        let mut wire = Vec::new();
+        for _ in 0..3 {
+            super::super::http::write_request(
+                &mut wire,
+                "POST",
+                "/v1/models/toy/infer",
+                Some("application/json"),
+                b"[[1,2,3,4,5,6]]",
+            )
+            .unwrap();
+        }
+        s.write_all(&wire).unwrap(); // pipelined
+        let mut r = HttpReader::new(s);
+        for _ in 0..3 {
+            let (code, _) = r.read_response(&Limits::default()).unwrap();
+            assert_eq!(code, 200);
+        }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        s.write_all(b"NOTAREQUEST\r\n\r\n").unwrap(); // no target/version → 400
+        let mut r = HttpReader::new(s);
+        let (code, _) = r.read_response(&Limits::default()).unwrap();
+        assert_eq!(code, 400);
+        gw.shutdown();
+    }
+}

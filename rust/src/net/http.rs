@@ -1,0 +1,591 @@
+//! Minimal HTTP/1.1 on `std::net` (no hyper offline): request parser,
+//! response writer, and the client half the load generator reuses.
+//!
+//! Scope is exactly what the gateway needs — origin-form targets,
+//! `Content-Length` bodies only (chunked transfer is answered with 501),
+//! keep-alive with the HTTP/1.0/1.1 defaults, and hard limits on line
+//! length, header count, and body size so a hostile peer cannot balloon
+//! memory. Every malformed input maps to a 4xx/5xx [`ReadError::Bad`];
+//! nothing in this module panics on wire data (pinned by property tests
+//! over adversarial byte streams).
+//!
+//! The reader distinguishes *where* a connection went quiet:
+//! [`ReadError::Closed`] (clean EOF between requests — drop the
+//! connection), [`ReadError::Idle`] (read timeout with no request bytes
+//! consumed — poll the shutdown flag and keep waiting), and mid-request
+//! timeouts/EOFs, which are protocol errors (408 / connection drop).
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Parser limits; defaults match common proxy behaviour.
+#[derive(Clone, Debug)]
+pub struct Limits {
+    /// Max request-line / header-line length in bytes (431 beyond).
+    pub max_line: usize,
+    /// Max header count (431 beyond).
+    pub max_headers: usize,
+    /// Max `Content-Length` body in bytes (413 beyond).
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_line: 8192, max_headers: 64, max_body: 8 << 20 }
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Origin-form target as sent (`/v1/models/mlp/infer?x=1`).
+    pub target: String,
+    http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Target with the query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let n = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == n).map(|(_, v)| v.as_str())
+    }
+
+    /// Connection persistence: explicit `Connection:` header wins,
+    /// otherwise the HTTP-version default (1.1 keeps, 1.0 closes).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Why `read_request` returned without a request.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean EOF before any byte of a request — peer is done.
+    Closed,
+    /// Read timeout with no request bytes pending — connection is idle;
+    /// the caller checks its shutdown flag and retries.
+    Idle,
+    /// Malformed/oversized input; respond with `status` and close.
+    Bad { status: u16, msg: String },
+    /// Transport failure (reset, EOF mid-request); just close.
+    Io(String),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Closed => write!(f, "connection closed"),
+            ReadError::Idle => write!(f, "connection idle"),
+            ReadError::Bad { status, msg } => write!(f, "{status}: {msg}"),
+            ReadError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> ReadError {
+    ReadError::Bad { status, msg: msg.into() }
+}
+
+enum Fill {
+    Data,
+    Eof,
+    Timeout,
+}
+
+/// Buffered reader over a byte stream; owns the partial-read state so
+/// pipelined requests parse back-to-back without losing bytes.
+pub struct HttpReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl<R: Read> HttpReader<R> {
+    pub fn new(r: R) -> HttpReader<R> {
+        HttpReader { r, buf: Vec::with_capacity(4096), pos: 0 }
+    }
+
+    /// The underlying stream (e.g. to `try_clone` a write handle when
+    /// `R = TcpStream`).
+    pub fn stream(&self) -> &R {
+        &self.r
+    }
+
+    fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Drop the consumed prefix (called between requests).
+    fn compact(&mut self) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    fn fill(&mut self) -> Result<Fill, ReadError> {
+        let mut tmp = [0u8; 4096];
+        match self.r.read(&mut tmp) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(Fill::Data)
+            }
+            Err(e) => match e.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    Ok(Fill::Timeout)
+                }
+                std::io::ErrorKind::Interrupted => Ok(Fill::Data),
+                _ => Err(ReadError::Io(e.to_string())),
+            },
+        }
+    }
+
+    /// One CRLF/LF-terminated line, terminator stripped. `at_start`
+    /// marks the first line of a message, where quiet means Idle/Closed
+    /// rather than a protocol error.
+    fn read_line(&mut self, max: usize, at_start: bool) -> Result<String, ReadError> {
+        loop {
+            if let Some(idx) = self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                let end = self.pos + idx;
+                let mut line = &self.buf[self.pos..end];
+                if line.ends_with(b"\r") {
+                    line = &line[..line.len() - 1];
+                }
+                if line.len() > max {
+                    return Err(bad(431, "line too long"));
+                }
+                let s = String::from_utf8_lossy(line).into_owned();
+                self.pos = end + 1;
+                return Ok(s);
+            }
+            if self.pending() > max {
+                return Err(bad(431, "line too long"));
+            }
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof => {
+                    return Err(if at_start && self.pending() == 0 {
+                        ReadError::Closed
+                    } else {
+                        ReadError::Io("connection closed mid-message".into())
+                    });
+                }
+                Fill::Timeout => {
+                    return Err(if at_start && self.pending() == 0 {
+                        ReadError::Idle
+                    } else {
+                        bad(408, "timed out mid-message")
+                    });
+                }
+            }
+        }
+    }
+
+    /// Exactly `n` body bytes.
+    fn read_body(&mut self, n: usize) -> Result<Vec<u8>, ReadError> {
+        while self.pending() < n {
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof => return Err(ReadError::Io("connection closed mid-body".into())),
+                Fill::Timeout => return Err(bad(408, "timed out reading body")),
+            }
+        }
+        let body = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(body)
+    }
+
+    /// Headers shared by request and response parsing: lines until the
+    /// blank separator, names lowercased.
+    fn read_headers(&mut self, limits: &Limits) -> Result<Vec<(String, String)>, ReadError> {
+        let mut headers = Vec::new();
+        loop {
+            let l = self.read_line(limits.max_line, false)?;
+            if l.is_empty() {
+                return Ok(headers);
+            }
+            if headers.len() >= limits.max_headers {
+                return Err(bad(431, "too many headers"));
+            }
+            let colon = l.find(':').ok_or_else(|| bad(400, "malformed header"))?;
+            let name = l[..colon].trim();
+            if name.is_empty() || !name.bytes().all(is_token_byte) {
+                return Err(bad(400, "malformed header name"));
+            }
+            headers.push((name.to_ascii_lowercase(), l[colon + 1..].trim().to_string()));
+        }
+    }
+
+    /// The declared `Content-Length`, validated against `limits` and
+    /// duplicate/garbage values; `Transfer-Encoding` is refused (501).
+    fn body_len(headers: &[(String, String)], limits: &Limits) -> Result<usize, ReadError> {
+        if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+            return Err(bad(501, "chunked bodies unsupported — send Content-Length"));
+        }
+        let mut len: Option<usize> = None;
+        for (k, v) in headers {
+            if k == "content-length" {
+                let n: usize =
+                    v.trim().parse().map_err(|_| bad(400, "bad Content-Length"))?;
+                if let Some(prev) = len {
+                    if prev != n {
+                        return Err(bad(400, "conflicting Content-Length headers"));
+                    }
+                }
+                len = Some(n);
+            }
+        }
+        let n = len.unwrap_or(0);
+        if n > limits.max_body {
+            return Err(bad(413, format!("body {n} bytes exceeds limit {}", limits.max_body)));
+        }
+        Ok(n)
+    }
+
+    /// Parse one request (blocking until a full message or a failure).
+    pub fn read_request(&mut self, limits: &Limits) -> Result<Request, ReadError> {
+        self.compact();
+        // tolerate stray blank lines between pipelined requests (RFC 9112 §2.2)
+        let mut line = self.read_line(limits.max_line, true)?;
+        while line.is_empty() {
+            line = self.read_line(limits.max_line, true)?;
+        }
+        let mut parts = line.split(' ').filter(|s| !s.is_empty());
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if parts.next().is_some() || target.is_empty() || version.is_empty() {
+            return Err(bad(400, "malformed request line"));
+        }
+        if method.is_empty() || !method.bytes().all(is_token_byte) {
+            return Err(bad(400, "malformed method"));
+        }
+        let http11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            _ => return Err(bad(505, "unsupported HTTP version")),
+        };
+        if !target.starts_with('/') {
+            return Err(bad(400, "target must be origin-form (/path)"));
+        }
+        let headers = self.read_headers(limits)?;
+        let n = Self::body_len(&headers, limits)?;
+        let body = if n > 0 { self.read_body(n)? } else { Vec::new() };
+        Ok(Request { method, target, http11, headers, body })
+    }
+
+    /// Client half: parse one response, returning (status, body).
+    pub fn read_response(&mut self, limits: &Limits) -> Result<(u16, Vec<u8>), ReadError> {
+        self.compact();
+        let line = self.read_line(limits.max_line, true)?;
+        // "HTTP/1.1 200 OK"
+        let mut it = line.splitn(3, ' ');
+        let ver = it.next().unwrap_or("");
+        if !ver.starts_with("HTTP/1.") {
+            return Err(ReadError::Io(format!("malformed status line {line:?}")));
+        }
+        let status: u16 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| ReadError::Io(format!("malformed status line {line:?}")))?;
+        let headers = self.read_headers(limits)?;
+        let n = Self::body_len(&headers, limits)?;
+        let body = if n > 0 { self.read_body(n)? } else { Vec::new() };
+        Ok((status, body))
+    }
+}
+
+/// RFC 9110 token bytes (the subset we accept in methods/header names).
+fn is_token_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// One response; `write_to` adds `Content-Length` and `Connection`.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `Retry-After` on 429).
+    pub extra: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json".into(),
+            body: v.to_string().into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Self::json(status, &Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+
+    pub fn text(status: u16, content_type: &str, body: String) -> Response {
+        Response {
+            status,
+            content_type: content_type.to_string(),
+            body: body.into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// Prometheus text exposition body.
+    pub fn prometheus(body: String) -> Response {
+        Self::text(200, "text/plain; version=0.0.4; charset=utf-8", body)
+    }
+
+    pub fn header(mut self, name: &str, value: &str) -> Response {
+        self.extra.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        for (k, v) in &self.extra {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Client half: serialize one request (loadgen, e2e tests).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    target: &str,
+    content_type: Option<&str>,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "{method} {target} HTTP/1.1\r\nHost: msq-gateway\r\n")?;
+    if let Some(ct) = content_type {
+        write!(w, "Content-Type: {ct}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::io::Cursor;
+
+    fn parse_bytes(bytes: &[u8]) -> Result<Request, ReadError> {
+        HttpReader::new(Cursor::new(bytes.to_vec())).read_request(&Limits::default())
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse_bytes(
+            b"POST /v1/models/mlp/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+              Content-Length: 9\r\n\r\n[[1,2,3]]",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/models/mlp/infer");
+        assert_eq!(req.body, b"[[1,2,3]]");
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn query_strings_and_connection_close() {
+        let req = parse_bytes(
+            b"GET /healthz?verbose=1 HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.path(), "/healthz");
+        assert_eq!(req.target, "/healthz?verbose=1");
+        assert!(!req.keep_alive());
+        // HTTP/1.0 default is close
+        let old = parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!old.keep_alive());
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let mut r = HttpReader::new(Cursor::new(
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".to_vec(),
+        ));
+        let lim = Limits::default();
+        let a = r.read_request(&lim).unwrap();
+        assert_eq!(a.path(), "/a");
+        let b = r.read_request(&lim).unwrap();
+        assert_eq!(b.path(), "/b");
+        assert_eq!(b.body, b"hi");
+        // then clean EOF
+        assert!(matches!(r.read_request(&lim), Err(ReadError::Closed)));
+    }
+
+    #[test]
+    fn malformed_inputs_are_4xx_not_panics() {
+        let cases: &[(&[u8], u16)] = &[
+            (b"GARBAGE\r\n\r\n", 400),                                // no target/version
+            (b"GET /x HTTP/2.0\r\n\r\n", 505),                        // unsupported version
+            (b"GET x HTTP/1.1\r\n\r\n", 400),                         // non-origin target
+            (b"G@T /x HTTP/1.1\r\n\r\n", 400),                        // bad method byte
+            (b"GET /x HTTP/1.1 extra\r\n\r\n", 400),                  // 4-part request line
+            (b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),       // header w/o colon
+            (b"GET /x HTTP/1.1\r\n: empty\r\n\r\n", 400),             // empty header name
+            (b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400), // garbage length
+            (
+                b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nab",
+                400,
+            ), // conflicting lengths
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n", 413),
+        ];
+        for (bytes, want) in cases {
+            match parse_bytes(bytes) {
+                Err(ReadError::Bad { status, .. }) => {
+                    assert_eq!(status, *want, "input {:?}", String::from_utf8_lossy(bytes));
+                }
+                other => panic!(
+                    "input {:?}: expected Bad({want}), got {other:?}",
+                    String::from_utf8_lossy(bytes)
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let r = parse_bytes(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort");
+        assert!(matches!(r, Err(ReadError::Io(_))), "{r:?}");
+        // EOF mid-header is an Io error too, not Closed
+        let r = parse_bytes(b"GET /x HTTP/1.1\r\nHost: tru");
+        assert!(matches!(r, Err(ReadError::Io(_))), "{r:?}");
+    }
+
+    #[test]
+    fn oversized_lines_and_header_floods_are_431() {
+        let mut big = b"GET /".to_vec();
+        big.extend(std::iter::repeat(b'a').take(10_000));
+        big.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse_bytes(&big), Err(ReadError::Bad { status: 431, .. })));
+
+        let mut flood = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..100 {
+            flood.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        flood.extend_from_slice(b"\r\n");
+        assert!(matches!(parse_bytes(&flood), Err(ReadError::Bad { status: 431, .. })));
+    }
+
+    #[test]
+    fn request_roundtrip_through_writer() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/models/m/infer", Some("application/json"), b"[[1]]")
+            .unwrap();
+        let req = parse_bytes(&wire).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/models/m/infer");
+        assert_eq!(req.body, b"[[1]]");
+    }
+
+    #[test]
+    fn response_roundtrip_through_reader() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .header("X-Test", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, body) =
+            HttpReader::new(Cursor::new(wire)).read_response(&Limits::default()).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, br#"{"ok":true}"#);
+        // error envelope carries the right status text
+        let mut wire = Vec::new();
+        Response::error(429, "queue full").write_to(&mut wire, false).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn prop_arbitrary_bytes_never_panic() {
+        // adversarial wire data: random bytes, with a bias toward
+        // HTTP-ish prefixes so the parser gets deep before failing
+        prop::check(300, |g| {
+            let n = g.usize_in(0, 200);
+            let mut bytes: Vec<u8> = (0..n).map(|_| (g.rng().next_u64() & 0xFF) as u8).collect();
+            if g.bool() {
+                let mut v = b"POST /m HTTP/1.1\r\nContent-Length: ".to_vec();
+                v.extend_from_slice(&bytes);
+                bytes = v;
+            }
+            let _ = parse_bytes(&bytes); // any Result is fine; panics are not
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncations_of_valid_request_never_panic_or_misparse() {
+        let mut wire = Vec::new();
+        let body = br#"{"inputs": [[0.25, -1.5]]}"#;
+        write_request(&mut wire, "POST", "/v1/models/mlp/infer", Some("application/json"), body)
+            .unwrap();
+        prop::check(200, |g| {
+            let cut = g.usize_in(0, wire.len());
+            match parse_bytes(&wire[..cut]) {
+                Ok(req) => prop::ensure(
+                    cut == wire.len() && req.body.len() == 26,
+                    format!("parsed a truncated request (cut {cut})"),
+                ),
+                Err(_) => Ok(()), // must fail, must not panic
+            }
+        });
+    }
+}

@@ -1,0 +1,328 @@
+//! Closed-loop HTTP load generator (`msq loadgen`): N keep-alive
+//! connections, each issuing `POST /v1/models/{name}/infer` requests
+//! back-to-back and timing write→response wall clock. Discovers the
+//! model's input width from `/healthz`, so pointing it at a gateway is
+//! one flag. The report records p50/p95/p99 latency and req/s — the
+//! numbers `benches/http_gateway.rs` persists to `BENCH_http.json`.
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+use crate::util::stats::percentile;
+
+use super::http::{write_request, HttpReader, Limits};
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Gateway address, `host:port`.
+    pub addr: String,
+    /// Model route name (must be served — see `GET /v1/models`).
+    pub model: String,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Concurrent keep-alive connections (closed loop: each waits for
+    /// its response before sending the next request).
+    pub concurrency: usize,
+    /// Rows per request body (the gateway fans rows into the batcher).
+    pub batch: usize,
+    pub seed: u64,
+    /// Per-read socket timeout (a stuck gateway fails fast, not forever).
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".into(),
+            model: "mlp".into(),
+            requests: 1000,
+            concurrency: 8,
+            batch: 1,
+            seed: 42,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Aggregated closed-loop results.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    /// Non-2xx responses by status code (429 shed shows up here).
+    pub by_status: BTreeMap<u16, usize>,
+    /// Transport failures (connect/read errors).
+    pub errors: usize,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let by_status: Vec<Json> = self
+            .by_status
+            .iter()
+            .map(|(c, n)| {
+                Json::obj(vec![
+                    ("code", Json::Num(*c as f64)),
+                    ("count", Json::Num(*n as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("by_status", Json::Arr(by_status)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("rps", Json::Num(self.rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ok / {} non-2xx / {} errors | {:.0} req/s | p50 {:.2} ms p95 {:.2} ms \
+             p99 {:.2} ms",
+            self.ok,
+            self.by_status.values().sum::<usize>(),
+            self.errors,
+            self.rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+/// Ask `/healthz` for the model's input width.
+fn discover_input_dim(cfg: &LoadgenConfig) -> Result<usize> {
+    let mut s = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting {}", cfg.addr))?;
+    s.set_read_timeout(Some(cfg.timeout))?;
+    write_request(&mut s, "GET", "/healthz", None, b"")?;
+    let mut r = HttpReader::new(s);
+    let (status, body) = r
+        .read_response(&Limits::default())
+        .map_err(|e| anyhow::anyhow!("reading /healthz: {e}"))?;
+    // 200 when serving, 503 while draining — both carry the inventory
+    if status != 200 && status != 503 {
+        bail!("/healthz answered {status}");
+    }
+    let v = json::parse(std::str::from_utf8(&body).context("healthz body not UTF-8")?)
+        .map_err(|e| anyhow::anyhow!("healthz JSON: {e}"))?;
+    let models = v.get("models").and_then(Json::as_arr).context("healthz lacks models[]")?;
+    for m in models {
+        if m.get("name").and_then(Json::as_str) == Some(cfg.model.as_str()) {
+            return m
+                .get("input_dim")
+                .and_then(Json::as_usize)
+                .context("model entry lacks input_dim");
+        }
+    }
+    bail!("gateway does not serve model {:?} (see GET /v1/models)", cfg.model)
+}
+
+/// Run the closed loop; blocks until all requests are answered.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    ensure_valid(cfg)?;
+    let input_dim = discover_input_dim(cfg)?;
+    let target = format!("/v1/models/{}/infer", cfg.model);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let by_status: Mutex<BTreeMap<u16, usize>> = Mutex::new(BTreeMap::new());
+    let errors = std::sync::atomic::AtomicUsize::new(0);
+    let ok = std::sync::atomic::AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..cfg.concurrency {
+            // distribute the remainder so the total is exactly `requests`
+            let n = cfg.requests / cfg.concurrency
+                + usize::from(c < cfg.requests % cfg.concurrency);
+            let latencies = &latencies;
+            let by_status = &by_status;
+            let errors = &errors;
+            let ok = &ok;
+            let target = &target;
+            let cfg = &cfg;
+            s.spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+                let mut conn: Option<HttpReader<TcpStream>> = None;
+                let mut local_lat = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let body = random_batch_body(&mut rng, cfg.batch, input_dim);
+                    let t = Instant::now();
+                    match one_request(&mut conn, cfg, target, body.as_bytes()) {
+                        Ok(status) => {
+                            if (200..300).contains(&status) {
+                                ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                local_lat.push(t.elapsed().as_secs_f64());
+                            } else {
+                                *by_status.lock().unwrap().entry(status).or_insert(0) += 1;
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            conn = None; // reconnect on the next request
+                        }
+                    }
+                }
+                latencies.lock().unwrap().extend(local_lat);
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let lats = latencies.into_inner().unwrap();
+    let ok = ok.into_inner();
+    Ok(LoadReport {
+        sent: cfg.requests,
+        ok,
+        by_status: by_status.into_inner().unwrap(),
+        errors: errors.into_inner(),
+        wall_s,
+        rps: ok as f64 / wall_s.max(1e-9),
+        p50_ms: percentile(&lats, 50.0) * 1e3,
+        p95_ms: percentile(&lats, 95.0) * 1e3,
+        p99_ms: percentile(&lats, 99.0) * 1e3,
+        mean_ms: if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<f64>() / lats.len() as f64 * 1e3
+        },
+        max_ms: lats.iter().copied().fold(0.0f64, f64::max) * 1e3,
+    })
+}
+
+fn ensure_valid(cfg: &LoadgenConfig) -> Result<()> {
+    if cfg.requests == 0 || cfg.concurrency == 0 || cfg.batch == 0 {
+        bail!("loadgen needs nonzero --requests, --concurrency, and --batch");
+    }
+    Ok(())
+}
+
+/// `[[f32,…],…]` body of `batch` random normal rows.
+fn random_batch_body(rng: &mut Rng, batch: usize, input_dim: usize) -> String {
+    let mut s = String::with_capacity(batch * input_dim * 8);
+    s.push('[');
+    for b in 0..batch {
+        if b > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        for i in 0..input_dim {
+            if i > 0 {
+                s.push(',');
+            }
+            // short decimal keeps bodies compact; exact value is irrelevant
+            s.push_str(&format!("{:.4}", rng.normal()));
+        }
+        s.push(']');
+    }
+    s.push(']');
+    s
+}
+
+/// Issue one request over the cached keep-alive connection, dialing a
+/// fresh one when absent or broken.
+fn one_request(
+    conn: &mut Option<HttpReader<TcpStream>>,
+    cfg: &LoadgenConfig,
+    target: &str,
+    body: &[u8],
+) -> Result<u16> {
+    if conn.is_none() {
+        let s = TcpStream::connect(&cfg.addr)?;
+        s.set_read_timeout(Some(cfg.timeout))?;
+        s.set_nodelay(true)?;
+        *conn = Some(HttpReader::new(s));
+    }
+    let r = conn.as_mut().unwrap();
+    // HttpReader owns the stream; clone a write handle for the request
+    let mut w = r.stream().try_clone()?;
+    if let Err(e) = write_request(&mut w, "POST", target, Some("application/json"), body) {
+        *conn = None;
+        return Err(e.into());
+    }
+    match r.read_response(&Limits::default()) {
+        Ok((status, _body)) => Ok(status),
+        Err(e) => {
+            *conn = None;
+            bail!("reading response: {e}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::gateway::{Gateway, GatewayConfig};
+    use crate::quant::pack::PackedModel;
+    use crate::serve::ServerConfig;
+
+    #[test]
+    fn closed_loop_against_live_gateway() {
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_loadgen_unit.msqpack");
+        pm.save(&path).unwrap();
+        let gw = Gateway::start(
+            GatewayConfig {
+                port: 0,
+                max_conns: 8,
+                server: ServerConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(1),
+                    queue_cap: 256,
+                    threads: 1,
+                },
+                ..Default::default()
+            },
+            &[("toy".to_string(), path, None)],
+        )
+        .unwrap();
+        let report = run(&LoadgenConfig {
+            addr: gw.addr().to_string(),
+            model: "toy".into(),
+            requests: 60,
+            concurrency: 3,
+            batch: 2,
+            seed: 9,
+            timeout: Duration::from_secs(30),
+        })
+        .unwrap();
+        assert_eq!(report.sent, 60);
+        assert_eq!(report.ok + report.by_status.values().sum::<usize>() + report.errors, 60);
+        assert_eq!(report.errors, 0, "{report:?}");
+        assert_eq!(report.ok, 60, "{report:?}");
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.rps > 0.0);
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"p99_ms\""), "{j}");
+        // unknown model errors cleanly
+        assert!(run(&LoadgenConfig {
+            addr: gw.addr().to_string(),
+            model: "ghost".into(),
+            requests: 1,
+            concurrency: 1,
+            batch: 1,
+            seed: 1,
+            timeout: Duration::from_secs(5),
+        })
+        .is_err());
+        gw.shutdown();
+    }
+}

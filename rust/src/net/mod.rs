@@ -1,0 +1,33 @@
+//! `msq gateway` (S17): the HTTP serving front-end over `serve`.
+//!
+//! PR 1 made packed models answer requests in-process; this subsystem
+//! puts them on the network with **zero new dependencies** — `std::net`
+//! sockets, the resident `util::threadpool` for per-connection workers,
+//! and `util::json` for the wire format. Four pieces:
+//!
+//! * [`http`] — minimal HTTP/1.1: request parser with hard limits
+//!   (never panics on wire data), response writer, keep-alive, and the
+//!   client half the load generator reuses;
+//! * [`router`] — the URL space (`/v1/models/{name}/infer`, `/healthz`,
+//!   `/metrics` in Prometheus text, `/admin/reload` hot-swap) over a
+//!   multi-model [`router::AppState`]; pure request → response, so it
+//!   unit-tests without sockets;
+//! * [`gateway`] — accept loop with a connection budget, graceful
+//!   drain (flag + listener wake + batcher flush) on the
+//!   SIGTERM-equivalent [`gateway::Gateway::shutdown`];
+//! * [`loadgen`] — closed-loop multi-connection load generator behind
+//!   `msq loadgen` and `benches/http_gateway.rs` → `BENCH_http.json`.
+//!
+//! Backpressure contract, end to end: batcher `QueueFull` → **429**
+//! (`Retry-After: 1`), drain/shutdown → **503**, malformed input →
+//! **400**, connection budget exhausted → **503** at accept time.
+
+pub mod gateway;
+pub mod http;
+pub mod loadgen;
+pub mod router;
+
+pub use gateway::{Gateway, GatewayConfig, ModelSpec};
+pub use http::{Limits, Request, Response};
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use router::AppState;

@@ -1,0 +1,650 @@
+//! Gateway routing: URL space, multi-model state, and the Prometheus
+//! scrape. Pure request → response logic (no sockets), so the whole
+//! surface unit-tests without binding a port.
+//!
+//! ```text
+//! GET  /healthz                    liveness + model inventory (503 when draining)
+//! GET  /metrics                    Prometheus text format
+//! GET  /v1/models                  model inventory
+//! POST /v1/models/{name}/infer     JSON batch [[f32,…],…] → logits
+//! POST /admin/reload               zero-downtime .msqpack hot-swap
+//! ```
+//!
+//! Backpressure maps [`SubmitError`] onto status codes: `QueueFull` →
+//! **429** (with `Retry-After`), `ShuttingDown`/drain → **503**,
+//! `BadInput` → **400**. In-flight requests always finish: a reload
+//! swaps the [`Server`] handle under new traffic while handlers that
+//! hold the old `Arc` drain through the old batcher.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Prom;
+use crate::serve::batcher::SubmitError;
+use crate::serve::{ServableModel, Server, ServerConfig};
+use crate::util::json::{self, Json};
+use crate::util::threadpool::ThreadPool;
+
+use super::http::{Request, Response};
+
+/// One served model: the running [`Server`] plus enough provenance to
+/// hot-reload it (`source` path, dim override) and report freshness
+/// (`generation` bumps on every swap).
+pub struct ModelEntry {
+    pub server: Arc<Server>,
+    pub source: PathBuf,
+    pub input_dim_override: Option<usize>,
+    pub generation: u64,
+}
+
+/// Route name a `.msqpack` path implies: its file stem. Shared by
+/// `/admin/reload` and the `msq gateway --packed path` CLI so the two
+/// naming rules cannot drift.
+pub fn model_name_from_path(path: &Path) -> Result<String> {
+    path.file_stem()
+        .and_then(|s| s.to_str())
+        .map(|s| s.to_string())
+        .with_context(|| format!("cannot derive a model name from {path:?}"))
+}
+
+/// Gateway-level counters (the per-model serving counters live in each
+/// model's `ServeMetrics`).
+#[derive(Default)]
+pub struct HttpMetrics {
+    pub connections_total: AtomicU64,
+    pub connections_rejected: AtomicU64,
+    pub connections_active: AtomicU64,
+    pub reloads_total: AtomicU64,
+    responses: Mutex<BTreeMap<u16, u64>>,
+}
+
+impl HttpMetrics {
+    pub fn record_response(&self, code: u16) {
+        *self.responses.lock().unwrap().entry(code).or_insert(0) += 1;
+    }
+
+    pub fn responses(&self) -> BTreeMap<u16, u64> {
+        self.responses.lock().unwrap().clone()
+    }
+}
+
+/// Shared gateway state: the model map, batcher config for (re)loads,
+/// the drain flag, and the connection pool (for backlog observability).
+pub struct AppState {
+    models: RwLock<BTreeMap<String, ModelEntry>>,
+    pub server_cfg: ServerConfig,
+    pub draining: AtomicBool,
+    pub http: HttpMetrics,
+    pub started: Instant,
+    pub conn_pool: Arc<ThreadPool>,
+}
+
+impl AppState {
+    pub fn new(server_cfg: ServerConfig, conn_pool: Arc<ThreadPool>) -> AppState {
+        AppState {
+            models: RwLock::new(BTreeMap::new()),
+            server_cfg,
+            draining: AtomicBool::new(false),
+            http: HttpMetrics::default(),
+            started: Instant::now(),
+            conn_pool,
+        }
+    }
+
+    /// Load (or hot-swap) `name` from a `.msqpack`. The new [`Server`]
+    /// replaces the old handle atomically under the map lock; handlers
+    /// still holding the old `Arc` drain through the old batcher, so no
+    /// in-flight request is dropped.
+    pub fn load_model(
+        &self,
+        name: &str,
+        path: &Path,
+        override_dim: Option<usize>,
+    ) -> Result<Json> {
+        if name.is_empty() || name.contains('/') {
+            bail!("model name {name:?} must be a non-empty path segment");
+        }
+        let model = Arc::new(
+            ServableModel::load(name, path, override_dim)
+                .with_context(|| format!("loading {path:?}"))?,
+        );
+        let server = Arc::new(Server::start(model, self.server_cfg.clone()));
+        let mut map = self.models.write().unwrap();
+        let generation = map.get(name).map(|e| e.generation + 1).unwrap_or(1);
+        let entry = ModelEntry {
+            server,
+            source: path.to_path_buf(),
+            input_dim_override: override_dim,
+            generation,
+        };
+        let info = Self::entry_info(name, &entry);
+        let old = map.insert(name.to_string(), entry);
+        drop(map);
+        // retire the old server outside the lock; if this was the last
+        // handle its batcher drains here (admin path, not the hot path)
+        drop(old);
+        Ok(info)
+    }
+
+    /// The running server for `name` (lock dropped before any inference).
+    pub fn server(&self, name: &str) -> Option<Arc<Server>> {
+        self.models.read().unwrap().get(name).map(|e| e.server.clone())
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Signal drain: infer/reload answer 503 from now on, and every
+    /// model's batcher stops admitting while it flushes.
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+        for e in self.models.read().unwrap().values() {
+            e.server.close();
+        }
+    }
+
+    /// Drop every model entry (joining each batcher via `Drop`) — the
+    /// last step of a graceful shutdown, after connections are joined.
+    pub fn clear_models(&self) {
+        let mut map = self.models.write().unwrap();
+        let entries: Vec<ModelEntry> = std::mem::take(&mut *map).into_values().collect();
+        drop(map);
+        drop(entries);
+    }
+
+    fn entry_info(name: &str, e: &ModelEntry) -> Json {
+        let m = &e.server.model;
+        Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("input_dim", Json::Num(m.input_dim as f64)),
+            ("output_dim", Json::Num(m.output_dim() as f64)),
+            ("layers", Json::Num(m.layers.len() as f64)),
+            (
+                "bits",
+                Json::Arr(m.layers.iter().map(|l| Json::Num(l.bits as f64)).collect()),
+            ),
+            ("payload_bytes", Json::Num(m.payload_bytes() as f64)),
+            ("compression", Json::Num(m.compression())),
+            ("source", Json::Str(e.source.display().to_string())),
+            ("generation", Json::Num(e.generation as f64)),
+            ("queue_depth", Json::Num(e.server.queue_depth() as f64)),
+            ("completed", Json::Num(e.server.metrics.completed() as f64)),
+        ])
+    }
+
+    pub fn model_infos(&self) -> Json {
+        let map = self.models.read().unwrap();
+        Json::Arr(map.iter().map(|(n, e)| Self::entry_info(n, e)).collect())
+    }
+}
+
+/// Route one parsed request. Infallible: every outcome is a `Response`.
+pub fn handle(state: &AppState, req: &Request) -> Response {
+    let path = req.path();
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/metrics") => Response::prometheus(render_metrics(state)),
+        ("GET", "/v1/models") => {
+            Response::json(200, &Json::obj(vec![("models", state.model_infos())]))
+        }
+        ("POST", "/admin/reload") => reload(state, req),
+        (method, _) => {
+            if let Some(name) =
+                path.strip_prefix("/v1/models/").and_then(|r| r.strip_suffix("/infer"))
+            {
+                if name.is_empty() || name.contains('/') {
+                    return Response::error(404, "no such route");
+                }
+                if method != "POST" {
+                    return Response::error(405, "infer requires POST");
+                }
+                return infer(state, name, req);
+            }
+            match path {
+                "/healthz" | "/metrics" | "/v1/models" | "/admin/reload" => {
+                    Response::error(405, "method not allowed")
+                }
+                _ => Response::error(404, "no such route"),
+            }
+        }
+    }
+}
+
+fn healthz(state: &AppState) -> Response {
+    let draining = state.draining.load(Ordering::Acquire);
+    let body = Json::obj(vec![
+        ("status", Json::Str(if draining { "draining" } else { "ok" }.into())),
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+        ("models", state.model_infos()),
+    ]);
+    // 503 while draining so load balancers stop routing here
+    Response::json(if draining { 503 } else { 200 }, &body)
+}
+
+/// `POST /v1/models/{name}/infer` — body is `[[f32,…],…]` (or a flat
+/// row, or `{"inputs": …}`); rows are submitted individually so the
+/// dynamic batcher can coalesce them with concurrent connections.
+fn infer(state: &AppState, name: &str, req: &Request) -> Response {
+    if state.draining.load(Ordering::Acquire) {
+        return Response::error(503, "gateway is draining");
+    }
+    let server = match state.server(name) {
+        Some(s) => s,
+        None => return Response::error(404, &format!("no model {name:?} (see /v1/models)")),
+    };
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body must be UTF-8 JSON"),
+    };
+    let parsed = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    };
+    let rows = match parsed.get("inputs").unwrap_or(&parsed).as_batch_f32() {
+        Some(r) => r,
+        None => {
+            return Response::error(
+                400,
+                "body must be [[f32,…],…], a flat [f32,…] row, or {\"inputs\": …}",
+            )
+        }
+    };
+    let batch = rows.len();
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(batch);
+    for row in rows {
+        match server.submit(row) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => {
+                // fail fast: drop the receivers of already-admitted rows
+                // (the batcher tolerates dead channels) so a 429 returns
+                // now, not after the deadline flush. Clients retry the
+                // whole batch.
+                drop(rxs);
+                return submit_error(&e);
+            }
+        }
+    }
+    let mut outputs = Vec::with_capacity(batch);
+    let mut argmax = Vec::with_capacity(batch);
+    for rx in rxs {
+        match rx.recv() {
+            Ok(r) => {
+                outputs.push(Json::arr_f32(&r.logits));
+                argmax.push(Json::Num(r.argmax as f64));
+            }
+            Err(_) => return Response::error(503, "model shut down mid-request"),
+        }
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("outputs", Json::Arr(outputs)),
+            ("argmax", Json::Arr(argmax)),
+            ("batch", Json::Num(batch as f64)),
+            ("latency_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3)),
+        ]),
+    )
+}
+
+/// 4xx/5xx mapping for [`SubmitError`] (the documented backpressure
+/// contract: 429 shed, 503 drain, 400 caller bug).
+fn submit_error(e: &SubmitError) -> Response {
+    match e {
+        SubmitError::QueueFull { depth, cap } => {
+            Response::error(429, &format!("queue full ({depth}/{cap}) — retry with backoff"))
+                .header("Retry-After", "1")
+        }
+        SubmitError::BadInput { got, want } => {
+            Response::error(400, &format!("input row has {got} values, model expects {want}"))
+        }
+        SubmitError::ShuttingDown => Response::error(503, "model is draining"),
+    }
+}
+
+/// `POST /admin/reload` — body `{"model": name?, "path": file?,
+/// "input_dim": n?}`. With a path: (re)load that file under `model`
+/// (file stem when omitted). Without: re-read the recorded source of
+/// `model`, or of every model when no name is given.
+fn reload(state: &AppState, req: &Request) -> Response {
+    if state.draining.load(Ordering::Acquire) {
+        return Response::error(503, "gateway is draining");
+    }
+    let spec = if req.body.is_empty() {
+        Json::Null
+    } else {
+        match std::str::from_utf8(&req.body).ok().map(json::parse) {
+            Some(Ok(v)) => v,
+            _ => return Response::error(400, "reload body must be JSON"),
+        }
+    };
+    let name = spec.get("model").and_then(Json::as_str).map(str::to_string);
+    let path = spec.get("path").and_then(Json::as_str).map(PathBuf::from);
+    let dim = spec.get("input_dim").and_then(Json::as_usize);
+
+    // resolve the (name, path, override) set to load
+    let mut targets: Vec<(String, PathBuf, Option<usize>)> = Vec::new();
+    match (&name, &path) {
+        (_, Some(p)) => {
+            let n = match &name {
+                Some(n) => n.clone(),
+                None => match model_name_from_path(p) {
+                    Ok(stem) => stem,
+                    Err(e) => return Response::error(400, &e.to_string()),
+                },
+            };
+            targets.push((n, p.clone(), dim));
+        }
+        (Some(n), None) => {
+            let map = state.models.read().unwrap();
+            match map.get(n) {
+                Some(e) => targets.push((
+                    n.clone(),
+                    e.source.clone(),
+                    dim.or(e.input_dim_override),
+                )),
+                None => return Response::error(404, &format!("no model {n:?} to reload")),
+            }
+        }
+        (None, None) => {
+            let map = state.models.read().unwrap();
+            for (n, e) in map.iter() {
+                targets.push((n.clone(), e.source.clone(), e.input_dim_override));
+            }
+        }
+    }
+    if targets.is_empty() {
+        return Response::error(400, "no models loaded — pass {\"model\":…, \"path\":…}");
+    }
+    let mut reloaded = Vec::new();
+    for (n, p, d) in targets {
+        match state.load_model(&n, &p, d) {
+            Ok(info) => reloaded.push(info),
+            Err(e) => {
+                // partial reloads keep their new servers; report both halves
+                return Response::json(
+                    400,
+                    &Json::obj(vec![
+                        ("error", Json::Str(format!("reloading {n:?}: {e}"))),
+                        ("reloaded", Json::Arr(reloaded)),
+                    ]),
+                );
+            }
+        }
+    }
+    state.http.reloads_total.fetch_add(1, Ordering::Relaxed);
+    Response::json(200, &Json::obj(vec![("reloaded", Json::Arr(reloaded))]))
+}
+
+/// Assemble the Prometheus scrape: gateway counters plus one labelled
+/// series set per model, fed from `ServeMetrics`/`LatencyHist`.
+pub fn render_metrics(state: &AppState) -> String {
+    let mut p = Prom::new();
+    p.family("msq_gateway_uptime_seconds", "gauge", "Seconds since gateway start");
+    p.sample("msq_gateway_uptime_seconds", &[], state.started.elapsed().as_secs_f64());
+    p.family("msq_gateway_draining", "gauge", "1 while shutting down");
+    p.sample(
+        "msq_gateway_draining",
+        &[],
+        if state.draining.load(Ordering::Acquire) { 1.0 } else { 0.0 },
+    );
+
+    let h = &state.http;
+    p.family("msq_gateway_connections_total", "counter", "Accepted TCP connections");
+    p.sample(
+        "msq_gateway_connections_total",
+        &[],
+        h.connections_total.load(Ordering::Relaxed) as f64,
+    );
+    p.family(
+        "msq_gateway_connections_rejected_total",
+        "counter",
+        "Connections shed at the budget",
+    );
+    p.sample(
+        "msq_gateway_connections_rejected_total",
+        &[],
+        h.connections_rejected.load(Ordering::Relaxed) as f64,
+    );
+    p.family("msq_gateway_connections_active", "gauge", "Connections currently open");
+    p.sample(
+        "msq_gateway_connections_active",
+        &[],
+        h.connections_active.load(Ordering::Relaxed) as f64,
+    );
+    p.family("msq_gateway_pool_outstanding", "gauge", "Connection-pool jobs queued or running");
+    p.sample("msq_gateway_pool_outstanding", &[], state.conn_pool.outstanding() as f64);
+    p.family("msq_gateway_reloads_total", "counter", "Successful /admin/reload calls");
+    p.sample("msq_gateway_reloads_total", &[], h.reloads_total.load(Ordering::Relaxed) as f64);
+
+    p.family("msq_gateway_http_responses_total", "counter", "HTTP responses by status code");
+    for (code, n) in h.responses() {
+        let c = code.to_string();
+        p.sample("msq_gateway_http_responses_total", &[("code", &c)], n as f64);
+    }
+
+    p.family("msq_requests_submitted_total", "counter", "Requests presented per model");
+    p.family("msq_requests_rejected_total", "counter", "Requests shed per model");
+    p.family("msq_requests_completed_total", "counter", "Requests completed per model");
+    p.family("msq_queue_depth", "gauge", "Requests waiting in the batcher");
+    p.family("msq_batch_occupancy_mean", "gauge", "Mean batch size a request rode in");
+    p.family("msq_window_rps", "gauge", "Completions per second over the sliding window");
+    p.family("msq_model_payload_bytes", "gauge", "Resident packed weight bytes");
+    p.family("msq_model_generation", "gauge", "Reload generation of the loaded pack");
+    p.family(
+        "msq_request_latency_seconds",
+        "summary",
+        "Submit-to-response latency (queue + compute)",
+    );
+    let map = state.models.read().unwrap();
+    for (name, e) in map.iter() {
+        let lbl = [("model", name.as_str())];
+        let m = &e.server.metrics;
+        p.sample("msq_requests_submitted_total", &lbl, m.submitted() as f64);
+        p.sample("msq_requests_rejected_total", &lbl, m.rejected() as f64);
+        p.sample("msq_requests_completed_total", &lbl, m.completed() as f64);
+        p.sample("msq_queue_depth", &lbl, e.server.queue_depth() as f64);
+        p.sample("msq_batch_occupancy_mean", &lbl, m.mean_batch());
+        p.sample("msq_window_rps", &lbl, m.window_rps());
+        p.sample("msq_model_payload_bytes", &lbl, e.server.model.payload_bytes() as f64);
+        p.sample("msq_model_generation", &lbl, e.generation as f64);
+        p.summary("msq_request_latency_seconds", &lbl, &m.latency_hist(), &[0.5, 0.9, 0.95, 0.99]);
+    }
+    drop(map);
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::PackedModel;
+    use std::io::Cursor;
+    use std::time::Duration;
+
+    fn toy_state() -> AppState {
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 64,
+            threads: 1,
+        };
+        let state = AppState::new(cfg, pool);
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_router_toy.msqpack");
+        pm.save(&path).unwrap();
+        state.load_model("toy", &path, None).unwrap();
+        state
+    }
+
+    fn req(method: &str, target: &str, body: &[u8]) -> Request {
+        let mut wire = Vec::new();
+        super::super::http::write_request(
+            &mut wire,
+            method,
+            target,
+            Some("application/json"),
+            body,
+        )
+        .unwrap();
+        super::super::http::HttpReader::new(Cursor::new(wire))
+            .read_request(&super::super::http::Limits::default())
+            .unwrap()
+    }
+
+    fn body_json(r: &Response) -> Json {
+        json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn infer_roundtrips_against_direct_forward() {
+        let state = toy_state();
+        let r = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[0.5,1,0,-1,0.25,2]]"));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let v = body_json(&r);
+        let out = v.path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+        // bit-identical to the direct forward pass through the same model
+        let model = state.server("toy").unwrap().model.clone();
+        let expect = model.infer_batch(&[0.5, 1.0, 0.0, -1.0, 0.25, 2.0], 1, None).unwrap();
+        assert_eq!(out, expect);
+        assert_eq!(v.get("batch").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn infer_accepts_all_three_body_shapes() {
+        let state = toy_state();
+        for body in [
+            &b"[[0,0,0,0,0,0],[1,1,1,1,1,1]]"[..],
+            &b"[0,0,0,0,0,0]"[..],
+            &br#"{"inputs": [[0,0,0,0,0,0]]}"#[..],
+        ] {
+            let r = handle(&state, &req("POST", "/v1/models/toy/infer", body));
+            assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(body));
+        }
+    }
+
+    #[test]
+    fn routing_errors() {
+        let state = toy_state();
+        assert_eq!(handle(&state, &req("GET", "/nope", b"")).status, 404);
+        assert_eq!(handle(&state, &req("GET", "/v1/models/toy/infer", b"")).status, 405);
+        assert_eq!(handle(&state, &req("PUT", "/healthz", b"")).status, 405);
+        assert_eq!(
+            handle(&state, &req("POST", "/v1/models/ghost/infer", b"[[1]]")).status,
+            404
+        );
+        assert_eq!(
+            handle(&state, &req("POST", "/v1/models/a/b/infer", b"[[1]]")).status,
+            404
+        );
+        // malformed bodies
+        for body in [&b"not json"[..], &b"[]"[..], &b"[[1,\"x\"]]"[..], &b"{}"[..]] {
+            let r = handle(&state, &req("POST", "/v1/models/toy/infer", body));
+            assert_eq!(r.status, 400, "{}", String::from_utf8_lossy(body));
+        }
+        // wrong row width maps BadInput → 400
+        let r = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[1,2,3]]"));
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8_lossy(&r.body).contains("expects 6"), "{:?}", r.body);
+    }
+
+    #[test]
+    fn healthz_and_models_inventory() {
+        let state = toy_state();
+        let r = handle(&state, &req("GET", "/healthz", b""));
+        assert_eq!(r.status, 200);
+        let v = body_json(&r);
+        assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(v.path(&["models", "0", "name"]).unwrap().as_str(), Some("toy"));
+        assert_eq!(v.path(&["models", "0", "input_dim"]).unwrap().as_usize(), Some(6));
+
+        let r = handle(&state, &req("GET", "/v1/models", b""));
+        assert_eq!(body_json(&r).path(&["models", "0", "output_dim"]).unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn metrics_scrape_has_counters_and_quantiles() {
+        let state = toy_state();
+        // complete one request so the latency summary is non-trivial
+        let r = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[0,0,0,0,0,0]]"));
+        assert_eq!(r.status, 200);
+        let text = render_metrics(&state);
+        assert!(text.contains("# TYPE msq_requests_completed_total counter"), "{text}");
+        assert!(text.contains("msq_requests_completed_total{model=\"toy\"} 1"), "{text}");
+        assert!(text.contains("msq_requests_submitted_total{model=\"toy\"} 1"), "{text}");
+        assert!(text.contains("msq_requests_rejected_total{model=\"toy\"} 0"), "{text}");
+        assert!(
+            text.contains("msq_request_latency_seconds{model=\"toy\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(text.contains("msq_request_latency_seconds_count{model=\"toy\"} 1"), "{text}");
+        assert!(text.contains("msq_queue_depth{model=\"toy\"}"), "{text}");
+    }
+
+    #[test]
+    fn reload_swaps_generation_and_weights() {
+        let state = toy_state();
+        let before = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[1,1,1,1,1,1]]"));
+        let out_before =
+            body_json(&before).path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+
+        // write a *different* pack (new seed) to a new path, reload onto it
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 99).unwrap();
+        let path2 = std::env::temp_dir().join("msq_router_toy2.msqpack");
+        pm.save(&path2).unwrap();
+        let body = format!(r#"{{"model": "toy", "path": {:?}}}"#, path2.display().to_string());
+        let r = handle(&state, &req("POST", "/admin/reload", body.as_bytes()));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let v = body_json(&r);
+        assert_eq!(v.path(&["reloaded", "0", "generation"]).unwrap().as_usize(), Some(2));
+
+        let after = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[1,1,1,1,1,1]]"));
+        let out_after = body_json(&after).path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+        assert_ne!(out_before, out_after, "reload did not swap the weights");
+
+        // bare reload (no body): re-reads every recorded source
+        let r = handle(&state, &req("POST", "/admin/reload", b""));
+        assert_eq!(r.status, 200);
+        assert_eq!(
+            body_json(&r).path(&["reloaded", "0", "generation"]).unwrap().as_usize(),
+            Some(3)
+        );
+        // unknown model / bad path error cleanly
+        assert_eq!(
+            handle(&state, &req("POST", "/admin/reload", br#"{"model": "ghost"}"#)).status,
+            404
+        );
+        assert_eq!(
+            handle(
+                &state,
+                &req("POST", "/admin/reload", br#"{"model": "toy", "path": "/no/such.msqpack"}"#)
+            )
+            .status,
+            400
+        );
+    }
+
+    #[test]
+    fn drain_maps_to_503() {
+        let state = toy_state();
+        state.start_drain();
+        assert_eq!(handle(&state, &req("GET", "/healthz", b"")).status, 503);
+        assert_eq!(
+            handle(&state, &req("POST", "/v1/models/toy/infer", b"[[0,0,0,0,0,0]]")).status,
+            503
+        );
+        assert_eq!(handle(&state, &req("POST", "/admin/reload", b"")).status, 503);
+        // metrics stay scrapeable during drain
+        let r = handle(&state, &req("GET", "/metrics", b""));
+        assert_eq!(r.status, 200);
+        assert!(String::from_utf8_lossy(&r.body).contains("msq_gateway_draining 1"));
+        state.clear_models();
+    }
+}

@@ -11,10 +11,16 @@
 //!
 //! Format (all little-endian):
 //! ```text
-//! magic "MSQPACK1" | u32 n_layers
+//! magic "MSQPACK2" | u64 input_dim | u32 n_layers
 //! per layer: u32 name_len | name bytes | u8 bits | f32 scale | u64 numel
 //! payload:  per layer, ceil(numel * bits / 8) bytes of packed codes
 //! ```
+//!
+//! `input_dim` is the model's input width (0 = unknown), which lets the
+//! serving registry chain the MLP layer shapes without an external
+//! `--input-dim`. v1 files (magic `MSQPACK1`, no `input_dim` field)
+//! still load — their `input_dim` reads as 0, so consumers fall back to
+//! an explicit dimension.
 
 use std::io::Write;
 use std::path::Path;
@@ -66,6 +72,10 @@ impl PackedLayer {
 
 #[derive(Clone, Debug, Default)]
 pub struct PackedModel {
+    /// Input width of the packed network (0 = unknown; v1 files and
+    /// hand-assembled models). When set, serving infers the whole MLP
+    /// topology from the header alone.
+    pub input_dim: usize,
     pub layers: Vec<PackedLayer>,
 }
 
@@ -170,7 +180,7 @@ impl PackedModel {
             bail!("synth_mlp: {} bit-widths for {} layers", bits.len(), dims.len() - 1);
         }
         let mut rng = crate::util::prng::Rng::new(seed);
-        let mut pm = PackedModel::default();
+        let mut pm = PackedModel { input_dim: dims[0], ..Default::default() };
         for l in 0..dims.len() - 1 {
             let (cin, cout) = (dims[l], dims[l + 1]);
             let std = (2.0 / cin as f32).sqrt(); // He init: keeps logits sane
@@ -199,7 +209,8 @@ impl PackedModel {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"MSQPACK1")?;
+        f.write_all(b"MSQPACK2")?;
+        f.write_all(&(self.input_dim as u64).to_le_bytes())?;
         f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
         for l in &self.layers {
             f.write_all(&(l.name.len() as u32).to_le_bytes())?;
@@ -225,9 +236,11 @@ impl PackedModel {
             *p += n;
             Ok(s)
         };
-        if take(&mut p, 8)? != b"MSQPACK1" {
-            bail!("bad magic");
-        }
+        let input_dim = match take(&mut p, 8)? {
+            b"MSQPACK2" => u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize,
+            b"MSQPACK1" => 0, // pre-v2 pack: input width unknown
+            _ => bail!("bad magic"),
+        };
         let n_layers = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
         // each layer header is >= 17 bytes; reject absurd counts before
         // allocating (corrupt-file hardening)
@@ -256,7 +269,7 @@ impl PackedModel {
             };
             l.data = take(&mut p, nbytes)?.to_vec();
         }
-        Ok(PackedModel { layers })
+        Ok(PackedModel { input_dim, layers })
     }
 }
 
@@ -371,6 +384,38 @@ mod tests {
             a.layers.iter().zip(&c.layers).any(|(x, y)| x.data != y.data),
             "different seeds produced identical packs"
         );
+    }
+
+    #[test]
+    fn v2_header_roundtrips_input_dim() {
+        let pm = PackedModel::synth_mlp(&[24, 16, 4], &[4, 3], 7).unwrap();
+        assert_eq!(pm.input_dim, 24);
+        let path = std::env::temp_dir().join("msq_pack_v2.msqpack");
+        pm.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        assert_eq!(back.input_dim, 24);
+        assert_eq!(back.layers.len(), 2);
+    }
+
+    #[test]
+    fn v1_files_still_load_with_unknown_dim() {
+        // hand-write a v1 file: old magic, no input_dim field
+        let l = pack_layer("fc0", &rand_weights(12, 1), 4);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MSQPACK1");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(l.name.as_bytes());
+        bytes.push(l.bits);
+        bytes.extend_from_slice(&l.scale.to_le_bytes());
+        bytes.extend_from_slice(&(l.numel as u64).to_le_bytes());
+        bytes.extend_from_slice(&l.data);
+        let path = std::env::temp_dir().join("msq_pack_v1.msqpack");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        assert_eq!(back.input_dim, 0, "v1 packs carry no input width");
+        assert_eq!(back.layers[0].numel, 12);
+        assert_eq!(unpack_layer(&back.layers[0]).unwrap().len(), 12);
     }
 
     #[test]

@@ -161,14 +161,27 @@ impl DynamicBatcher {
         self.shared.state.lock().unwrap().next_id
     }
 
+    /// Stop admitting new requests (submit returns `ShuttingDown`) while
+    /// the dispatcher keeps flushing whatever is queued. Idempotent and
+    /// non-consuming — the drain signal a gateway broadcasts to every
+    /// model's batcher before joining them one by one.
+    pub fn close(&self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Whether `close`/`shutdown` has been signalled.
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
     /// Stop accepting requests, flush what's queued, join the worker.
     pub fn shutdown(mut self) {
         self.close_and_join();
     }
 
     fn close_and_join(&mut self) {
-        self.shared.state.lock().unwrap().closed = true;
-        self.shared.cv.notify_all();
+        self.close();
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -361,6 +374,94 @@ mod tests {
         b.shutdown(); // must not strand the queued request
         let r = rx.recv_timeout(Duration::from_secs(1)).expect("flush on shutdown");
         assert_eq!(r.logits, vec![7.0]);
+    }
+
+    #[test]
+    fn concurrent_submitters_saturating_queue_account_exactly() {
+        // slow executor + tiny queue: submits race each other into
+        // saturation, and every request must end as exactly one of
+        // {response delivered, QueueFull} — nothing lost, nothing double.
+        let run: Box<BatchFn> = Box::new(|inputs| {
+            thread::sleep(Duration::from_millis(1));
+            inputs
+        });
+        let cfg = BatchConfig { max_batch: 2, max_delay: Duration::ZERO, queue_cap: 4 };
+        let b = DynamicBatcher::new(cfg, run);
+        let threads = 4;
+        let per_thread = 50;
+        let completed = std::sync::atomic::AtomicUsize::new(0);
+        let shed = std::sync::atomic::AtomicUsize::new(0);
+        thread::scope(|s| {
+            for t in 0..threads {
+                let b = &b;
+                let completed = &completed;
+                let shed = &shed;
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        match b.submit(vec![(t * per_thread + i) as f32]) {
+                            Ok(rx) => {
+                                let r = recv(&rx);
+                                assert_eq!(r.logits, vec![(t * per_thread + i) as f32]);
+                                completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            Err(SubmitError::QueueFull { depth, cap }) => {
+                                assert!(depth >= cap, "shed below capacity: {depth}/{cap}");
+                                shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("unexpected submit error: {e:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        let done = completed.load(std::sync::atomic::Ordering::Relaxed);
+        let lost = shed.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(done + lost, threads * per_thread);
+        assert!(done > 0, "closed-loop clients must make progress");
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn close_drains_every_admitted_request() {
+        // submitters race a concurrent close(): whatever was admitted
+        // before the flag flipped must still receive its response —
+        // shutdown drains in-flight receivers instead of stranding them.
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 4096,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        let admitted = Mutex::new(Vec::new());
+        thread::scope(|s| {
+            for t in 0..4 {
+                let b = &b;
+                let admitted = &admitted;
+                s.spawn(move || {
+                    for i in 0..200 {
+                        match b.submit(vec![(t * 1000 + i) as f32]) {
+                            Ok(rx) => admitted.lock().unwrap().push((t * 1000 + i, rx)),
+                            Err(SubmitError::ShuttingDown) => break,
+                            Err(e) => panic!("unexpected: {e:?}"),
+                        }
+                    }
+                });
+            }
+            // flip the flag mid-race (no sleep needed: admits above race this)
+            b.close();
+            assert!(b.is_closed());
+        });
+        // every admitted request still gets its own response
+        for (tag, rx) in admitted.into_inner().unwrap() {
+            let r = rx.recv_timeout(Duration::from_secs(10)).expect("drained on close");
+            assert_eq!(r.logits, vec![tag as f32]);
+        }
+        // post-close admission is refused
+        match b.submit(vec![0.0]) {
+            Err(SubmitError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        b.shutdown();
     }
 
     #[test]

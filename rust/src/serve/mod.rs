@@ -35,5 +35,5 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{BatchConfig, DynamicBatcher, InferResponse, SubmitError};
-pub use registry::{ModelRegistry, QuantLayer, ServableModel};
+pub use registry::{resolve_input_dim, ModelRegistry, QuantLayer, ServableModel};
 pub use server::{ServeMetrics, Server, ServerConfig};

@@ -4,10 +4,12 @@
 //! code stream plus `(bits, scale)` metadata — so resident model memory
 //! equals the payload the compression ratio advertises (a 2-bit layer
 //! really costs 1/16th of FP32 at serve time, not just on disk). Layer
-//! shapes are not stored in the `.msqpack` header; the registry derives
-//! them MLP-style by chaining dimensions from the declared input width:
-//! `rows_l = numel_l / cols_l`, `cols_{l+1} = rows_l`, rejecting models
-//! whose element counts don't factor.
+//! shapes are derived MLP-style by chaining dimensions from the input
+//! width: `rows_l = numel_l / cols_l`, `cols_{l+1} = rows_l`, rejecting
+//! models whose element counts don't factor. The input width itself
+//! comes from the `.msqpack` v2 header ([`resolve_input_dim`]); an
+//! explicit `--input-dim` is an *override* and the only option for v1
+//! packs, which predate the header field.
 //!
 //! [`ModelRegistry`] is the concurrent name → model map the server and
 //! CLI share; models are immutable once loaded (`Arc`), so lookups are
@@ -22,6 +24,51 @@ use anyhow::{bail, ensure, Context, Result};
 use super::kernels;
 use crate::quant::pack::{PackedLayer, PackedModel};
 use crate::util::threadpool::ThreadPool;
+
+/// The input width serving should use for `pm`: an explicit override
+/// wins; otherwise the `.msqpack` v2 header. v1 packs carry no width, so
+/// they *require* the override.
+pub fn resolve_input_dim(pm: &PackedModel, override_dim: Option<usize>) -> Result<usize> {
+    if let Some(d) = override_dim {
+        ensure!(d > 0, "--input-dim must be nonzero");
+        return Ok(d);
+    }
+    if pm.input_dim > 0 {
+        return Ok(pm.input_dim);
+    }
+    bail!("pack has no input-dim header (pre-v2 .msqpack) — pass --input-dim explicitly")
+}
+
+/// Chain the MLP layer widths implied by the packed element counts:
+/// returns each layer's output width (`rows_l`), so the last entry is
+/// the class count. Errors when a layer's weights don't factor.
+pub fn chain_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
+    ensure!(input_dim > 0, "input dim must be nonzero");
+    let mut dims = Vec::with_capacity(pm.layers.len());
+    let mut cols = input_dim;
+    for l in &pm.layers {
+        if l.numel == 0 || l.numel % cols != 0 {
+            bail!(
+                "layer {:?}: {} weights do not factor over input dim {cols} — wrong input \
+                 dim or non-MLP topology",
+                l.name,
+                l.numel
+            );
+        }
+        let rows = l.numel / cols;
+        dims.push(rows);
+        cols = rows;
+    }
+    Ok(dims)
+}
+
+/// The hidden widths a packed MLP implies (the dim chain minus the final
+/// class count) — what `msq eval-packed` feeds a fresh training backend.
+pub fn mlp_hidden_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
+    let mut dims = chain_dims(pm, input_dim)?;
+    dims.pop(); // last entry is the class count, not a hidden width
+    Ok(dims)
+}
 
 /// One packed layer plus its derived matrix shape (`rows` outputs ×
 /// `cols` inputs, row-major code stream).
@@ -97,9 +144,23 @@ impl ServableModel {
         Ok(ServableModel { name: name.to_string(), input_dim, layers })
     }
 
-    pub fn load(name: &str, path: &Path, input_dim: usize) -> Result<ServableModel> {
+    /// Like [`ServableModel::from_packed`], but the input width is
+    /// resolved from the pack header with `override_dim` winning
+    /// (see [`resolve_input_dim`]).
+    pub fn from_packed_auto(
+        name: &str,
+        pm: &PackedModel,
+        override_dim: Option<usize>,
+    ) -> Result<ServableModel> {
+        let dim = resolve_input_dim(pm, override_dim)?;
+        Self::from_packed(name, pm, dim)
+    }
+
+    /// Load a `.msqpack` from disk; the input width comes from the v2
+    /// header unless `override_dim` is given.
+    pub fn load(name: &str, path: &Path, override_dim: Option<usize>) -> Result<ServableModel> {
         let pm = PackedModel::load(path)?;
-        Self::from_packed(name, &pm, input_dim)
+        Self::from_packed_auto(name, &pm, override_dim)
     }
 
     pub fn output_dim(&self) -> usize {
@@ -172,14 +233,16 @@ impl ModelRegistry {
         m
     }
 
-    /// Load a `.msqpack` from disk and register it under `name`.
+    /// Load a `.msqpack` from disk and register it under `name`. The
+    /// input width is inferred from the v2 header; `override_dim` (when
+    /// `Some`) wins, and is required for pre-v2 packs.
     pub fn load_file(
         &self,
         name: &str,
         path: &Path,
-        input_dim: usize,
+        override_dim: Option<usize>,
     ) -> Result<Arc<ServableModel>> {
-        let m = ServableModel::load(name, path, input_dim)
+        let m = ServableModel::load(name, path, override_dim)
             .with_context(|| format!("loading {path:?}"))?;
         Ok(self.insert(m))
     }
@@ -282,9 +345,33 @@ mod tests {
         let path = std::env::temp_dir().join("msq_registry_test.msqpack");
         pm.save(&path).unwrap();
         let reg = ModelRegistry::new();
-        let m = reg.load_file("disk", &path, 10).unwrap();
+        // no override: the input width comes from the v2 pack header
+        let m = reg.load_file("disk", &path, None).unwrap();
+        assert_eq!(m.input_dim, 10);
         assert_eq!(m.output_dim(), 3);
-        // wrong input dim errors cleanly
-        assert!(reg.load_file("bad", &path, 7).is_err());
+        // an explicit override still wins — and a wrong one errors cleanly
+        assert!(reg.load_file("bad", &path, Some(7)).is_err());
+    }
+
+    #[test]
+    fn input_dim_resolution_precedence() {
+        let pm = toy_model(12, 8, 4);
+        assert_eq!(resolve_input_dim(&pm, None).unwrap(), 12);
+        assert_eq!(resolve_input_dim(&pm, Some(6)).unwrap(), 6);
+        assert!(resolve_input_dim(&pm, Some(0)).is_err());
+        // v1-style pack: no header width, override required
+        let v1 = PackedModel { input_dim: 0, layers: pm.layers.clone() };
+        assert_eq!(resolve_input_dim(&v1, Some(12)).unwrap(), 12);
+        let err = resolve_input_dim(&v1, None).unwrap_err();
+        assert!(err.to_string().contains("input-dim"), "{err}");
+    }
+
+    #[test]
+    fn dim_chain_derivation() {
+        let pm = toy_model(12, 8, 4);
+        assert_eq!(chain_dims(&pm, 12).unwrap(), vec![8, 4]);
+        assert_eq!(mlp_hidden_dims(&pm, 12).unwrap(), vec![8]);
+        assert!(chain_dims(&pm, 7).is_err());
+        assert!(chain_dims(&pm, 0).is_err());
     }
 }

@@ -105,6 +105,22 @@ impl ServeMetrics {
         self.latency.lock().unwrap().percentile(p) * 1e3
     }
 
+    /// Snapshot of the streaming latency histogram (the gateway renders
+    /// Prometheus summary quantiles from it without holding the lock).
+    pub fn latency_hist(&self) -> LatencyHist {
+        self.latency.lock().unwrap().clone()
+    }
+
+    /// Request-weighted mean batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        self.occupancy.lock().unwrap().mean()
+    }
+
+    /// Request rate over the sliding window (req/s).
+    pub fn window_rps(&self) -> f64 {
+        self.rate.lock().unwrap().rate(self.now_secs())
+    }
+
     /// Lifetime mean throughput (completions / uptime).
     pub fn throughput(&self) -> f64 {
         let dt = self.now_secs().max(1e-9);
@@ -223,6 +239,13 @@ impl Server {
 
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
+    }
+
+    /// Stop admitting requests while the dispatcher drains what's queued
+    /// (non-consuming — a gateway broadcasts this to every model first,
+    /// then drops the handles to join). Submits now fail `ShuttingDown`.
+    pub fn close(&self) {
+        self.batcher.close();
     }
 
     /// Drain the queue, stop the dispatcher, join workers.

@@ -49,6 +49,11 @@ impl Args {
         self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Option value with a default (`args.opt_or("model", "mlp")`).
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
     pub fn opts(&self, name: &str) -> Vec<&str> {
         self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
     }
@@ -96,5 +101,12 @@ mod tests {
         assert_eq!(a.opt_usize("steps", 0), 100);
         assert!((a.opt_f32("lr", 0.0) - 0.5).abs() < 1e-9);
         assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn opt_with_default() {
+        let a = Args::parse(&sv(&["--model", "resnet20"]), &["model"]);
+        assert_eq!(a.opt_or("model", "mlp"), "resnet20");
+        assert_eq!(a.opt_or("missing", "mlp"), "mlp");
     }
 }

@@ -78,6 +78,39 @@ impl Json {
         }
     }
 
+    /// Strict numeric vector: `Some` only when *every* element is a
+    /// number (rejecting mixed arrays instead of silently dropping
+    /// elements and misaligning model inputs).
+    pub fn as_f32s(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        let nums: Vec<f32> = arr.iter().filter_map(Json::as_f64).map(|v| v as f32).collect();
+        if nums.len() == arr.len() {
+            Some(nums)
+        } else {
+            None
+        }
+    }
+
+    /// Inference batch wire format: `[[f32, …], …]` parses row-per-row;
+    /// a flat numeric array `[f32, …]` is promoted to a batch of one.
+    /// `None` for anything else (non-array, mixed rows, non-numeric
+    /// elements) — including an empty array, which has no rows to infer.
+    pub fn as_batch_f32(&self) -> Option<Vec<Vec<f32>>> {
+        let arr = self.as_arr()?;
+        if arr.is_empty() {
+            return None;
+        }
+        if arr.iter().all(|v| matches!(v, Json::Num(_))) {
+            return self.as_f32s().map(|row| vec![row]);
+        }
+        let rows: Vec<Vec<f32>> = arr.iter().filter_map(Json::as_f32s).collect();
+        if rows.len() == arr.len() {
+            Some(rows)
+        } else {
+            None
+        }
+    }
+
     /// `get` chain helper: `j.path(&["inputs", "0", "name"])`.
     pub fn path(&self, parts: &[&str]) -> Option<&Json> {
         let mut cur = self;
@@ -180,8 +213,13 @@ impl Json {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Container nesting cap: recursion is bounded so adversarial input
+/// (e.g. a megabyte of `[` on the gateway's network path) errors
+/// instead of overflowing the stack.
+const MAX_DEPTH: usize = 128;
+
 pub fn parse(text: &str) -> Result<Json, String> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -199,6 +237,7 @@ pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -309,12 +348,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the container depth, erroring past [`MAX_DEPTH`]. No
+    /// decrement on the error path — a failed parse aborts outright.
+    fn descend(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
+        self.descend()?;
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -325,6 +376,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 other => return Err(format!("bad array sep {other:?} at {}", self.i)),
@@ -333,11 +385,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
+        self.descend()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -353,6 +407,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 other => return Err(format!("bad object sep {other:?} at {}", self.i)),
@@ -397,6 +452,45 @@ mod tests {
     #[test]
     fn rejects_trailing() {
         assert!(parse("{} garbage").is_err());
+    }
+
+    #[test]
+    fn nesting_bounded_not_stack_overflow() {
+        // a megabyte of '[' must error cleanly, not recurse to a crash
+        let bomb = "[".repeat(1 << 20);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // mixed array/object nesting hits the same cap
+        let bomb = r#"{"a":["#.repeat(100_000);
+        assert!(parse(&bomb).is_err());
+        // depth accounting unwinds correctly for legal nesting
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&deep).is_ok());
+        let wide = "[[1],[2],[3],[4],[5],[6],[7],[8]]";
+        assert!(parse(wide).is_ok());
+    }
+
+    #[test]
+    fn f32_vector_is_strict() {
+        assert_eq!(parse("[1, 2.5, -3]").unwrap().as_f32s(), Some(vec![1.0, 2.5, -3.0]));
+        assert_eq!(parse("[]").unwrap().as_f32s(), Some(vec![]));
+        assert_eq!(parse("[1, \"x\"]").unwrap().as_f32s(), None, "mixed array must not parse");
+        assert_eq!(parse("3").unwrap().as_f32s(), None);
+    }
+
+    #[test]
+    fn batch_wire_format() {
+        // nested batch
+        let b = parse("[[1, 2], [3, 4], [5, 6]]").unwrap().as_batch_f32().unwrap();
+        assert_eq!(b, vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        // flat array promotes to a batch of one
+        let one = parse("[1, 2, 3]").unwrap().as_batch_f32().unwrap();
+        assert_eq!(one, vec![vec![1.0, 2.0, 3.0]]);
+        // rejects: empty, mixed rows, non-numeric leaves, non-arrays
+        assert_eq!(parse("[]").unwrap().as_batch_f32(), None);
+        assert_eq!(parse("[[1], 2]").unwrap().as_batch_f32(), None);
+        assert_eq!(parse("[[1], [\"x\"]]").unwrap().as_batch_f32(), None);
+        assert_eq!(parse("{\"a\": 1}").unwrap().as_batch_f32(), None);
     }
 
     #[test]

@@ -170,6 +170,13 @@ impl ThreadPool {
         self.shared.cv.notify_one();
     }
 
+    /// Jobs submitted but not yet finished (queued + running). Exposed
+    /// for observability (the gateway's `/metrics` reports its connection
+    /// pool's backlog); racy by nature, so treat it as a gauge.
+    pub fn outstanding(&self) -> usize {
+        self.shared.outstanding.load(Ordering::Acquire)
+    }
+
     /// Block until every submitted job has finished.
     pub fn wait(&self) {
         debug_assert!(!self.handles.is_empty(), "wait on a scoped (worker-less) pool");
@@ -289,6 +296,23 @@ mod tests {
         }
         pool.wait();
         assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        assert_eq!(pool.outstanding(), 0, "wait() returned with jobs outstanding");
+    }
+
+    #[test]
+    fn outstanding_tracks_blocked_jobs() {
+        let pool = ThreadPool::new(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit(move || {
+            started_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+        });
+        started_rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert_eq!(pool.outstanding(), 1);
+        gate_tx.send(()).unwrap();
+        pool.wait();
+        assert_eq!(pool.outstanding(), 0);
     }
 
     #[test]

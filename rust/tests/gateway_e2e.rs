@@ -1,0 +1,244 @@
+//! End-to-end gateway test on the default (no-XLA) feature set: pack →
+//! `Gateway::start` on an ephemeral port → raw-socket HTTP clients →
+//! bit-identical logits vs the in-process `serve::Server` → `/metrics`
+//! scrape → `/admin/reload` hot-swap → graceful shutdown.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use msq::net::http::{write_request, HttpReader, Limits};
+use msq::net::{Gateway, GatewayConfig};
+use msq::quant::pack::PackedModel;
+use msq::serve::{ServableModel, Server, ServerConfig};
+use msq::util::json::{self, Json};
+use msq::util::prng::Rng;
+
+const DIMS: [usize; 3] = [24, 16, 4];
+const BITS: [u8; 2] = [5, 3];
+
+fn write_pack(seed: u64, file: &str) -> std::path::PathBuf {
+    let pm = PackedModel::synth_mlp(&DIMS, &BITS, seed).unwrap();
+    let path = std::env::temp_dir().join(file);
+    pm.save(&path).unwrap();
+    path
+}
+
+fn request(addr: std::net::SocketAddr, method: &str, target: &str, body: &[u8]) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write_request(&mut s, method, target, Some("application/json"), body).unwrap();
+    let (status, bytes) =
+        HttpReader::new(s).read_response(&Limits::default()).expect("response");
+    let v = json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    (status, v)
+}
+
+fn serve_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        queue_cap: 1024,
+        threads: 2,
+    }
+}
+
+#[test]
+fn gateway_end_to_end() {
+    let path_a = write_pack(11, "msq_gw_e2e_a.msqpack");
+    let path_b = write_pack(77, "msq_gw_e2e_b.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0, // ephemeral
+            max_conns: 16,
+            read_timeout: Duration::from_millis(50),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("m".to_string(), path_a.clone(), None)],
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // --- health + inventory (input width from the v2 pack header)
+    let (status, health) = request(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.path(&["models", "0", "name"]).unwrap().as_str(), Some("m"));
+    assert_eq!(health.path(&["models", "0", "input_dim"]).unwrap().as_usize(), Some(24));
+
+    // --- served logits are bit-identical to serve::Server on the pack
+    let reference = Server::start(
+        Arc::new(
+            ServableModel::from_packed_auto(
+                "ref",
+                &PackedModel::load(&path_a).unwrap(),
+                None,
+            )
+            .unwrap(),
+        ),
+        serve_cfg(),
+    );
+    let mut rng = Rng::new(5);
+    let mut first_logits = Vec::new();
+    for _ in 0..10 {
+        let x: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+        let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+        let (status, v) = request(addr, "POST", "/v1/models/m/infer", body.as_bytes());
+        assert_eq!(status, 200, "{v:?}");
+        // the JSON round trip is exact: f32 -> f64 -> shortest repr -> f32
+        let got = v.path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+        let expect = reference.infer_blocking(x).unwrap().logits;
+        assert_eq!(got, expect, "gateway logits diverge from serve::Server");
+        if first_logits.is_empty() {
+            first_logits = got;
+        }
+    }
+
+    // --- concurrent clients over their own keep-alive connections
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..15 {
+                    let x: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+                    let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+                    let (status, v) =
+                        request(addr, "POST", "/v1/models/m/infer", body.as_bytes());
+                    assert_eq!(status, 200, "{v:?}");
+                    assert_eq!(
+                        v.path(&["outputs", "0"]).unwrap().as_arr().unwrap().len(),
+                        4
+                    );
+                }
+            });
+        }
+    });
+
+    // --- /metrics: Prometheus text with counters + latency quantiles
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_request(&mut s, "GET", "/metrics", None, b"").unwrap();
+    let (status, bytes) = HttpReader::new(s).read_response(&Limits::default()).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(bytes).unwrap();
+    // 10 sequential + 60 concurrent requests completed so far
+    assert!(text.contains("msq_requests_completed_total{model=\"m\"} 70"), "{text}");
+    assert!(text.contains("msq_requests_rejected_total{model=\"m\"} 0"), "{text}");
+    assert!(text.contains("# TYPE msq_request_latency_seconds summary"), "{text}");
+    assert!(
+        text.contains("msq_request_latency_seconds{model=\"m\",quantile=\"0.99\"}"),
+        "{text}"
+    );
+    assert!(text.contains("msq_request_latency_seconds_count{model=\"m\"} 70"), "{text}");
+    assert!(text.contains("msq_gateway_connections_total"), "{text}");
+
+    // --- error mapping: 404 unknown model, 400 bad rows
+    let (status, _) = request(addr, "POST", "/v1/models/ghost/infer", b"[[1]]");
+    assert_eq!(status, 404);
+    let (status, v) = request(addr, "POST", "/v1/models/m/infer", b"[[1,2]]");
+    assert_eq!(status, 400);
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("expects 24"), "{v:?}");
+
+    // --- hot reload onto pack B: generation bumps, weights actually swap
+    let body = format!(r#"{{"model": "m", "path": {:?}}}"#, path_b.display().to_string());
+    let (status, v) = request(addr, "POST", "/admin/reload", body.as_bytes());
+    assert_eq!(status, 200, "{v:?}");
+    assert_eq!(v.path(&["reloaded", "0", "generation"]).unwrap().as_usize(), Some(2));
+
+    let reference_b = Server::start(
+        Arc::new(
+            ServableModel::from_packed_auto(
+                "refb",
+                &PackedModel::load(&path_b).unwrap(),
+                None,
+            )
+            .unwrap(),
+        ),
+        serve_cfg(),
+    );
+    let mut rng = Rng::new(5); // same stream as the first wave
+    let x: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+    let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+    let (status, v) = request(addr, "POST", "/v1/models/m/infer", body.as_bytes());
+    assert_eq!(status, 200);
+    let got = v.path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+    let expect = reference_b.infer_blocking(x).unwrap().logits;
+    assert_eq!(got, expect, "post-reload logits diverge from pack B");
+    assert_ne!(got, first_logits, "reload did not change the weights");
+
+    reference.shutdown();
+    reference_b.shutdown();
+    gw.shutdown(); // graceful: drains and joins without hanging
+}
+
+#[test]
+fn gateway_backpressure_maps_queue_full_to_429() {
+    // deadline far away + tiny queue: rows pile up in the batcher until
+    // admission control sheds, which the gateway must surface as 429
+    let path = write_pack(3, "msq_gw_backpressure.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 4,
+            read_timeout: Duration::from_millis(50),
+            server: ServerConfig {
+                max_batch: 1000,
+                max_delay: Duration::from_secs(600),
+                queue_cap: 2,
+                threads: 1,
+            },
+            ..Default::default()
+        },
+        &[("m".to_string(), path, None)],
+    )
+    .unwrap();
+    // 20 rows against a queue of 2 that cannot flush before the deadline
+    let rows: Vec<Json> = (0..20).map(|_| Json::arr_f32(&[0.5; 24])).collect();
+    let body = Json::Arr(rows).to_string();
+    let (status, v) = request(gw.addr(), "POST", "/v1/models/m/infer", body.as_bytes());
+    assert_eq!(status, 429, "{v:?}");
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("queue full"), "{v:?}");
+    // the shed shows up in the model's rejected counter
+    let mut s = TcpStream::connect(gw.addr()).unwrap();
+    write_request(&mut s, "GET", "/metrics", None, b"").unwrap();
+    let (_, bytes) = HttpReader::new(s).read_response(&Limits::default()).unwrap();
+    let text = String::from_utf8(bytes).unwrap();
+    assert!(text.contains("msq_requests_rejected_total{model=\"m\"} 1"), "{text}");
+    gw.shutdown();
+}
+
+#[test]
+fn gateway_connection_budget_sheds_with_503() {
+    let path = write_pack(4, "msq_gw_budget.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 1, // budget of one
+            read_timeout: Duration::from_millis(50),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("m".to_string(), path, None)],
+    )
+    .unwrap();
+    // occupy the single slot with a live keep-alive connection
+    let mut held = TcpStream::connect(gw.addr()).unwrap();
+    held.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write_request(&mut held, "GET", "/healthz", None, b"").unwrap();
+    let mut held_reader = HttpReader::new(held);
+    let (status, _) = held_reader.read_response(&Limits::default()).unwrap();
+    assert_eq!(status, 200);
+    // the next connection is over budget: immediate 503, then close
+    let mut extra = TcpStream::connect(gw.addr()).unwrap();
+    extra.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write_request(&mut extra, "GET", "/healthz", None, b"").unwrap();
+    let (status, body) = HttpReader::new(extra).read_response(&Limits::default()).unwrap();
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    // the held connection still works (budget shed, not collateral)
+    let mut w = held_reader.stream().try_clone().unwrap();
+    write_request(&mut w, "GET", "/healthz", None, b"").unwrap();
+    let (status, _) = held_reader.read_response(&Limits::default()).unwrap();
+    assert_eq!(status, 200);
+    drop(held_reader);
+    gw.shutdown();
+}

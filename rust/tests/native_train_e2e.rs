@@ -80,7 +80,9 @@ fn native_train_prune_pack_serve_loop() {
 
     // …and the artifact serves through the PR-1 registry + server
     let reg = ModelRegistry::new();
-    let model = reg.load_file("trained", &path, 3072).unwrap();
+    // the exported pack carries its input width in the v2 header
+    let model = reg.load_file("trained", &path, None).unwrap();
+    assert_eq!(model.input_dim, 3072);
     assert_eq!(model.output_dim(), 10);
     let server = Server::start(
         model,

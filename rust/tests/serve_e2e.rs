@@ -21,7 +21,9 @@ fn packed_file_serves_end_to_end() {
     pm.save(&path).unwrap();
 
     let reg = ModelRegistry::new();
-    let model = reg.load_file("e2e", &path, 24).unwrap();
+    // input width comes from the .msqpack v2 header — no explicit dim
+    let model = reg.load_file("e2e", &path, None).unwrap();
+    assert_eq!(model.input_dim, 24);
     assert_eq!(model.output_dim(), 4);
     assert_eq!(reg.get("e2e").unwrap().payload_bytes(), model.payload_bytes());
 
@@ -66,8 +68,8 @@ fn registry_hosts_independent_servers() {
     b.save(&pb).unwrap();
 
     let reg = ModelRegistry::new();
-    reg.load_file("a", &pa, 6).unwrap();
-    reg.load_file("b", &pb, 10).unwrap();
+    reg.load_file("a", &pa, None).unwrap();
+    reg.load_file("b", &pb, None).unwrap();
     assert_eq!(reg.names(), vec!["a", "b"]);
 
     let sa = Server::start(reg.get("a").unwrap(), ServerConfig::default());
