@@ -57,6 +57,32 @@ fn main() {
         results.push(r);
     }
 
+    // --- kernel-level, conv: pack v3 op graph (qconv2d decode-once per
+    // filter), 32x32x3 input through two stride-2 stages + linear head
+    let conv_dims = [3usize, 8, 16, 10];
+    let conv_bits = [4u8, 4, 8];
+    let conv_pm = PackedModel::synth_conv(32, 32, &conv_dims, &conv_bits, 42)
+        .expect("synth conv model");
+    let conv_model =
+        Arc::new(ServableModel::from_packed_auto("bench-conv", &conv_pm, None).expect("conv"));
+    println!(
+        "conv model: {:?} @ bits {:?} — payload {} B ({:.2}x vs fp32)",
+        conv_dims,
+        conv_bits,
+        conv_model.payload_bytes(),
+        conv_model.compression()
+    );
+    for batch in [1usize, 8] {
+        let x: Vec<f32> =
+            (0..batch * conv_model.input_dim).map(|_| rng.normal()).collect();
+        let m = conv_model.clone();
+        let r = bench(&format!("qconv2d_batch b={batch}"), 2, 10, || {
+            std::hint::black_box(m.infer_batch(&x, batch, None).unwrap());
+        });
+        r.report(Some((batch as f64, "req")));
+        results.push(r);
+    }
+
     // --- system-level: dynamic batching under closed-loop load
     let cfg = ServerConfig::default();
     let server = Server::start(model.clone(), cfg);
@@ -111,6 +137,17 @@ fn main() {
         ("p95_ms", Json::Num(p95 * 1e3)),
         ("p99_ms", Json::Num(p99 * 1e3)),
         ("server", server.metrics.snapshot(server.queue_depth())),
+        (
+            "conv",
+            Json::obj(vec![
+                (
+                    "dims",
+                    Json::Arr(conv_dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+                ),
+                ("payload_bytes", Json::Num(conv_model.payload_bytes() as f64)),
+                ("compression", Json::Num(conv_model.compression())),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", out.to_string() + "\n").expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");

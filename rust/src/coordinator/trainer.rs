@@ -283,25 +283,32 @@ impl<B: Backend> Trainer<B> {
         Ok(())
     }
 
-    /// Export the trained model as a physically bit-packed `.msqpack`
+    /// Export the trained model as a physically bit-packed `.msqpack` v3
     /// (realizes the reported compression as actual bytes; the packed file
     /// re-imports through [`crate::quant::pack::PackedModel::load`] +
-    /// [`Backend::set_q_weights`]).
+    /// [`Backend::set_q_weights`] and serves through `serve::registry`).
+    /// Each layer record is stamped with the backend's op descriptor and
+    /// fused-ReLU flag, and the header carries the spatial input shape
+    /// when the backend has one — so conv models deploy with zero flags.
     pub fn export_packed(&self, path: &std::path::Path) -> Result<crate::quant::pack::PackedModel> {
         let mut model = crate::quant::pack::PackedModel {
-            // flattened input width — lets serving infer the MLP topology
-            // from the v2 header alone (no --input-dim at deploy time)
+            // flattened input width — lets serving infer the topology
+            // from the header alone (no --input-dim at deploy time)
             input_dim: self.backend.input_elems(),
+            input_hwc: self.backend.input_shape(),
             ..Default::default()
         };
         for q in 0..self.backend.num_q_layers() {
             let w = self.backend.q_weights(q)?;
             let bits = self.bitstate.scheme.bits[q];
-            model.layers.push(crate::quant::pack::pack_layer(
+            let mut layer = crate::quant::pack::pack_layer(
                 &self.backend.q_layer_name(q),
                 &w,
                 bits,
-            ));
+            );
+            layer.op = self.backend.q_layer_op(q);
+            layer.relu = self.backend.q_layer_relu(q);
+            model.layers.push(layer);
         }
         model.save(path)?;
         Ok(model)

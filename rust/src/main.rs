@@ -43,7 +43,8 @@ const VALUE_OPTS: &[&str] = &[
     "seed", "train-size", "test-size", "eval-every", "fixed-bits", "probes", "out", "config",
     "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
     "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden", "host", "port",
-    "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s",
+    "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s", "arch",
+    "size", "channels",
 ];
 
 fn main() -> Result<()> {
@@ -65,8 +66,9 @@ fn main() -> Result<()> {
                  \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
                  \x20           [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
                  \x20           [--train-size N] [--test-size N] [--seed S] [--out run.json]\n\
-                 \x20           [--export model.msqpack]\n\
-                 \x20           (native: pure-Rust MLP training, default build;\n\
+                 \x20           [--export model.msqpack] [--channels 8,16]\n\
+                 \x20           (native: pure-Rust training, default build — --model mlp\n\
+                 \x20            [--hidden …] or --model conv [--channels …];\n\
                  \x20            pjrt: XLA artifacts, needs --features pjrt)\n\
                  serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
@@ -82,7 +84,11 @@ fn main() -> Result<()> {
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
                  \x20           [--json]\n\
-                 pack-synth: [--dims 3072,256,10] [--bits 4,8] [--seed S] --out demo.msqpack"
+                 pack-synth: [--arch mlp|conv] [--dims 3072,256,10] [--bits 4,8] [--seed S]\n\
+                 \x20           [--size 32] --out demo.msqpack\n\
+                 \x20           (mlp: --dims are layer widths; conv: --dims are\n\
+                 \x20            in_ch,channels…,classes over a --size x --size input,\n\
+                 \x20            3x3 stride-2 pad-1 stages + linear head, pack v3)"
             );
             Ok(())
         }
@@ -384,13 +390,21 @@ fn print_response(id: &Json, resp: Option<InferResponse>) {
     }
 }
 
-/// Generate a random MLP at the given layer widths, quantize + pack it —
-/// a self-contained way to produce a `.msqpack` for serve/bench demos
-/// without the XLA training path.
+/// Generate a random quantized model and pack it — a self-contained way
+/// to produce a `.msqpack` for serve/bench demos without the XLA
+/// training path. `--arch mlp` (default) reads `--dims` as layer
+/// widths; `--arch conv` reads `--dims` as `in_ch,channels…,classes`
+/// over a `--size × --size` input (3×3 stride-2 pad-1 conv stages with
+/// fused ReLU, then a linear head — pack v3 descriptors throughout).
 fn cmd_pack_synth(args: &Args) -> Result<()> {
+    let arch = args.opt_or("arch", "mlp");
+    let default_dims = match arch {
+        "conv" => "3,8,16,10",
+        _ => "3072,256,10",
+    };
     let dims: Vec<usize> = args
         .opt("dims")
-        .unwrap_or("3072,256,10")
+        .unwrap_or(default_dims)
         .split(',')
         .map(|s| s.trim().parse::<usize>().with_context(|| format!("bad dim {s:?}")))
         .collect::<Result<_>>()?;
@@ -415,16 +429,26 @@ fn cmd_pack_synth(args: &Args) -> Result<()> {
         bail!("--bits values must be in 1..=8 for serving, got {bits:?}");
     }
     let out = args.opt("out").unwrap_or("model.msqpack");
-    let pm = PackedModel::synth_mlp(&dims, &bits, args.opt_u64("seed", 42))?;
+    let seed = args.opt_u64("seed", 42);
+    let pm = match arch {
+        "mlp" => PackedModel::synth_mlp(&dims, &bits, seed)?,
+        "conv" => {
+            let size = args.opt_usize("size", 32);
+            PackedModel::synth_conv(size, size, &dims, &bits, seed)?
+        }
+        other => bail!("--arch must be mlp|conv, got {other:?}"),
+    };
     pm.save(Path::new(out))?;
     println!(
-        "[pack-synth] {} layers {:?} @ bits {:?} -> {} ({} B payload, {:.2}x vs fp32)",
+        "[pack-synth] {arch} {} layers {:?} @ bits {:?} -> {} ({} B payload, {:.2}x vs fp32, \
+         input dim {})",
         nlayers,
         dims,
         bits,
         out,
         pm.payload_bytes(),
-        pm.compression()
+        pm.compression(),
+        pm.input_dim,
     );
     Ok(())
 }
@@ -471,7 +495,7 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
             cfg.lam = 5e-5;
             cfg.alpha = 0.3;
         }
-        "mlp" => {
+        "mlp" | "conv" => {
             cfg.interval = 20;
             cfg.lam = 5e-5;
             cfg.alpha = 0.3;
@@ -552,7 +576,7 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
 pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     let pool = ThreadPool::new(ThreadPool::default_size());
     let (train, test) = match model {
-        "resnet20" | "mlp" => (
+        "resnet20" | "mlp" | "conv" => (
             args.opt_usize("train-size", 10_240),
             args.opt_usize("test-size", 2_048),
         ),
@@ -560,7 +584,7 @@ pub fn dataset_for(model: &str, args: &Args) -> Dataset {
     };
     let seed = args.opt_u64("seed", 42);
     let spec = match model {
-        "resnet20" | "mlp" => DatasetSpec::cifar_syn(train, test, seed),
+        "resnet20" | "mlp" | "conv" => DatasetSpec::cifar_syn(train, test, seed),
         _ => DatasetSpec::in64_syn(train, test, seed),
     };
     Dataset::generate(spec, &pool)
@@ -574,31 +598,59 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 }
 
-/// Build the native MLP backend for `cfg` over the dataset's shape.
+/// Build the native backend for `cfg` over the dataset's shape:
+/// `--model mlp` (an MLP over flattened images, `--hidden` widths) or
+/// `--model conv` (3×3 stride-2 conv stages over NHWC images,
+/// `--channels` widths, exported with pack v3 conv descriptors).
 fn native_backend(cfg: &MsqConfig, ds: &Dataset, args: &Args) -> Result<NativeBackend> {
-    if cfg.model != "mlp" {
-        bail!(
-            "--backend native trains MLPs over flattened synthetic images (--model mlp); \
-             use --backend pjrt (--features pjrt) for {:?}",
-            cfg.model
-        );
+    match cfg.model.as_str() {
+        "mlp" => {
+            let hidden: Vec<usize> = args
+                .opt("hidden")
+                .unwrap_or("256,128")
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<usize>().with_context(|| format!("bad --hidden {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            NativeBackend::mlp(
+                &cfg.model,
+                &cfg.method,
+                ds.spec.input_dim(),
+                &hidden,
+                ds.spec.classes,
+                cfg.batch,
+                cfg.seed,
+                args.opt_usize("threads", 0),
+            )
+        }
+        "conv" => {
+            let channels: Vec<usize> = args
+                .opt("channels")
+                .unwrap_or("8,16")
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<usize>().with_context(|| format!("bad --channels {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            NativeBackend::conv_net(
+                &cfg.model,
+                &cfg.method,
+                ds.spec.height,
+                ds.spec.width,
+                ds.spec.channels,
+                &channels,
+                ds.spec.classes,
+                cfg.batch,
+                cfg.seed,
+                args.opt_usize("threads", 0),
+            )
+        }
+        other => bail!(
+            "--backend native trains --model mlp|conv over synthetic images; \
+             use --backend pjrt (--features pjrt) for {other:?}"
+        ),
     }
-    let hidden: Vec<usize> = args
-        .opt("hidden")
-        .unwrap_or("256,128")
-        .split(',')
-        .map(|s| s.trim().parse::<usize>().with_context(|| format!("bad --hidden {s:?}")))
-        .collect::<Result<_>>()?;
-    NativeBackend::mlp(
-        &cfg.model,
-        &cfg.method,
-        ds.spec.input_dim(),
-        &hidden,
-        ds.spec.classes,
-        cfg.batch,
-        cfg.seed,
-        args.opt_usize("threads", 0),
-    )
 }
 
 fn cmd_train_native(args: &Args) -> Result<()> {
@@ -743,6 +795,13 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     let ds = dataset_for(&cfg.model, args);
     let (acc, loss) = match backend_kind(args) {
         "native" => {
+            if packed.has_conv() {
+                bail!(
+                    "eval-packed --backend native rebuilds MLPs from the dim chain; conv \
+                     packs evaluate through `msq serve`/`msq gateway` (logits match the \
+                     dense reference — see the conformance tests)"
+                );
+            }
             let mut cfg = cfg;
             cfg.model = "mlp".into();
             // the registry owns the dim-chain derivation (shared with the

@@ -1,11 +1,14 @@
 //! [`NativeBackend`]: the pure-Rust implementation of
 //! [`runtime::backend::Backend`] — Algorithm 1 with zero XLA linkage.
 //!
-//! Models are quantized MLPs over the flattened synthetic images (the
-//! shape family `msq serve` executes): every linear layer's weights pass
-//! through the RoundClamp (or DoReFa) fake-quant STE at that layer's
-//! *runtime* bit-width before the matmul, exactly like the AOT graphs
-//! treat `bits` as an input tensor. Biases stay float. When `n_act > 0`,
+//! Models are quantized MLPs or small conv nets over the synthetic
+//! images (the shape families `msq serve` executes): every layer's
+//! weights pass through the RoundClamp (or DoReFa) fake-quant STE at
+//! that layer's *runtime* bit-width before the matmul/conv, exactly like
+//! the AOT graphs treat `bits` as an input tensor. Conv layers run NHWC
+//! activations against OHWI filters — the `.msqpack` v3 layout — so the
+//! export is byte-faithful to what the serving kernels execute. Biases
+//! stay float and frozen at zero (see `ParamLayer`). When `n_act > 0`,
 //! hidden activations are fake-quantized the same way after ReLU.
 //!
 //! Hutchinson probes (`hessian_step`) use the finite-difference
@@ -19,24 +22,36 @@ use super::autograd::Tape;
 use super::ops::{self, Quantizer};
 use super::optim::SgdMomentum;
 use super::tensor::Tensor;
+use crate::quant::pack::{Conv2dDesc, LayerOp};
 use crate::quant::{lsb_proxy_dorefa, lsb_proxy_roundclamp, to_unit};
 use crate::runtime::backend::{Backend, LayerStats, StepStats};
 use crate::util::prng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-/// One dense layer: `out × in` weights (the pack/serve layout), a
-/// zero bias, and the weight momentum buffer.
+/// How a parameter layer executes (the native twin of [`LayerOp`]).
+#[derive(Clone, Copy, Debug)]
+enum ParamOp {
+    /// Dense matmul: `out × in` weights (the pack/serve layout).
+    Dense,
+    /// NHWC conv over an `in_h × in_w` map: `out_ch × kh·kw·in_ch`
+    /// weights (OHWI, the pack v3 conv layout).
+    Conv { d: Conv2dDesc, in_h: usize, in_w: usize },
+}
+
+/// One parameter layer: weights, a zero bias, the weight momentum
+/// buffer, and its op.
 ///
 /// Biases are **fixed at zero** by design: the `.msqpack` format and
-/// the serve MLP execute bias-free layers, so training biases would
+/// the serve executor run bias-free layers, so training biases would
 /// silently diverge the exported artifact (where they'd be dropped)
 /// from the accuracy the trainer reports. The tape still threads a
-/// bias node through every `linear` so the op/backward stays covered.
-struct DenseLayer {
+/// bias node through every op so the backward stays covered.
+struct ParamLayer {
     name: String,
     w: Tensor,
     b: Tensor,
     vw: Vec<f32>,
+    op: ParamOp,
 }
 
 /// Per-layer `(dw, db)` gradient buffers.
@@ -47,11 +62,21 @@ pub struct NativeBackend {
     pub method: String,
     batch: usize,
     input_dim: usize,
+    /// Spatial input shape for conv nets; (0, 0, 0) for flat MLPs.
+    input_hwc: (usize, usize, usize),
     classes: usize,
-    layers: Vec<DenseLayer>,
+    layers: Vec<ParamLayer>,
     opt: SgdMomentum,
     pool: Option<ThreadPool>,
     quantizer: Quantizer,
+}
+
+fn quantizer_for(method: &str) -> Result<Quantizer> {
+    match method {
+        "msq" => Ok(Quantizer::RoundClamp),
+        "dorefa" => Ok(Quantizer::DoReFa),
+        _ => bail!("native backend trains msq/dorefa, got {method:?}"),
+    }
 }
 
 impl NativeBackend {
@@ -69,11 +94,7 @@ impl NativeBackend {
         seed: u64,
         threads: usize,
     ) -> Result<NativeBackend> {
-        let quantizer = match method {
-            "msq" => Quantizer::RoundClamp,
-            "dorefa" => Quantizer::DoReFa,
-            _ => bail!("native backend trains msq/dorefa, got {method:?}"),
-        };
+        let quantizer = quantizer_for(method)?;
         ensure!(input_dim > 0 && classes > 1 && batch > 0, "bad mlp config");
         ensure!(hidden.iter().all(|&h| h > 0), "zero hidden width");
         let mut rng = Rng::new(seed);
@@ -83,11 +104,12 @@ impl NativeBackend {
         let layers = (0..dims.len() - 1)
             .map(|l| {
                 let (cin, cout) = (dims[l], dims[l + 1]);
-                DenseLayer {
+                ParamLayer {
                     name: format!("fc{l}"),
                     w: Tensor::he_normal(cout, cin, &mut rng),
                     b: Tensor::zeros(1, cout),
                     vw: vec![0f32; cout * cin],
+                    op: ParamOp::Dense,
                 }
             })
             .collect();
@@ -98,6 +120,73 @@ impl NativeBackend {
             method: method.to_string(),
             batch,
             input_dim,
+            input_hwc: (0, 0, 0),
+            classes,
+            layers,
+            opt: SgdMomentum::default(),
+            pool,
+            quantizer,
+        })
+    }
+
+    /// Quantized conv net over `in_h × in_w × in_ch` NHWC images: each
+    /// `channels[i-1] → channels[i]` stage is a 3×3 stride-2 pad-1 conv
+    /// with ReLU (halving the map), then one linear head over the
+    /// flattened final map — the `pack-synth --arch conv` shape family,
+    /// so train → pack → serve works for conv end-to-end.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_net(
+        model: &str,
+        method: &str,
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        channels: &[usize],
+        classes: usize,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<NativeBackend> {
+        let quantizer = quantizer_for(method)?;
+        ensure!(
+            in_h > 0 && in_w > 0 && in_ch > 0 && classes > 1 && batch > 0,
+            "bad conv config"
+        );
+        ensure!(!channels.is_empty(), "conv net needs at least one conv stage");
+        ensure!(channels.iter().all(|&c| c > 0), "zero channel width");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(channels.len() + 1);
+        let (mut h, mut w) = (in_h, in_w);
+        let mut cin = in_ch;
+        for (l, &cout) in channels.iter().enumerate() {
+            let d = Conv2dDesc { in_ch: cin, out_ch: cout, kh: 3, kw: 3, stride: 2, pad: 1 };
+            let (oh, ow) = d.out_hw(h, w)?;
+            layers.push(ParamLayer {
+                name: format!("conv{l}"),
+                w: Tensor::he_normal(cout, d.filter_len(), &mut rng),
+                b: Tensor::zeros(1, cout),
+                vw: vec![0f32; cout * d.filter_len()],
+                op: ParamOp::Conv { d, in_h: h, in_w: w },
+            });
+            (h, w) = (oh, ow);
+            cin = cout;
+        }
+        let flat = h * w * cin;
+        layers.push(ParamLayer {
+            name: "fc".into(),
+            w: Tensor::he_normal(classes, flat, &mut rng),
+            b: Tensor::zeros(1, classes),
+            vw: vec![0f32; classes * flat],
+            op: ParamOp::Dense,
+        });
+        let threads = if threads == 0 { ThreadPool::default_size() } else { threads };
+        let pool = (threads > 1).then(|| ThreadPool::new(threads));
+        Ok(NativeBackend {
+            model: model.to_string(),
+            method: method.to_string(),
+            batch,
+            input_dim: in_h * in_w * in_ch,
+            input_hwc: (in_h, in_w, in_ch),
             classes,
             layers,
             opt: SgdMomentum::default(),
@@ -141,7 +230,10 @@ impl NativeBackend {
                 Some(bits) => tape.quant_ste(w, bits[l], self.quantizer),
                 None => w,
             };
-            h = tape.linear(h, w_eff, b);
+            h = match layer.op {
+                ParamOp::Dense => tape.linear(h, w_eff, b),
+                ParamOp::Conv { d, in_h, in_w } => tape.conv2d(h, w_eff, b, d, in_h, in_w),
+            };
             if l < last {
                 h = tape.relu(h);
                 if bits.is_some() && n_act > 0.0 {
@@ -174,8 +266,24 @@ impl NativeBackend {
                 }
                 None => &layer.w.data,
             };
-            let mut next = vec![0f32; m * n];
-            ops::linear_forward(&cur, w_eff, &layer.b.data, m, k, n, &mut next, self.pool.as_ref());
+            let mut next = match layer.op {
+                ParamOp::Dense => {
+                    let mut next = vec![0f32; m * n];
+                    ops::linear_forward(
+                        &cur, w_eff, &layer.b.data, m, k, n, &mut next, self.pool.as_ref(),
+                    );
+                    next
+                }
+                ParamOp::Conv { d, in_h, in_w } => {
+                    let (oh, ow) = d.out_hw(in_h, in_w).expect("conv geometry");
+                    let mut next = vec![0f32; m * oh * ow * d.out_ch];
+                    ops::conv2d_forward(
+                        &cur, w_eff, &layer.b.data, m, &d, in_h, in_w, &mut next,
+                        self.pool.as_ref(),
+                    );
+                    next
+                }
+            };
             if l < last {
                 for v in next.iter_mut() {
                     *v = v.max(0.0);
@@ -217,6 +325,17 @@ impl Backend for NativeBackend {
 
     fn q_layer_name(&self, q: usize) -> String {
         self.layers[q].name.clone()
+    }
+
+    fn q_layer_op(&self, q: usize) -> LayerOp {
+        match self.layers[q].op {
+            ParamOp::Dense => LayerOp::Linear,
+            ParamOp::Conv { d, .. } => LayerOp::Conv2d(d),
+        }
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.input_hwc
     }
 
     fn q_sizes(&self) -> Vec<usize> {
@@ -348,7 +467,7 @@ impl Backend for NativeBackend {
         let n: usize = self.layers.iter().map(|l| l.w.numel()).sum();
         let eps = (1e-2 * (sq / n.max(1) as f64).sqrt()).max(1e-5) as f32;
 
-        let perturb = |layers: &mut Vec<DenseLayer>, sign: f32| {
+        let perturb = |layers: &mut Vec<ParamLayer>, sign: f32| {
             for (layer, v) in layers.iter_mut().zip(&vs) {
                 for (w, &vi) in layer.w.data.iter_mut().zip(v) {
                     *w += sign * eps * vi;
@@ -472,6 +591,59 @@ mod tests {
         let after = be.q_weights(0).unwrap();
         for (a, b) in before.iter().zip(&after) {
             assert!((a - b).abs() < 1e-5, "weights not restored: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_net_shapes_and_descriptors() {
+        // 8x8x3 -> conv(3->4)/2 -> 4x4x4 -> conv(4->6)/2 -> 2x2x6 -> fc 24->5
+        let be =
+            NativeBackend::conv_net("conv", "msq", 8, 8, 3, &[4, 6], 5, 4, 7, 1).unwrap();
+        assert_eq!(be.num_q_layers(), 3);
+        assert_eq!(be.input_elems(), 192);
+        assert_eq!(be.input_shape(), (8, 8, 3));
+        assert_eq!(be.q_sizes(), vec![4 * 27, 6 * 36, 5 * 24]);
+        assert_eq!(be.q_layer_name(0), "conv0");
+        assert_eq!(be.q_layer_name(2), "fc");
+        match be.q_layer_op(0) {
+            LayerOp::Conv2d(d) => {
+                assert_eq!((d.in_ch, d.out_ch, d.kh, d.stride, d.pad), (3, 4, 3, 2, 1));
+            }
+            LayerOp::Linear => panic!("layer 0 must be conv"),
+        }
+        assert_eq!(be.q_layer_op(2), LayerOp::Linear);
+    }
+
+    #[test]
+    fn conv_net_train_step_reduces_loss() {
+        let mut be =
+            NativeBackend::conv_net("conv", "msq", 6, 6, 2, &[4], 3, 4, 11, 1).unwrap();
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..4 * be.input_elems()).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..4).map(|_| rng.below(3) as i32).collect();
+        let bits = vec![8.0f32; 2];
+        let ks = vec![1.0f32; 2];
+        let first = be.train_step(&bits, &ks, 0.0, 0.1, 0.0, &x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = be.train_step(&bits, &ks, 0.0, 0.1, 0.0, &x, &y).unwrap();
+        }
+        assert!(
+            last.ce < 0.5 * first.ce,
+            "conv loss did not drop: {} -> {}",
+            first.ce,
+            last.ce
+        );
+        // eval path agrees in shape and is finite
+        let (ce_sum, correct) = be.eval_step(&bits, 0.0, &x, &y).unwrap();
+        assert!(ce_sum.is_finite() && (0.0..=4.0).contains(&correct));
+        // hessian probes restore conv weights too
+        let before = be.q_weights(0).unwrap();
+        let vhv = be.hessian_step(&x, &y, 3).unwrap();
+        assert_eq!(vhv.len(), 2);
+        assert!(vhv.iter().all(|v| v.is_finite()));
+        for (a, b) in before.iter().zip(&be.q_weights(0).unwrap()) {
+            assert!((a - b).abs() < 1e-5);
         }
     }
 

@@ -15,27 +15,29 @@
 //!
 //! * [`tensor`] — row-major rank-≤2 f32 tensors (`batch × dim`
 //!   activations, `out × in` weights, matching the pack/serve layout);
-//! * [`ops`] — forward/backward kernels: transposed-B matmul, bias,
+//! * [`ops`] — forward/backward kernels: transposed-B matmul, NHWC
+//!   conv2d against OHWI filters (the `.msqpack` v3 layout), bias,
 //!   ReLU, softmax-CE (f64 log-sum-exp), RoundClamp/DoReFa fake-quant
-//!   with the straight-through estimator; matmuls parallelize over
-//!   `util::threadpool`'s resident workers;
+//!   with the straight-through estimator; matmul/conv-shaped ops
+//!   parallelize over `util::threadpool`'s resident workers;
 //! * [`autograd`] — a reverse-mode tape over those ops (enum-coded
 //!   graph, no boxed closures; one tape per step);
 //! * [`optim`] — SGD with heavy-ball momentum (the cosine lr schedule
 //!   stays in `coordinator::schedule`, fed per step like the XLA path);
-//! * [`backend`] — [`NativeBackend`]: a quantized MLP over the
-//!   flattened synthetic images implementing `Backend`, including
+//! * [`backend`] — [`NativeBackend`]: a quantized MLP (`--model mlp`)
+//!   or small conv net (`--model conv`, 3×3 stride-2 stages + linear
+//!   head) over the synthetic images implementing `Backend`, including
 //!   per-layer β/‖W_n−W‖² stats and finite-difference Hutchinson
 //!   probes (`Hv ≈ (∇L(θ+εv) − ∇L(θ−εv))/2ε`).
 //!
-//! Deviations from the XLA path, by design: models are MLP-shaped (the
-//! topology the `.msqpack` v1 header can express and `msq serve`
-//! executes) with biases frozen at zero (the packed format has no bias
-//! section, so training them would diverge the exported artifact from
-//! the reported accuracy); activation quantization maps through the
-//! same signed `to_unit` affine as weights; Hessian probes
-//! differentiate twice by finite differences instead of a second
-//! reverse sweep. Gradient
+//! Deviations from the XLA path, by design: models are the topologies
+//! the `.msqpack` op table can express and `msq serve` executes
+//! (linear + conv2d, NHWC/OHWI), with biases frozen at zero (the
+//! packed format has no bias section, so training them would diverge
+//! the exported artifact from the reported accuracy); activation
+//! quantization maps through the same signed `to_unit` affine as
+//! weights; Hessian probes differentiate twice by finite differences
+//! instead of a second reverse sweep. Gradient
 //! correctness is pinned by finite-difference checks in
 //! `tests/native_grad.rs` (rel. err < 1e-3) and the STE/oracle golden
 //! vectors shared with `python/compile/quant.py`.

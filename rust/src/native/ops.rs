@@ -10,7 +10,12 @@
 //! weights `n × k` row-major (`n` outputs, `k` inputs — the serve/pack
 //! layout), bias `1 × n`, labels `i32` class ids.
 
+use crate::quant::pack::Conv2dDesc;
 use crate::quant::{dorefa01, from_unit, roundclamp01, to_unit};
+// Conv window clipping is shared with the serving kernels: training and
+// serving must agree on geometry exactly (the export is byte-faithful
+// to what `serve::kernels` executes).
+use crate::serve::kernels::krange as tap_range;
 use crate::util::threadpool::ThreadPool;
 
 /// Which [0,1] quantizer the fake-quant op applies (paper Eq. 1 vs 4).
@@ -152,6 +157,182 @@ pub fn linear_backward_bias(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
     for i in 0..m {
         for (j, d) in db.iter_mut().enumerate() {
             *d += dy[i * n + j];
+        }
+    }
+}
+
+
+/// NHWC conv2d forward: `x` is `m × (in_h·in_w·in_ch)`, `w` is OHWI
+/// `out_ch × (kh·kw·in_ch)` (the `.msqpack` conv layout), `b` is
+/// `1 × out_ch`; `out` is `m × (out_h·out_w·out_ch)`. Samples are
+/// disjoint output rows, so they parallelize over the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).expect("conv2d_forward: geometry");
+    let in_elems = in_h * in_w * d.in_ch;
+    let out_elems = out_h * out_w * d.out_ch;
+    let flen = d.filter_len();
+    debug_assert_eq!(x.len(), m * in_elems);
+    debug_assert_eq!(w.len(), d.out_ch * flen);
+    debug_assert_eq!(b.len(), d.out_ch);
+    debug_assert_eq!(out.len(), m * out_elems);
+    let optr = SendPtr(out.as_mut_ptr());
+    let optr = &optr;
+    par_rows(pool, m, m * out_elems * flen, |i| {
+        let xi = &x[i * in_elems..(i + 1) * in_elems];
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut(optr.get().add(i * out_elems), out_elems) };
+        for oy in 0..out_h {
+            let (ky0, ky1, iy0) = tap_range(oy, d.stride, d.pad, d.kh, in_h);
+            for ox in 0..out_w {
+                let (kx0, kx1, ix0) = tap_range(ox, d.stride, d.pad, d.kw, in_w);
+                let seg = (kx1 - kx0) * d.in_ch;
+                for oc in 0..d.out_ch {
+                    let wf = &w[oc * flen..(oc + 1) * flen];
+                    let mut acc = b[oc];
+                    if seg > 0 {
+                        // seg == 0: window fully off the input (pad >= kw)
+                        for ky in ky0..ky1 {
+                            let iy = iy0 + (ky - ky0);
+                            let wrow = &wf[(ky * d.kw + kx0) * d.in_ch..][..seg];
+                            let xrow = &xi[(iy * in_w + ix0) * d.in_ch..][..seg];
+                            for t in 0..seg {
+                                acc += wrow[t] * xrow[t];
+                            }
+                        }
+                    }
+                    orow[(oy * out_w + ox) * d.out_ch + oc] = acc;
+                }
+            }
+        }
+    });
+}
+
+/// `dx[i, iy, ix, ic] += Σ dy[i, oy, ox, oc] · w[oc, ky, kx, ic]` over
+/// every window that covers `(iy, ix)` — scattered from the output side
+/// (rows of `dx` are per-sample, hence disjoint).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_input(
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    dx: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).expect("conv2d_backward_input: geometry");
+    let in_elems = in_h * in_w * d.in_ch;
+    let out_elems = out_h * out_w * d.out_ch;
+    let flen = d.filter_len();
+    debug_assert_eq!(dy.len(), m * out_elems);
+    debug_assert_eq!(w.len(), d.out_ch * flen);
+    debug_assert_eq!(dx.len(), m * in_elems);
+    let dxp = SendPtr(dx.as_mut_ptr());
+    let dxp = &dxp;
+    par_rows(pool, m, m * out_elems * flen, |i| {
+        let dyi = &dy[i * out_elems..(i + 1) * out_elems];
+        let dxi =
+            unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * in_elems), in_elems) };
+        for oy in 0..out_h {
+            let (ky0, ky1, iy0) = tap_range(oy, d.stride, d.pad, d.kh, in_h);
+            for ox in 0..out_w {
+                let (kx0, kx1, ix0) = tap_range(ox, d.stride, d.pad, d.kw, in_w);
+                let seg = (kx1 - kx0) * d.in_ch;
+                if seg == 0 {
+                    continue; // window fully off the input: nothing to scatter
+                }
+                for oc in 0..d.out_ch {
+                    let g = dyi[(oy * out_w + ox) * d.out_ch + oc];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let wf = &w[oc * flen..(oc + 1) * flen];
+                    for ky in ky0..ky1 {
+                        let iy = iy0 + (ky - ky0);
+                        let wrow = &wf[(ky * d.kw + kx0) * d.in_ch..][..seg];
+                        let dxrow = &mut dxi[(iy * in_w + ix0) * d.in_ch..][..seg];
+                        for t in 0..seg {
+                            dxrow[t] += g * wrow[t];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `dw[oc, ky, kx, ic] += Σ dy[i, oy, ox, oc] · x[i, iy, ix, ic]`
+/// (filters are disjoint rows of `dw`, so the parallel axis is `oc`).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_weight(
+    dy: &[f32],
+    x: &[f32],
+    m: usize,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    dw: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).expect("conv2d_backward_weight: geometry");
+    let in_elems = in_h * in_w * d.in_ch;
+    let out_elems = out_h * out_w * d.out_ch;
+    let flen = d.filter_len();
+    debug_assert_eq!(dy.len(), m * out_elems);
+    debug_assert_eq!(x.len(), m * in_elems);
+    debug_assert_eq!(dw.len(), d.out_ch * flen);
+    let dwp = SendPtr(dw.as_mut_ptr());
+    let dwp = &dwp;
+    par_rows(pool, d.out_ch, m * out_elems * flen, |oc| {
+        let dwf = unsafe { std::slice::from_raw_parts_mut(dwp.get().add(oc * flen), flen) };
+        for i in 0..m {
+            let xi = &x[i * in_elems..(i + 1) * in_elems];
+            let dyi = &dy[i * out_elems..(i + 1) * out_elems];
+            for oy in 0..out_h {
+                let (ky0, ky1, iy0) = tap_range(oy, d.stride, d.pad, d.kh, in_h);
+                for ox in 0..out_w {
+                    let g = dyi[(oy * out_w + ox) * d.out_ch + oc];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let (kx0, kx1, ix0) = tap_range(ox, d.stride, d.pad, d.kw, in_w);
+                    let seg = (kx1 - kx0) * d.in_ch;
+                    if seg == 0 {
+                        continue; // window fully off the input
+                    }
+                    for ky in ky0..ky1 {
+                        let iy = iy0 + (ky - ky0);
+                        let dwrow = &mut dwf[(ky * d.kw + kx0) * d.in_ch..][..seg];
+                        let xrow = &xi[(iy * in_w + ix0) * d.in_ch..][..seg];
+                        for t in 0..seg {
+                            dwrow[t] += g * xrow[t];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `db[oc] += Σ_{i, oy, ox} dy[i, oy, ox, oc]`.
+pub fn conv2d_backward_bias(dy: &[f32], positions: usize, out_ch: usize, db: &mut [f32]) {
+    debug_assert_eq!(dy.len(), positions * out_ch);
+    debug_assert_eq!(db.len(), out_ch);
+    for p in 0..positions {
+        for (oc, d) in db.iter_mut().enumerate() {
+            *d += dy[p * out_ch + oc];
         }
     }
 }
@@ -317,6 +498,87 @@ mod tests {
         let mut dx = vec![0f32; 3];
         relu_backward(&x, &[1.0, 1.0, 1.0], &mut dx);
         assert_eq!(dx, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn conv1x1_equals_per_position_linear() {
+        // a 1x1 stride-1 conv is a per-pixel matmul: run the same weights
+        // through linear_forward with every position as its own row
+        let d = Conv2dDesc { in_ch: 3, out_ch: 2, kh: 1, kw: 1, stride: 1, pad: 0 };
+        let (m, h, w) = (2, 4, 5);
+        let x = rand(m * h * w * 3, 10);
+        let wv = rand(2 * 3, 11);
+        let b = rand(2, 12);
+        let mut conv = vec![0f32; m * h * w * 2];
+        conv2d_forward(&x, &wv, &b, m, &d, h, w, &mut conv, None);
+        let mut lin = vec![0f32; m * h * w * 2];
+        linear_forward(&x, &wv, &b, m * h * w, 3, 2, &mut lin, None);
+        for (i, (a, e)) in conv.iter().zip(&lin).enumerate() {
+            assert!((a - e).abs() < 1e-6, "idx {i}: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_input_through() {
+        // 3x3 single-channel kernel with only the centre tap set, pad 1,
+        // stride 1: output map == input map
+        let d = Conv2dDesc { in_ch: 1, out_ch: 1, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let (h, w) = (5, 4);
+        let x = rand(h * w, 13);
+        let mut kern = vec![0f32; 9];
+        kern[4] = 1.0; // centre tap (ky=1, kx=1)
+        let mut out = vec![0f32; h * w];
+        conv2d_forward(&x, &kern, &[0.0], 1, &d, h, w, &mut out, None);
+        for (a, e) in out.iter().zip(&x) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_strided_geometry_and_values() {
+        // 1 channel, 2x2 kernel, stride 2, no pad over 4x4: four disjoint
+        // windows whose sums are easy to hand-check with an all-ones kernel
+        let d = Conv2dDesc { in_ch: 1, out_ch: 1, kh: 2, kw: 2, stride: 2, pad: 0 };
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 4];
+        conv2d_forward(&x, &[1.0; 4], &[0.0], 1, &d, 4, 4, &mut out, None);
+        // windows: {0,1,4,5}, {2,3,6,7}, {8,9,12,13}, {10,11,14,15}
+        assert_eq!(out, vec![10.0, 18.0, 42.0, 50.0]);
+    }
+
+    #[test]
+    fn conv_pooled_matches_serial_everywhere() {
+        let d = Conv2dDesc { in_ch: 3, out_ch: 6, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let (m, h, w) = (8, 9, 7);
+        let (oh, ow) = d.out_hw(h, w).unwrap();
+        let x = rand(m * h * w * 3, 20);
+        let wv = rand(6 * 27, 21);
+        let b = rand(6, 22);
+        let pool = ThreadPool::new(4);
+
+        let mut fs = vec![0f32; m * oh * ow * 6];
+        let mut fp = fs.clone();
+        conv2d_forward(&x, &wv, &b, m, &d, h, w, &mut fs, None);
+        conv2d_forward(&x, &wv, &b, m, &d, h, w, &mut fp, Some(&pool));
+        assert_eq!(fs, fp);
+
+        let dy = rand(m * oh * ow * 6, 23);
+        let mut dxs = vec![0f32; m * h * w * 3];
+        let mut dxp = dxs.clone();
+        conv2d_backward_input(&dy, &wv, m, &d, h, w, &mut dxs, None);
+        conv2d_backward_input(&dy, &wv, m, &d, h, w, &mut dxp, Some(&pool));
+        assert_eq!(dxs, dxp);
+
+        let mut dws = vec![0f32; 6 * 27];
+        let mut dwp = dws.clone();
+        conv2d_backward_weight(&dy, &x, m, &d, h, w, &mut dws, None);
+        conv2d_backward_weight(&dy, &x, m, &d, h, w, &mut dwp, Some(&pool));
+        assert_eq!(dws, dwp);
+
+        let mut db = vec![0f32; 6];
+        conv2d_backward_bias(&dy, m * oh * ow, 6, &mut db);
+        let expect: f32 = dy.iter().sum();
+        assert!((db.iter().sum::<f32>() - expect).abs() < 1e-3);
     }
 
     #[test]

@@ -169,6 +169,15 @@ impl AppState {
                 "bits",
                 Json::Arr(m.layers.iter().map(|l| Json::Num(l.bits as f64)).collect()),
             ),
+            (
+                "ops",
+                Json::Arr(
+                    m.layers
+                        .iter()
+                        .map(|l| Json::Str(l.kind_name().to_string()))
+                        .collect(),
+                ),
+            ),
             ("payload_bytes", Json::Num(m.payload_bytes() as f64)),
             ("compression", Json::Num(m.compression())),
             ("source", Json::Str(e.source.display().to_string())),
@@ -528,6 +537,38 @@ mod tests {
             let r = handle(&state, &req("POST", "/v1/models/toy/infer", body));
             assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(body));
         }
+    }
+
+    #[test]
+    fn conv_models_route_and_report_ops() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 64,
+            threads: 1,
+        };
+        let state = AppState::new(cfg, pool);
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 6).unwrap();
+        let path = std::env::temp_dir().join("msq_router_conv.msqpack");
+        pm.save(&path).unwrap();
+        state.load_model("conv", &path, None).unwrap();
+
+        let r = handle(&state, &req("GET", "/v1/models", b""));
+        let v = body_json(&r);
+        assert_eq!(v.path(&["models", "0", "ops", "0"]).unwrap().as_str(), Some("conv2d"));
+        assert_eq!(v.path(&["models", "0", "ops", "1"]).unwrap().as_str(), Some("linear"));
+        assert_eq!(v.path(&["models", "0", "input_dim"]).unwrap().as_usize(), Some(192));
+
+        // a conv infer routes exactly like an MLP one (flat NHWC row)
+        let x: Vec<f32> = (0..192).map(|i| (i as f32 / 96.0) - 1.0).collect();
+        let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+        let r = handle(&state, &req("POST", "/v1/models/conv/infer", body.as_bytes()));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let out = body_json(&r).path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+        let model = state.server("conv").unwrap().model.clone();
+        let expect = model.infer_batch(&x, 1, None).unwrap();
+        assert_eq!(out, expect, "gateway conv logits diverge from the direct forward");
     }
 
     #[test]

@@ -9,25 +9,123 @@
 //! trip), so a packed model can be re-expanded and served through the
 //! same eval artifacts.
 //!
-//! Format (all little-endian):
+//! Format v3 (all little-endian):
 //! ```text
-//! magic "MSQPACK2" | u64 input_dim | u32 n_layers
+//! magic "MSQPACK3" | u64 input_dim | u32 in_h | u32 in_w | u32 in_c | u32 n_layers
 //! per layer: u32 name_len | name bytes | u8 bits | f32 scale | u64 numel
+//!            | u8 op_kind | u8 flags | (op_kind == conv2d:
+//!              u32 in_ch | u32 out_ch | u32 kh | u32 kw | u32 stride | u32 pad)
 //! payload:  per layer, ceil(numel * bits / 8) bytes of packed codes
 //! ```
 //!
-//! `input_dim` is the model's input width (0 = unknown), which lets the
-//! serving registry chain the MLP layer shapes without an external
-//! `--input-dim`. v1 files (magic `MSQPACK1`, no `input_dim` field)
-//! still load — their `input_dim` reads as 0, so consumers fall back to
-//! an explicit dimension.
+//! `op_kind` is 0 = linear (weights are `rows × cols`, cols chained from
+//! the previous layer), 1 = conv2d (weights are `out_ch × kh × kw ×
+//! in_ch`, the OHWI twin of NHWC activations). `flags` bit 0 marks a
+//! fused ReLU after the layer. `in_h/in_w/in_c` record the spatial input
+//! shape ((0,0,0) = flat/unknown), which conv executors need to chain
+//! output maps; `input_dim` stays the flattened width for MLP consumers.
+//!
+//! Older files still load: v1 (magic `MSQPACK1`, no `input_dim`) and v2
+//! (magic `MSQPACK2`, no shape or descriptors) parse through the same
+//! reader — their layers come back as `linear` with ReLU implied on all
+//! but the last layer, exactly the dense-MLP chain the old serving path
+//! hardcoded, so pre-v3 packs serve byte-for-byte as before.
 
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::{from_unit, roundclamp_code, to_unit};
+
+/// Conv2d layer geometry as packed: weights are `out_ch × kh × kw ×
+/// in_ch` (OHWI, matching NHWC activations — the innermost dot runs over
+/// contiguous channels on both sides). Same stride/pad on both axes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dDesc {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dDesc {
+    /// Structural sanity (corrupt-header hardening): nonzero channel /
+    /// kernel / stride fields, everything representable as the u32 the
+    /// file format stores.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.in_ch > 0 && self.out_ch > 0 && self.kh > 0 && self.kw > 0 && self.stride > 0,
+            "conv descriptor has zero fields: {self:?}"
+        );
+        let max = u32::MAX as usize;
+        ensure!(
+            [self.in_ch, self.out_ch, self.kh, self.kw, self.stride, self.pad]
+                .iter()
+                .all(|&v| v <= max),
+            "conv descriptor field exceeds u32: {self:?}"
+        );
+        Ok(())
+    }
+
+    /// Weight element count `out_ch · in_ch · kh · kw`; `None` when the
+    /// product overflows (a corrupt descriptor, not a real model).
+    pub fn weight_numel(&self) -> Option<usize> {
+        self.out_ch
+            .checked_mul(self.in_ch)?
+            .checked_mul(self.kh)?
+            .checked_mul(self.kw)
+    }
+
+    /// Codes per filter (`kh · kw · in_ch`) — the decode unit of the
+    /// serving kernel. Only meaningful after `weight_numel` checked out.
+    pub fn filter_len(&self) -> usize {
+        self.in_ch * self.kh * self.kw
+    }
+
+    /// Output map size over an `in_h × in_w` input (floor convolution
+    /// arithmetic, both axes padded by `pad`). Errors when the kernel
+    /// does not fit the padded input.
+    pub fn out_hw(&self, in_h: usize, in_w: usize) -> Result<(usize, usize)> {
+        self.validate()?;
+        ensure!(in_h > 0 && in_w > 0, "conv input {in_h}x{in_w} has a zero axis");
+        let pad2 = self.pad.checked_mul(2).context("conv pad overflows")?;
+        let eh = in_h.checked_add(pad2).context("conv padded height overflows")?;
+        let ew = in_w.checked_add(pad2).context("conv padded width overflows")?;
+        ensure!(
+            eh >= self.kh && ew >= self.kw,
+            "conv kernel {}x{} exceeds padded input {eh}x{ew}",
+            self.kh,
+            self.kw
+        );
+        Ok(((eh - self.kh) / self.stride + 1, (ew - self.kw) / self.stride + 1))
+    }
+}
+
+/// What a packed layer *is* — v3 records this per layer instead of the
+/// file format implying a dense MLP chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerOp {
+    Linear,
+    Conv2d(Conv2dDesc),
+}
+
+impl LayerOp {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            LayerOp::Linear => "linear",
+            LayerOp::Conv2d(_) => "conv2d",
+        }
+    }
+}
+
+/// File tags for [`LayerOp`] (`op_kind` byte).
+const OP_LINEAR: u8 = 0;
+const OP_CONV2D: u8 = 1;
+/// `flags` bit 0: ReLU fused after this layer's op.
+const FLAG_RELU: u8 = 1;
 
 #[derive(Clone, Debug)]
 pub struct PackedLayer {
@@ -35,7 +133,26 @@ pub struct PackedLayer {
     pub bits: u8,
     pub scale: f32,
     pub numel: usize,
+    /// Op descriptor (v3; pre-v3 files load as `Linear`).
+    pub op: LayerOp,
+    /// ReLU fused after the op (v3; pre-v3 files imply it on all but the
+    /// last layer).
+    pub relu: bool,
     pub data: Vec<u8>,
+}
+
+impl Default for PackedLayer {
+    fn default() -> Self {
+        PackedLayer {
+            name: String::new(),
+            bits: 8,
+            scale: 1.0,
+            numel: 0,
+            op: LayerOp::Linear,
+            relu: false,
+            data: Vec::new(),
+        }
+    }
 }
 
 impl PackedLayer {
@@ -47,7 +164,8 @@ impl PackedLayer {
 
     /// Header/payload consistency check shared by `unpack_layer` and the
     /// serving registry: bit-width in range, payload neither truncated nor
-    /// oversized. Overflow-safe against corrupt headers.
+    /// oversized, op descriptor consistent with the element count.
+    /// Overflow-safe against corrupt headers.
     pub fn validate(&self) -> Result<()> {
         if !(1..=16).contains(&self.bits) {
             bail!("layer {:?}: bits {} outside 1..=16", self.name, self.bits);
@@ -66,6 +184,18 @@ impl PackedLayer {
                 self.bits
             );
         }
+        if let LayerOp::Conv2d(d) = self.op {
+            d.validate().with_context(|| format!("layer {:?}", self.name))?;
+            match d.weight_numel() {
+                Some(n) if n == self.numel => {}
+                Some(n) => bail!(
+                    "layer {:?}: conv descriptor implies {n} weights, header says {}",
+                    self.name,
+                    self.numel
+                ),
+                None => bail!("layer {:?}: conv descriptor product overflows", self.name),
+            }
+        }
         Ok(())
     }
 }
@@ -73,9 +203,13 @@ impl PackedLayer {
 #[derive(Clone, Debug, Default)]
 pub struct PackedModel {
     /// Input width of the packed network (0 = unknown; v1 files and
-    /// hand-assembled models). When set, serving infers the whole MLP
+    /// hand-assembled models). When set, serving infers the whole
     /// topology from the header alone.
     pub input_dim: usize,
+    /// Spatial input shape `(h, w, c)` for conv front-ends; `(0, 0, 0)`
+    /// means flat/unknown (MLPs, pre-v3 files). When set, `input_dim`
+    /// equals `h·w·c` (enforced on load).
+    pub input_hwc: (usize, usize, usize),
     pub layers: Vec<PackedLayer>,
 }
 
@@ -138,7 +272,8 @@ impl<'a> BitReader<'a> {
 }
 
 /// Quantize + pack one layer's float weights at `bits` precision with the
-/// standard max-abs scale.
+/// standard max-abs scale. The layer comes back as `linear` with no fused
+/// ReLU; builders assembling a network set `op`/`relu` per layer.
 pub fn pack_layer(name: &str, w: &[f32], bits: u8) -> PackedLayer {
     let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
     pack_layer_scaled(name, w, bits, scale)
@@ -152,7 +287,14 @@ pub fn pack_layer_scaled(name: &str, w: &[f32], bits: u8, scale: f32) -> PackedL
     for &x in w {
         bw.push(roundclamp_code(to_unit(x, scale), bits as f32), bits);
     }
-    PackedLayer { name: name.into(), bits, scale, numel: w.len(), data: bw.finish() }
+    PackedLayer {
+        name: name.into(),
+        bits,
+        scale,
+        numel: w.len(),
+        data: bw.finish(),
+        ..Default::default()
+    }
 }
 
 /// Unpack a layer back to float weights (RoundClamp dequantization).
@@ -171,7 +313,8 @@ impl PackedModel {
     /// Random He-initialized MLP packed at the given layer widths — the
     /// shared demo/bench/test substrate behind `msq pack-synth`, the
     /// `serve_throughput` bench, and the serve e2e tests. `bits[l]`
-    /// quantizes the `dims[l] -> dims[l+1]` layer.
+    /// quantizes the `dims[l] -> dims[l+1]` layer. Hidden layers carry
+    /// the fused-ReLU flag (the MLP chain pre-v3 serving hardcoded).
     pub fn synth_mlp(dims: &[usize], bits: &[u8], seed: u64) -> Result<PackedModel> {
         if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
             bail!("synth_mlp: need >= 2 nonzero widths, got {dims:?}");
@@ -185,9 +328,77 @@ impl PackedModel {
             let (cin, cout) = (dims[l], dims[l + 1]);
             let std = (2.0 / cin as f32).sqrt(); // He init: keeps logits sane
             let w: Vec<f32> = (0..cin * cout).map(|_| rng.normal() * std).collect();
-            pm.layers.push(pack_layer(&format!("fc{l}"), &w, bits[l]));
+            let mut layer = pack_layer(&format!("fc{l}"), &w, bits[l]);
+            layer.relu = l + 2 < dims.len(); // hidden layers only
+            pm.layers.push(layer);
         }
         Ok(pm)
+    }
+
+    /// Random He-initialized conv net over an `in_h × in_w` input:
+    /// `dims = [in_ch, conv channels…, classes]` — each conv stage is
+    /// 3×3, stride 2, pad 1 with fused ReLU (halving the map), then one
+    /// linear head over the flattened final map. `bits[l]` quantizes
+    /// stage `l`. The substrate behind `msq pack-synth --arch conv` and
+    /// the conv serving tests.
+    pub fn synth_conv(
+        in_h: usize,
+        in_w: usize,
+        dims: &[usize],
+        bits: &[u8],
+        seed: u64,
+    ) -> Result<PackedModel> {
+        if dims.len() < 3 || dims.iter().any(|&d| d == 0) {
+            bail!("synth_conv: need [in_ch, channels…, classes] (>= 3 nonzero), got {dims:?}");
+        }
+        ensure!(in_h > 0 && in_w > 0, "synth_conv: zero input size {in_h}x{in_w}");
+        if bits.len() != dims.len() - 1 {
+            bail!("synth_conv: {} bit-widths for {} layers", bits.len(), dims.len() - 1);
+        }
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let (mut h, mut w) = (in_h, in_w);
+        let mut pm = PackedModel {
+            input_dim: in_h * in_w * dims[0],
+            input_hwc: (in_h, in_w, dims[0]),
+            ..Default::default()
+        };
+        for l in 0..dims.len() - 2 {
+            let d = Conv2dDesc {
+                in_ch: dims[l],
+                out_ch: dims[l + 1],
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+            };
+            let (oh, ow) = d.out_hw(h, w)?;
+            let std = (2.0 / d.filter_len() as f32).sqrt();
+            let numel = d.weight_numel().unwrap();
+            let wv: Vec<f32> = (0..numel).map(|_| rng.normal() * std).collect();
+            let mut layer = pack_layer(&format!("conv{l}"), &wv, bits[l]);
+            layer.op = LayerOp::Conv2d(d);
+            layer.relu = true;
+            pm.layers.push(layer);
+            (h, w) = (oh, ow);
+        }
+        let flat = h * w * dims[dims.len() - 2];
+        let classes = dims[dims.len() - 1];
+        let std = (2.0 / flat as f32).sqrt();
+        let wv: Vec<f32> = (0..flat * classes).map(|_| rng.normal() * std).collect();
+        pm.layers.push(pack_layer("fc", &wv, bits[bits.len() - 1]));
+        Ok(pm)
+    }
+
+    /// Spatial input shape when the header records one.
+    pub fn spatial_input(&self) -> Option<(usize, usize, usize)> {
+        let (h, w, c) = self.input_hwc;
+        (h > 0 && w > 0 && c > 0).then_some((h, w, c))
+    }
+
+    /// Does any layer carry a conv descriptor (needs the op-graph
+    /// executor; MLP-only consumers bail on these)?
+    pub fn has_conv(&self) -> bool {
+        self.layers.iter().any(|l| matches!(l.op, LayerOp::Conv2d(_)))
     }
 
     /// Physical payload bytes (what the compression ratio is about).
@@ -204,13 +415,14 @@ impl PackedModel {
         self.fp32_bytes() as f64 / self.payload_bytes().max(1) as f64
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"MSQPACK2")?;
+    /// Serialize in the canonical v3 layout (see module docs).
+    pub fn write_to<W: Write>(&self, f: &mut W) -> Result<()> {
+        f.write_all(b"MSQPACK3")?;
         f.write_all(&(self.input_dim as u64).to_le_bytes())?;
+        let (h, w, c) = self.input_hwc;
+        for v in [h, w, c] {
+            f.write_all(&(v as u32).to_le_bytes())?;
+        }
         f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
         for l in &self.layers {
             f.write_all(&(l.name.len() as u32).to_le_bytes())?;
@@ -218,6 +430,16 @@ impl PackedModel {
             f.write_all(&[l.bits])?;
             f.write_all(&l.scale.to_le_bytes())?;
             f.write_all(&(l.numel as u64).to_le_bytes())?;
+            let flags = if l.relu { FLAG_RELU } else { 0 };
+            match l.op {
+                LayerOp::Linear => f.write_all(&[OP_LINEAR, flags])?,
+                LayerOp::Conv2d(d) => {
+                    f.write_all(&[OP_CONV2D, flags])?;
+                    for v in [d.in_ch, d.out_ch, d.kh, d.kw, d.stride, d.pad] {
+                        f.write_all(&(v as u32).to_le_bytes())?;
+                    }
+                }
+            }
         }
         for l in &self.layers {
             f.write_all(&l.data)?;
@@ -225,8 +447,32 @@ impl PackedModel {
         Ok(())
     }
 
+    /// Canonical v3 bytes (what `save` writes; fixture round-trip tests
+    /// compare against this).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(64 + self.payload_bytes());
+        self.write_to(&mut out)?;
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)?;
+        Ok(())
+    }
+
     pub fn load(path: &Path) -> Result<PackedModel> {
         let bytes = std::fs::read(path).with_context(|| format!("{path:?}"))?;
+        Self::parse(&bytes).with_context(|| format!("{path:?}"))
+    }
+
+    /// Parse any supported `.msqpack` version from raw bytes. Corrupt or
+    /// adversarial input errors — it never panics and never allocates
+    /// more than the input's own size implies.
+    pub fn parse(bytes: &[u8]) -> Result<PackedModel> {
         let mut p = 0usize;
         let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
             if *p + n > bytes.len() {
@@ -236,14 +482,29 @@ impl PackedModel {
             *p += n;
             Ok(s)
         };
-        let input_dim = match take(&mut p, 8)? {
-            b"MSQPACK2" => u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize,
-            b"MSQPACK1" => 0, // pre-v2 pack: input width unknown
+        let version = match take(&mut p, 8)? {
+            b"MSQPACK3" => 3u8,
+            b"MSQPACK2" => 2,
+            b"MSQPACK1" => 1,
             _ => bail!("bad magic"),
         };
+        let input_dim = if version >= 2 {
+            u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize
+        } else {
+            0 // pre-v2 pack: input width unknown
+        };
+        let input_hwc = if version >= 3 {
+            let mut v = [0usize; 3];
+            for slot in v.iter_mut() {
+                *slot = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
+            }
+            (v[0], v[1], v[2])
+        } else {
+            (0, 0, 0)
+        };
         let n_layers = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
-        // each layer header is >= 17 bytes; reject absurd counts before
-        // allocating (corrupt-file hardening)
+        // each layer header is >= 17 bytes in every version; reject absurd
+        // counts before allocating (corrupt-file hardening)
         if n_layers > bytes.len() / 17 {
             bail!("implausible layer count {n_layers} for {} bytes", bytes.len());
         }
@@ -254,7 +515,41 @@ impl PackedModel {
             let bits = take(&mut p, 1)?[0];
             let scale = f32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap());
             let numel = u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize;
-            layers.push(PackedLayer { name, bits, scale, numel, data: Vec::new() });
+            let (op, relu) = if version >= 3 {
+                let kind = take(&mut p, 1)?[0];
+                let flags = take(&mut p, 1)?[0];
+                let op = match kind {
+                    OP_LINEAR => LayerOp::Linear,
+                    OP_CONV2D => {
+                        let mut v = [0usize; 6];
+                        for slot in v.iter_mut() {
+                            *slot =
+                                u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
+                        }
+                        LayerOp::Conv2d(Conv2dDesc {
+                            in_ch: v[0],
+                            out_ch: v[1],
+                            kh: v[2],
+                            kw: v[3],
+                            stride: v[4],
+                            pad: v[5],
+                        })
+                    }
+                    other => bail!("layer {name:?}: unknown op kind {other}"),
+                };
+                (op, flags & FLAG_RELU != 0)
+            } else {
+                (LayerOp::Linear, false) // relu implied below
+            };
+            layers.push(PackedLayer { name, bits, scale, numel, op, relu, data: Vec::new() });
+        }
+        if version < 3 {
+            // pre-v3 files implied a dense MLP chain with ReLU between
+            // hidden layers; make that explicit in the descriptors
+            let n = layers.len();
+            for (i, l) in layers.iter_mut().enumerate() {
+                l.relu = i + 1 < n;
+            }
         }
         for l in layers.iter_mut() {
             let nbytes = match l.expected_bytes() {
@@ -268,8 +563,22 @@ impl PackedModel {
                 ),
             };
             l.data = take(&mut p, nbytes)?.to_vec();
+            // descriptor/payload consistency (conv products, bit range)
+            l.validate()?;
         }
-        Ok(PackedModel { input_dim, layers })
+        // a lying spatial header must not survive into the executor
+        let (h, w, c) = input_hwc;
+        if h > 0 || w > 0 || c > 0 {
+            ensure!(h > 0 && w > 0 && c > 0, "partial input shape {h}x{w}x{c}");
+            let flat = h
+                .checked_mul(w)
+                .and_then(|hw| hw.checked_mul(c))
+                .context("input shape product overflows")?;
+            if input_dim != 0 && flat != input_dim {
+                bail!("input shape {h}x{w}x{c} contradicts input_dim {input_dim}");
+            }
+        }
+        Ok(PackedModel { input_dim, input_hwc, layers })
     }
 }
 
@@ -354,6 +663,8 @@ mod tests {
             assert_eq!(a.bits, b.bits);
             assert_eq!(a.data, b.data);
             assert_eq!(a.numel, b.numel);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.relu, b.relu);
         }
     }
 
@@ -387,35 +698,133 @@ mod tests {
     }
 
     #[test]
-    fn v2_header_roundtrips_input_dim() {
+    fn synth_mlp_marks_hidden_relu() {
+        let pm = PackedModel::synth_mlp(&[12, 8, 6, 4], &[4, 4, 4], 1).unwrap();
+        assert_eq!(
+            pm.layers.iter().map(|l| l.relu).collect::<Vec<_>>(),
+            vec![true, true, false]
+        );
+        assert!(pm.layers.iter().all(|l| l.op == LayerOp::Linear));
+        assert!(!pm.has_conv());
+    }
+
+    #[test]
+    fn synth_conv_chains_geometry_and_roundtrips() {
+        // 8x8x3 input, one 3->4 conv stage (stride 2 -> 4x4 map), linear
+        // head over 4*4*4 = 64 flattened features to 5 classes
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 9).unwrap();
+        assert_eq!(pm.input_dim, 8 * 8 * 3);
+        assert_eq!(pm.input_hwc, (8, 8, 3));
+        assert!(pm.has_conv());
+        assert_eq!(pm.layers.len(), 2);
+        match pm.layers[0].op {
+            LayerOp::Conv2d(d) => {
+                assert_eq!((d.in_ch, d.out_ch, d.kh, d.kw, d.stride, d.pad), (3, 4, 3, 3, 2, 1));
+                assert_eq!(d.out_hw(8, 8).unwrap(), (4, 4));
+                assert_eq!(d.weight_numel().unwrap(), pm.layers[0].numel);
+            }
+            LayerOp::Linear => panic!("stage 0 should be conv"),
+        }
+        assert!(pm.layers[0].relu && !pm.layers[1].relu);
+        assert_eq!(pm.layers[1].op, LayerOp::Linear);
+        assert_eq!(pm.layers[1].numel, 64 * 5);
+
+        // file round trip preserves descriptors and the spatial header
+        let path = std::env::temp_dir().join("msq_pack_conv.msqpack");
+        pm.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        assert_eq!(back.input_hwc, (8, 8, 3));
+        assert_eq!(back.layers[0].op, pm.layers[0].op);
+        assert_eq!(back.layers[0].relu, pm.layers[0].relu);
+        assert_eq!(back.layers[1].op, LayerOp::Linear);
+        // and the canonical bytes are stable (save == to_bytes == re-save)
+        assert_eq!(std::fs::read(&path).unwrap(), pm.to_bytes().unwrap());
+        assert_eq!(back.to_bytes().unwrap(), pm.to_bytes().unwrap());
+    }
+
+    #[test]
+    fn conv_geometry_edge_cases() {
+        let d = Conv2dDesc { in_ch: 1, out_ch: 1, kh: 3, kw: 3, stride: 1, pad: 0 };
+        assert_eq!(d.out_hw(3, 3).unwrap(), (1, 1));
+        assert!(d.out_hw(2, 2).is_err(), "kernel larger than input must error");
+        let p = Conv2dDesc { pad: 1, ..d };
+        assert_eq!(p.out_hw(2, 2).unwrap(), (2, 2));
+        let s = Conv2dDesc { stride: 2, pad: 1, ..d };
+        assert_eq!(s.out_hw(5, 5).unwrap(), (3, 3));
+        let z = Conv2dDesc { stride: 0, ..d };
+        assert!(z.out_hw(5, 5).is_err(), "zero stride must error");
+        let huge = Conv2dDesc {
+            in_ch: usize::MAX / 2,
+            out_ch: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+        };
+        assert!(huge.weight_numel().is_none(), "overflow must be caught, not wrapped");
+    }
+
+    #[test]
+    fn header_roundtrips_input_dim() {
         let pm = PackedModel::synth_mlp(&[24, 16, 4], &[4, 3], 7).unwrap();
         assert_eq!(pm.input_dim, 24);
         let path = std::env::temp_dir().join("msq_pack_v2.msqpack");
         pm.save(&path).unwrap();
         let back = PackedModel::load(&path).unwrap();
         assert_eq!(back.input_dim, 24);
+        assert_eq!(back.input_hwc, (0, 0, 0));
         assert_eq!(back.layers.len(), 2);
+    }
+
+    /// Hand-write a pre-v3 file: `magic` + optional input_dim + the old
+    /// layer table (no descriptors). Shared by the v1/v2 fallback tests.
+    fn legacy_bytes(magic: &[u8; 8], input_dim: Option<u64>, layers: &[PackedLayer]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(magic);
+        if let Some(d) = input_dim {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        bytes.extend_from_slice(&(layers.len() as u32).to_le_bytes());
+        for l in layers {
+            bytes.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(l.name.as_bytes());
+            bytes.push(l.bits);
+            bytes.extend_from_slice(&l.scale.to_le_bytes());
+            bytes.extend_from_slice(&(l.numel as u64).to_le_bytes());
+        }
+        for l in layers {
+            bytes.extend_from_slice(&l.data);
+        }
+        bytes
     }
 
     #[test]
     fn v1_files_still_load_with_unknown_dim() {
-        // hand-write a v1 file: old magic, no input_dim field
         let l = pack_layer("fc0", &rand_weights(12, 1), 4);
-        let mut bytes = Vec::new();
-        bytes.extend_from_slice(b"MSQPACK1");
-        bytes.extend_from_slice(&1u32.to_le_bytes());
-        bytes.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
-        bytes.extend_from_slice(l.name.as_bytes());
-        bytes.push(l.bits);
-        bytes.extend_from_slice(&l.scale.to_le_bytes());
-        bytes.extend_from_slice(&(l.numel as u64).to_le_bytes());
-        bytes.extend_from_slice(&l.data);
-        let path = std::env::temp_dir().join("msq_pack_v1.msqpack");
-        std::fs::write(&path, &bytes).unwrap();
-        let back = PackedModel::load(&path).unwrap();
+        let bytes = legacy_bytes(b"MSQPACK1", None, std::slice::from_ref(&l));
+        let back = PackedModel::parse(&bytes).unwrap();
         assert_eq!(back.input_dim, 0, "v1 packs carry no input width");
         assert_eq!(back.layers[0].numel, 12);
+        assert_eq!(back.layers[0].op, LayerOp::Linear);
+        assert!(!back.layers[0].relu, "single layer: no implied hidden relu");
         assert_eq!(unpack_layer(&back.layers[0]).unwrap().len(), 12);
+    }
+
+    #[test]
+    fn v2_files_imply_the_mlp_relu_chain() {
+        let layers = vec![
+            pack_layer("fc0", &rand_weights(24, 1), 4), // 6 -> 4
+            pack_layer("fc1", &rand_weights(12, 2), 3), // 4 -> 3
+        ];
+        let bytes = legacy_bytes(b"MSQPACK2", Some(6), &layers);
+        let back = PackedModel::parse(&bytes).unwrap();
+        assert_eq!(back.input_dim, 6);
+        assert_eq!(back.input_hwc, (0, 0, 0));
+        assert_eq!(
+            back.layers.iter().map(|l| l.relu).collect::<Vec<_>>(),
+            vec![true, false],
+            "pre-v3 files imply ReLU on all but the last layer"
+        );
     }
 
     #[test]
@@ -425,6 +834,34 @@ mod tests {
         assert!(PackedModel::load(&path).is_err());
         std::fs::write(&path, b"MSQPACK1\xff\xff\xff\xff").unwrap();
         assert!(PackedModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn garbage_descriptors_rejected() {
+        // unknown op kind byte
+        let pm = PackedModel::synth_mlp(&[6, 4, 2], &[4, 4], 5).unwrap();
+        let mut bytes = pm.to_bytes().unwrap();
+        // first layer record: 8 magic + 8 dim + 12 hwc + 4 count +
+        // 4 name_len + 3 name ("fc0") + 1 bits + 4 scale + 8 numel = op at 52
+        assert_eq!(bytes[52], OP_LINEAR);
+        bytes[52] = 99;
+        assert!(PackedModel::parse(&bytes).unwrap_err().to_string().contains("op kind"));
+
+        // conv descriptor whose product disagrees with numel
+        let conv = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 9).unwrap();
+        let mut b2 = conv.to_bytes().unwrap();
+        // conv0 record: 4 + 5 name + 1 + 4 + 8 = 22 after count; op byte at
+        // 8+8+12+4 + 4+5+1+4+8 = 54, flags 55, in_ch u32 at 56
+        assert_eq!(b2[54], OP_CONV2D);
+        b2[56] = 200; // in_ch 3 -> 200: weight_numel no longer matches
+        let err = PackedModel::parse(&b2).unwrap_err().to_string();
+        assert!(err.contains("conv descriptor"), "{err}");
+
+        // lying spatial header (product != input_dim)
+        let mut b3 = conv.to_bytes().unwrap();
+        b3[16] = 7; // in_h 8 -> 7
+        let err = PackedModel::parse(&b3).unwrap_err().to_string();
+        assert!(err.contains("contradicts"), "{err}");
     }
 
     #[test]
@@ -503,17 +940,21 @@ mod tests {
         assert!(unpack_layer(&q).is_err());
 
         // bits outside the packable range
-        let bad =
-            PackedLayer { name: "b".into(), bits: 17, scale: 1.0, numel: 1, data: vec![0; 3] };
+        let bad = PackedLayer {
+            name: "b".into(),
+            bits: 17,
+            numel: 1,
+            data: vec![0; 3],
+            ..Default::default()
+        };
         assert!(unpack_layer(&bad).is_err());
 
         // overflow-scale numel in a corrupt header: error, not a panic
         let huge = PackedLayer {
             name: "h".into(),
             bits: 8,
-            scale: 1.0,
             numel: usize::MAX / 4,
-            data: Vec::new(),
+            ..Default::default()
         };
         assert!(unpack_layer(&huge).is_err());
     }
@@ -526,7 +967,7 @@ mod tests {
         m.save(&path).unwrap();
         let full = std::fs::read(&path).unwrap();
         // chop the file at several points: header, layer table, payload
-        for cut in [4usize, 9, 20, full.len() - 1] {
+        for cut in [4usize, 9, 20, 30, full.len() - 1] {
             std::fs::write(&path, &full[..cut.min(full.len())]).unwrap();
             assert!(PackedModel::load(&path).is_err(), "cut at {cut} must fail");
         }

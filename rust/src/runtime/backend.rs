@@ -52,8 +52,26 @@ pub trait Backend {
     }
     /// Flattened elements per input sample (e.g. H·W·C).
     fn input_elems(&self) -> usize;
+    /// Spatial input shape `(h, w, c)`; `(0, 0, 0)` when the backend is
+    /// flat/MLP-shaped. Stamped into the `.msqpack` v3 header so conv
+    /// executors can chain output maps.
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (0, 0, 0)
+    }
     fn num_q_layers(&self) -> usize;
     fn q_layer_name(&self, q: usize) -> String;
+    /// Op descriptor of quantized layer `q` — stamped into the pack v3
+    /// layer record so serving rebuilds the exact op graph. Defaults to
+    /// `Linear` (the pre-v3 MLP assumption).
+    fn q_layer_op(&self, _q: usize) -> crate::quant::pack::LayerOp {
+        crate::quant::pack::LayerOp::Linear
+    }
+    /// Whether layer `q` is followed by a fused ReLU in the serving
+    /// graph. Defaults to the classic MLP chain: every layer but the
+    /// last.
+    fn q_layer_relu(&self, q: usize) -> bool {
+        q + 1 < self.num_q_layers()
+    }
     /// Per-quantized-layer weight counts (compression accounting).
     fn q_sizes(&self) -> Vec<usize>;
     fn trainable_params(&self) -> usize;
@@ -171,6 +189,15 @@ mod pjrt_backend {
 
         fn input_elems(&self) -> usize {
             self.train_meta.image.iter().product()
+        }
+
+        fn input_shape(&self) -> (usize, usize, usize) {
+            let img = &self.train_meta.image;
+            if img.len() == 3 {
+                (img[0], img[1], img[2])
+            } else {
+                (0, 0, 0)
+            }
         }
 
         fn num_q_layers(&self) -> usize {

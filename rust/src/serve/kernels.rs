@@ -1,9 +1,10 @@
 //! Pure-Rust quantized inference kernels over packed RoundClamp codes.
 //!
-//! The serving path never materializes an f32 weight tensor: `qgemm`
-//! streams the n-bit codes (1..=8 bits, non-byte-aligned, LSB-first —
-//! the exact `quant::pack` layout) out of the packed payload row by row
-//! and folds the affine dequantization out of the inner loop:
+//! The serving path never materializes an f32 weight tensor: `qgemm` and
+//! `qconv2d` stream the n-bit codes (1..=8 bits, non-byte-aligned,
+//! LSB-first — the exact `quant::pack` layout) out of the packed payload
+//! one weight row (or conv filter) at a time and fold the affine
+//! dequantization out of the inner loop:
 //!
 //! ```text
 //! w = (c / (2^n - 1) - 0.5) · 2s          (RoundClamp dequant, Eq. 4)
@@ -11,18 +12,28 @@
 //!        = α · Σ_j c[r,j] x[b,j] − s · Σ_j x[b,j],   α = 2s / (2^n − 1)
 //! ```
 //!
-//! so the hot loop is a plain code·activation dot product. Rows are
-//! processed in cache-friendly blocks: each block decodes one row at a
-//! time into a small scratch buffer and reuses it across the whole
-//! batch, which is what makes batched serving amortize the bit-decode.
-//! Blocks are independent, so they parallelize over `util::threadpool`
-//! with disjoint output rows.
+//! so the hot loop is a plain code·activation dot product. `qgemm`
+//! processes rows in cache-friendly blocks: each block decodes one row
+//! at a time into a small scratch buffer and reuses it across the whole
+//! batch. `qconv2d` applies the same decode-once trick per *filter*: a
+//! filter's `kh·kw·in_ch` codes are decoded once, then the whole batch's
+//! output map streams through an im2col-free inner loop whose innermost
+//! dot runs over contiguous memory on both sides (OHWI filters against
+//! NHWC activations). The `Σ x` correction term becomes a per-position
+//! receptive-field sum shared by every output channel. Blocks (rows /
+//! filter groups) are independent, so they parallelize over
+//! `util::threadpool` with disjoint output cells.
 
+use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
 
 /// Rows per parallel work item. Small enough to balance across cores,
 /// large enough that scratch allocation and task dispatch amortize.
 const ROW_BLOCK: usize = 32;
+
+/// Conv filters per parallel work item — one filter is a whole output
+/// map of work per sample, so blocks are smaller than gemm rows.
+const FILTER_BLOCK: usize = 4;
 
 /// Decode `out.len()` consecutive `bits`-wide codes starting at absolute
 /// bit offset `bit_off` of `data` (LSB-first within each byte, matching
@@ -33,19 +44,32 @@ const ROW_BLOCK: usize = 32;
 pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
     debug_assert!((1..=8).contains(&bits));
     let mut pos = bit_off / 8;
+    let phase = (bit_off % 8) as u32;
+    if bits == 8 {
+        if phase == 0 {
+            for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
+                *slot = b as f32;
+            }
+        } else {
+            // every code straddles the same two-byte window at a fixed
+            // phase: consume the leading partial byte and combine, no
+            // bit-buffer loop (the fast path used to bail whenever
+            // phase != 0 and fall through to the generic decoder)
+            let hi = 8 - phase;
+            for slot in out.iter_mut() {
+                let c = ((data[pos] as u32) >> phase) | (((data[pos + 1] as u32) << hi) & 0xFF);
+                *slot = c as f32;
+                pos += 1;
+            }
+        }
+        return;
+    }
     let mut cur: u64 = 0;
     let mut nbits: u32 = 0;
-    let phase = (bit_off % 8) as u32;
     if phase != 0 {
         cur = (data[pos] >> phase) as u64;
         nbits = 8 - phase;
         pos += 1;
-    }
-    if bits == 8 && phase == 0 {
-        for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
-            *slot = b as f32;
-        }
-        return;
     }
     let width = bits as u32;
     let mask = (1u64 << width) - 1;
@@ -63,7 +87,7 @@ pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) 
 
 /// Unrolled dot product with 4 independent accumulators (keeps the FP
 /// dependency chain short; identical summation order on every path, so
-/// serial and pooled `qgemm` agree bit-for-bit).
+/// serial and pooled kernels agree bit-for-bit).
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
     let split = a.len() & !3;
@@ -154,6 +178,214 @@ pub fn qgemm(
     }
 }
 
+/// Kernel-tap bounds for one output index: which `0..k` taps land inside
+/// the `in_n`-wide input once `o·stride − pad` anchors the window.
+/// Returns `(k0, k1, i0)` — taps `k0..k1` are valid and tap `k0` reads
+/// input index `i0` (empty range when the window misses entirely).
+/// `pub(crate)` because `native::ops` clips its conv windows with the
+/// SAME function — training and serving geometry must never diverge.
+#[inline]
+pub(crate) fn krange(
+    o: usize,
+    stride: usize,
+    pad: usize,
+    k: usize,
+    in_n: usize,
+) -> (usize, usize, usize) {
+    let base = (o * stride) as isize - pad as isize;
+    let k0 = (-base).max(0) as usize;
+    let k1 = (in_n as isize - base).clamp(0, k as isize) as usize;
+    let k1 = k1.max(k0);
+    (k0, k1, (base + k0 as isize).max(0) as usize)
+}
+
+/// Quantized 2-D convolution over a packed conv layer: NHWC activations
+/// against OHWI filters whose codes are decoded once per filter and
+/// reused across the whole batch (the conv twin of `qgemm`'s row-block
+/// trick — no im2col buffer is ever built).
+///
+/// `x` is `batch × in_h × in_w × in_ch`, `out` is `batch × out_h ×
+/// out_w × out_ch` with `(out_h, out_w) = d.out_hw(in_h, in_w)`. Zero
+/// padding is handled by clipping the tap ranges, which is exact for the
+/// affine folding because padded positions contribute zero to both the
+/// code·activation dot and the receptive-field sum. With `pool`, filter
+/// blocks run in parallel; results are bit-identical to the serial path.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).expect("qconv2d: invalid geometry");
+    let in_elems = in_h * in_w * d.in_ch;
+    let out_elems = out_h * out_w * d.out_ch;
+    assert_eq!(x.len(), batch * in_elems, "qconv2d: x shape");
+    assert_eq!(out.len(), batch * out_elems, "qconv2d: out shape");
+    assert!((1..=8).contains(&bits), "qconv2d: bits {bits}");
+    if batch == 0 {
+        return;
+    }
+    let denom = ((1u32 << bits) - 1).max(1) as f32;
+    let alpha = 2.0 * scale / denom;
+
+    // Σ x over each receptive field (the dequant correction term) —
+    // shared by every output channel, so it costs one extra "channel".
+    // For small out_ch this pass is a visible fraction of the layer's
+    // work, so it parallelizes over samples (disjoint psums rows) rather
+    // than running serially ahead of the filter blocks.
+    let mut psums = vec![0f32; batch * out_h * out_w];
+    let psum_sample = |b: usize, prow: &mut dyn FnMut(usize, f32)| {
+        let xb = &x[b * in_elems..(b + 1) * in_elems];
+        for oy in 0..out_h {
+            let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+            for ox in 0..out_w {
+                let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+                let seg = (kx1 - kx0) * d.in_ch;
+                let mut s = 0f32;
+                if seg > 0 {
+                    // seg == 0 (window fully off the input horizontally,
+                    // pad >= kw) would index past the row — and sums 0
+                    for ky in ky0..ky1 {
+                        let iy = iy0 + (ky - ky0);
+                        s += xb[(iy * in_w + ix0) * d.in_ch..][..seg].iter().sum::<f32>();
+                    }
+                }
+                prow((b * out_h + oy) * out_w + ox, s);
+            }
+        }
+    };
+    match pool {
+        Some(pool) if batch > 1 => {
+            let pptr = SendPtr(psums.as_mut_ptr());
+            let pptr = &pptr;
+            pool.par_for(batch, move |b| {
+                // SAFETY: sample `b` writes only indices in
+                // [b·out_h·out_w, (b+1)·out_h·out_w) — disjoint per task;
+                // `psums` outlives the scoped par_for and is not read
+                // until it returns.
+                psum_sample(b, &mut |idx, v| unsafe { *pptr.0.add(idx) = v });
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                psum_sample(b, &mut |idx, v| psums[idx] = v);
+            }
+        }
+    }
+
+    let flen = d.filter_len();
+    let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
+        let oc0 = blk * FILTER_BLOCK;
+        let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
+        for oc in oc0..oc1 {
+            // decode this filter's kh·kw·in_ch codes exactly once
+            decode_codes_f32(data, oc * flen * bits as usize, bits, scratch);
+            for b in 0..batch {
+                let xb = &x[b * in_elems..(b + 1) * in_elems];
+                for oy in 0..out_h {
+                    let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+                    for ox in 0..out_w {
+                        let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+                        let seg = (kx1 - kx0) * d.in_ch;
+                        let mut acc = 0f32;
+                        if seg > 0 {
+                            for ky in ky0..ky1 {
+                                let iy = iy0 + (ky - ky0);
+                                let wrow = &scratch[(ky * d.kw + kx0) * d.in_ch..][..seg];
+                                let xrow = &xb[(iy * in_w + ix0) * d.in_ch..][..seg];
+                                acc += dot(wrow, xrow);
+                            }
+                        }
+                        let pos = (b * out_h + oy) * out_w + ox;
+                        write(pos * d.out_ch + oc, alpha * acc - scale * psums[pos]);
+                    }
+                }
+            }
+        }
+    };
+
+    let nblocks = d.out_ch.div_ceil(FILTER_BLOCK);
+    match pool {
+        Some(pool) if nblocks > 1 => {
+            let optr = SendPtr(out.as_mut_ptr());
+            let optr = &optr;
+            pool.par_for(nblocks, move |blk| {
+                let mut scratch = vec![0f32; flen];
+                run_block(blk, &mut scratch[..], &mut |idx, v| {
+                    // SAFETY: `idx = pos·out_ch + oc` and every filter
+                    // `oc` belongs to exactly one block, so concurrent
+                    // blocks write disjoint cells of `out`, which
+                    // outlives the scoped par_for. No one reads `out`
+                    // until par_for returns.
+                    unsafe { *optr.0.add(idx) = v }
+                });
+            });
+        }
+        _ => {
+            let mut scratch = vec![0f32; flen];
+            for blk in 0..nblocks {
+                run_block(blk, &mut scratch[..], &mut |idx, v| out[idx] = v);
+            }
+        }
+    }
+}
+
+/// Dense f64 conv oracle over dequantized weights — the reference every
+/// quantized conv path is judged against. `doc(hidden) pub` (not
+/// `cfg(test)`) so the unit suites, the registry tests AND the
+/// integration tests all share exactly ONE statement of the OHWI×NHWC
+/// indexing convention; it is test support, not serving API.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn dense_conv_ref(
+    wq: &[f32],
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    x: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).unwrap();
+    let mut out = vec![0f32; batch * out_h * out_w * d.out_ch];
+    for b in 0..batch {
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                for oc in 0..d.out_ch {
+                    let mut acc = 0f64;
+                    for ky in 0..d.kh {
+                        let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..d.kw {
+                            let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            for ic in 0..d.in_ch {
+                                let wv = wq[((oc * d.kh + ky) * d.kw + kx) * d.in_ch + ic];
+                                let xv = x[((b * in_h + iy as usize) * in_w + ix as usize)
+                                    * d.in_ch
+                                    + ic];
+                                acc += wv as f64 * xv as f64;
+                            }
+                        }
+                    }
+                    out[((b * out_h + oy) * out_w + ox) * d.out_ch + oc] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +413,52 @@ mod tests {
             for r in 0..rows {
                 decode_codes_f32(&p.data, r * cols * bits as usize, bits, &mut row);
                 assert_eq!(&row[..], &reference[r * cols..(r + 1) * cols], "bits {bits} row {r}");
+            }
+        }
+    }
+
+    /// Bit-level reference: extract the `bits`-wide code at absolute bit
+    /// offset `off` straight from the byte stream, one bit at a time.
+    fn code_at(data: &[u8], off: usize, bits: u8) -> u32 {
+        let mut v = 0u32;
+        for i in 0..bits as usize {
+            let bit = off + i;
+            v |= (((data[bit / 8] >> (bit % 8)) & 1) as u32) << i;
+        }
+        v
+    }
+
+    #[test]
+    fn decode_8bit_handles_unaligned_offsets() {
+        // regression: the 8-bit fast path used to be skipped whenever the
+        // bit offset had a nonzero phase; the fixed path must match the
+        // generic decoder at every phase 0..8
+        let mut r = Rng::new(77);
+        let data: Vec<u8> = (0..64).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for off in 0..16 {
+            let n = 40; // 40 codes of 8 bits from `off`
+            let mut out = vec![0f32; n];
+            decode_codes_f32(&data, off, 8, &mut out);
+            for (i, &got) in out.iter().enumerate() {
+                let expect = code_at(&data, off + 8 * i, 8) as f32;
+                assert_eq!(got, expect, "off {off} code {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_all_bits_at_all_phases() {
+        let mut r = Rng::new(78);
+        let data: Vec<u8> = (0..96).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for bits in 1u8..=8 {
+            for off in 0..24 {
+                let n = 25;
+                let mut out = vec![0f32; n];
+                decode_codes_f32(&data, off, bits, &mut out);
+                for (i, &got) in out.iter().enumerate() {
+                    let expect = code_at(&data, off + bits as usize * i, bits) as f32;
+                    assert_eq!(got, expect, "bits {bits} off {off} code {i}");
+                }
             }
         }
     }
@@ -241,5 +519,81 @@ mod tests {
         let b: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
         let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    fn qconv2d_matches_dense_reference_across_bits_strides_pads() {
+        // bits 1..=8 (unaligned filter offsets for most), every stride/pad
+        // combination that yields a valid output map, vs the f64 dense
+        // reference on the dequantized lattice weights
+        crate::util::prop::check(120, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let d = Conv2dDesc {
+                in_ch: g.usize_in(1, 3),
+                out_ch: g.usize_in(1, 6),
+                kh: g.usize_in(1, 3),
+                kw: g.usize_in(1, 3),
+                stride: g.usize_in(1, 3),
+                pad: g.usize_in(0, 2),
+            };
+            let in_h = g.usize_in(d.kh.saturating_sub(2 * d.pad).max(1), 7);
+            let in_w = g.usize_in(d.kw.saturating_sub(2 * d.pad).max(1), 7);
+            if d.out_hw(in_h, in_w).is_err() {
+                return Ok(()); // kernel misses the padded input: skip
+            }
+            let batch = g.usize_in(1, 3);
+            let numel = d.weight_numel().unwrap();
+            let w = g.vec_normal(numel, 0.2);
+            let p = pack_layer("c", &w, bits);
+            let wq = unpack_layer(&p).map_err(|e| e.to_string())?;
+            let x = g.vec_normal(batch * in_h * in_w * d.in_ch, 0.3);
+
+            let expect = dense_conv_ref(&wq, &d, in_h, in_w, &x, batch);
+            let mut got = vec![0f32; expect.len()];
+            qconv2d(&p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &mut got, None);
+            for (i, (a, e)) in got.iter().zip(&expect).enumerate() {
+                crate::util::prop::ensure(
+                    (a - e).abs() < 1e-5,
+                    format!("bits {bits} {d:?} {in_h}x{in_w} idx {i}: {a} vs {e}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qconv2d_pool_is_bitwise_equal_to_serial() {
+        // out_ch 13 > FILTER_BLOCK: several blocks race over the pool
+        let d = Conv2dDesc { in_ch: 3, out_ch: 13, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let (in_h, in_w, batch) = (9, 11, 4);
+        let w = rand_vec(d.weight_numel().unwrap(), 21);
+        let p = pack_layer("c", &w, 5);
+        let x = rand_vec(batch * in_h * in_w * d.in_ch, 22);
+        let (oh, ow) = d.out_hw(in_h, in_w).unwrap();
+        let mut serial = vec![0f32; batch * oh * ow * d.out_ch];
+        let mut pooled = vec![0f32; serial.len()];
+        qconv2d(&p.data, 5, p.scale, &d, in_h, in_w, &x, batch, &mut serial, None);
+        let pool = ThreadPool::new(4);
+        qconv2d(&p.data, 5, p.scale, &d, in_h, in_w, &x, batch, &mut pooled, Some(&pool));
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn qconv2d_empty_batch() {
+        let d = Conv2dDesc { in_ch: 2, out_ch: 3, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let p = pack_layer("c", &rand_vec(d.weight_numel().unwrap(), 1), 4);
+        let mut out = vec![0f32; 0];
+        qconv2d(&p.data, 4, p.scale, &d, 4, 4, &[], 0, &mut out, None);
+    }
+
+    #[test]
+    fn krange_clips_padding_windows() {
+        // k=3, stride=1, pad=1 over 4 inputs: first window hangs one tap
+        // off the left edge, last one off the right
+        assert_eq!(krange(0, 1, 1, 3, 4), (1, 3, 0));
+        assert_eq!(krange(1, 1, 1, 3, 4), (0, 3, 0));
+        assert_eq!(krange(3, 1, 1, 3, 4), (0, 2, 2));
+        // window entirely off the input: empty range
+        assert_eq!(krange(0, 1, 5, 3, 4).0, krange(0, 1, 5, 3, 4).1);
     }
 }

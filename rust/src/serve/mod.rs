@@ -9,11 +9,12 @@
 //!
 //! Four pieces, composed by [`server::Server`]:
 //!
-//! * [`registry`] — loads `.msqpack` files, derives layer shapes, and
+//! * [`registry`] — loads `.msqpack` files, plans an op graph from the
+//!   per-layer descriptors (linear / conv2d + fused ReLU, pack v3), and
 //!   keeps models resident in packed form (RAM cost = payload bytes);
-//! * [`kernels`] — quantized matmul that decodes the n-bit code stream
-//!   on the fly (1..=8 bits, non-byte-aligned), row-blocked and
-//!   parallelized over `util::threadpool`;
+//! * [`kernels`] — quantized matmul + conv2d that decode the n-bit code
+//!   stream on the fly (1..=8 bits, non-byte-aligned), blocked per row /
+//!   per filter and parallelized over `util::threadpool`;
 //! * [`batcher`] — dynamic batching with size- and deadline-triggered
 //!   flush plus queue-capacity admission control;
 //! * [`server`] — the front end wiring model + batcher + [`ServeMetrics`]
@@ -35,5 +36,5 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{BatchConfig, DynamicBatcher, InferResponse, SubmitError};
-pub use registry::{resolve_input_dim, ModelRegistry, QuantLayer, ServableModel};
+pub use registry::{resolve_input_dim, LayerKind, ModelRegistry, QuantLayer, ServableModel};
 pub use server::{ServeMetrics, Server, ServerConfig};

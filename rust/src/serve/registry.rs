@@ -3,13 +3,19 @@
 //! A [`ServableModel`] keeps each layer exactly as packed — the n-bit
 //! code stream plus `(bits, scale)` metadata — so resident model memory
 //! equals the payload the compression ratio advertises (a 2-bit layer
-//! really costs 1/16th of FP32 at serve time, not just on disk). Layer
-//! shapes are derived MLP-style by chaining dimensions from the input
-//! width: `rows_l = numel_l / cols_l`, `cols_{l+1} = rows_l`, rejecting
-//! models whose element counts don't factor. The input width itself
-//! comes from the `.msqpack` v2 header ([`resolve_input_dim`]); an
-//! explicit `--input-dim` is an *override* and the only option for v1
-//! packs, which predate the header field.
+//! really costs 1/16th of FP32 at serve time, not just on disk).
+//!
+//! Loading builds an **op-graph plan** from the per-layer descriptors
+//! (pack v3): each layer is planned as a `linear` (rows × cols matrix
+//! whose cols chain from the previous layer's output width) or a
+//! `conv2d` (OHWI filters over an NHWC map whose spatial shape chains
+//! from the v3 input-shape header), with fused ReLU wherever the
+//! descriptor says so. Pre-v3 packs carry no descriptors; the loader
+//! synthesizes the dense-MLP chain they implied, so v1/v2 files serve
+//! byte-for-byte as before. The input width itself comes from the
+//! `.msqpack` header ([`resolve_input_dim`]); an explicit `--input-dim`
+//! is an *override* and the only option for v1 packs, which predate the
+//! header field.
 //!
 //! [`ModelRegistry`] is the concurrent name → model map the server and
 //! CLI share; models are immutable once loaded (`Arc`), so lookups are
@@ -22,11 +28,15 @@ use std::sync::{Arc, RwLock};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::kernels;
-use crate::quant::pack::{PackedLayer, PackedModel};
+use crate::quant::pack::{Conv2dDesc, LayerOp, PackedLayer, PackedModel};
 use crate::util::threadpool::ThreadPool;
 
+/// Per-sample activation ceiling (elements). Lying conv headers could
+/// otherwise make the executor allocate absurd maps at request time.
+const MAX_ACT_ELEMS: usize = 1 << 28;
+
 /// The input width serving should use for `pm`: an explicit override
-/// wins; otherwise the `.msqpack` v2 header. v1 packs carry no width, so
+/// wins; otherwise the `.msqpack` header. v1 packs carry no width, so
 /// they *require* the override.
 pub fn resolve_input_dim(pm: &PackedModel, override_dim: Option<usize>) -> Result<usize> {
     if let Some(d) = override_dim {
@@ -41,9 +51,14 @@ pub fn resolve_input_dim(pm: &PackedModel, override_dim: Option<usize>) -> Resul
 
 /// Chain the MLP layer widths implied by the packed element counts:
 /// returns each layer's output width (`rows_l`), so the last entry is
-/// the class count. Errors when a layer's weights don't factor.
+/// the class count. Errors when a layer's weights don't factor, or when
+/// the pack carries conv descriptors (no flat dim chain exists).
 pub fn chain_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
     ensure!(input_dim > 0, "input dim must be nonzero");
+    ensure!(
+        !pm.has_conv(),
+        "pack has conv layers — the MLP dim chain is undefined (serve it instead)"
+    );
     let mut dims = Vec::with_capacity(pm.layers.len());
     let mut cols = input_dim;
     for l in &pm.layers {
@@ -70,19 +85,50 @@ pub fn mlp_hidden_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>>
     Ok(dims)
 }
 
-/// One packed layer plus its derived matrix shape (`rows` outputs ×
-/// `cols` inputs, row-major code stream).
+/// Activation shape flowing between planned layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ActShape {
+    /// Flat vector of `dim` features (MLP traffic, post-flatten).
+    Flat(usize),
+    /// NHWC map of `h × w × c` (conv traffic).
+    Spatial(usize, usize, usize),
+}
+
+impl ActShape {
+    fn elems(self) -> usize {
+        match self {
+            ActShape::Flat(d) => d,
+            ActShape::Spatial(h, w, c) => h * w * c,
+        }
+    }
+}
+
+/// One planned layer: the packed code stream plus the resolved execution
+/// shape (what the executor dispatches on).
+#[derive(Clone, Debug)]
+pub enum LayerKind {
+    /// `rows × cols` matrix (`rows` outputs, row-major code stream).
+    Linear { rows: usize, cols: usize },
+    /// OHWI filters over an `in_h × in_w × in_ch` NHWC map.
+    Conv2d { desc: Conv2dDesc, in_h: usize, in_w: usize, out_h: usize, out_w: usize },
+}
+
+/// One packed layer plus its resolved plan (`kind`) and fused ReLU flag.
 pub struct QuantLayer {
     pub name: String,
     pub bits: u8,
     pub scale: f32,
-    pub rows: usize,
-    pub cols: usize,
+    pub kind: LayerKind,
+    /// ReLU fused after this layer (from the v3 descriptor; implied MLP
+    /// chain for pre-v3 packs).
+    pub relu: bool,
     data: Vec<u8>,
 }
 
 impl QuantLayer {
-    pub fn from_packed(l: &PackedLayer, cols: usize) -> Result<QuantLayer> {
+    /// Plan one packed layer against the incoming activation shape;
+    /// returns the layer and the shape it produces.
+    fn plan(l: &PackedLayer, shape: ActShape) -> Result<(QuantLayer, ActShape)> {
         l.validate()?;
         ensure!(
             (1..=8).contains(&l.bits),
@@ -90,32 +136,118 @@ impl QuantLayer {
             l.name,
             l.bits
         );
-        ensure!(cols > 0, "layer {:?}: zero input dimension", l.name);
-        if l.numel == 0 || l.numel % cols != 0 {
-            bail!(
-                "layer {:?}: {} weights do not factor over input dim {} — wrong --input-dim \
-                 or non-MLP topology",
-                l.name,
-                l.numel,
-                cols
-            );
-        }
-        Ok(QuantLayer {
+        let (kind, out_shape) = match l.op {
+            LayerOp::Linear => {
+                let cols = shape.elems();
+                ensure!(cols > 0, "layer {:?}: zero input dimension", l.name);
+                if l.numel == 0 || l.numel % cols != 0 {
+                    bail!(
+                        "layer {:?}: {} weights do not factor over input dim {} — wrong \
+                         --input-dim or topology",
+                        l.name,
+                        l.numel,
+                        cols
+                    );
+                }
+                let rows = l.numel / cols;
+                (LayerKind::Linear { rows, cols }, ActShape::Flat(rows))
+            }
+            LayerOp::Conv2d(desc) => {
+                let ActShape::Spatial(in_h, in_w, c) = shape else {
+                    bail!(
+                        "layer {:?}: conv2d needs a spatial input — the pack header carries \
+                         no input shape (pre-v3 file?) or a linear layer already flattened it",
+                        l.name
+                    );
+                };
+                ensure!(
+                    c == desc.in_ch,
+                    "layer {:?}: conv expects {} input channels, map has {c}",
+                    l.name,
+                    desc.in_ch
+                );
+                let (out_h, out_w) = desc
+                    .out_hw(in_h, in_w)
+                    .with_context(|| format!("layer {:?}", l.name))?;
+                let out_elems = out_h
+                    .checked_mul(out_w)
+                    .and_then(|hw| hw.checked_mul(desc.out_ch))
+                    .filter(|&n| n <= MAX_ACT_ELEMS)
+                    .with_context(|| {
+                        format!("layer {:?}: implausible output map size", l.name)
+                    })?;
+                debug_assert!(out_elems > 0);
+                (
+                    LayerKind::Conv2d { desc, in_h, in_w, out_h, out_w },
+                    ActShape::Spatial(out_h, out_w, desc.out_ch),
+                )
+            }
+        };
+        let q = QuantLayer {
             name: l.name.clone(),
             bits: l.bits,
             scale: l.scale,
-            rows: l.numel / cols,
-            cols,
+            kind,
+            relu: l.relu,
             data: l.data.clone(),
-        })
+        };
+        Ok((q, out_shape))
     }
 
-    /// `out[b*rows + r] = Σ_j dequant(codes[r,j]) · x[b*cols + j]`,
-    /// decoding codes on the fly (see [`kernels::qgemm`]).
-    pub fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], pool: Option<&ThreadPool>) {
-        kernels::qgemm(
-            &self.data, self.bits, self.scale, self.rows, self.cols, x, batch, out, pool,
+    /// Linear-only constructor kept for hand-built MLP plans (tests, and
+    /// pre-v3 compatibility shims).
+    pub fn from_packed(l: &PackedLayer, cols: usize) -> Result<QuantLayer> {
+        ensure!(
+            l.op == LayerOp::Linear,
+            "layer {:?}: from_packed is linear-only; load conv packs via ServableModel",
+            l.name
         );
+        Ok(Self::plan(l, ActShape::Flat(cols))?.0)
+    }
+
+    /// Features flowing into this layer (per sample).
+    pub fn in_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear { cols, .. } => cols,
+            LayerKind::Conv2d { desc, in_h, in_w, .. } => in_h * in_w * desc.in_ch,
+        }
+    }
+
+    /// Features flowing out of this layer (per sample).
+    pub fn out_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear { rows, .. } => rows,
+            LayerKind::Conv2d { desc, out_h, out_w, .. } => out_h * out_w * desc.out_ch,
+        }
+    }
+
+    /// Packed weight element count.
+    pub fn weight_numel(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear { rows, cols } => rows * cols,
+            LayerKind::Conv2d { desc, .. } => desc.weight_numel().unwrap_or(0),
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            LayerKind::Linear { .. } => "linear",
+            LayerKind::Conv2d { .. } => "conv2d",
+        }
+    }
+
+    /// Dispatch the layer's quantized kernel: `qgemm` for linear,
+    /// `qconv2d` for conv (both decode codes on the fly; see
+    /// [`kernels`]). ReLU fusion is applied by the caller.
+    pub fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], pool: Option<&ThreadPool>) {
+        match &self.kind {
+            LayerKind::Linear { rows, cols } => kernels::qgemm(
+                &self.data, self.bits, self.scale, *rows, *cols, x, batch, out, pool,
+            ),
+            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d(
+                &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, out, pool,
+            ),
+        }
     }
 
     pub fn payload_bytes(&self) -> usize {
@@ -123,8 +255,9 @@ impl QuantLayer {
     }
 }
 
-/// A packed model ready to answer inference requests: an MLP over the
-/// packed layers with ReLU between hidden layers and raw logits out.
+/// A packed model ready to answer inference requests: the planned op
+/// graph over the packed layers, ReLU where the descriptors fuse it,
+/// raw logits out of the last layer.
 pub struct ServableModel {
     pub name: String,
     pub input_dim: usize,
@@ -132,13 +265,35 @@ pub struct ServableModel {
 }
 
 impl ServableModel {
+    /// Plan `pm` for serving with an explicit flat input width (the
+    /// override path; conv packs take their spatial shape from the
+    /// header, which must agree with `input_dim`).
     pub fn from_packed(name: &str, pm: &PackedModel, input_dim: usize) -> Result<ServableModel> {
         ensure!(!pm.layers.is_empty(), "model {name:?}: packed file has no layers");
-        let mut dim = input_dim;
+        ensure!(input_dim > 0, "model {name:?}: input dim must be nonzero");
+        let mut shape = match pm.spatial_input() {
+            Some((h, w, c))
+                if h.checked_mul(w).and_then(|hw| hw.checked_mul(c)) == Some(input_dim) =>
+            {
+                ActShape::Spatial(h, w, c)
+            }
+            // a conv pack with a recorded shape the override contradicts
+            // can never plan — say so directly instead of letting the
+            // conv layer misdiagnose a "missing" shape header
+            Some((h, w, c)) if pm.has_conv() => bail!(
+                "model {name:?}: input dim {input_dim} contradicts the pack's recorded \
+                 input shape {h}x{w}x{c} (= {}) — drop the --input-dim override",
+                h.saturating_mul(w).saturating_mul(c)
+            ),
+            // an MLP pack with a disagreeing override falls back to flat;
+            // the dim chain then accepts or rejects it as before
+            _ => ActShape::Flat(input_dim),
+        };
         let mut layers = Vec::with_capacity(pm.layers.len());
         for l in &pm.layers {
-            let q = QuantLayer::from_packed(l, dim).with_context(|| format!("model {name:?}"))?;
-            dim = q.rows;
+            let (q, next) =
+                QuantLayer::plan(l, shape).with_context(|| format!("model {name:?}"))?;
+            shape = next;
             layers.push(q);
         }
         Ok(ServableModel { name: name.to_string(), input_dim, layers })
@@ -156,7 +311,7 @@ impl ServableModel {
         Self::from_packed(name, pm, dim)
     }
 
-    /// Load a `.msqpack` from disk; the input width comes from the v2
+    /// Load a `.msqpack` from disk; the input width comes from the
     /// header unless `override_dim` is given.
     pub fn load(name: &str, path: &Path, override_dim: Option<usize>) -> Result<ServableModel> {
         let pm = PackedModel::load(path)?;
@@ -164,7 +319,7 @@ impl ServableModel {
     }
 
     pub fn output_dim(&self) -> usize {
-        self.layers.last().map(|l| l.rows).unwrap_or(0)
+        self.layers.last().map(|l| l.out_elems()).unwrap_or(0)
     }
 
     /// Resident packed weight bytes (equals the `.msqpack` payload).
@@ -174,7 +329,7 @@ impl ServableModel {
 
     /// What the same weights would cost dense in FP32.
     pub fn fp32_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.rows * l.cols * 4).sum()
+        self.layers.iter().map(|l| l.weight_numel() * 4).sum()
     }
 
     pub fn compression(&self) -> f64 {
@@ -182,7 +337,8 @@ impl ServableModel {
     }
 
     /// Batched forward pass: `x` is `batch` rows of `input_dim`,
-    /// batch-major; returns `batch` rows of `output_dim` logits.
+    /// batch-major (NHWC-flattened for conv models); returns `batch`
+    /// rows of `output_dim` logits.
     pub fn infer_batch(
         &self,
         x: &[f32],
@@ -198,15 +354,14 @@ impl ServableModel {
             self.input_dim
         );
         let mut cur: Vec<f32> = Vec::new();
-        let last = self.layers.len().saturating_sub(1);
         for (i, layer) in self.layers.iter().enumerate() {
             // layer 0 reads the caller's buffer directly (no input copy)
             let src: &[f32] = if i == 0 { x } else { &cur };
-            let mut next = vec![0f32; batch * layer.rows];
+            let mut next = vec![0f32; batch * layer.out_elems()];
             layer.forward(src, batch, &mut next, pool);
-            if i < last {
+            if layer.relu {
                 for v in next.iter_mut() {
-                    *v = v.max(0.0); // ReLU on hidden activations
+                    *v = v.max(0.0);
                 }
             }
             cur = next;
@@ -234,7 +389,7 @@ impl ModelRegistry {
     }
 
     /// Load a `.msqpack` from disk and register it under `name`. The
-    /// input width is inferred from the v2 header; `override_dim` (when
+    /// input width is inferred from the header; `override_dim` (when
     /// `Some`) wins, and is required for pre-v2 packs.
     pub fn load_file(
         &self,
@@ -278,13 +433,20 @@ mod tests {
         PackedModel::synth_mlp(&[input_dim, hidden, classes], &[4, 3], 1).unwrap()
     }
 
+    fn linear_dims(m: &ServableModel, i: usize) -> (usize, usize) {
+        match m.layers[i].kind {
+            LayerKind::Linear { rows, cols } => (rows, cols),
+            _ => panic!("layer {i} is not linear"),
+        }
+    }
+
     #[test]
     fn shape_inference_chains_dims() {
         let m = ServableModel::from_packed("toy", &toy_model(12, 8, 4), 12).unwrap();
-        assert_eq!(m.layers[0].rows, 8);
-        assert_eq!(m.layers[0].cols, 12);
-        assert_eq!(m.layers[1].rows, 4);
-        assert_eq!(m.layers[1].cols, 8);
+        assert_eq!(linear_dims(&m, 0), (8, 12));
+        assert_eq!(linear_dims(&m, 1), (4, 8));
+        assert_eq!(m.layers[0].kind_name(), "linear");
+        assert!(m.layers[0].relu && !m.layers[1].relu);
         assert_eq!(m.output_dim(), 4);
         assert!(m.compression() > 4.0, "{}", m.compression());
     }
@@ -327,6 +489,106 @@ mod tests {
     }
 
     #[test]
+    fn conv_plan_chains_spatial_shapes() {
+        // 8x8x3 -> conv(3->4, /2) -> 4x4x4 -> conv(4->6, /2) -> 2x2x6
+        // -> linear 24 -> 5
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 6, 5], &[4, 4, 3], 2).unwrap();
+        let m = ServableModel::from_packed_auto("conv", &pm, None).unwrap();
+        assert_eq!(m.input_dim, 8 * 8 * 3);
+        assert_eq!(m.layers.len(), 3);
+        match m.layers[0].kind {
+            LayerKind::Conv2d { desc, in_h, in_w, out_h, out_w } => {
+                assert_eq!((in_h, in_w, out_h, out_w), (8, 8, 4, 4));
+                assert_eq!((desc.in_ch, desc.out_ch), (3, 4));
+            }
+            _ => panic!("layer 0 should be conv"),
+        }
+        match m.layers[1].kind {
+            LayerKind::Conv2d { out_h, out_w, desc, .. } => {
+                assert_eq!((out_h, out_w, desc.out_ch), (2, 2, 6));
+            }
+            _ => panic!("layer 1 should be conv"),
+        }
+        assert_eq!(linear_dims(&m, 2), (5, 24));
+        assert!(m.layers[0].relu && m.layers[1].relu && !m.layers[2].relu);
+        assert_eq!(m.output_dim(), 5);
+        assert_eq!(m.layers[0].kind_name(), "conv2d");
+        // payload accounting survives the conv plan
+        assert_eq!(m.payload_bytes(), pm.payload_bytes());
+        assert_eq!(m.fp32_bytes(), pm.fp32_bytes());
+    }
+
+    #[test]
+    fn conv_infer_matches_dense_reference() {
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[5, 4], 7).unwrap();
+        let m = ServableModel::from_packed_auto("conv", &pm, None).unwrap();
+        let batch = 3;
+        let x = rand_vec(batch * m.input_dim, 31);
+
+        // dense f32 reference: the shared conv oracle + ReLU + linear head
+        let wc = unpack_layer(&pm.layers[0]).unwrap();
+        let wl = unpack_layer(&pm.layers[1]).unwrap();
+        let d = match pm.layers[0].op {
+            crate::quant::pack::LayerOp::Conv2d(d) => d,
+            _ => unreachable!(),
+        };
+        let (oh, ow) = d.out_hw(8, 8).unwrap();
+        let flat = oh * ow * d.out_ch;
+        let mut map = kernels::dense_conv_ref(&wc, &d, 8, 8, &x, batch);
+        for v in map.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let mb = &map[b * flat..(b + 1) * flat];
+            for r in 0..5 {
+                let s: f64 = (0..flat).map(|j| wl[r * flat + j] as f64 * mb[j] as f64).sum();
+                expect.push(s as f32);
+            }
+        }
+
+        let got = m.infer_batch(&x, batch, None).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert!((g - e).abs() < 1e-4, "idx {i}: {g} vs {e}");
+        }
+        // pooled execution is bit-identical to serial
+        let pool = ThreadPool::new(3);
+        assert_eq!(m.infer_batch(&x, batch, Some(&pool)).unwrap(), got);
+    }
+
+    #[test]
+    fn conv_without_spatial_header_is_rejected() {
+        let mut pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 3).unwrap();
+        pm.input_hwc = (0, 0, 0); // strip the shape (hand-assembled pack)
+        let err = ServableModel::from_packed_auto("c", &pm, None).unwrap_err();
+        assert!(err.to_string().contains("spatial"), "{err}");
+        // and chain_dims refuses conv packs outright
+        assert!(chain_dims(&pm, 192).unwrap_err().to_string().contains("conv"));
+    }
+
+    #[test]
+    fn conv_override_contradicting_recorded_shape_says_so() {
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 3).unwrap();
+        let err = ServableModel::from_packed("c", &pm, 999).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("contradicts") && msg.contains("8x8x3"),
+            "want a pointed override-vs-shape diagnosis, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn conv_channel_mismatch_is_rejected() {
+        let mut pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 3).unwrap();
+        // claim a 4-channel input: h*w*c must match input_dim too
+        pm.input_hwc = (8, 6, 4);
+        pm.input_dim = 8 * 6 * 4;
+        let err = ServableModel::from_packed_auto("c", &pm, None).unwrap_err();
+        assert!(err.to_string().contains("channels"), "{err}");
+    }
+
+    #[test]
     fn registry_lifecycle() {
         let reg = ModelRegistry::new();
         assert!(reg.get("toy").is_none());
@@ -345,12 +607,31 @@ mod tests {
         let path = std::env::temp_dir().join("msq_registry_test.msqpack");
         pm.save(&path).unwrap();
         let reg = ModelRegistry::new();
-        // no override: the input width comes from the v2 pack header
+        // no override: the input width comes from the pack header
         let m = reg.load_file("disk", &path, None).unwrap();
         assert_eq!(m.input_dim, 10);
         assert_eq!(m.output_dim(), 3);
         // an explicit override still wins — and a wrong one errors cleanly
         assert!(reg.load_file("bad", &path, Some(7)).is_err());
+    }
+
+    #[test]
+    fn conv_file_roundtrip_through_registry() {
+        let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 11).unwrap();
+        let path = std::env::temp_dir().join("msq_registry_conv.msqpack");
+        pm.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        let m = reg.load_file("conv", &path, None).unwrap();
+        assert_eq!(m.input_dim, 192);
+        assert_eq!(m.output_dim(), 5);
+        assert_eq!(m.layers[0].kind_name(), "conv2d");
+        // served logits match the in-memory plan bit-for-bit
+        let direct = ServableModel::from_packed_auto("x", &pm, None).unwrap();
+        let x = rand_vec(2 * 192, 5);
+        assert_eq!(
+            m.infer_batch(&x, 2, None).unwrap(),
+            direct.infer_batch(&x, 2, None).unwrap()
+        );
     }
 
     #[test]
@@ -360,7 +641,7 @@ mod tests {
         assert_eq!(resolve_input_dim(&pm, Some(6)).unwrap(), 6);
         assert!(resolve_input_dim(&pm, Some(0)).is_err());
         // v1-style pack: no header width, override required
-        let v1 = PackedModel { input_dim: 0, layers: pm.layers.clone() };
+        let v1 = PackedModel { input_dim: 0, layers: pm.layers.clone(), ..Default::default() };
         assert_eq!(resolve_input_dim(&v1, Some(12)).unwrap(), 12);
         let err = resolve_input_dim(&v1, None).unwrap_err();
         assert!(err.to_string().contains("input-dim"), "{err}");

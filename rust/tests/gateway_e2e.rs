@@ -172,6 +172,64 @@ fn gateway_end_to_end() {
 }
 
 #[test]
+fn gateway_serves_packed_conv_models_bit_identically() {
+    // pack v3 conv net (8x8x3 -> conv/2 -> conv/2 -> linear head) through
+    // the full HTTP path: logits must match the in-process serve::Server
+    // bit-for-bit, and the inventory must surface the op descriptors
+    let pm = PackedModel::synth_conv(8, 8, &[3, 6, 8, 5], &[4, 4, 3], 33).unwrap();
+    let path = std::env::temp_dir().join("msq_gw_conv.msqpack");
+    pm.save(&path).unwrap();
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 16,
+            read_timeout: Duration::from_millis(50),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("conv".to_string(), path.clone(), None)],
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // inventory: input dim from the v3 header, per-layer op kinds
+    let (status, health) = request(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    assert_eq!(
+        health.path(&["models", "0", "input_dim"]).unwrap().as_usize(),
+        Some(8 * 8 * 3)
+    );
+    assert_eq!(health.path(&["models", "0", "ops", "0"]).unwrap().as_str(), Some("conv2d"));
+    assert_eq!(health.path(&["models", "0", "ops", "2"]).unwrap().as_str(), Some("linear"));
+
+    let reference = Server::start(
+        Arc::new(
+            ServableModel::from_packed_auto("ref", &PackedModel::load(&path).unwrap(), None)
+                .unwrap(),
+        ),
+        serve_cfg(),
+    );
+    let mut rng = Rng::new(55);
+    for _ in 0..8 {
+        let x: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.normal()).collect();
+        let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+        let (status, v) = request(addr, "POST", "/v1/models/conv/infer", body.as_bytes());
+        assert_eq!(status, 200, "{v:?}");
+        let got = v.path(&["outputs", "0"]).unwrap().as_f32s().unwrap();
+        assert_eq!(got.len(), 5);
+        let expect = reference.infer_blocking(x).unwrap().logits;
+        assert_eq!(got, expect, "gateway conv logits diverge from serve::Server");
+    }
+    // wrong row width still maps to a clean 400
+    let (status, v) = request(addr, "POST", "/v1/models/conv/infer", b"[[1,2,3]]");
+    assert_eq!(status, 400);
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("expects 192"), "{v:?}");
+
+    reference.shutdown();
+    gw.shutdown();
+}
+
+#[test]
 fn gateway_backpressure_maps_queue_full_to_429() {
     // deadline far away + tiny queue: rows pile up in the batcher until
     // admission control sheds, which the gateway must surface as 429

@@ -134,6 +134,119 @@ fn packed_reimport_matches_backend_eval() {
     );
 }
 
+/// Dense interpreter over a packed op graph — the oracle the served
+/// conv logits are judged against (unpacked lattice weights, exact
+/// geometry from the v3 descriptors, ReLU where the flags say). Conv
+/// layers go through the ONE shared OHWI×NHWC oracle
+/// (`serve::kernels::dense_conv_ref`); activations materialize as f32
+/// between layers exactly like the served path, accumulation is f64.
+fn dense_reference(pm: &msq::quant::pack::PackedModel, x: &[f32], batch: usize) -> Vec<f32> {
+    use msq::quant::pack::LayerOp;
+    let (mut h, mut w, _) = pm.input_hwc;
+    let mut cur: Vec<f32> = x.to_vec();
+    let mut dim = pm.input_dim;
+    for layer in &pm.layers {
+        let wq = msq::quant::pack::unpack_layer(layer).unwrap();
+        let mut next = match layer.op {
+            LayerOp::Conv2d(d) => {
+                let (oh, ow) = d.out_hw(h, w).unwrap();
+                let out = msq::serve::kernels::dense_conv_ref(&wq, &d, h, w, &cur, batch);
+                (h, w) = (oh, ow);
+                dim = oh * ow * d.out_ch;
+                out
+            }
+            LayerOp::Linear => {
+                let rows = layer.numel / dim;
+                let mut out = vec![0f32; batch * rows];
+                for b in 0..batch {
+                    for r in 0..rows {
+                        let s: f64 = (0..dim)
+                            .map(|j| wq[r * dim + j] as f64 * cur[b * dim + j] as f64)
+                            .sum();
+                        out[b * rows + r] = s as f32;
+                    }
+                }
+                dim = rows;
+                out
+            }
+        };
+        if layer.relu {
+            for v in next.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
+#[test]
+fn native_conv_train_pack_serve_loop() {
+    // the acceptance loop: a conv model trains on --backend native,
+    // exports as pack v3 with conv descriptors, and serves through the
+    // registry with logits matching the dense f32 reference
+    let ds = tiny_ds(8);
+    let mut cfg = tiny_cfg();
+    cfg.batch = 16;
+    cfg.epochs = 2;
+    let backend = NativeBackend::conv_net(
+        "conv", "msq", 32, 32, 3, &[6], 10, cfg.batch, cfg.seed, 2,
+    )
+    .unwrap();
+    let mut trainer = Trainer::from_backend(backend, cfg).unwrap();
+    let report = trainer.run(&ds).unwrap();
+    assert!(report.train_loss.iter().all(|l| l.is_finite()));
+    assert_eq!(report.final_bits.len(), 2); // conv stage + linear head
+
+    // export stamps v3: spatial input shape + conv descriptor + relu
+    let path = std::env::temp_dir().join("msq_native_conv_e2e.msqpack");
+    let pm = trainer.export_packed(&path).unwrap();
+    assert_eq!(pm.input_hwc, (32, 32, 3));
+    assert!(pm.has_conv());
+    match pm.layers[0].op {
+        msq::quant::pack::LayerOp::Conv2d(d) => {
+            assert_eq!((d.in_ch, d.out_ch, d.kh, d.stride, d.pad), (3, 6, 3, 2, 1));
+        }
+        _ => panic!("conv0 must carry a conv descriptor"),
+    }
+    assert!(pm.layers[0].relu && !pm.layers[1].relu);
+
+    // reload from disk and serve
+    let reg = ModelRegistry::new();
+    let model = reg.load_file("conv", &path, None).unwrap();
+    assert_eq!(model.input_dim, 3072);
+    assert_eq!(model.output_dim(), 10);
+
+    // served logits match the dense f32 reference within 1e-5
+    let mut rng = Rng::new(12);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * 3072).map(|_| rng.normal()).collect();
+    let got = model.infer_batch(&x, batch, None).unwrap();
+    let expect = dense_reference(&pm, &x, batch);
+    assert_eq!(got.len(), expect.len());
+    for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+        assert!((g - e).abs() < 1e-5, "logit {i}: served {g} vs dense {e}");
+    }
+
+    // and the live server answers over it
+    let server = Server::start(
+        model,
+        ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 64,
+            threads: 2,
+        },
+    );
+    for _ in 0..10 {
+        let x: Vec<f32> = (0..3072).map(|_| rng.normal()).collect();
+        let resp = server.infer_blocking(x).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    server.shutdown();
+}
+
 #[test]
 fn dorefa_method_trains_too() {
     // the quantizer baseline shares the loop; one epoch must run clean
