@@ -12,11 +12,44 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use msq::bench::{bench, save};
-use msq::quant::pack::PackedModel;
+use msq::kernels::{dequant_affine, rc_affine};
+use msq::quant::pack::{pack_layer, PackedModel};
+use msq::serve::kernels::{decode_codes_f32, qgemm};
 use msq::serve::{ServableModel, Server, ServerConfig};
 use msq::util::json::Json;
 use msq::util::prng::Rng;
 use msq::util::stats::percentile;
+use msq::util::threadpool::ThreadPool;
+
+/// The pre-kernel-core baseline: decode + dequantize the whole layer,
+/// then a plain scalar triple loop (no lane structure, no row blocking,
+/// no decode-once amortization) — what a naive port of the serving
+/// matmul looks like, and the denominator of the recorded speedups.
+#[allow(clippy::too_many_arguments)]
+fn naive_qgemm(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    let mut wq = vec![0f32; rows * cols];
+    decode_codes_f32(data, 0, bits, &mut wq);
+    let (alpha, beta) = rc_affine(bits as f32, scale);
+    dequant_affine(&mut wq, alpha, beta);
+    for b in 0..batch {
+        for r in 0..rows {
+            let mut acc = 0f32;
+            for j in 0..cols {
+                acc += wq[r * cols + j] * x[b * cols + j];
+            }
+            out[b * rows + r] = acc;
+        }
+    }
+}
 
 /// Random He-initialized MLP, quantized + packed at the given widths.
 fn synth_model(dims: &[usize], bits: &[u8], seed: u64) -> ServableModel {
@@ -83,6 +116,55 @@ fn main() {
         results.push(r);
     }
 
+    // --- kernel-core comparison: naive scalar baseline vs the shared
+    // decode-once qgemm (lane primitives + row blocking), serial and
+    // pooled. Which lane implementation ran is a compile-time fact
+    // (--features simd), recorded as `mode` so BENCH_serve.json from the
+    // two CI matrix entries plots the scalar-vs-SIMD-vs-tiled trajectory.
+    let kmode = if cfg!(feature = "simd") { "simd" } else { "scalar" };
+    let (krows, kcols, kbatch, kbits) = (512usize, 3072usize, 8usize, 4u8);
+    let kw: Vec<f32> = (0..krows * kcols).map(|_| rng.normal() * 0.5).collect();
+    let kp = pack_layer("kbench", &kw, kbits);
+    let kx: Vec<f32> = (0..kbatch * kcols).map(|_| rng.normal()).collect();
+    let mut kout = vec![0f32; kbatch * krows];
+    let r_naive = bench("qgemm_naive_scalar", 1, 5, || {
+        naive_qgemm(&kp.data, kbits, kp.scale, krows, kcols, &kx, kbatch, &mut kout);
+        std::hint::black_box(&kout);
+    });
+    r_naive.report(None);
+    let r_core = bench(&format!("qgemm_core[{kmode}] serial"), 2, 10, || {
+        qgemm(&kp.data, kbits, kp.scale, krows, kcols, &kx, kbatch, &mut kout, None);
+        std::hint::black_box(&kout);
+    });
+    r_core.report(None);
+    let kpool = ThreadPool::new(4);
+    let r_core_pool = bench(&format!("qgemm_core[{kmode}] pooled"), 2, 10, || {
+        qgemm(&kp.data, kbits, kp.scale, krows, kcols, &kx, kbatch, &mut kout, Some(&kpool));
+        std::hint::black_box(&kout);
+    });
+    r_core_pool.report(None);
+    let speedup_core = r_naive.mean_s / r_core.mean_s.max(1e-12);
+    let speedup_pool = r_naive.mean_s / r_core_pool.mean_s.max(1e-12);
+    println!(
+        "kernel core [{kmode}]: {krows}x{kcols} b={kbatch} {kbits}-bit — \
+         {speedup_core:.2}x serial, {speedup_pool:.2}x pooled vs naive scalar"
+    );
+    let kernel_core = Json::obj(vec![
+        ("mode", Json::Str(kmode.into())),
+        ("rows", Json::Num(krows as f64)),
+        ("cols", Json::Num(kcols as f64)),
+        ("batch", Json::Num(kbatch as f64)),
+        ("bits", Json::Num(kbits as f64)),
+        ("naive_ms", Json::Num(r_naive.mean_s * 1e3)),
+        ("core_ms", Json::Num(r_core.mean_s * 1e3)),
+        ("core_pool_ms", Json::Num(r_core_pool.mean_s * 1e3)),
+        ("speedup_core", Json::Num(speedup_core)),
+        ("speedup_pool", Json::Num(speedup_pool)),
+    ]);
+    results.push(r_naive);
+    results.push(r_core);
+    results.push(r_core_pool);
+
     // --- system-level: dynamic batching under closed-loop load
     let cfg = ServerConfig::default();
     let server = Server::start(model.clone(), cfg);
@@ -137,6 +219,7 @@ fn main() {
         ("p95_ms", Json::Num(p95 * 1e3)),
         ("p99_ms", Json::Num(p99 * 1e3)),
         ("server", server.metrics.snapshot(server.queue_depth())),
+        ("kernel_core", kernel_core),
         (
             "conv",
             Json::obj(vec![

@@ -10,11 +10,27 @@
 
 use msq::bench::{bench, save};
 use msq::data::{Batcher, Dataset, DatasetSpec};
+use msq::kernels::matmul_bt;
 use msq::native::NativeBackend;
 use msq::runtime::Backend;
 use msq::util::json::Json;
+use msq::util::prng::Rng;
 use msq::util::threadpool::ThreadPool;
 use msq::util::timer::peak_rss_bytes;
+
+/// Naive scalar triple loop — the pre-kernel-core training matmul, kept
+/// as the denominator of the recorded scalar-vs-SIMD-vs-tiled speedups.
+fn naive_matmul_bt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * w[j * k + t];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
 
 fn main() {
     let steps: usize = std::env::var("MSQ_BENCH_TRAIN_STEPS")
@@ -59,6 +75,54 @@ fn main() {
     rf.report(None);
     results.push(rf);
 
+    // --- kernel-core comparison: the forward-matmul shape of the step
+    // above, naive scalar triple loop vs the tiled lane-structured
+    // microkernel (serial and pooled). `mode` records whether the lane
+    // primitives compiled to std::simd (--features simd) or the
+    // bit-identical scalar twin, so BENCH_train.json from both CI matrix
+    // entries plots the scalar-vs-SIMD-vs-tiled trajectory.
+    let kmode = if cfg!(feature = "simd") { "simd" } else { "scalar" };
+    let (km, kk, kn) = (batch, 3072usize, 256usize);
+    let mut krng = Rng::new(99);
+    let kx: Vec<f32> = (0..km * kk).map(|_| krng.normal()).collect();
+    let kw: Vec<f32> = (0..kn * kk).map(|_| krng.normal()).collect();
+    let mut kout = vec![0f32; km * kn];
+    let r_naive = bench("matmul_naive_scalar", 1, 5, || {
+        naive_matmul_bt(&kx, &kw, km, kk, kn, &mut kout);
+        std::hint::black_box(&kout);
+    });
+    r_naive.report(None);
+    let r_tiled = bench(&format!("matmul_core[{kmode}] serial"), 2, 10, || {
+        matmul_bt(&kx, &kw, None, km, kk, kn, &mut kout, None);
+        std::hint::black_box(&kout);
+    });
+    r_tiled.report(None);
+    let r_tiled_pool = bench(&format!("matmul_core[{kmode}] pooled"), 2, 10, || {
+        matmul_bt(&kx, &kw, None, km, kk, kn, &mut kout, Some(&pool));
+        std::hint::black_box(&kout);
+    });
+    r_tiled_pool.report(None);
+    let speedup_core = r_naive.mean_s / r_tiled.mean_s.max(1e-12);
+    let speedup_pool = r_naive.mean_s / r_tiled_pool.mean_s.max(1e-12);
+    println!(
+        "kernel core [{kmode}]: {km}x{kk}x{kn} matmul — \
+         {speedup_core:.2}x serial, {speedup_pool:.2}x pooled vs naive scalar"
+    );
+    let kernel_core = Json::obj(vec![
+        ("mode", Json::Str(kmode.into())),
+        ("m", Json::Num(km as f64)),
+        ("k", Json::Num(kk as f64)),
+        ("n", Json::Num(kn as f64)),
+        ("naive_ms", Json::Num(r_naive.mean_s * 1e3)),
+        ("core_ms", Json::Num(r_tiled.mean_s * 1e3)),
+        ("core_pool_ms", Json::Num(r_tiled_pool.mean_s * 1e3)),
+        ("speedup_core", Json::Num(speedup_core)),
+        ("speedup_pool", Json::Num(speedup_pool)),
+    ]);
+    results.push(r_naive);
+    results.push(r_tiled);
+    results.push(r_tiled_pool);
+
     let rss = peak_rss_bytes().unwrap_or(0);
     let r0 = &results[0];
     let out = Json::obj(vec![
@@ -72,6 +136,7 @@ fn main() {
         ("step_ms_p50", Json::Num(r0.p50_s * 1e3)),
         ("step_ms_p95", Json::Num(r0.p95_s * 1e3)),
         ("peak_rss_bytes", Json::Num(rss as f64)),
+        ("kernel_core", kernel_core),
     ]);
     std::fs::write("BENCH_train.json", out.to_string() + "\n").expect("write BENCH_train.json");
     println!(

@@ -1,0 +1,213 @@
+//! Conv2d window geometry + receptive-field microkernels, shared by the
+//! quantized serving kernel (`serve::kernels::qconv2d`) and the native
+//! training kernels (`native::ops::conv2d_*`).
+//!
+//! Everything here is phrased over the one conv layout the repo speaks:
+//! NHWC activations against OHWI filters (`quant::pack::Conv2dDesc`), so
+//! the innermost dot of every window runs over `(kx1−kx0)·in_ch`
+//! *contiguous* elements on both sides and vectorizes through
+//! [`super::simd::dot`]. Zero padding is handled by [`krange`]-clipping
+//! the tap ranges instead of materializing padded inputs — exact for the
+//! serving path's affine folding because padded positions contribute
+//! zero to both the code·activation dot and the receptive-field sum.
+//!
+//! Training and serving geometry must never diverge (a `.msqpack` export
+//! is byte-faithful to what the serve kernels execute), which is why
+//! this module is the only place window clipping is written down.
+
+use crate::quant::pack::Conv2dDesc;
+
+use super::simd::{dot, sum};
+
+/// Kernel-tap bounds for one output index: which `0..k` taps land inside
+/// the `in_n`-wide input once `o·stride − pad` anchors the window.
+/// Returns `(k0, k1, i0)` — taps `k0..k1` are valid and tap `k0` reads
+/// input index `i0` (empty range when the window misses entirely).
+#[inline]
+pub fn krange(o: usize, stride: usize, pad: usize, k: usize, in_n: usize) -> (usize, usize, usize) {
+    let base = (o * stride) as isize - pad as isize;
+    let k0 = (-base).max(0) as usize;
+    let k1 = (in_n as isize - base).clamp(0, k as isize) as usize;
+    let k1 = k1.max(k0);
+    (k0, k1, (base + k0 as isize).max(0) as usize)
+}
+
+/// Dot of one filter against one clipped receptive field: `ky0..ky1` are
+/// the valid vertical taps (tap `ky0` reads input row `iy0`), and each
+/// row contributes `seg = (kx1−kx0)·in_ch` contiguous elements starting
+/// at horizontal tap `kx0` / input column `ix0`. `wf` is one OHWI filter
+/// (`kh·kw·in_ch`), `xb` one NHWC sample. Returns 0 for windows that
+/// miss the input entirely (`seg == 0` or an empty tap range) without
+/// touching memory — `pad ≥ kernel` edge windows would otherwise index
+/// past the row.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn window_dot(
+    wf: &[f32],
+    xb: &[f32],
+    kw: usize,
+    in_w: usize,
+    in_ch: usize,
+    ky0: usize,
+    ky1: usize,
+    iy0: usize,
+    kx0: usize,
+    ix0: usize,
+    seg: usize,
+) -> f32 {
+    if seg == 0 {
+        return 0.0;
+    }
+    let mut acc = 0f32;
+    for ky in ky0..ky1 {
+        let iy = iy0 + (ky - ky0);
+        acc += dot(&wf[(ky * kw + kx0) * in_ch..][..seg], &xb[(iy * in_w + ix0) * in_ch..][..seg]);
+    }
+    acc
+}
+
+/// `Σ x` over one clipped receptive field (the serving kernels' dequant
+/// correction term) — same clipping contract as [`window_dot`].
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn window_sum(
+    xb: &[f32],
+    in_w: usize,
+    in_ch: usize,
+    ky0: usize,
+    ky1: usize,
+    iy0: usize,
+    ix0: usize,
+    seg: usize,
+) -> f32 {
+    if seg == 0 {
+        return 0.0;
+    }
+    let mut s = 0f32;
+    for ky in ky0..ky1 {
+        let iy = iy0 + (ky - ky0);
+        s += sum(&xb[(iy * in_w + ix0) * in_ch..][..seg]);
+    }
+    s
+}
+
+/// Dense conv2d forward for ONE sample: `xi` is `in_h × in_w × in_ch`
+/// (NHWC), `w` is `out_ch × kh·kw·in_ch` (OHWI), `orow` is `out_h ×
+/// out_w × out_ch`. The native trainer parallelizes over samples and
+/// calls this per row; the vertical tap range hoists out of the `ox`
+/// loop so window clipping costs a handful of integer ops per position.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward_sample(
+    xi: &[f32],
+    w: &[f32],
+    b: &[f32],
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    out_h: usize,
+    out_w: usize,
+    orow: &mut [f32],
+) {
+    let flen = d.filter_len();
+    debug_assert_eq!(xi.len(), in_h * in_w * d.in_ch);
+    debug_assert_eq!(w.len(), d.out_ch * flen);
+    debug_assert_eq!(b.len(), d.out_ch);
+    debug_assert_eq!(orow.len(), out_h * out_w * d.out_ch);
+    for oy in 0..out_h {
+        let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+        for ox in 0..out_w {
+            let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+            let seg = (kx1 - kx0) * d.in_ch;
+            for oc in 0..d.out_ch {
+                let wf = &w[oc * flen..(oc + 1) * flen];
+                orow[(oy * out_w + ox) * d.out_ch + oc] =
+                    window_dot(wf, xi, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg) + b[oc];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn krange_clips_padding_windows() {
+        // k=3, stride=1, pad=1 over 4 inputs: first window hangs one tap
+        // off the left edge, last one off the right
+        assert_eq!(krange(0, 1, 1, 3, 4), (1, 3, 0));
+        assert_eq!(krange(1, 1, 1, 3, 4), (0, 3, 0));
+        assert_eq!(krange(3, 1, 1, 3, 4), (0, 2, 2));
+        // window entirely off the input: empty range
+        assert_eq!(krange(0, 1, 5, 3, 4).0, krange(0, 1, 5, 3, 4).1);
+    }
+
+    #[test]
+    fn window_dot_matches_naive_clipped_window() {
+        let d = Conv2dDesc { in_ch: 3, out_ch: 1, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let (in_h, in_w) = (5, 4);
+        let xb = rand(in_h * in_w * d.in_ch, 1);
+        let wf = rand(d.filter_len(), 2);
+        for oy in 0..in_h {
+            let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+            for ox in 0..in_w {
+                let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+                let seg = (kx1 - kx0) * d.in_ch;
+                let got =
+                    window_dot(&wf, &xb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg);
+                let mut want = 0f64;
+                for ky in 0..d.kh {
+                    let iy = oy as isize + ky as isize - d.pad as isize;
+                    if iy < 0 || iy >= in_h as isize {
+                        continue;
+                    }
+                    for kx in 0..d.kw {
+                        let ix = ox as isize + kx as isize - d.pad as isize;
+                        if ix < 0 || ix >= in_w as isize {
+                            continue;
+                        }
+                        for ic in 0..d.in_ch {
+                            want += wf[(ky * d.kw + kx) * d.in_ch + ic] as f64
+                                * xb[((iy as usize) * in_w + ix as usize) * d.in_ch + ic] as f64;
+                        }
+                    }
+                }
+                assert!((got as f64 - want).abs() < 1e-4, "({oy},{ox}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_helpers_survive_pad_wider_than_kernel() {
+        // pad 5 > kw 3: corner windows miss the input entirely; the
+        // helpers must return 0 without touching memory
+        let (ky0, ky1, iy0) = krange(0, 1, 5, 3, 4);
+        assert_eq!(ky0, ky1);
+        let xb = [1.0f32; 8];
+        let wf = [1.0f32; 9];
+        assert_eq!(window_dot(&wf, &xb, 3, 4, 1, ky0, ky1, iy0, 0, 0, 0), 0.0);
+        assert_eq!(window_sum(&xb, 4, 1, ky0, ky1, iy0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn forward_sample_identity_kernel_passes_input_through() {
+        // 3x3 single-channel kernel with only the centre tap set, pad 1,
+        // stride 1: output map == input map
+        let d = Conv2dDesc { in_ch: 1, out_ch: 1, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let (h, w) = (5, 4);
+        let x = rand(h * w, 13);
+        let mut kern = vec![0f32; 9];
+        kern[4] = 1.0; // centre tap (ky=1, kx=1)
+        let mut out = vec![0f32; h * w];
+        conv2d_forward_sample(&x, &kern, &[0.0], &d, h, w, h, w, &mut out);
+        for (a, e) in out.iter().zip(&x) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! The shared dequantization primitive: n-bit code stream → f32.
+//!
+//! `.msqpack` payloads store each layer's weights as consecutive
+//! `bits`-wide RoundClamp integer codes, LSB-first within each byte and
+//! with no padding between elements (`quant::pack::BitWriter`'s layout —
+//! see `docs/MSQPACK.md` for the normative spec). Everything that
+//! touches those codes — `serve::kernels::qgemm` row blocks,
+//! `serve::kernels::qconv2d` filter decodes, and the native trainer's
+//! RoundClamp fake-quant — goes through this module, so there is exactly
+//! one statement of the bit layout and one statement of the RoundClamp
+//! affine (`w = α·c + β`, [`rc_affine`]) in the codebase.
+//!
+//! [`decode_codes_f32`] is fast-pathed for the widths that dominate real
+//! packs (8-bit at any phase, nibble-aligned 4-bit, byte-aligned 1-bit)
+//! and falls back to a generic bit-buffer loop for everything else. The
+//! fast paths are *pure specializations*: an exhaustive (bits 1..=8 ×
+//! phase 0..=7) cross-check against the generic path lives in this
+//! module's tests. Decoding widens integer codes exactly (codes < 2²⁴),
+//! so decode results carry no rounding at all — every numeric choice
+//! happens later, in the affine.
+
+/// Decode `out.len()` consecutive `bits`-wide codes starting at absolute
+/// bit offset `bit_off` of `data` (LSB-first within each byte, matching
+/// `quant::pack::BitWriter`), widening each code to f32.
+///
+/// The caller must guarantee `bit_off + out.len() * bits` bits exist in
+/// `data` (the serve registry validates payload sizes at load time).
+pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
+    debug_assert!((1..=8).contains(&bits));
+    let mut pos = bit_off / 8;
+    let phase = (bit_off % 8) as u32;
+    if bits == 8 {
+        if phase == 0 {
+            for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
+                *slot = b as f32;
+            }
+        } else {
+            // every code straddles the same two-byte window at a fixed
+            // phase: consume the leading partial byte and combine, no
+            // bit-buffer loop (the fast path used to bail whenever
+            // phase != 0 and fall through to the generic decoder)
+            let hi = 8 - phase;
+            for slot in out.iter_mut() {
+                let c = ((data[pos] as u32) >> phase) | (((data[pos + 1] as u32) << hi) & 0xFF);
+                *slot = c as f32;
+                pos += 1;
+            }
+        }
+        return;
+    }
+    if bits == 4 && phase % 4 == 0 {
+        // nibble-aligned: two codes per byte (a leading high nibble when
+        // the offset lands mid-byte, a trailing low nibble when the
+        // count is odd)
+        let mut i = 0;
+        if phase == 4 && !out.is_empty() {
+            out[0] = (data[pos] >> 4) as f32;
+            pos += 1;
+            i = 1;
+        }
+        while i + 2 <= out.len() {
+            let b = data[pos];
+            pos += 1;
+            out[i] = (b & 0x0F) as f32;
+            out[i + 1] = (b >> 4) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = (data[pos] & 0x0F) as f32;
+        }
+        return;
+    }
+    if bits == 1 && phase == 0 {
+        // byte-aligned 1-bit (the extreme-sparsification case): eight
+        // codes per byte, unrolled
+        let mut chunks = out.chunks_exact_mut(8);
+        for ch in &mut chunks {
+            let b = data[pos];
+            pos += 1;
+            for (l, slot) in ch.iter_mut().enumerate() {
+                *slot = ((b >> l) & 1) as f32;
+            }
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = data[pos];
+            for (l, slot) in rem.iter_mut().enumerate() {
+                *slot = ((b >> l) & 1) as f32;
+            }
+        }
+        return;
+    }
+    decode_codes_generic(data, bit_off, bits, out);
+}
+
+/// The generic bit-buffer decoder: correct for every `bits` ∈ 1..=8 at
+/// every phase, with no specializations. The fast paths above must agree
+/// with it bit-for-bit on their whole domain (pinned exhaustively in
+/// this module's tests) — it is the semantic definition of the layout.
+fn decode_codes_generic(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
+    let mut pos = bit_off / 8;
+    let phase = (bit_off % 8) as u32;
+    let mut cur: u64 = 0;
+    let mut nbits: u32 = 0;
+    if phase != 0 {
+        cur = (data[pos] >> phase) as u64;
+        nbits = 8 - phase;
+        pos += 1;
+    }
+    let width = bits as u32;
+    let mask = (1u64 << width) - 1;
+    for slot in out.iter_mut() {
+        while nbits < width {
+            cur |= (data[pos] as u64) << nbits;
+            pos += 1;
+            nbits += 8;
+        }
+        *slot = (cur & mask) as f32;
+        cur >>= width;
+        nbits -= width;
+    }
+}
+
+/// The RoundClamp dequantization affine, `w = α·c + β` with
+/// `α = 2s / (2ⁿ − 1)` and `β = −s` (paper Eq. 4 rearranged around the
+/// integer code). Returns `(α, β)`.
+///
+/// This is THE statement of the code → weight map: `qgemm`/`qconv2d`
+/// fold it out of their inner loops (`y = α·Σ c·x + β·Σ x`), the native
+/// trainer's fake-quant applies it elementwise via [`dequant_affine`],
+/// and `quant::pack::unpack_layer`'s closed form is equal to it up to
+/// one ulp of association. `bits` is f32 because bit-widths are runtime
+/// tensors in the training path; for the integral 1..=8 the serving path
+/// uses, `2ⁿ − 1` is exact in f32, so serving and training agree on α
+/// exactly.
+#[inline]
+pub fn rc_affine(bits: f32, scale: f32) -> (f32, f32) {
+    // Integral widths — the serving path, and every real training
+    // schedule — take the exact integer denominator: `f32::exp2`'s
+    // precision is platform-dependent per the Rust docs, and the
+    // serving lattice must be identical on every host. exp2 only
+    // serves fractional runtime widths.
+    let denom = if bits.fract() == 0.0 && (1.0..=24.0).contains(&bits) {
+        ((1u64 << bits as u32) - 1) as f32
+    } else {
+        (bits.exp2() - 1.0).max(1.0)
+    };
+    (2.0 * scale / denom, -scale)
+}
+
+/// Apply a dequantization affine in place: `codes[i] = α·codes[i] + β`.
+/// Elementwise, so bit-identical across scalar/SIMD builds for free.
+#[inline]
+pub fn dequant_affine(codes: &mut [f32], alpha: f32, beta: f32) {
+    for c in codes.iter_mut() {
+        *c = alpha * *c + beta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_layer;
+    use crate::util::prng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() * 0.5).collect()
+    }
+
+    /// Bit-level reference: extract the `bits`-wide code at absolute bit
+    /// offset `off` straight from the byte stream, one bit at a time.
+    fn code_at(data: &[u8], off: usize, bits: u8) -> u32 {
+        let mut v = 0u32;
+        for i in 0..bits as usize {
+            let bit = off + i;
+            v |= (((data[bit / 8] >> (bit % 8)) & 1) as u32) << i;
+        }
+        v
+    }
+
+    #[test]
+    fn decode_matches_bitreader_at_any_offset() {
+        for bits in 1u8..=8 {
+            let cols = 13; // 13*bits is non-byte-aligned for most bits
+            let rows = 7;
+            let w = rand_vec(rows * cols, bits as u64);
+            let p = pack_layer("l", &w, bits);
+            // reference: sequential pull of every code
+            let mut br = crate::quant::pack::BitReader::new(&p.data);
+            let reference: Vec<f32> = (0..rows * cols).map(|_| br.pull(bits) as f32).collect();
+            // decode each row independently at its bit offset
+            let mut row = vec![0f32; cols];
+            for r in 0..rows {
+                decode_codes_f32(&p.data, r * cols * bits as usize, bits, &mut row);
+                assert_eq!(&row[..], &reference[r * cols..(r + 1) * cols], "bits {bits} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_8bit_handles_unaligned_offsets() {
+        // regression: the 8-bit fast path used to be skipped whenever the
+        // bit offset had a nonzero phase; the fixed path must match the
+        // generic decoder at every phase 0..8
+        let mut r = Rng::new(77);
+        let data: Vec<u8> = (0..64).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for off in 0..16 {
+            let n = 40; // 40 codes of 8 bits from `off`
+            let mut out = vec![0f32; n];
+            decode_codes_f32(&data, off, 8, &mut out);
+            for (i, &got) in out.iter().enumerate() {
+                let expect = code_at(&data, off + 8 * i, 8) as f32;
+                assert_eq!(got, expect, "off {off} code {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_all_bits_at_all_phases() {
+        let mut r = Rng::new(78);
+        let data: Vec<u8> = (0..96).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for bits in 1u8..=8 {
+            for off in 0..24 {
+                let n = 25;
+                let mut out = vec![0f32; n];
+                decode_codes_f32(&data, off, bits, &mut out);
+                for (i, &got) in out.iter().enumerate() {
+                    let expect = code_at(&data, off + bits as usize * i, bits) as f32;
+                    assert_eq!(got, expect, "bits {bits} off {off} code {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_paths_agree_with_generic_on_every_bits_phase_pair() {
+        // exhaustive (bits 1..=8) × (phase 0..=7) × assorted counts —
+        // including 0, 1, and odd counts that end mid-byte — so every
+        // specialized branch above is checked against the generic
+        // bit-buffer decoder over its whole dispatch domain
+        let mut r = Rng::new(79);
+        let data: Vec<u8> = (0..128).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for bits in 1u8..=8 {
+            for phase in 0usize..8 {
+                for n in [0usize, 1, 2, 7, 8, 9, 25, 40] {
+                    let mut fast = vec![0f32; n];
+                    let mut generic = vec![0f32; n];
+                    decode_codes_f32(&data, phase, bits, &mut fast);
+                    decode_codes_generic(&data, phase, bits, &mut generic);
+                    assert_eq!(fast, generic, "bits {bits} phase {phase} n {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rc_affine_matches_integer_denominator_exactly() {
+        // serving computes 2s/(2ⁿ−1) from the integer denominator; the
+        // shared affine takes f32 bits (runtime tensors) — for every
+        // integral width the serving path accepts they must be the SAME
+        // f32, or serving and training would disagree on the lattice
+        for bits in 1u8..=8 {
+            for scale in [0.25f32, 1.0, 1.7] {
+                let (alpha, beta) = rc_affine(bits as f32, scale);
+                let denom = ((1u32 << bits) - 1).max(1) as f32;
+                assert_eq!(alpha, 2.0 * scale / denom, "bits {bits}");
+                assert_eq!(beta, -scale);
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_affine_matches_unpack_lattice() {
+        // α·c + β must land on the same lattice as pack's closed-form
+        // dequant (from_unit(c/(2ⁿ−1))) up to association error
+        for bits in [1u8, 3, 8] {
+            let w = rand_vec(64, 40 + bits as u64);
+            let p = pack_layer("l", &w, bits);
+            let wq = crate::quant::pack::unpack_layer(&p).unwrap();
+            let mut codes = vec![0f32; 64];
+            decode_codes_f32(&p.data, 0, bits, &mut codes);
+            let (alpha, beta) = rc_affine(bits as f32, p.scale);
+            dequant_affine(&mut codes, alpha, beta);
+            for (i, (a, e)) in codes.iter().zip(&wq).enumerate() {
+                assert!(
+                    (a - e).abs() <= 1e-6 * p.scale.max(1.0),
+                    "bits {bits} idx {i}: {a} vs {e}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Cache-blocked f32 matmul microkernels (transposed-B convention).
+//!
+//! All three kernels share the layout every layer in this repo uses:
+//! activations `m × k` batch-major, weights `n × k` row-major (`n`
+//! outputs, `k` inputs — the pack/serve layout), so the innermost loop
+//! always runs over contiguous memory on both sides and vectorizes
+//! through [`super::simd`]'s lane primitives.
+//!
+//! Tiling: work parallelizes over blocks of [`ROW_TILE`] *output* rows
+//! (disjoint writes, so pooled and serial execution are bit-identical by
+//! construction), and within a block the `n`-side streams in
+//! [`COL_TILE`]-row tiles so each weight row loaded into cache is reused
+//! across the whole row block before being evicted. Tiling and
+//! parallelism only re-*schedule* whole per-element reductions — each
+//! output element is still produced by exactly one lane-structured
+//! [`dot`] (or a fixed sequence of [`axpy`]s in the accumulating
+//! kernels), so blocking never changes a single bit of the result.
+//!
+//! Used by `native::ops::{linear_forward, linear_backward_input,
+//! linear_backward_weight}` (the training hot path) and benchmarked
+//! head-to-head against a naive scalar triple loop in
+//! `benches/train_throughput.rs`.
+
+use crate::util::threadpool::ThreadPool;
+
+use super::simd::{axpy, dot};
+use super::{par_blocks, SendPtr};
+
+/// Output rows per parallel task (and per cache tile): big enough to
+/// amortize dispatch, small enough to balance across cores.
+pub const ROW_TILE: usize = 8;
+
+/// Weight rows per inner tile: `COL_TILE · k` floats of `w` stay hot
+/// while a row block consumes them.
+pub const COL_TILE: usize = 64;
+
+/// `out[i,j] = Σ_t x[i,t]·w[j,t] (+ bias[j])` — `x` is `m×k`, `w` is
+/// `n×k`, `out` is `m×n`. With `pool`, row blocks run in parallel;
+/// results are bit-identical to the serial path.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if let Some(b) = bias {
+        debug_assert_eq!(b.len(), n);
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    let optr = &optr;
+    par_blocks(pool, m.div_ceil(ROW_TILE), m * n * k, |blk| {
+        let i0 = blk * ROW_TILE;
+        let i1 = (i0 + ROW_TILE).min(m);
+        // SAFETY: rows i0..i1 of `out` belong to exactly this block, so
+        // concurrent blocks write disjoint cells; `out` outlives the
+        // scoped par_for and nobody reads it until par_blocks returns.
+        let orows =
+            unsafe { std::slice::from_raw_parts_mut(optr.get().add(i0 * n), (i1 - i0) * n) };
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + COL_TILE).min(n);
+            for j in j0..j1 {
+                let wj = &w[j * k..(j + 1) * k];
+                let bj = bias.map_or(0.0, |b| b[j]);
+                for i in i0..i1 {
+                    orows[(i - i0) * n + j] = dot(&x[i * k..(i + 1) * k], wj) + bj;
+                }
+            }
+            j0 = j1;
+        }
+    });
+}
+
+/// `dx[i,t] += Σ_j dy[i,j]·w[j,t]` — `dy` is `m×n`, `w` is `n×k`, `dx`
+/// is `m×k` (the linear backward-input kernel). Rows of `dx` are
+/// disjoint across blocks; within a row, contributions land in ascending
+/// `j` order on every path, so pooled == serial bitwise.
+pub fn matmul_acc(
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dx: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(dx.len(), m * k);
+    let dxp = SendPtr(dx.as_mut_ptr());
+    let dxp = &dxp;
+    par_blocks(pool, m.div_ceil(ROW_TILE), m * n * k, |blk| {
+        let i0 = blk * ROW_TILE;
+        let i1 = (i0 + ROW_TILE).min(m);
+        // SAFETY: rows i0..i1 of `dx` are written only by this block (see
+        // matmul_bt)
+        let dxrows =
+            unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i0 * k), (i1 - i0) * k) };
+        // j outer so each weight row is reused across the whole row
+        // block while hot
+        for j in 0..n {
+            let wj = &w[j * k..(j + 1) * k];
+            for i in i0..i1 {
+                let g = dy[i * n + j];
+                if g != 0.0 {
+                    axpy(g, wj, &mut dxrows[(i - i0) * k..(i - i0 + 1) * k]);
+                }
+            }
+        }
+    });
+}
+
+/// `dw[j,t] += Σ_i dy[i,j]·x[i,t]` — `dy` is `m×n`, `x` is `m×k`, `dw`
+/// is `n×k` (the linear backward-weight kernel). The parallel axis is
+/// `j` (filter rows); within a row, contributions land in ascending `i`
+/// order on every path, so pooled == serial bitwise.
+pub fn matmul_t_acc(
+    dy: &[f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dw.len(), n * k);
+    let dwp = SendPtr(dw.as_mut_ptr());
+    let dwp = &dwp;
+    par_blocks(pool, n.div_ceil(ROW_TILE), m * n * k, |blk| {
+        let j0 = blk * ROW_TILE;
+        let j1 = (j0 + ROW_TILE).min(n);
+        // SAFETY: rows j0..j1 of `dw` are written only by this block (see
+        // matmul_bt)
+        let dwrows =
+            unsafe { std::slice::from_raw_parts_mut(dwp.get().add(j0 * k), (j1 - j0) * k) };
+        // i outer so each activation row is reused across the whole
+        // filter block while hot
+        for i in 0..m {
+            let xi = &x[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                let g = dy[i * n + j];
+                if g != 0.0 {
+                    axpy(g, xi, &mut dwrows[(j - j0) * k..(j - j0 + 1) * k]);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn matmul_bt_matches_naive() {
+        // shapes straddling the tile boundaries: m < ROW_TILE, m not a
+        // multiple of ROW_TILE, n < and > COL_TILE
+        for (m, k, n) in [(3, 5, 4), (9, 17, 70), (16, 8, 64), (1, 1, 1)] {
+            let x = rand(m * k, 1);
+            let w = rand(n * k, 2);
+            let b = rand(n, 3);
+            let mut out = vec![0f32; m * n];
+            matmul_bt(&x, &w, Some(&b), m, k, n, &mut out, None);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k)
+                        .map(|t| x[i * k + t] as f64 * w[j * k + t] as f64)
+                        .sum::<f64>()
+                        + b[j] as f64;
+                    let got = out[i * n + j] as f64;
+                    assert!((got - want).abs() < 1e-4, "({m},{k},{n}) [{i},{j}]: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_without_bias() {
+        let (m, k, n) = (2, 3, 2);
+        let x = rand(m * k, 4);
+        let w = rand(n * k, 5);
+        let mut with = vec![0f32; m * n];
+        let mut without = vec![0f32; m * n];
+        matmul_bt(&x, &w, Some(&[0.0, 0.0]), m, k, n, &mut with, None);
+        matmul_bt(&x, &w, None, m, k, n, &mut without, None);
+        assert_eq!(with, without); // + 0.0 is exact for finite dots
+    }
+
+    #[test]
+    fn all_three_pooled_match_serial_bitwise() {
+        let (m, k, n) = (37, 96, 70); // several ROW_TILE blocks, 2 COL_TILEs
+        let x = rand(m * k, 6);
+        let w = rand(n * k, 7);
+        let b = rand(n, 8);
+        let dy = rand(m * n, 9);
+        let pool = ThreadPool::new(4);
+
+        let mut serial = vec![0f32; m * n];
+        let mut pooled = serial.clone();
+        matmul_bt(&x, &w, Some(&b), m, k, n, &mut serial, None);
+        matmul_bt(&x, &w, Some(&b), m, k, n, &mut pooled, Some(&pool));
+        assert_eq!(serial, pooled);
+
+        let mut dxs = rand(m * k, 10); // nonzero base: += must preserve it
+        let mut dxp = dxs.clone();
+        matmul_acc(&dy, &w, m, k, n, &mut dxs, None);
+        matmul_acc(&dy, &w, m, k, n, &mut dxp, Some(&pool));
+        assert_eq!(dxs, dxp);
+
+        let mut dws = rand(n * k, 11);
+        let mut dwp = dws.clone();
+        matmul_t_acc(&dy, &x, m, k, n, &mut dws, None);
+        matmul_t_acc(&dy, &x, m, k, n, &mut dwp, Some(&pool));
+        assert_eq!(dws, dwp);
+    }
+
+    #[test]
+    fn acc_kernels_match_naive_accumulation() {
+        let (m, k, n) = (5, 11, 9);
+        let dy = rand(m * n, 12);
+        let w = rand(n * k, 13);
+        let x = rand(m * k, 14);
+
+        let mut dx = vec![0f32; m * k];
+        matmul_acc(&dy, &w, m, k, n, &mut dx, None);
+        for i in 0..m {
+            for t in 0..k {
+                let want: f64 =
+                    (0..n).map(|j| dy[i * n + j] as f64 * w[j * k + t] as f64).sum();
+                assert!((dx[i * k + t] as f64 - want).abs() < 1e-4, "dx[{i},{t}]");
+            }
+        }
+
+        let mut dw = vec![0f32; n * k];
+        matmul_t_acc(&dy, &x, m, k, n, &mut dw, None);
+        for j in 0..n {
+            for t in 0..k {
+                let want: f64 =
+                    (0..m).map(|i| dy[i * n + j] as f64 * x[i * k + t] as f64).sum();
+                assert!((dw[j * k + t] as f64 - want).abs() < 1e-4, "dw[{j},{t}]");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let mut out: Vec<f32> = vec![];
+        matmul_bt(&[], &[], None, 0, 3, 0, &mut out, None);
+        matmul_acc(&[], &[], 0, 3, 0, &mut out, None);
+        matmul_t_acc(&[], &[], 0, 3, 0, &mut out, None);
+    }
+}

@@ -1,0 +1,88 @@
+//! The shared SIMD/tiled kernel core under every hot loop in the repo.
+//!
+//! Before this module existed, the serving kernels
+//! (`serve::kernels::{qgemm, qconv2d}`) and the native training kernels
+//! (`native::ops`) each carried their own scalar-unrolled inner loops
+//! and their own copy of the bit-stream decode. Now both sit on one
+//! core:
+//!
+//! * [`simd`] — lane-structured `dot` / `sum` / `axpy` primitives:
+//!   `std::simd` vectors behind the `simd` cargo feature (nightly), a
+//!   scalar twin otherwise, **bit-identical by construction** (same
+//!   lanes, same reduction tree, same remainder handling);
+//! * [`decode`] — the one statement of the `.msqpack` n-bit code layout
+//!   (`decode_codes_f32`, fast-pathed for 8/4/1-bit) and of the
+//!   RoundClamp dequant affine (`rc_affine` / `dequant_affine`) shared
+//!   by qgemm, qconv2d, and the native fake-quant forward;
+//! * [`gemm`] — cache-blocked transposed-B matmul microkernels
+//!   (forward + both backward accumulations) tiled over
+//!   [`gemm::ROW_TILE`]×[`gemm::COL_TILE`] blocks;
+//! * [`conv`] — conv2d window geometry ([`conv::krange`] clipping) and
+//!   receptive-field microkernels over NHWC×OHWI, shared verbatim by
+//!   serving and training so exported packs stay byte-faithful to what
+//!   the serve kernels execute.
+//!
+//! **Bit-exactness contract.** Kernels parallelize by partitioning
+//! *output cells* across thread-pool tasks and tile only to re-schedule
+//! whole per-element reductions; every output element is produced by
+//! exactly one lane-structured reduction whose operation order is fixed
+//! in [`simd`]. Consequently, for every kernel in this tree:
+//! {serial, pooled} × {scalar, simd} all produce identical bits. The
+//! serving path's property tests assert the pooled/serial half directly;
+//! the scalar/simd half is pinned by [`simd`]'s lane-reference tests
+//! running unchanged under both CI matrix entries.
+//!
+//! Threading model: callers pass `Option<&ThreadPool>`; `None` (or a
+//! problem under the `PAR_MIN_FLOPS` threshold) runs serially on the
+//! caller's thread. Parallel tasks write disjoint output rows through a
+//! raw pointer (`SendPtr`) — sound because blocks never overlap and the
+//! output buffer outlives the scoped `par_for`.
+
+pub mod conv;
+pub mod decode;
+pub mod gemm;
+pub mod simd;
+
+pub use conv::{conv2d_forward_sample, krange, window_dot, window_sum};
+pub use decode::{decode_codes_f32, dequant_affine, rc_affine};
+pub use gemm::{matmul_acc, matmul_bt, matmul_t_acc};
+pub use simd::{axpy, dot, sum, LANES};
+
+use crate::util::threadpool::ThreadPool;
+
+/// Problems under this many flops run serially even when a pool is
+/// offered — a dispatch round-trip costs more than the work.
+pub(crate) const PAR_MIN_FLOPS: usize = 16_384;
+
+/// Raw output pointer smuggled into scoped parallel-fors. Tasks write
+/// disjoint cells (each kernel's SAFETY comment states the partition),
+/// so the aliasing is sound.
+pub(crate) struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    pub(crate) fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Dispatch `f(0..nblocks)` over the pool's resident workers, or run it
+/// serially when no pool is given, the problem is a single block, or the
+/// work is too small to amortize dispatch. The SAME closure runs on both
+/// paths, which is how every kernel keeps pooled == serial bitwise.
+pub(crate) fn par_blocks(
+    pool: Option<&ThreadPool>,
+    nblocks: usize,
+    min_flops: usize,
+    f: impl Fn(usize) + Sync,
+) {
+    match pool {
+        Some(p) if nblocks > 1 && min_flops >= PAR_MIN_FLOPS => p.par_for(nblocks, f),
+        _ => {
+            for b in 0..nblocks {
+                f(b);
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Portable SIMD lane primitives — `dot`, `sum`, `axpy` — with a scalar
+//! fallback that is **bit-identical** to the vector path.
+//!
+//! Every reduction in the kernel core is *lane-structured*: inputs are
+//! consumed in chunks of [`LANES`] elements, each lane keeps its own
+//! f32 accumulator, the lane accumulators collapse through one fixed
+//! reduction tree (`reduce`'s `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`
+//! shape), and the sub-[`LANES`] remainder is folded in serially. Both
+//! implementations below perform *exactly* this sequence of IEEE-754
+//! operations:
+//!
+//! * with `--features simd` (nightly, `std::simd`), the lane
+//!   accumulators live in one `f32x8` register and the per-lane
+//!   multiply/add happen as vector ops;
+//! * in the default build, the lane accumulators are a `[f32; 8]`
+//!   array and the compiler's autovectorizer is free to (and usually
+//!   does) emit the same vector code.
+//!
+//! Per-lane IEEE arithmetic is deterministic and Rust never contracts
+//! `a * b + c` into an FMA, so the two builds compute identical bits
+//! for every input. That guarantee is what lets the quantized serving
+//! path promise bit-identical logits across {serial, pooled} ×
+//! {scalar, simd} configurations: parallelism partitions *outputs*
+//! (never a reduction), and each output's reduction order is fixed
+//! here. The tests at the bottom pin the lane structure itself — they
+//! compare against an explicitly lane-structured reference that is
+//! feature-independent, so the suite passing under both CI matrix
+//! entries certifies cross-build equality.
+
+/// Lane width of the kernel core's reduction structure. Fixed at 8
+/// (256-bit f32 vectors) regardless of target: changing it would change
+/// summation order, i.e. the numerical identity of every kernel.
+pub const LANES: usize = 8;
+
+/// The one reduction tree lane accumulators collapse through.
+#[inline]
+fn reduce(a: [f32; LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Lane-structured dot product: `Σ_i a[i]·b[i]` with [`LANES`]
+/// accumulators and the fixed `reduce` tree. The slices must have equal
+/// lengths (every kernel-core caller guarantees it).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::f32x8;
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() & !(LANES - 1);
+    let (av, ar) = a.split_at(split);
+    let (bv, br) = b.split_at(split);
+    let mut acc = f32x8::splat(0.0);
+    for (ca, cb) in av.chunks_exact(LANES).zip(bv.chunks_exact(LANES)) {
+        acc += f32x8::from_slice(ca) * f32x8::from_slice(cb);
+    }
+    let mut s = reduce(acc.to_array());
+    for (x, y) in ar.iter().zip(br) {
+        s += x * y;
+    }
+    s
+}
+
+/// Scalar twin of the SIMD `dot`: same lanes, same tree, same bits.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() & !(LANES - 1);
+    let (av, ar) = a.split_at(split);
+    let (bv, br) = b.split_at(split);
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in av.chunks_exact(LANES).zip(bv.chunks_exact(LANES)) {
+        for ((l, &x), &y) in acc.iter_mut().zip(ca).zip(cb) {
+            *l += x * y;
+        }
+    }
+    let mut s = reduce(acc);
+    for (x, y) in ar.iter().zip(br) {
+        s += x * y;
+    }
+    s
+}
+
+/// Lane-structured horizontal sum: `Σ_i x[i]`, same lane/tree shape as
+/// [`dot`] (the serving kernels use it for the dequant `Σ x` correction,
+/// which must stay bit-identical across builds too).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    use std::simd::f32x8;
+    let split = x.len() & !(LANES - 1);
+    let (xv, xr) = x.split_at(split);
+    let mut acc = f32x8::splat(0.0);
+    for c in xv.chunks_exact(LANES) {
+        acc += f32x8::from_slice(c);
+    }
+    let mut s = reduce(acc.to_array());
+    for v in xr {
+        s += v;
+    }
+    s
+}
+
+/// Scalar twin of the SIMD `sum`: same lanes, same tree, same bits.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    let split = x.len() & !(LANES - 1);
+    let (xv, xr) = x.split_at(split);
+    let mut acc = [0f32; LANES];
+    for c in xv.chunks_exact(LANES) {
+        for (l, &v) in acc.iter_mut().zip(c) {
+            *l += v;
+        }
+    }
+    let mut s = reduce(acc);
+    for v in xr {
+        s += v;
+    }
+    s
+}
+
+/// `out[i] += g · x[i]`. Elementwise — each output element sees exactly
+/// one multiply and one add regardless of chunking, so the SIMD and
+/// scalar versions are trivially bit-identical. The backward kernels
+/// (`dx += g·w` row scatters, `dw += g·x` outer accumulations) are built
+/// from this.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn axpy(g: f32, x: &[f32], out: &mut [f32]) {
+    use std::simd::f32x8;
+    debug_assert_eq!(x.len(), out.len());
+    let split = x.len() & !(LANES - 1);
+    let (xv, xr) = x.split_at(split);
+    let (ov, or) = out.split_at_mut(split);
+    let vg = f32x8::splat(g);
+    for (co, cx) in ov.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
+        let r = f32x8::from_slice(co) + vg * f32x8::from_slice(cx);
+        r.copy_to_slice(co);
+    }
+    for (o, &v) in or.iter_mut().zip(xr) {
+        *o += g * v;
+    }
+}
+
+/// Scalar twin of the SIMD `axpy` (elementwise, so identity is free).
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn axpy(g: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += g * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    /// Feature-independent statement of the lane contract: LANES
+    /// accumulators over full chunks, the fixed reduction tree, serial
+    /// remainder. Both the scalar and the SIMD `dot`/`sum` must equal
+    /// this *bitwise* — the same reference compiles identically in both
+    /// builds, so the suite passing under `--features simd` and the
+    /// default build proves the two builds agree with each other.
+    fn lane_dot_ref(a: &[f32], b: &[f32]) -> f32 {
+        let split = a.len() & !(LANES - 1);
+        let mut acc = [0f32; LANES];
+        for i in (0..split).step_by(LANES) {
+            for l in 0..LANES {
+                acc[l] += a[i + l] * b[i + l];
+            }
+        }
+        let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in split..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    fn lane_sum_ref(x: &[f32]) -> f32 {
+        let split = x.len() & !(LANES - 1);
+        let mut acc = [0f32; LANES];
+        for i in (0..split).step_by(LANES) {
+            for l in 0..LANES {
+                acc[l] += x[i + l];
+            }
+        }
+        let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for v in &x[split..] {
+            s += v;
+        }
+        s
+    }
+
+    #[test]
+    fn dot_matches_lane_reference_at_every_remainder() {
+        for n in 0..40 {
+            let a = rand(n, 100 + n as u64);
+            let b = rand(n, 200 + n as u64);
+            assert_eq!(dot(&a, &b), lane_dot_ref(&a, &b), "len {n}");
+        }
+    }
+
+    #[test]
+    fn dot_is_accurate() {
+        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), expect); // integers: every order is exact
+    }
+
+    #[test]
+    fn sum_matches_lane_reference_at_every_remainder() {
+        for n in 0..40 {
+            let x = rand(n, 300 + n as u64);
+            assert_eq!(sum(&x), lane_sum_ref(&x), "len {n}");
+        }
+    }
+
+    #[test]
+    fn axpy_is_elementwise_exact() {
+        for n in 0..40 {
+            let x = rand(n, 400 + n as u64);
+            let base = rand(n, 500 + n as u64);
+            let g = 0.37f32;
+            let mut out = base.clone();
+            axpy(g, &x, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], base[i] + g * x[i], "len {n} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(sum(&[]), 0.0);
+        let mut out: Vec<f32> = vec![];
+        axpy(1.0, &[], &mut out);
+    }
+}

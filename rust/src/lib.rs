@@ -1,3 +1,9 @@
+// `std::simd` is still unstable: the `simd` cargo feature opts the
+// kernel core's inner loops into portable SIMD on a nightly toolchain.
+// The default (stable) build uses the scalar twin, which computes
+// bit-identical results (see `kernels::simd`).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # MSQ — Memory-Efficient Bit Sparsification Quantization
 //!
 //! A Rust + JAX + Pallas reproduction of *MSQ: Memory-Efficient Bit
@@ -21,6 +27,14 @@
 //! `src/native/`) or the PJRT engine loading the HLO artifacts
 //! (`--features pjrt`).
 //!
+//! Both execution paths share one hot-loop foundation: the [`kernels`]
+//! module — lane-structured SIMD/scalar primitives (`std::simd` behind
+//! the `simd` feature, bit-identical scalar fallback otherwise), the
+//! `.msqpack` n-bit decode + RoundClamp dequant affine, and
+//! cache-blocked matmul/conv microkernels — sits under both the
+//! quantized serving kernels and the native training ops (see
+//! `docs/ARCHITECTURE.md` for the full dataflow).
+//!
 //! Deployment side, the `serve` module executes packed `.msqpack` models
 //! (produced by `quant::pack`) with pure-Rust quantized kernels and a
 //! dynamic request batcher, and the `net` module puts them on the
@@ -34,6 +48,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod kernels;
 pub mod metrics;
 pub mod native;
 pub mod net;

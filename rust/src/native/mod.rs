@@ -18,8 +18,11 @@
 //! * [`ops`] — forward/backward kernels: transposed-B matmul, NHWC
 //!   conv2d against OHWI filters (the `.msqpack` v3 layout), bias,
 //!   ReLU, softmax-CE (f64 log-sum-exp), RoundClamp/DoReFa fake-quant
-//!   with the straight-through estimator; matmul/conv-shaped ops
-//!   parallelize over `util::threadpool`'s resident workers;
+//!   with the straight-through estimator. The matmul/conv-shaped ops
+//!   are thin wrappers over the shared kernel core ([`crate::kernels`]:
+//!   tiled microkernels, SIMD/scalar lane primitives, the serving-side
+//!   conv geometry and RoundClamp affine) and parallelize over
+//!   `util::threadpool`'s resident workers, pooled ≡ serial bitwise;
 //! * [`autograd`] — a reverse-mode tape over those ops (enum-coded
 //!   graph, no boxed closures; one tape per step);
 //! * [`optim`] — SGD with heavy-ball momentum (the cosine lr schedule

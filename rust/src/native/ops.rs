@@ -1,21 +1,31 @@
 //! Forward + backward kernels for the native training backend.
 //!
 //! Plain slice-level math with explicit dimensions; `autograd::Tape`
-//! composes these into a differentiable MLP. Matmul-shaped ops
-//! parallelize over the thread pool's resident workers (rows are
-//! disjoint, so workers write through a shared raw pointer exactly like
-//! the data pipeline's renderer).
+//! composes these into a differentiable MLP / conv net. The heavy
+//! lifting lives in the shared kernel core ([`crate::kernels`]): the
+//! matmul-shaped ops are thin wrappers over its cache-blocked
+//! transposed-B microkernels, the conv ops run on its window
+//! geometry/microkernels (the SAME clipping the serving kernels use —
+//! training and serving geometry must never diverge, because the
+//! `.msqpack` export is byte-faithful to what `serve::kernels`
+//! executes), and the RoundClamp fake-quant applies the same
+//! `rc_affine` dequantization the quantized serving kernels fold into
+//! their inner loops.
+//!
+//! Threading model: every kernel takes `Option<&ThreadPool>` and
+//! parallelizes over disjoint output rows (samples, or filter rows for
+//! weight gradients) via the core's `par_blocks`; pooled and serial
+//! execution are bit-identical because parallelism only partitions
+//! outputs, never a reduction (see the contract in [`crate::kernels`]).
 //!
 //! Conventions (see `tensor.rs`): activations `m × k` batch-major,
 //! weights `n × k` row-major (`n` outputs, `k` inputs — the serve/pack
-//! layout), bias `1 × n`, labels `i32` class ids.
+//! layout), conv weights OHWI against NHWC activations, bias `1 × n`,
+//! labels `i32` class ids.
 
+use crate::kernels::{self, axpy, krange as tap_range, SendPtr};
 use crate::quant::pack::Conv2dDesc;
-use crate::quant::{dorefa01, from_unit, roundclamp01, to_unit};
-// Conv window clipping is shared with the serving kernels: training and
-// serving must agree on geometry exactly (the export is byte-faithful
-// to what `serve::kernels` executes).
-use crate::serve::kernels::krange as tap_range;
+use crate::quant::{dorefa01, from_unit, roundclamp_code, to_unit};
 use crate::util::threadpool::ThreadPool;
 
 /// Which [0,1] quantizer the fake-quant op applies (paper Eq. 1 vs 4).
@@ -25,42 +35,9 @@ pub enum Quantizer {
     DoReFa,
 }
 
-impl Quantizer {
-    #[inline]
-    pub fn apply(self, w01: f32, bits: f32) -> f32 {
-        match self {
-            Quantizer::RoundClamp => roundclamp01(w01, bits),
-            Quantizer::DoReFa => dorefa01(w01, bits),
-        }
-    }
-}
-
-/// Shared mutable output pointer for row-disjoint parallel writes.
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    fn get(&self) -> *mut f32 {
-        self.0
-    }
-}
-
-#[inline]
-fn par_rows(pool: Option<&ThreadPool>, rows: usize, min_flops: usize, f: impl Fn(usize) + Sync) {
-    match pool {
-        // tiny problems aren't worth a dispatch round-trip
-        Some(p) if rows > 1 && min_flops >= 16_384 => p.par_for(rows, f),
-        _ => {
-            for r in 0..rows {
-                f(r);
-            }
-        }
-    }
-}
-
 /// `out[i,j] = Σ_t x[i,t]·w[j,t] + b[j]` — x is `m×k`, w is `n×k`
-/// (transposed-B matmul: both dots run over contiguous memory).
+/// (transposed-B matmul: both dots run over contiguous memory). A thin
+/// wrapper over the tiled [`kernels::matmul_bt`] microkernel.
 #[allow(clippy::too_many_arguments)]
 pub fn linear_forward(
     x: &[f32],
@@ -72,24 +49,7 @@ pub fn linear_forward(
     out: &mut [f32],
     pool: Option<&ThreadPool>,
 ) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), n * k);
-    debug_assert_eq!(b.len(), n);
-    debug_assert_eq!(out.len(), m * n);
-    let optr = SendPtr(out.as_mut_ptr());
-    let optr = &optr;
-    par_rows(pool, m, m * n * k, |i| {
-        let xi = &x[i * k..(i + 1) * k];
-        let orow = unsafe { std::slice::from_raw_parts_mut(optr.get().add(i * n), n) };
-        for (j, o) in orow.iter_mut().enumerate() {
-            let wj = &w[j * k..(j + 1) * k];
-            let mut acc = 0f32;
-            for t in 0..k {
-                acc += xi[t] * wj[t];
-            }
-            *o = acc + b[j];
-        }
-    });
+    kernels::matmul_bt(x, w, Some(b), m, k, n, out, pool);
 }
 
 /// `dx[i,t] += Σ_j dy[i,j]·w[j,t]` (rows of `dx` are disjoint).
@@ -102,23 +62,7 @@ pub fn linear_backward_input(
     dx: &mut [f32],
     pool: Option<&ThreadPool>,
 ) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(dx.len(), m * k);
-    let dxp = SendPtr(dx.as_mut_ptr());
-    let dxp = &dxp;
-    par_rows(pool, m, m * n * k, |i| {
-        let dyi = &dy[i * n..(i + 1) * n];
-        let dxi = unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * k), k) };
-        for (j, &g) in dyi.iter().enumerate() {
-            if g == 0.0 {
-                continue;
-            }
-            let wj = &w[j * k..(j + 1) * k];
-            for t in 0..k {
-                dxi[t] += g * wj[t];
-            }
-        }
-    });
+    kernels::matmul_acc(dy, w, m, k, n, dx, pool);
 }
 
 /// `dw[j,t] += Σ_i dy[i,j]·x[i,t]` (rows of `dw` are disjoint).
@@ -131,23 +75,7 @@ pub fn linear_backward_weight(
     dw: &mut [f32],
     pool: Option<&ThreadPool>,
 ) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(dw.len(), n * k);
-    let dwp = SendPtr(dw.as_mut_ptr());
-    let dwp = &dwp;
-    par_rows(pool, n, m * n * k, |j| {
-        let dwj = unsafe { std::slice::from_raw_parts_mut(dwp.get().add(j * k), k) };
-        for i in 0..m {
-            let g = dy[i * n + j];
-            if g == 0.0 {
-                continue;
-            }
-            let xi = &x[i * k..(i + 1) * k];
-            for t in 0..k {
-                dwj[t] += g * xi[t];
-            }
-        }
-    });
+    kernels::matmul_t_acc(dy, x, m, k, n, dw, pool);
 }
 
 /// `db[j] += Σ_i dy[i,j]`.
@@ -161,11 +89,11 @@ pub fn linear_backward_bias(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
     }
 }
 
-
 /// NHWC conv2d forward: `x` is `m × (in_h·in_w·in_ch)`, `w` is OHWI
 /// `out_ch × (kh·kw·in_ch)` (the `.msqpack` conv layout), `b` is
 /// `1 × out_ch`; `out` is `m × (out_h·out_w·out_ch)`. Samples are
-/// disjoint output rows, so they parallelize over the pool.
+/// disjoint output rows, so they parallelize over the pool; each sample
+/// runs the shared [`kernels::conv2d_forward_sample`] microkernel.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_forward(
     x: &[f32],
@@ -188,33 +116,14 @@ pub fn conv2d_forward(
     debug_assert_eq!(out.len(), m * out_elems);
     let optr = SendPtr(out.as_mut_ptr());
     let optr = &optr;
-    par_rows(pool, m, m * out_elems * flen, |i| {
+    kernels::par_blocks(pool, m, m * out_elems * flen, |i| {
         let xi = &x[i * in_elems..(i + 1) * in_elems];
+        // SAFETY: sample `i` writes only its own out_elems row — disjoint
+        // per task; `out` outlives the scoped par_for and is not read
+        // until it returns.
         let orow =
             unsafe { std::slice::from_raw_parts_mut(optr.get().add(i * out_elems), out_elems) };
-        for oy in 0..out_h {
-            let (ky0, ky1, iy0) = tap_range(oy, d.stride, d.pad, d.kh, in_h);
-            for ox in 0..out_w {
-                let (kx0, kx1, ix0) = tap_range(ox, d.stride, d.pad, d.kw, in_w);
-                let seg = (kx1 - kx0) * d.in_ch;
-                for oc in 0..d.out_ch {
-                    let wf = &w[oc * flen..(oc + 1) * flen];
-                    let mut acc = b[oc];
-                    if seg > 0 {
-                        // seg == 0: window fully off the input (pad >= kw)
-                        for ky in ky0..ky1 {
-                            let iy = iy0 + (ky - ky0);
-                            let wrow = &wf[(ky * d.kw + kx0) * d.in_ch..][..seg];
-                            let xrow = &xi[(iy * in_w + ix0) * d.in_ch..][..seg];
-                            for t in 0..seg {
-                                acc += wrow[t] * xrow[t];
-                            }
-                        }
-                    }
-                    orow[(oy * out_w + ox) * d.out_ch + oc] = acc;
-                }
-            }
-        }
+        kernels::conv2d_forward_sample(xi, w, b, d, in_h, in_w, out_h, out_w, orow);
     });
 }
 
@@ -241,10 +150,11 @@ pub fn conv2d_backward_input(
     debug_assert_eq!(dx.len(), m * in_elems);
     let dxp = SendPtr(dx.as_mut_ptr());
     let dxp = &dxp;
-    par_rows(pool, m, m * out_elems * flen, |i| {
+    kernels::par_blocks(pool, m, m * out_elems * flen, |i| {
         let dyi = &dy[i * out_elems..(i + 1) * out_elems];
-        let dxi =
-            unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * in_elems), in_elems) };
+        // SAFETY: sample `i` scatters only into its own in_elems row of
+        // `dx` — disjoint per task (see conv2d_forward)
+        let dxi = unsafe { std::slice::from_raw_parts_mut(dxp.get().add(i * in_elems), in_elems) };
         for oy in 0..out_h {
             let (ky0, ky1, iy0) = tap_range(oy, d.stride, d.pad, d.kh, in_h);
             for ox in 0..out_w {
@@ -263,9 +173,7 @@ pub fn conv2d_backward_input(
                         let iy = iy0 + (ky - ky0);
                         let wrow = &wf[(ky * d.kw + kx0) * d.in_ch..][..seg];
                         let dxrow = &mut dxi[(iy * in_w + ix0) * d.in_ch..][..seg];
-                        for t in 0..seg {
-                            dxrow[t] += g * wrow[t];
-                        }
+                        axpy(g, wrow, dxrow);
                     }
                 }
             }
@@ -295,7 +203,9 @@ pub fn conv2d_backward_weight(
     debug_assert_eq!(dw.len(), d.out_ch * flen);
     let dwp = SendPtr(dw.as_mut_ptr());
     let dwp = &dwp;
-    par_rows(pool, d.out_ch, m * out_elems * flen, |oc| {
+    kernels::par_blocks(pool, d.out_ch, m * out_elems * flen, |oc| {
+        // SAFETY: filter `oc` accumulates only into its own flen row of
+        // `dw` — disjoint per task (see conv2d_forward)
         let dwf = unsafe { std::slice::from_raw_parts_mut(dwp.get().add(oc * flen), flen) };
         for i in 0..m {
             let xi = &x[i * in_elems..(i + 1) * in_elems];
@@ -316,9 +226,7 @@ pub fn conv2d_backward_weight(
                         let iy = iy0 + (ky - ky0);
                         let dwrow = &mut dwf[(ky * d.kw + kx0) * d.in_ch..][..seg];
                         let xrow = &xi[(iy * in_w + ix0) * d.in_ch..][..seg];
-                        for t in 0..seg {
-                            dwrow[t] += g * xrow[t];
-                        }
+                        axpy(g, xrow, dwrow);
                     }
                 }
             }
@@ -415,10 +323,28 @@ pub fn softmax_ce_backward(
 /// (`quant::to_unit` / `from_unit` lattice). Returns the scale; the
 /// backward is the straight-through estimator (gradient copies through
 /// unchanged), so there is no paired backward kernel.
+///
+/// The RoundClamp path goes through the integer code and the shared
+/// serving-side dequant affine ([`kernels::rc_affine`] /
+/// [`kernels::dequant_affine`]): `out = α·code + β` — exactly the map
+/// `qgemm`/`qconv2d` fold into their inner loops, so training sees the
+/// same lattice serving executes (up to one ulp of association against
+/// the `roundclamp01` closed form; the golden-vector tests pin both).
 pub fn fake_quant_forward(w: &[f32], bits: f32, q: Quantizer, out: &mut [f32]) -> f32 {
     let scale = w.iter().fold(0f32, |a, &x| a.max(x.abs())) + 1e-8;
-    for (o, &x) in out.iter_mut().zip(w) {
-        *o = from_unit(q.apply(to_unit(x, scale), bits), scale);
+    match q {
+        Quantizer::RoundClamp => {
+            let (alpha, beta) = kernels::rc_affine(bits, scale);
+            for (o, &x) in out.iter_mut().zip(w) {
+                *o = roundclamp_code(to_unit(x, scale), bits) as f32;
+            }
+            kernels::dequant_affine(out, alpha, beta);
+        }
+        Quantizer::DoReFa => {
+            for (o, &x) in out.iter_mut().zip(w) {
+                *o = from_unit(dorefa01(to_unit(x, scale), bits), scale);
+            }
+        }
     }
     scale
 }

@@ -21,6 +21,17 @@
 //! Backpressure contract, end to end: batcher `QueueFull` → **429**
 //! (`Retry-After: 1`), drain/shutdown → **503**, malformed input →
 //! **400**, connection budget exhausted → **503** at accept time.
+//!
+//! Threading model: one resident `util::threadpool` worker per
+//! connection (keep-alive loops run on the worker), the accept loop on
+//! the gateway thread; inference inside a handler re-enters the same
+//! pool via the batcher, which is safe because `par_for` callers
+//! participate and help drain (nested dispatch cannot deadlock).
+//! Handlers hold a per-generation `serve::Server` handle, so a hot
+//! reload never changes responses mid-request — and the response bytes
+//! themselves are bit-identical to in-process inference (pinned by
+//! `tests/gateway_e2e.rs`), because the serving kernels guarantee
+//! configuration-independent logits (see [`crate::kernels`]).
 
 pub mod gateway;
 pub mod http;

@@ -9,6 +9,16 @@
 //! trip), so a packed model can be re-expanded and served through the
 //! same eval artifacts.
 //!
+//! The NORMATIVE format specification — field-by-field byte offsets,
+//! op-descriptor encoding, version-compat matrix, reader hardening
+//! obligations — lives in `docs/MSQPACK.md`; this header is the
+//! implementer's summary. The serving-side consumer of the payload bit
+//! stream is [`crate::kernels::decode_codes_f32`] (decode) together
+//! with [`crate::kernels::rc_affine`] (dequant affine); `BitWriter`
+//! here and that decoder are two halves of one layout contract, pinned
+//! against each other by the kernel-core decode tests and the byte-exact
+//! fixtures in `tests/pack_compat.rs`.
+//!
 //! Format v3 (all little-endian):
 //! ```text
 //! magic "MSQPACK3" | u64 input_dim | u32 in_h | u32 in_w | u32 in_c | u32 n_layers

@@ -9,23 +9,38 @@
 //! ```text
 //! w = (c / (2^n - 1) - 0.5) · 2s          (RoundClamp dequant, Eq. 4)
 //! y[b,r] = Σ_j w[r,j] x[b,j]
-//!        = α · Σ_j c[r,j] x[b,j] − s · Σ_j x[b,j],   α = 2s / (2^n − 1)
+//!        = α · Σ_j c[r,j] x[b,j] + β · Σ_j x[b,j],   (α, β) = rc_affine
 //! ```
 //!
-//! so the hot loop is a plain code·activation dot product. `qgemm`
-//! processes rows in cache-friendly blocks: each block decodes one row
-//! at a time into a small scratch buffer and reuses it across the whole
-//! batch. `qconv2d` applies the same decode-once trick per *filter*: a
-//! filter's `kh·kw·in_ch` codes are decoded once, then the whole batch's
-//! output map streams through an im2col-free inner loop whose innermost
-//! dot runs over contiguous memory on both sides (OHWI filters against
-//! NHWC activations). The `Σ x` correction term becomes a per-position
-//! receptive-field sum shared by every output channel. Blocks (rows /
-//! filter groups) are independent, so they parallelize over
-//! `util::threadpool` with disjoint output cells.
+//! so the hot loop is a plain code·activation dot product running on the
+//! shared kernel core ([`crate::kernels`]): the bit-stream decode, the
+//! (α, β) affine, the lane-structured `dot`/`sum` primitives, and the
+//! conv window geometry all live there, shared with the native training
+//! kernels. `qgemm` processes rows in cache-friendly blocks: each block
+//! decodes one row at a time into a small scratch buffer and reuses it
+//! across the whole batch. `qconv2d` applies the same decode-once trick
+//! per *filter*: a filter's `kh·kw·in_ch` codes are decoded once, then
+//! the whole batch's output map streams through an im2col-free inner
+//! loop whose innermost dot runs over contiguous memory on both sides
+//! (OHWI filters against NHWC activations). The `Σ x` correction term
+//! becomes a per-position receptive-field sum shared by every output
+//! channel.
+//!
+//! **Bit-exactness invariant** (property-tested below): blocks (rows /
+//! filter groups) partition disjoint output cells and every output
+//! element is one lane-structured reduction, so {serial, pooled} ×
+//! {scalar, simd} all produce identical logits — see the contract in
+//! [`crate::kernels`].
 
+use crate::kernels::{dot, rc_affine, sum, window_dot, window_sum, SendPtr};
 use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
+
+// Re-exported for API continuity: the decode primitive and the window
+// geometry moved into the shared kernel core, but they remain part of
+// this module's public face (tests, benches, and the native ops found
+// them here first).
+pub use crate::kernels::{decode_codes_f32, krange};
 
 /// Rows per parallel work item. Small enough to balance across cores,
 /// large enough that scratch allocation and task dispatch amortize.
@@ -34,84 +49,6 @@ const ROW_BLOCK: usize = 32;
 /// Conv filters per parallel work item — one filter is a whole output
 /// map of work per sample, so blocks are smaller than gemm rows.
 const FILTER_BLOCK: usize = 4;
-
-/// Decode `out.len()` consecutive `bits`-wide codes starting at absolute
-/// bit offset `bit_off` of `data` (LSB-first within each byte, matching
-/// `quant::pack::BitWriter`), widening each code to f32.
-///
-/// The caller must guarantee `bit_off + out.len() * bits` bits exist in
-/// `data` (the registry validates payload sizes at load time).
-pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
-    debug_assert!((1..=8).contains(&bits));
-    let mut pos = bit_off / 8;
-    let phase = (bit_off % 8) as u32;
-    if bits == 8 {
-        if phase == 0 {
-            for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
-                *slot = b as f32;
-            }
-        } else {
-            // every code straddles the same two-byte window at a fixed
-            // phase: consume the leading partial byte and combine, no
-            // bit-buffer loop (the fast path used to bail whenever
-            // phase != 0 and fall through to the generic decoder)
-            let hi = 8 - phase;
-            for slot in out.iter_mut() {
-                let c = ((data[pos] as u32) >> phase) | (((data[pos + 1] as u32) << hi) & 0xFF);
-                *slot = c as f32;
-                pos += 1;
-            }
-        }
-        return;
-    }
-    let mut cur: u64 = 0;
-    let mut nbits: u32 = 0;
-    if phase != 0 {
-        cur = (data[pos] >> phase) as u64;
-        nbits = 8 - phase;
-        pos += 1;
-    }
-    let width = bits as u32;
-    let mask = (1u64 << width) - 1;
-    for slot in out.iter_mut() {
-        while nbits < width {
-            cur |= (data[pos] as u64) << nbits;
-            pos += 1;
-            nbits += 8;
-        }
-        *slot = (cur & mask) as f32;
-        cur >>= width;
-        nbits -= width;
-    }
-}
-
-/// Unrolled dot product with 4 independent accumulators (keeps the FP
-/// dependency chain short; identical summation order on every path, so
-/// serial and pooled kernels agree bit-for-bit).
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let split = a.len() & !3;
-    let (a4, ar) = a.split_at(split);
-    let (b4, br) = b.split_at(split);
-    let mut acc = [0f32; 4];
-    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
-        acc[0] += ca[0] * cb[0];
-        acc[1] += ca[1] * cb[1];
-        acc[2] += ca[2] * cb[2];
-        acc[3] += ca[3] * cb[3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (x, y) in ar.iter().zip(br) {
-        s += x * y;
-    }
-    s
-}
-
-/// Raw output pointer smuggled into the scoped parallel-for. Blocks write
-/// disjoint `(b, r)` cells, so the aliasing is sound (see SAFETY below).
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Quantized GEMM over a packed layer: `out[b*rows + r] = Σ_j w[r,j] ·
 /// x[b*cols + j]` with `w` decoded on the fly from `data`.
@@ -137,9 +74,8 @@ pub fn qgemm(
     if rows == 0 || batch == 0 {
         return;
     }
-    let denom = ((1u32 << bits) - 1).max(1) as f32;
-    let alpha = 2.0 * scale / denom;
-    let xsums: Vec<f32> = (0..batch).map(|b| x[b * cols..(b + 1) * cols].iter().sum()).collect();
+    let (alpha, beta) = rc_affine(bits as f32, scale);
+    let xsums: Vec<f32> = (0..batch).map(|b| sum(&x[b * cols..(b + 1) * cols])).collect();
 
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let r0 = blk * ROW_BLOCK;
@@ -148,7 +84,7 @@ pub fn qgemm(
             decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
             for b in 0..batch {
                 let acc = dot(scratch, &x[b * cols..(b + 1) * cols]);
-                write(b * rows + r, alpha * acc - scale * xsums[b]);
+                write(b * rows + r, alpha * acc + beta * xsums[b]);
             }
         }
     };
@@ -165,7 +101,7 @@ pub fn qgemm(
                     // to exactly one block, so concurrent blocks write
                     // disjoint cells of `out`, which outlives the scoped
                     // par_for. No one reads `out` until par_for returns.
-                    unsafe { *optr.0.add(idx) = v }
+                    unsafe { *optr.get().add(idx) = v }
                 });
             });
         }
@@ -178,27 +114,6 @@ pub fn qgemm(
     }
 }
 
-/// Kernel-tap bounds for one output index: which `0..k` taps land inside
-/// the `in_n`-wide input once `o·stride − pad` anchors the window.
-/// Returns `(k0, k1, i0)` — taps `k0..k1` are valid and tap `k0` reads
-/// input index `i0` (empty range when the window misses entirely).
-/// `pub(crate)` because `native::ops` clips its conv windows with the
-/// SAME function — training and serving geometry must never diverge.
-#[inline]
-pub(crate) fn krange(
-    o: usize,
-    stride: usize,
-    pad: usize,
-    k: usize,
-    in_n: usize,
-) -> (usize, usize, usize) {
-    let base = (o * stride) as isize - pad as isize;
-    let k0 = (-base).max(0) as usize;
-    let k1 = (in_n as isize - base).clamp(0, k as isize) as usize;
-    let k1 = k1.max(k0);
-    (k0, k1, (base + k0 as isize).max(0) as usize)
-}
-
 /// Quantized 2-D convolution over a packed conv layer: NHWC activations
 /// against OHWI filters whose codes are decoded once per filter and
 /// reused across the whole batch (the conv twin of `qgemm`'s row-block
@@ -206,8 +121,9 @@ pub(crate) fn krange(
 ///
 /// `x` is `batch × in_h × in_w × in_ch`, `out` is `batch × out_h ×
 /// out_w × out_ch` with `(out_h, out_w) = d.out_hw(in_h, in_w)`. Zero
-/// padding is handled by clipping the tap ranges, which is exact for the
-/// affine folding because padded positions contribute zero to both the
+/// padding is handled by clipping the tap ranges
+/// ([`crate::kernels::krange`]), which is exact for the affine folding
+/// because padded positions contribute zero to both the
 /// code·activation dot and the receptive-field sum. With `pool`, filter
 /// blocks run in parallel; results are bit-identical to the serial path.
 #[allow(clippy::too_many_arguments)]
@@ -232,8 +148,7 @@ pub fn qconv2d(
     if batch == 0 {
         return;
     }
-    let denom = ((1u32 << bits) - 1).max(1) as f32;
-    let alpha = 2.0 * scale / denom;
+    let (alpha, beta) = rc_affine(bits as f32, scale);
 
     // Σ x over each receptive field (the dequant correction term) —
     // shared by every output channel, so it costs one extra "channel".
@@ -248,15 +163,7 @@ pub fn qconv2d(
             for ox in 0..out_w {
                 let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
                 let seg = (kx1 - kx0) * d.in_ch;
-                let mut s = 0f32;
-                if seg > 0 {
-                    // seg == 0 (window fully off the input horizontally,
-                    // pad >= kw) would index past the row — and sums 0
-                    for ky in ky0..ky1 {
-                        let iy = iy0 + (ky - ky0);
-                        s += xb[(iy * in_w + ix0) * d.in_ch..][..seg].iter().sum::<f32>();
-                    }
-                }
+                let s = window_sum(xb, in_w, d.in_ch, ky0, ky1, iy0, ix0, seg);
                 prow((b * out_h + oy) * out_w + ox, s);
             }
         }
@@ -270,7 +177,7 @@ pub fn qconv2d(
                 // [b·out_h·out_w, (b+1)·out_h·out_w) — disjoint per task;
                 // `psums` outlives the scoped par_for and is not read
                 // until it returns.
-                psum_sample(b, &mut |idx, v| unsafe { *pptr.0.add(idx) = v });
+                psum_sample(b, &mut |idx, v| unsafe { *pptr.get().add(idx) = v });
             });
         }
         _ => {
@@ -294,17 +201,11 @@ pub fn qconv2d(
                     for ox in 0..out_w {
                         let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
                         let seg = (kx1 - kx0) * d.in_ch;
-                        let mut acc = 0f32;
-                        if seg > 0 {
-                            for ky in ky0..ky1 {
-                                let iy = iy0 + (ky - ky0);
-                                let wrow = &scratch[(ky * d.kw + kx0) * d.in_ch..][..seg];
-                                let xrow = &xb[(iy * in_w + ix0) * d.in_ch..][..seg];
-                                acc += dot(wrow, xrow);
-                            }
-                        }
+                        let acc = window_dot(
+                            scratch, xb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
+                        );
                         let pos = (b * out_h + oy) * out_w + ox;
-                        write(pos * d.out_ch + oc, alpha * acc - scale * psums[pos]);
+                        write(pos * d.out_ch + oc, alpha * acc + beta * psums[pos]);
                     }
                 }
             }
@@ -324,7 +225,7 @@ pub fn qconv2d(
                     // blocks write disjoint cells of `out`, which
                     // outlives the scoped par_for. No one reads `out`
                     // until par_for returns.
-                    unsafe { *optr.0.add(idx) = v }
+                    unsafe { *optr.get().add(idx) = v }
                 });
             });
         }
@@ -398,72 +299,6 @@ mod tests {
     }
 
     #[test]
-    fn decode_matches_bitreader_at_any_offset() {
-        for bits in 1u8..=8 {
-            let cols = 13; // 13*bits is non-byte-aligned for most bits
-            let rows = 7;
-            let w = rand_vec(rows * cols, bits as u64);
-            let p = pack_layer("l", &w, bits);
-            // reference: sequential pull of every code
-            let mut br = crate::quant::pack::BitReader::new(&p.data);
-            let reference: Vec<f32> =
-                (0..rows * cols).map(|_| br.pull(bits) as f32).collect();
-            // decode each row independently at its bit offset
-            let mut row = vec![0f32; cols];
-            for r in 0..rows {
-                decode_codes_f32(&p.data, r * cols * bits as usize, bits, &mut row);
-                assert_eq!(&row[..], &reference[r * cols..(r + 1) * cols], "bits {bits} row {r}");
-            }
-        }
-    }
-
-    /// Bit-level reference: extract the `bits`-wide code at absolute bit
-    /// offset `off` straight from the byte stream, one bit at a time.
-    fn code_at(data: &[u8], off: usize, bits: u8) -> u32 {
-        let mut v = 0u32;
-        for i in 0..bits as usize {
-            let bit = off + i;
-            v |= (((data[bit / 8] >> (bit % 8)) & 1) as u32) << i;
-        }
-        v
-    }
-
-    #[test]
-    fn decode_8bit_handles_unaligned_offsets() {
-        // regression: the 8-bit fast path used to be skipped whenever the
-        // bit offset had a nonzero phase; the fixed path must match the
-        // generic decoder at every phase 0..8
-        let mut r = Rng::new(77);
-        let data: Vec<u8> = (0..64).map(|_| (r.next_u64() & 0xFF) as u8).collect();
-        for off in 0..16 {
-            let n = 40; // 40 codes of 8 bits from `off`
-            let mut out = vec![0f32; n];
-            decode_codes_f32(&data, off, 8, &mut out);
-            for (i, &got) in out.iter().enumerate() {
-                let expect = code_at(&data, off + 8 * i, 8) as f32;
-                assert_eq!(got, expect, "off {off} code {i}");
-            }
-        }
-    }
-
-    #[test]
-    fn decode_all_bits_at_all_phases() {
-        let mut r = Rng::new(78);
-        let data: Vec<u8> = (0..96).map(|_| (r.next_u64() & 0xFF) as u8).collect();
-        for bits in 1u8..=8 {
-            for off in 0..24 {
-                let n = 25;
-                let mut out = vec![0f32; n];
-                decode_codes_f32(&data, off, bits, &mut out);
-                for (i, &got) in out.iter().enumerate() {
-                    let expect = code_at(&data, off + bits as usize * i, bits) as f32;
-                    assert_eq!(got, expect, "bits {bits} off {off} code {i}");
-                }
-            }
-        }
-    }
-
-    #[test]
     fn qgemm_matches_dense_reference() {
         for bits in [1u8, 2, 3, 5, 7, 8] {
             let (rows, cols, batch) = (19, 37, 3);
@@ -493,16 +328,31 @@ mod tests {
 
     #[test]
     fn qgemm_pool_is_bitwise_equal_to_serial() {
-        let (rows, cols, batch) = (101, 64, 4); // > ROW_BLOCK: multiple blocks
-        let w = rand_vec(rows * cols, 7);
-        let p = pack_layer("l", &w, 4);
-        let x = rand_vec(batch * cols, 8);
-        let mut serial = vec![0f32; batch * rows];
-        let mut pooled = vec![0f32; batch * rows];
-        qgemm(&p.data, 4, p.scale, rows, cols, &x, batch, &mut serial, None);
+        // property: across random shapes and widths — including rows >
+        // ROW_BLOCK so several blocks race over the pool — pooled and
+        // serial execution agree bit-for-bit. The same suite runs under
+        // `--features simd` in CI (and kernels::simd pins that the lane
+        // primitives compute identical bits in both builds), so this
+        // test passing in both matrix entries certifies all four
+        // {serial, pooled} × {scalar, simd} configurations.
         let pool = ThreadPool::new(4);
-        qgemm(&p.data, 4, p.scale, rows, cols, &x, batch, &mut pooled, Some(&pool));
-        assert_eq!(serial, pooled);
+        crate::util::prop::check(25, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let rows = g.usize_in(1, 90);
+            let cols = g.usize_in(1, 70);
+            let batch = g.usize_in(1, 4);
+            let w = g.vec_normal(rows * cols, 0.5);
+            let p = pack_layer("l", &w, bits);
+            let x = g.vec_normal(batch * cols, 0.5);
+            let mut serial = vec![0f32; batch * rows];
+            let mut pooled = serial.clone();
+            qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut serial, None);
+            qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut pooled, Some(&pool));
+            crate::util::prop::ensure(
+                serial == pooled,
+                format!("bits {bits} rows {rows} cols {cols} batch {batch}: pooled != serial"),
+            )
+        });
     }
 
     #[test]
@@ -511,14 +361,6 @@ mod tests {
         let mut out = vec![0f32; 0];
         qgemm(&p.data, 3, p.scale, 4, 3, &[], 0, &mut out, None);
         qgemm(&p.data, 3, p.scale, 0, 3, &[0.0; 3], 1, &mut out, None);
-    }
-
-    #[test]
-    fn dot_handles_remainders() {
-        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
-        let b: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
-        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert_eq!(dot(&a, &b), expect);
     }
 
     #[test]
@@ -563,19 +405,39 @@ mod tests {
 
     #[test]
     fn qconv2d_pool_is_bitwise_equal_to_serial() {
-        // out_ch 13 > FILTER_BLOCK: several blocks race over the pool
-        let d = Conv2dDesc { in_ch: 3, out_ch: 13, kh: 3, kw: 3, stride: 2, pad: 1 };
-        let (in_h, in_w, batch) = (9, 11, 4);
-        let w = rand_vec(d.weight_numel().unwrap(), 21);
-        let p = pack_layer("c", &w, 5);
-        let x = rand_vec(batch * in_h * in_w * d.in_ch, 22);
-        let (oh, ow) = d.out_hw(in_h, in_w).unwrap();
-        let mut serial = vec![0f32; batch * oh * ow * d.out_ch];
-        let mut pooled = vec![0f32; serial.len()];
-        qconv2d(&p.data, 5, p.scale, &d, in_h, in_w, &x, batch, &mut serial, None);
+        // property twin of the qgemm test: random geometry with out_ch >
+        // FILTER_BLOCK so several filter blocks race over the pool (see
+        // there for why this also covers the scalar/simd axis)
         let pool = ThreadPool::new(4);
-        qconv2d(&p.data, 5, p.scale, &d, in_h, in_w, &x, batch, &mut pooled, Some(&pool));
-        assert_eq!(serial, pooled);
+        crate::util::prop::check(20, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let d = Conv2dDesc {
+                in_ch: g.usize_in(1, 3),
+                out_ch: g.usize_in(5, 13),
+                kh: g.usize_in(1, 3),
+                kw: g.usize_in(1, 3),
+                stride: g.usize_in(1, 2),
+                pad: g.usize_in(0, 1),
+            };
+            let in_h = g.usize_in(d.kh.max(3), 9);
+            let in_w = g.usize_in(d.kw.max(3), 9);
+            if d.out_hw(in_h, in_w).is_err() {
+                return Ok(());
+            }
+            let batch = g.usize_in(1, 4);
+            let w = g.vec_normal(d.weight_numel().unwrap(), 0.3);
+            let p = pack_layer("c", &w, bits);
+            let x = g.vec_normal(batch * in_h * in_w * d.in_ch, 0.3);
+            let (oh, ow) = d.out_hw(in_h, in_w).unwrap();
+            let mut serial = vec![0f32; batch * oh * ow * d.out_ch];
+            let mut pooled = serial.clone();
+            qconv2d(&p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &mut serial, None);
+            qconv2d(&p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &mut pooled, Some(&pool));
+            crate::util::prop::ensure(
+                serial == pooled,
+                format!("bits {bits} {d:?} {in_h}x{in_w} batch {batch}: pooled != serial"),
+            )
+        });
     }
 
     #[test]
@@ -584,16 +446,5 @@ mod tests {
         let p = pack_layer("c", &rand_vec(d.weight_numel().unwrap(), 1), 4);
         let mut out = vec![0f32; 0];
         qconv2d(&p.data, 4, p.scale, &d, 4, 4, &[], 0, &mut out, None);
-    }
-
-    #[test]
-    fn krange_clips_padding_windows() {
-        // k=3, stride=1, pad=1 over 4 inputs: first window hangs one tap
-        // off the left edge, last one off the right
-        assert_eq!(krange(0, 1, 1, 3, 4), (1, 3, 0));
-        assert_eq!(krange(1, 1, 1, 3, 4), (0, 3, 0));
-        assert_eq!(krange(3, 1, 1, 3, 4), (0, 2, 2));
-        // window entirely off the input: empty range
-        assert_eq!(krange(0, 1, 5, 3, 4).0, krange(0, 1, 5, 3, 4).1);
     }
 }

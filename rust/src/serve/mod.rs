@@ -14,7 +14,10 @@
 //!   keeps models resident in packed form (RAM cost = payload bytes);
 //! * [`kernels`] — quantized matmul + conv2d that decode the n-bit code
 //!   stream on the fly (1..=8 bits, non-byte-aligned), blocked per row /
-//!   per filter and parallelized over `util::threadpool`;
+//!   per filter and parallelized over `util::threadpool`. The inner
+//!   loops run on the shared kernel core ([`crate::kernels`]), whose
+//!   lane-structured primitives guarantee bit-identical logits across
+//!   {serial, pooled} × {scalar, simd} configurations;
 //! * [`batcher`] — dynamic batching with size- and deadline-triggered
 //!   flush plus queue-capacity admission control;
 //! * [`server`] — the front end wiring model + batcher + [`ServeMetrics`]
