@@ -283,7 +283,9 @@ impl<B: Backend> Trainer<B> {
         Ok(())
     }
 
-    /// Export the trained model as a physically bit-packed `.msqpack` v3
+    /// Export the trained model as a physically bit-packed `.msqpack`
+    /// (v3, or v4 when the backend's export layout interleaves
+    /// transformer records — see [`Backend::export_records`])
     /// (realizes the reported compression as actual bytes; the packed file
     /// re-imports through [`crate::quant::pack::PackedModel::load`] +
     /// [`Backend::set_q_weights`] and serves through `serve::registry`).
@@ -298,17 +300,29 @@ impl<B: Backend> Trainer<B> {
             input_hwc: self.backend.input_shape(),
             ..Default::default()
         };
-        for q in 0..self.backend.num_q_layers() {
-            let w = self.backend.q_weights(q)?;
-            let bits = self.bitstate.scheme.bits[q];
-            let mut layer = crate::quant::pack::pack_layer(
-                &self.backend.q_layer_name(q),
-                &w,
-                bits,
-            );
-            layer.op = self.backend.q_layer_op(q);
-            layer.relu = self.backend.q_layer_relu(q);
-            model.layers.push(layer);
+        use crate::runtime::backend::ExportRecord;
+        let records = self.backend.export_records().unwrap_or_else(|| {
+            (0..self.backend.num_q_layers())
+                .map(|q| ExportRecord::Quantized { q, gelu: false })
+                .collect()
+        });
+        for rec in records {
+            match rec {
+                ExportRecord::Quantized { q, gelu } => {
+                    let w = self.backend.q_weights(q)?;
+                    let bits = self.bitstate.scheme.bits[q];
+                    let mut layer = crate::quant::pack::pack_layer(
+                        &self.backend.q_layer_name(q),
+                        &w,
+                        bits,
+                    );
+                    layer.op = self.backend.q_layer_op(q);
+                    layer.relu = self.backend.q_layer_relu(q);
+                    layer.gelu = gelu;
+                    model.layers.push(layer);
+                }
+                ExportRecord::Structural(layer) => model.layers.push(layer),
+            }
         }
         model.save(path)?;
         Ok(model)

@@ -1,0 +1,160 @@
+//! Multi-head self-attention core shared by the serving kernel
+//! (`serve::kernels::qattention`) and the native trainer.
+//!
+//! Operates on one sample's already-projected Q/K/V activations, each a
+//! row-major `s × d` matrix with `d = heads · head_dim` and heads
+//! concatenated along the feature axis — so the per-head row slice
+//! `q[i·d + h·hd .. +hd]` is **contiguous**, and every score reduction
+//! runs through the shared lane-structured [`super::simd::dot`]. The
+//! probability-weighted context accumulates through [`super::simd::axpy`]
+//! in fixed ascending-key order. Together with the scalar softmax in
+//! [`super::norm`], that makes the whole attention block bit-identical
+//! across {serial, pooled} × {scalar, simd} — callers parallelize over
+//! samples (disjoint outputs) only.
+
+use super::norm::softmax_rows;
+use super::simd::{axpy, dot};
+
+/// Self-attention for one sample: `ctx = softmax(Q·Kᵀ/√hd)·V` per head,
+/// heads concatenated back to `s × d`. `q`/`k`/`v`/`ctx` are all
+/// `s × d` row-major with `d = heads · head_dim`. When `probs_out` is
+/// given (training cache) it receives the `heads · s · s` softmax
+/// matrices, head-major.
+pub fn mha_forward_sample(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    s: usize,
+    heads: usize,
+    head_dim: usize,
+    ctx: &mut [f32],
+    mut probs_out: Option<&mut [f32]>,
+) {
+    let d = heads * head_dim;
+    assert_eq!(q.len(), s * d, "mha: q is {} for {s}x{d}", q.len());
+    assert_eq!(k.len(), s * d);
+    assert_eq!(v.len(), s * d);
+    assert_eq!(ctx.len(), s * d);
+    if let Some(p) = probs_out.as_deref() {
+        assert_eq!(p.len(), heads * s * s, "mha: probs cache is {}", p.len());
+    }
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut scores = vec![0f32; s * s];
+    for h in 0..heads {
+        let o = h * head_dim;
+        for i in 0..s {
+            let qi = &q[i * d + o..i * d + o + head_dim];
+            for j in 0..s {
+                scores[i * s + j] = dot(qi, &k[j * d + o..j * d + o + head_dim]) * scale;
+            }
+        }
+        softmax_rows(&mut scores, s, s);
+        for i in 0..s {
+            let out = &mut ctx[i * d + o..i * d + o + head_dim];
+            out.fill(0.0);
+            for j in 0..s {
+                axpy(scores[i * s + j], &v[j * d + o..j * d + o + head_dim], out);
+            }
+        }
+        if let Some(p) = probs_out.as_deref_mut() {
+            p[h * s * s..(h + 1) * s * s].copy_from_slice(&scores);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Straight-line f64 reference with naive reductions.
+    fn ref_mha(q: &[f32], k: &[f32], v: &[f32], s: usize, heads: usize, hd: usize) -> Vec<f64> {
+        let d = heads * hd;
+        let mut ctx = vec![0f64; s * d];
+        for h in 0..heads {
+            let o = h * hd;
+            for i in 0..s {
+                let mut row = vec![0f64; s];
+                for (j, rj) in row.iter_mut().enumerate() {
+                    let mut acc = 0f64;
+                    for t in 0..hd {
+                        acc += q[i * d + o + t] as f64 * k[j * d + o + t] as f64;
+                    }
+                    *rj = acc / (hd as f64).sqrt();
+                }
+                let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = row.iter().map(|x| (x - max).exp()).collect();
+                let z: f64 = exps.iter().sum();
+                for t in 0..hd {
+                    let mut acc = 0f64;
+                    for (j, e) in exps.iter().enumerate() {
+                        acc += e / z * v[j * d + o + t] as f64;
+                    }
+                    ctx[i * d + o + t] = acc;
+                }
+            }
+        }
+        ctx
+    }
+
+    #[test]
+    fn matches_f64_reference() {
+        let (s, heads, hd) = (5, 2, 4);
+        let d = heads * hd;
+        let mut rng = Rng::new(31);
+        let q: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let mut ctx = vec![0f32; s * d];
+        mha_forward_sample(&q, &k, &v, s, heads, hd, &mut ctx, None);
+        let want = ref_mha(&q, &k, &v, s, heads, hd);
+        for (a, b) in ctx.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn probs_cache_rows_sum_to_one() {
+        let (s, heads, hd) = (4, 3, 2);
+        let d = heads * hd;
+        let mut rng = Rng::new(7);
+        let q: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal()).collect();
+        let mut ctx = vec![0f32; s * d];
+        let mut probs = vec![0f32; heads * s * s];
+        mha_forward_sample(&q, &k, &v, s, heads, hd, &mut ctx, Some(&mut probs));
+        for h in 0..heads {
+            for i in 0..s {
+                let sum: f32 = probs[h * s * s + i * s..h * s * s + (i + 1) * s].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "head {h} row {i}: {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_attention_is_identity_on_v() {
+        // s = 1: softmax over one score is 1.0, so ctx == v exactly
+        let (heads, hd) = (2, 3);
+        let d = heads * hd;
+        let q = vec![0.5f32; d];
+        let k = vec![-0.25f32; d];
+        let v: Vec<f32> = (0..d).map(|i| i as f32 - 2.0).collect();
+        let mut ctx = vec![0f32; d];
+        mha_forward_sample(&q, &k, &v, 1, heads, hd, &mut ctx, None);
+        assert_eq!(ctx, v);
+    }
+
+    #[test]
+    fn huge_projected_values_stay_finite() {
+        // large Q·K products exercise the softmax stability path end-to-end
+        let (s, heads, hd) = (3, 1, 8);
+        let d = hd;
+        let q = vec![1e18f32; s * d];
+        let k = vec![1e18f32; s * d];
+        let v = vec![0.5f32; s * d];
+        let mut ctx = vec![0f32; s * d];
+        mha_forward_sample(&q, &k, &v, s, heads, hd, &mut ctx, None);
+        assert!(ctx.iter().all(|x| x.is_finite()), "{ctx:?}");
+    }
+}

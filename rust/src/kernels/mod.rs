@@ -20,7 +20,12 @@
 //! * [`conv`] — conv2d window geometry ([`conv::krange`] clipping) and
 //!   receptive-field microkernels over NHWC×OHWI, shared verbatim by
 //!   serving and training so exported packs stay byte-faithful to what
-//!   the serve kernels execute.
+//!   the serve kernels execute;
+//! * [`norm`] — softmax / affine-free LayerNorm / GELU microkernels:
+//!   transcendentals scalar per element, reductions through [`simd`];
+//! * [`attn`] — the multi-head self-attention core over projected
+//!   Q/K/V activations, shared by `serve::kernels::qattention` and the
+//!   native ViT trainer.
 //!
 //! **Bit-exactness contract.** Kernels parallelize by partitioning
 //! *output cells* across thread-pool tasks and tile only to re-schedule
@@ -38,14 +43,18 @@
 //! raw pointer (`SendPtr`) — sound because blocks never overlap and the
 //! output buffer outlives the scoped `par_for`.
 
+pub mod attn;
 pub mod conv;
 pub mod decode;
 pub mod gemm;
+pub mod norm;
 pub mod simd;
 
+pub use attn::mha_forward_sample;
 pub use conv::{conv2d_forward_sample, krange, window_dot, window_sum};
 pub use decode::{decode_codes_f32, dequant_affine, rc_affine};
 pub use gemm::{matmul_acc, matmul_bt, matmul_t_acc};
+pub use norm::{gelu, gelu_grad, gelu_slice, layernorm_row, layernorm_rows, softmax_rows, LN_EPS};
 pub use simd::{axpy, dot, sum, LANES};
 
 use crate::util::threadpool::ThreadPool;

@@ -1,0 +1,185 @@
+//! Softmax, LayerNorm, and GELU microkernels for the transformer ops.
+//!
+//! Same bit-exactness contract as the rest of the kernel core: every
+//! reduction goes through the lane-structured [`super::simd`] primitives
+//! (`sum` for denominators and means, `dot` for variances), every
+//! transcendental (`exp`, `sqrt`, `tanh`) is applied scalar per element
+//! in a fixed order, and nothing here branches on the `simd` feature —
+//! so {serial, pooled} × {scalar, simd} all compute identical bits.
+//! Callers parallelize over *rows* (disjoint outputs) only.
+
+use super::simd::{dot, sum};
+
+/// In-place numerically stable softmax over each of `rows` rows of
+/// `cols` elements: subtract the row max before exponentiating, so
+/// arbitrarily large logits never overflow (`exp(x - max) <= 1`).
+/// Rows of `-inf`-free input always produce finite probabilities that
+/// sum to ~1.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "softmax_rows: {rows}x{cols} over {}", x.len());
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+        }
+        let denom = sum(row);
+        let inv = 1.0 / denom;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Affine-free LayerNorm of one row: `out = (x − mean) / √(var + eps)`.
+/// Returns `1/√(var + eps)` (training backwards cache). The packed
+/// format stores no γ/β (it is bias-free by design), so the serving and
+/// native paths both run the normalization alone.
+pub fn layernorm_row(x: &[f32], eps: f32, out: &mut [f32]) -> f32 {
+    let d = x.len();
+    assert_eq!(out.len(), d, "layernorm_row: out {} for {d} inputs", out.len());
+    if d == 0 {
+        return 0.0;
+    }
+    let mean = sum(x) / d as f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v - mean;
+    }
+    let var = dot(out, out) / d as f32;
+    let inv = 1.0 / (var + eps).sqrt();
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    inv
+}
+
+/// Row-batched [`layernorm_row`] (serving path; the per-row `inv` is
+/// discarded).
+pub fn layernorm_rows(x: &[f32], rows: usize, cols: usize, eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols, "layernorm_rows: {rows}x{cols} over {}", x.len());
+    assert_eq!(out.len(), x.len());
+    for r in 0..rows {
+        layernorm_row(&x[r * cols..(r + 1) * cols], eps, &mut out[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// The LayerNorm epsilon both the serving executor and the native
+/// trainer use — exported packs must normalize exactly as training did.
+pub const LN_EPS: f32 = 1e-5;
+
+/// GELU, tanh approximation (the ViT/BERT standard):
+/// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`. Scalar per element.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // √(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of [`gelu`] (tanh approximation), used by the training backward.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Apply [`gelu`] over a slice.
+pub fn gelu_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![0.1f32, 2.0, -1.0, 3.0, 0.0, 0.5];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+            assert!(x[r * 3..(r + 1) * 3].iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn softmax_is_stable_under_huge_logits() {
+        // raw exp would overflow f32 at ~88; max-subtraction must keep
+        // everything finite for logits far beyond that, both signs
+        for &scale in &[100.0f32, 1e4, 1e8, 3e38] {
+            let mut x = vec![scale, scale - 1.0, scale - 2.0, -scale];
+            softmax_rows(&mut x, 1, 4);
+            assert!(x.iter().all(|v| v.is_finite()), "scale {scale}: {x:?}");
+            let s: f32 = x.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "scale {scale}: sum {s}");
+            assert!(x[0] > x[1] && x[1] > x[2], "ordering lost at {scale}: {x:?}");
+        }
+    }
+
+    #[test]
+    fn softmax_matches_f64_reference() {
+        let logits = [0.3f32, -1.2, 2.5, 0.0, 1.1];
+        let mut x = logits.to_vec();
+        softmax_rows(&mut x, 1, 5);
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, |a, v| a.max(v as f64));
+        let exps: Vec<f64> = logits.iter().map(|&v| ((v as f64) - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        for (got, want) in x.iter().zip(exps.iter().map(|e| e / z)) {
+            assert!((*got as f64 - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = vec![0f32; 8];
+        let inv = layernorm_row(&x, LN_EPS, &mut out);
+        assert!(inv > 0.0);
+        let mean: f32 = out.iter().sum::<f32>() / 8.0;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+        assert!(mean.abs() < 1e-6, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn layernorm_constant_row_is_finite() {
+        // zero variance: eps keeps the inverse finite, output all zeros
+        let x = vec![3.5f32; 6];
+        let mut out = vec![1.0f32; 6];
+        layernorm_row(&x, LN_EPS, &mut out);
+        assert!(out.iter().all(|v| v.is_finite() && v.abs() < 1e-3), "{out:?}");
+    }
+
+    #[test]
+    fn gelu_known_values_and_limits() {
+        assert_eq!(gelu(0.0), 0.0);
+        // gelu(x) → x for large x, → 0 for very negative x
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        // tanh-approx reference value at 1.0: 0.5·(1 + tanh(0.8412)) ≈ 0.8412
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4, "{}", gelu(1.0));
+        // monotone on a coarse grid
+        let mut prev = f32::NEG_INFINITY;
+        for i in -40..=40 {
+            let v = gelu(i as f32 * 0.25);
+            assert!(v >= prev - 1e-6);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for i in -20..=20 {
+            let x = i as f32 * 0.3;
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            let an = gelu_grad(x);
+            assert!((fd - an).abs() < 1e-3, "x={x}: fd {fd} vs {an}");
+        }
+    }
+}

@@ -44,7 +44,7 @@ const VALUE_OPTS: &[&str] = &[
     "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
     "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden", "host", "port",
     "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s", "arch",
-    "size", "channels",
+    "size", "channels", "seq", "heads", "depth", "dim",
 ];
 
 fn main() -> Result<()> {
@@ -68,7 +68,8 @@ fn main() -> Result<()> {
                  \x20           [--train-size N] [--test-size N] [--seed S] [--out run.json]\n\
                  \x20           [--export model.msqpack] [--channels 8,16]\n\
                  \x20           (native: pure-Rust training, default build — --model mlp\n\
-                 \x20            [--hidden …] or --model conv [--channels …];\n\
+                 \x20            [--hidden …], --model conv [--channels …], or\n\
+                 \x20            --model vit-tiny [--dim 16 --heads 2 --depth 2];\n\
                  \x20            pjrt: XLA artifacts, needs --features pjrt)\n\
                  serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
@@ -78,17 +79,20 @@ fn main() -> Result<()> {
                  gateway:    --packed [name=]model.msqpack … [--host 127.0.0.1] [--port 8080]\n\
                  \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
-                 \x20           [--threads 0] [--run-secs N]\n\
+                 \x20           [--threads 0] [--run-secs N] [--quiet]\n\
                  \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
                  \x20            GET /metrics, POST /admin/reload; --port 0 = ephemeral)\n\
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
                  \x20           [--json]\n\
-                 pack-synth: [--arch mlp|conv] [--dims 3072,256,10] [--bits 4,8] [--seed S]\n\
-                 \x20           [--size 32] --out demo.msqpack\n\
+                 pack-synth: [--arch mlp|conv|transformer] [--dims 3072,256,10] [--bits 4,8]\n\
+                 \x20           [--seed S] [--size 32] [--seq 8 --heads 2 --depth 2]\n\
+                 \x20           --out demo.msqpack\n\
                  \x20           (mlp: --dims are layer widths; conv: --dims are\n\
                  \x20            in_ch,channels…,classes over a --size x --size input,\n\
-                 \x20            3x3 stride-2 pad-1 stages + linear head, pack v3)"
+                 \x20            3x3 stride-2 pad-1 stages + linear head, pack v3;\n\
+                 \x20            transformer: --dims are token_dim,model_dim,classes over\n\
+                 \x20            --seq tokens, pre-norm MHA/GELU-MLP blocks, pack v4)"
             );
             Ok(())
         }
@@ -200,6 +204,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         max_conns: args.opt_usize("max-conns", 64),
         read_timeout: Duration::from_millis(args.opt_u64("read-timeout-ms", 250)),
         limits,
+        access_log: !args.flag("quiet"),
         server: server_config(args),
     };
     let gw = msq::net::Gateway::start(cfg, &models)?;
@@ -395,11 +400,15 @@ fn print_response(id: &Json, resp: Option<InferResponse>) {
 /// training path. `--arch mlp` (default) reads `--dims` as layer
 /// widths; `--arch conv` reads `--dims` as `in_ch,channels…,classes`
 /// over a `--size × --size` input (3×3 stride-2 pad-1 conv stages with
-/// fused ReLU, then a linear head — pack v3 descriptors throughout).
+/// fused ReLU, then a linear head — pack v3 descriptors throughout);
+/// `--arch transformer` reads `--dims` as `token_dim,model_dim,classes`
+/// over `--seq` tokens (`--depth` pre-norm MHA(`--heads`)/GELU-MLP
+/// blocks — pack v4 descriptors, `2 + 6·depth` quantized layers).
 fn cmd_pack_synth(args: &Args) -> Result<()> {
     let arch = args.opt_or("arch", "mlp");
     let default_dims = match arch {
         "conv" => "3,8,16,10",
+        "transformer" => "8,16,10",
         _ => "3072,256,10",
     };
     let dims: Vec<usize> = args
@@ -411,13 +420,15 @@ fn cmd_pack_synth(args: &Args) -> Result<()> {
     if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
         bail!("--dims needs >= 2 nonzero comma-separated widths, got {dims:?}");
     }
+    let depth = args.opt_usize("depth", 2);
     let bits: Vec<u8> = args
         .opt("bits")
         .unwrap_or("4")
         .split(',')
         .map(|s| s.trim().parse::<u8>().with_context(|| format!("bad bits {s:?}")))
         .collect::<Result<_>>()?;
-    let nlayers = dims.len() - 1;
+    // transformer layer count comes from the block structure, not --dims
+    let nlayers = if arch == "transformer" { 2 + 6 * depth } else { dims.len() - 1 };
     let bits: Vec<u8> = if bits.len() == 1 {
         vec![bits[0]; nlayers]
     } else if bits.len() == nlayers {
@@ -436,7 +447,25 @@ fn cmd_pack_synth(args: &Args) -> Result<()> {
             let size = args.opt_usize("size", 32);
             PackedModel::synth_conv(size, size, &dims, &bits, seed)?
         }
-        other => bail!("--arch must be mlp|conv, got {other:?}"),
+        "transformer" => {
+            if dims.len() != 3 {
+                bail!(
+                    "--arch transformer reads --dims as token_dim,model_dim,classes \
+                     (3 values), got {dims:?}"
+                );
+            }
+            PackedModel::synth_transformer(
+                args.opt_usize("seq", 8),
+                dims[0],
+                dims[1],
+                args.opt_usize("heads", 2),
+                depth,
+                dims[2],
+                &bits,
+                seed,
+            )?
+        }
+        other => bail!("--arch must be mlp|conv|transformer, got {other:?}"),
     };
     pm.save(Path::new(out))?;
     println!(
@@ -513,7 +542,7 @@ pub fn config_from_args(args: &Args) -> MsqConfig {
             cfg.alpha = 0.3;
             cfg.lr0 = 0.01;
         }
-        "vit_t" => {
+        "vit_t" | "vit-tiny" => {
             cfg.interval = 5;
             cfg.lam = 8e-6;
             cfg.alpha = 0.35;
@@ -599,11 +628,26 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Build the native backend for `cfg` over the dataset's shape:
-/// `--model mlp` (an MLP over flattened images, `--hidden` widths) or
+/// `--model mlp` (an MLP over flattened images, `--hidden` widths),
 /// `--model conv` (3×3 stride-2 conv stages over NHWC images,
-/// `--channels` widths, exported with pack v3 conv descriptors).
+/// `--channels` widths, exported with pack v3 conv descriptors), or
+/// `--model vit-tiny` (a pre-norm ViT with one token per image row,
+/// exported with pack v4 transformer descriptors).
 fn native_backend(cfg: &MsqConfig, ds: &Dataset, args: &Args) -> Result<NativeBackend> {
     match cfg.model.as_str() {
+        "vit-tiny" => NativeBackend::vit(
+            &cfg.model,
+            &cfg.method,
+            ds.spec.height, // one token per image row…
+            ds.spec.width * ds.spec.channels, // …of width·channels features
+            args.opt_usize("dim", 16),
+            args.opt_usize("heads", 2),
+            args.opt_usize("depth", 2),
+            ds.spec.classes,
+            cfg.batch,
+            cfg.seed,
+            args.opt_usize("threads", 0),
+        ),
         "mlp" => {
             let hidden: Vec<usize> = args
                 .opt("hidden")
@@ -647,7 +691,7 @@ fn native_backend(cfg: &MsqConfig, ds: &Dataset, args: &Args) -> Result<NativeBa
             )
         }
         other => bail!(
-            "--backend native trains --model mlp|conv over synthetic images; \
+            "--backend native trains --model mlp|conv|vit-tiny over synthetic images; \
              use --backend pjrt (--features pjrt) for {other:?}"
         ),
     }
@@ -795,31 +839,63 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     let ds = dataset_for(&cfg.model, args);
     let (acc, loss) = match backend_kind(args) {
         "native" => {
-            if packed.has_conv() {
+            if packed.has_transformer() {
+                let mut cfg = cfg;
+                let (seq, token_dim, dim, heads, depth, classes) = vit_geometry(&packed)?;
+                if seq * token_dim != ds.spec.input_dim() || classes != ds.spec.classes {
+                    bail!(
+                        "transformer pack wants {seq}x{token_dim} inputs over {classes} \
+                         classes; dataset {:?} provides {} over {} — pass --model vit-tiny \
+                         to evaluate on the in64 synthetic set",
+                        ds.spec.name,
+                        ds.spec.input_dim(),
+                        ds.spec.classes
+                    );
+                }
+                cfg.model = "vit-tiny".into();
+                let backend = NativeBackend::vit(
+                    &cfg.model,
+                    &cfg.method,
+                    seq,
+                    token_dim,
+                    dim,
+                    heads,
+                    depth,
+                    classes,
+                    cfg.batch,
+                    cfg.seed,
+                    args.opt_usize("threads", 0),
+                )?;
+                let mut trainer = Trainer::from_backend(backend, cfg)?;
+                import_packed(&mut trainer, &packed)?;
+                trainer.evaluate(&ds)?
+            } else if packed.has_conv() {
                 bail!(
                     "eval-packed --backend native rebuilds MLPs from the dim chain; conv \
                      packs evaluate through `msq serve`/`msq gateway` (logits match the \
                      dense reference — see the conformance tests)"
                 );
+            } else {
+                let mut cfg = cfg;
+                cfg.model = "mlp".into();
+                // the registry owns the dim-chain derivation (shared with the
+                // serve/gateway paths); the dataset fixes the input width here
+                let hidden =
+                    msq::serve::registry::mlp_hidden_dims(&packed, ds.spec.input_dim())?;
+                let backend = NativeBackend::mlp(
+                    &cfg.model,
+                    &cfg.method,
+                    ds.spec.input_dim(),
+                    &hidden,
+                    ds.spec.classes,
+                    cfg.batch,
+                    cfg.seed,
+                    args.opt_usize("threads", 0),
+                )?;
+                let mut trainer = Trainer::from_backend(backend, cfg)?;
+                import_packed(&mut trainer, &packed)?;
+                trainer.evaluate(&ds)?
             }
-            let mut cfg = cfg;
-            cfg.model = "mlp".into();
-            // the registry owns the dim-chain derivation (shared with the
-            // serve/gateway paths); the dataset fixes the input width here
-            let hidden = msq::serve::registry::mlp_hidden_dims(&packed, ds.spec.input_dim())?;
-            let backend = NativeBackend::mlp(
-                &cfg.model,
-                &cfg.method,
-                ds.spec.input_dim(),
-                &hidden,
-                ds.spec.classes,
-                cfg.batch,
-                cfg.seed,
-                args.opt_usize("threads", 0),
-            )?;
-            let mut trainer = Trainer::from_backend(backend, cfg)?;
-            import_packed(&mut trainer, &packed)?;
-            trainer.evaluate(&ds)?
         }
         "pjrt" => eval_packed_pjrt(&cfg, &packed, &ds)?,
         other => bail!("--backend must be native|pjrt, got {other:?}"),
@@ -832,14 +908,55 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Unpack every layer into the trainer's backend + bit-state.
+/// Unpack every payload layer into the trainer's backend + bit-state.
+/// Structural v4 records (seqview / layernorm / attention / residual /
+/// meanpool) carry no weights and are skipped — the q-th payload record
+/// maps to the backend's q-th quantized layer, exactly the order the
+/// export wrote them.
 fn import_packed<B: Backend>(trainer: &mut Trainer<B>, packed: &PackedModel) -> Result<()> {
-    for (q, layer) in packed.layers.iter().enumerate() {
+    let mut q = 0usize;
+    for layer in &packed.layers {
+        if layer.op.is_structural() {
+            continue;
+        }
         let w = msq::quant::pack::unpack_layer(layer)?;
         trainer.backend.set_q_weights(q, &w)?;
         trainer.bitstate.scheme.bits[q] = layer.bits;
+        q += 1;
+    }
+    if q != trainer.backend.num_q_layers() {
+        bail!(
+            "pack carries {q} payload layers but the backend has {}",
+            trainer.backend.num_q_layers()
+        );
     }
     Ok(())
+}
+
+/// Derive `(seq, token_dim, dim, heads, depth, classes)` from a v4
+/// transformer pack: the leading seqview fixes the token grid, the
+/// attention records fix heads/dim/depth, the trailing head fixes the
+/// class count.
+fn vit_geometry(pm: &PackedModel) -> Result<(usize, usize, usize, usize, usize, usize)> {
+    use msq::quant::pack::LayerOp;
+    let (seq, token_dim) = match pm.layers.first().map(|l| &l.op) {
+        Some(&LayerOp::SeqView { seq, dim }) => (seq, dim),
+        _ => bail!("transformer pack must start with a seqview record"),
+    };
+    let mut geom = None;
+    let mut depth = 0usize;
+    for l in &pm.layers {
+        if let LayerOp::Attention(a) = &l.op {
+            geom = Some((a.num_heads, a.num_heads * a.head_dim));
+            depth += 1;
+        }
+    }
+    let (heads, dim) = geom.context("transformer pack has no attention record")?;
+    let head = pm.layers.last().context("transformer pack has no head")?;
+    if dim == 0 || head.numel % dim != 0 || head.numel == 0 {
+        bail!("head layer {:?} ({} weights) does not factor over dim {dim}", head.name, head.numel);
+    }
+    Ok((seq, token_dim, dim, heads, depth, head.numel / dim))
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -30,6 +30,18 @@ enum Op {
     Relu { x: NodeId },
     /// fake-quant with straight-through backward
     QuantSte { x: NodeId },
+    /// free re-dimension of the same row-major buffer (patchify etc.)
+    Reshape { x: NodeId },
+    /// affine-free per-row LayerNorm; caches 1/√(var+eps) per row
+    LayerNorm { x: NodeId, inv: Vec<f32> },
+    Gelu { x: NodeId },
+    /// elementwise residual sum (same shape)
+    Add { a: NodeId, b: NodeId },
+    /// mean over the token axis: (m·s)×d → m×d
+    MeanPool { x: NodeId, s: usize },
+    /// multi-head self-attention over projected Q/K/V ((m·s)×d each);
+    /// caches the m·heads·s·s softmax matrices for the backward
+    Attention { q: NodeId, k: NodeId, v: NodeId, s: usize, heads: usize, head_dim: usize, probs: Vec<f32> },
     /// scalar mean cross-entropy; caches probs for the backward
     SoftmaxCe { logits: NodeId, labels: Vec<i32>, probs: Vec<f32> },
 }
@@ -150,6 +162,93 @@ impl<'p> Tape<'p> {
         self.push(out, Op::QuantSte { x })
     }
 
+    /// Reinterpret `x`'s row-major buffer as `rows × cols` (numel must
+    /// match). Forward copies; backward passes the gradient through.
+    pub fn reshape(&mut self, x: NodeId, rows: usize, cols: usize) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        assert_eq!(src.numel(), rows * cols, "reshape: numel mismatch");
+        let out = Tensor::from_vec(rows, cols, src.data.clone());
+        self.push(out, Op::Reshape { x })
+    }
+
+    /// Affine-free LayerNorm over each row (tokens are rows).
+    pub fn layer_norm(&mut self, x: NodeId) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        let (rows, cols) = (src.rows, src.cols);
+        let mut out = Tensor::zeros(rows, cols);
+        let mut inv = vec![0f32; rows];
+        ops::layernorm_forward(&src.data, rows, cols, &mut out.data, &mut inv);
+        self.push(out, Op::LayerNorm { x, inv })
+    }
+
+    pub fn gelu(&mut self, x: NodeId) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        let mut out = Tensor::zeros(src.rows, src.cols);
+        ops::gelu_forward(&src.data, &mut out.data);
+        self.push(out, Op::Gelu { x })
+    }
+
+    /// Elementwise `a + b` (residual connection; shapes must match).
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (ta, tb) = (&self.nodes[a.0].t, &self.nodes[b.0].t);
+        assert_eq!((ta.rows, ta.cols), (tb.rows, tb.cols), "add: shape mismatch");
+        let mut out = Tensor::zeros(ta.rows, ta.cols);
+        for ((o, &u), &w) in out.data.iter_mut().zip(&ta.data).zip(&tb.data) {
+            *o = u + w;
+        }
+        self.push(out, Op::Add { a, b })
+    }
+
+    /// Mean over the token axis: `(m·s) × d` → `m × d`.
+    pub fn mean_pool(&mut self, x: NodeId, s: usize) -> NodeId {
+        let src = &self.nodes[x.0].t;
+        assert!(s > 0 && src.rows % s == 0, "mean_pool: rows {} vs seq {s}", src.rows);
+        let (m, d) = (src.rows / s, src.cols);
+        let mut out = Tensor::zeros(m, d);
+        ops::mean_pool_forward(&src.data, m, s, d, &mut out.data);
+        self.push(out, Op::MeanPool { x, s })
+    }
+
+    /// Multi-head self-attention over already-projected Q/K/V token
+    /// streams (each `(m·s) × heads·head_dim`); returns the context
+    /// stream of the same shape.
+    pub fn attention(
+        &mut self,
+        q: NodeId,
+        k: NodeId,
+        v: NodeId,
+        s: usize,
+        heads: usize,
+        head_dim: usize,
+    ) -> NodeId {
+        let (rows, cols) = (self.nodes[q.0].t.rows, self.nodes[q.0].t.cols);
+        for &n in &[k, v] {
+            assert_eq!(
+                (self.nodes[n.0].t.rows, self.nodes[n.0].t.cols),
+                (rows, cols),
+                "attention: q/k/v shape mismatch"
+            );
+        }
+        assert_eq!(cols, heads * head_dim, "attention: cols vs heads·head_dim");
+        assert!(s > 0 && rows % s == 0, "attention: rows {rows} vs seq {s}");
+        let m = rows / s;
+        let mut out = Tensor::zeros(rows, cols);
+        let mut probs = vec![0f32; m * heads * s * s];
+        ops::attention_forward(
+            &self.nodes[q.0].t.data,
+            &self.nodes[k.0].t.data,
+            &self.nodes[v.0].t.data,
+            m,
+            s,
+            heads,
+            head_dim,
+            &mut out.data,
+            &mut probs,
+            self.pool,
+        );
+        self.push(out, Op::Attention { q, k, v, s, heads, head_dim, probs })
+    }
+
     /// Mean softmax cross-entropy of `m×c` logits against class labels.
     pub fn softmax_ce(&mut self, logits: NodeId, labels: &[i32]) -> CeOut {
         let (m, c) = (self.nodes[logits.0].t.rows, self.nodes[logits.0].t.cols);
@@ -222,9 +321,56 @@ impl<'p> Tape<'p> {
                     ops::relu_backward(&self.nodes[x.0].t.data, &g, &mut dx);
                     self.acc_grad(x, &dx);
                 }
-                Op::QuantSte { x } => {
-                    // straight-through: pass the gradient unchanged
+                Op::QuantSte { x } | Op::Reshape { x } => {
+                    // straight-through / same buffer: pass the gradient unchanged
                     self.acc_grad(x, &g);
+                }
+                Op::LayerNorm { x, inv } => {
+                    // xhat is this node's own output
+                    let (rows, cols) = (self.nodes[i].t.rows, self.nodes[i].t.cols);
+                    let mut dx = vec![0f32; rows * cols];
+                    let xhat = std::mem::take(&mut self.nodes[i].t.data);
+                    ops::layernorm_backward(&xhat, &inv, &g, rows, cols, &mut dx);
+                    self.nodes[i].t.data = xhat;
+                    self.acc_grad(x, &dx);
+                }
+                Op::Gelu { x } => {
+                    let mut dx = vec![0f32; g.len()];
+                    ops::gelu_backward(&self.nodes[x.0].t.data, &g, &mut dx);
+                    self.acc_grad(x, &dx);
+                }
+                Op::Add { a, b } => {
+                    self.acc_grad(a, &g);
+                    self.acc_grad(b, &g);
+                }
+                Op::MeanPool { x, s } => {
+                    let (m, d) = (self.nodes[i].t.rows, self.nodes[i].t.cols);
+                    let mut dx = vec![0f32; m * s * d];
+                    ops::mean_pool_backward(&g, m, s, d, &mut dx);
+                    self.acc_grad(x, &dx);
+                }
+                Op::Attention { q, k, v, s, heads, head_dim, probs } => {
+                    let m = self.nodes[q.0].t.rows / s;
+                    let n = self.nodes[q.0].t.numel();
+                    let (mut dq, mut dk, mut dv) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+                    ops::attention_backward(
+                        &self.nodes[q.0].t.data,
+                        &self.nodes[k.0].t.data,
+                        &self.nodes[v.0].t.data,
+                        &probs,
+                        &g,
+                        m,
+                        s,
+                        heads,
+                        head_dim,
+                        &mut dq,
+                        &mut dk,
+                        &mut dv,
+                        self.pool,
+                    );
+                    self.acc_grad(q, &dq);
+                    self.acc_grad(k, &dk);
+                    self.acc_grad(v, &dv);
                 }
                 Op::SoftmaxCe { logits, labels, probs } => {
                     let (m, c) = (self.nodes[logits.0].t.rows, self.nodes[logits.0].t.cols);

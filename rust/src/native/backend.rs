@@ -1,8 +1,9 @@
 //! [`NativeBackend`]: the pure-Rust implementation of
 //! [`runtime::backend::Backend`] — Algorithm 1 with zero XLA linkage.
 //!
-//! Models are quantized MLPs or small conv nets over the synthetic
-//! images (the shape families `msq serve` executes): every layer's
+//! Models are quantized MLPs, small conv nets, or pre-norm ViTs over
+//! the synthetic images (the shape families `msq serve` executes —
+//! see [`Topology`]): every layer's
 //! weights pass through the RoundClamp (or DoReFa) fake-quant STE at
 //! that layer's *runtime* bit-width before the matmul/conv, exactly like
 //! the AOT graphs treat `bits` as an input tensor. Conv layers run NHWC
@@ -18,13 +19,13 @@
 
 use anyhow::{bail, ensure, Result};
 
-use super::autograd::Tape;
+use super::autograd::{NodeId, Tape};
 use super::ops::{self, Quantizer};
 use super::optim::SgdMomentum;
 use super::tensor::Tensor;
-use crate::quant::pack::{Conv2dDesc, LayerOp};
+use crate::quant::pack::{AttnDesc, Conv2dDesc, LayerOp, PackedLayer};
 use crate::quant::{lsb_proxy_dorefa, lsb_proxy_roundclamp, to_unit};
-use crate::runtime::backend::{Backend, LayerStats, StepStats};
+use crate::runtime::backend::{Backend, ExportRecord, LayerStats, StepStats};
 use crate::util::prng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -36,6 +37,20 @@ enum ParamOp {
     /// NHWC conv over an `in_h × in_w` map: `out_ch × kh·kw·in_ch`
     /// weights (OHWI, the pack v3 conv layout).
     Conv { d: Conv2dDesc, in_h: usize, in_w: usize },
+}
+
+/// How the parameter layers compose into a forward graph.
+#[derive(Clone, Copy, Debug)]
+enum Topology {
+    /// The classic sequential stack: layer → ReLU → layer → … → head.
+    Chain,
+    /// Pre-norm ViT over `seq` tokens of `token_dim` features: linear
+    /// embed to `dim`, `depth` blocks of
+    /// LN → MHA(`heads`) → +res → LN → GELU-MLP(2·dim) → +res, final
+    /// LN, mean-pool, linear head. Parameter layers sit flat in
+    /// quantized-export order: embed, per block wq/wk/wv/wproj/fc1/fc2,
+    /// head.
+    Vit { seq: usize, token_dim: usize, dim: usize, heads: usize, depth: usize },
 }
 
 /// One parameter layer: weights, a zero bias, the weight momentum
@@ -66,6 +81,7 @@ pub struct NativeBackend {
     input_hwc: (usize, usize, usize),
     classes: usize,
     layers: Vec<ParamLayer>,
+    topology: Topology,
     opt: SgdMomentum,
     pool: Option<ThreadPool>,
     quantizer: Quantizer,
@@ -123,6 +139,7 @@ impl NativeBackend {
             input_hwc: (0, 0, 0),
             classes,
             layers,
+            topology: Topology::Chain,
             opt: SgdMomentum::default(),
             pool,
             quantizer,
@@ -189,6 +206,73 @@ impl NativeBackend {
             input_hwc: (in_h, in_w, in_ch),
             classes,
             layers,
+            topology: Topology::Chain,
+            opt: SgdMomentum::default(),
+            pool,
+            quantizer,
+        })
+    }
+
+    /// Quantized pre-norm ViT over `seq` tokens of `token_dim` features
+    /// (the flat input reshapes row-major — e.g. one token per image
+    /// row): linear embed to `dim`, `depth` blocks of
+    /// LN → MHA(`heads`) → +residual → LN → GELU-MLP(2·dim) → +residual,
+    /// a final LN, mean-pool over tokens, and a linear head. Quantized
+    /// layers in export order (embed, per block wq/wk/wv/wproj/fc1/fc2,
+    /// head — `2 + 6·depth` total) with the exact record layout of
+    /// `pack-synth --arch transformer` (see [`Backend::export_records`]),
+    /// so train → pack → serve works for transformers end-to-end.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vit(
+        model: &str,
+        method: &str,
+        seq: usize,
+        token_dim: usize,
+        dim: usize,
+        heads: usize,
+        depth: usize,
+        classes: usize,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<NativeBackend> {
+        let quantizer = quantizer_for(method)?;
+        ensure!(
+            seq > 0 && token_dim > 0 && dim > 0 && heads > 0 && depth > 0 && classes > 1
+                && batch > 0,
+            "bad vit config"
+        );
+        ensure!(dim % heads == 0, "vit: dim {dim} not divisible by {heads} heads");
+        let hidden = 2 * dim;
+        let mut rng = Rng::new(seed);
+        let mut dense = |name: String, rows: usize, cols: usize| ParamLayer {
+            name,
+            w: Tensor::he_normal(rows, cols, &mut rng),
+            b: Tensor::zeros(1, rows),
+            vw: vec![0f32; rows * cols],
+            op: ParamOp::Dense,
+        };
+        let mut layers = vec![dense("embed".into(), dim, token_dim)];
+        for b in 0..depth {
+            for w in ["wq", "wk", "wv", "wproj"] {
+                layers.push(dense(format!("blk{b}.{w}"), dim, dim));
+            }
+            layers.push(dense(format!("blk{b}.fc1"), hidden, dim));
+            layers.push(dense(format!("blk{b}.fc2"), dim, hidden));
+        }
+        layers.push(dense("head".into(), classes, dim));
+        drop(dense);
+        let threads = if threads == 0 { ThreadPool::default_size() } else { threads };
+        let pool = (threads > 1).then(|| ThreadPool::new(threads));
+        Ok(NativeBackend {
+            model: model.to_string(),
+            method: method.to_string(),
+            batch,
+            input_dim: seq * token_dim,
+            input_hwc: (0, 0, 0),
+            classes,
+            layers,
+            topology: Topology::Vit { seq, token_dim, dim, heads, depth },
             opt: SgdMomentum::default(),
             pool,
             quantizer,
@@ -207,6 +291,84 @@ impl NativeBackend {
         Ok(m)
     }
 
+    /// Record the full forward graph on `tape` — the ONE statement of
+    /// each topology, shared by training ([`Self::grads`]) and
+    /// inference ([`Self::forward_logits`]) so the eval forward can
+    /// never diverge from what the gradients were taken through.
+    /// Returns the per-layer `(w, b)` leaves and the logits node.
+    /// `bits` of `None` runs the float network (the Hessian-probe
+    /// contract).
+    fn build_graph(
+        &self,
+        tape: &mut Tape,
+        bits: Option<&[f32]>,
+        n_act: f32,
+        x: &[f32],
+        m: usize,
+    ) -> (Vec<(NodeId, NodeId)>, NodeId) {
+        let wids: Vec<(NodeId, NodeId)> = self
+            .layers
+            .iter()
+            .map(|layer| (tape.leaf(layer.w.clone()), tape.leaf(layer.b.clone())))
+            .collect();
+        let weff: Vec<NodeId> = wids
+            .iter()
+            .enumerate()
+            .map(|(l, &(w, _))| match bits {
+                Some(bits) => tape.quant_ste(w, bits[l], self.quantizer),
+                None => w,
+            })
+            .collect();
+        let x0 = tape.leaf(Tensor::from_vec(m, self.input_dim, x.to_vec()));
+        let last = self.layers.len() - 1;
+        let logits = match self.topology {
+            Topology::Chain => {
+                let mut h = x0;
+                for (l, layer) in self.layers.iter().enumerate() {
+                    h = match layer.op {
+                        ParamOp::Dense => tape.linear(h, weff[l], wids[l].1),
+                        ParamOp::Conv { d, in_h, in_w } => {
+                            tape.conv2d(h, weff[l], wids[l].1, d, in_h, in_w)
+                        }
+                    };
+                    if l < last {
+                        h = tape.relu(h);
+                        if bits.is_some() && n_act > 0.0 {
+                            h = tape.quant_ste(h, n_act, self.quantizer);
+                        }
+                    }
+                }
+                h
+            }
+            Topology::Vit { seq, token_dim, dim, heads, depth } => {
+                let tokens = tape.reshape(x0, m * seq, token_dim);
+                let mut h = tape.linear(tokens, weff[0], wids[0].1);
+                for b in 0..depth {
+                    let base = 1 + 6 * b; // this block's wq
+                    let n1 = tape.layer_norm(h);
+                    let qn = tape.linear(n1, weff[base], wids[base].1);
+                    let kn = tape.linear(n1, weff[base + 1], wids[base + 1].1);
+                    let vn = tape.linear(n1, weff[base + 2], wids[base + 2].1);
+                    let ctx = tape.attention(qn, kn, vn, seq, heads, dim / heads);
+                    let at = tape.linear(ctx, weff[base + 3], wids[base + 3].1);
+                    let r1 = tape.add(at, h);
+                    let n2 = tape.layer_norm(r1);
+                    let h1 = tape.linear(n2, weff[base + 4], wids[base + 4].1);
+                    let mut hg = tape.gelu(h1);
+                    if bits.is_some() && n_act > 0.0 {
+                        hg = tape.quant_ste(hg, n_act, self.quantizer);
+                    }
+                    let h2 = tape.linear(hg, weff[base + 5], wids[base + 5].1);
+                    h = tape.add(h2, r1);
+                }
+                let nf = tape.layer_norm(h);
+                let pooled = tape.mean_pool(nf, seq);
+                tape.linear(pooled, weff[last], wids[last].1)
+            }
+        };
+        (wids, logits)
+    }
+
     /// Forward + backward on one batch; returns per-layer `(dw, db)`
     /// plus `(mean_ce, correct)`. `bits` of `None` runs the float
     /// network (the Hessian-probe contract).
@@ -219,29 +381,8 @@ impl NativeBackend {
     ) -> Result<(LayerGrads, f32, f32)> {
         let m = self.check_batch(x, y)?;
         let mut tape = Tape::new(self.pool.as_ref());
-        let mut h = tape.leaf(Tensor::from_vec(m, self.input_dim, x.to_vec()));
-        let last = self.layers.len() - 1;
-        let mut wids = Vec::with_capacity(self.layers.len());
-        for (l, layer) in self.layers.iter().enumerate() {
-            let w = tape.leaf(layer.w.clone());
-            let b = tape.leaf(layer.b.clone());
-            wids.push((w, b));
-            let w_eff = match bits {
-                Some(bits) => tape.quant_ste(w, bits[l], self.quantizer),
-                None => w,
-            };
-            h = match layer.op {
-                ParamOp::Dense => tape.linear(h, w_eff, b),
-                ParamOp::Conv { d, in_h, in_w } => tape.conv2d(h, w_eff, b, d, in_h, in_w),
-            };
-            if l < last {
-                h = tape.relu(h);
-                if bits.is_some() && n_act > 0.0 {
-                    h = tape.quant_ste(h, n_act, self.quantizer);
-                }
-            }
-        }
-        let out = tape.softmax_ce(h, y);
+        let (wids, logits) = self.build_graph(&mut tape, bits, n_act, x, m);
+        let out = tape.softmax_ce(logits, y);
         tape.backward(out.id);
         let grads = wids
             .into_iter()
@@ -251,51 +392,13 @@ impl NativeBackend {
     }
 
     /// Inference-only forward pass; returns `m × classes` logits.
+    /// Records the same graph as [`Self::grads`] (without the backward
+    /// sweep), so eval and train forwards are identical by construction.
     fn forward_logits(&self, bits: Option<&[f32]>, n_act: f32, x: &[f32]) -> Vec<f32> {
         let m = x.len() / self.input_dim;
-        let last = self.layers.len() - 1;
-        let mut cur = x.to_vec();
-        let mut qw = Vec::new();
-        for (l, layer) in self.layers.iter().enumerate() {
-            let (n, k) = (layer.w.rows, layer.w.cols);
-            let w_eff: &[f32] = match bits {
-                Some(bits) => {
-                    qw.resize(n * k, 0.0);
-                    ops::fake_quant_forward(&layer.w.data, bits[l], self.quantizer, &mut qw);
-                    &qw
-                }
-                None => &layer.w.data,
-            };
-            let mut next = match layer.op {
-                ParamOp::Dense => {
-                    let mut next = vec![0f32; m * n];
-                    ops::linear_forward(
-                        &cur, w_eff, &layer.b.data, m, k, n, &mut next, self.pool.as_ref(),
-                    );
-                    next
-                }
-                ParamOp::Conv { d, in_h, in_w } => {
-                    let (oh, ow) = d.out_hw(in_h, in_w).expect("conv geometry");
-                    let mut next = vec![0f32; m * oh * ow * d.out_ch];
-                    ops::conv2d_forward(
-                        &cur, w_eff, &layer.b.data, m, &d, in_h, in_w, &mut next,
-                        self.pool.as_ref(),
-                    );
-                    next
-                }
-            };
-            if l < last {
-                for v in next.iter_mut() {
-                    *v = v.max(0.0);
-                }
-                if bits.is_some() && n_act > 0.0 {
-                    let src = next.clone();
-                    ops::fake_quant_forward(&src, n_act, self.quantizer, &mut next);
-                }
-            }
-            cur = next;
-        }
-        cur
+        let mut tape = Tape::new(self.pool.as_ref());
+        let (_, logits) = self.build_graph(&mut tape, bits, n_act, x, m);
+        tape.data(logits).data.clone()
     }
 
     fn lsb_proxy(&self, w01: f32, n: f32, k: f32) -> f32 {
@@ -336,6 +439,59 @@ impl Backend for NativeBackend {
 
     fn input_shape(&self) -> (usize, usize, usize) {
         self.input_hwc
+    }
+
+    fn q_layer_relu(&self, q: usize) -> bool {
+        match self.topology {
+            // the classic chain fuses a ReLU after every layer but the head
+            Topology::Chain => q + 1 < self.num_q_layers(),
+            // the ViT graph has no ReLU anywhere (GELU rides on fc1)
+            Topology::Vit { .. } => false,
+        }
+    }
+
+    fn export_records(&self) -> Option<Vec<ExportRecord>> {
+        let Topology::Vit { seq, token_dim, dim, heads, depth } = self.topology else {
+            return None;
+        };
+        // Mirrors PackedModel::synth_transformer record-for-record, so a
+        // trained export is indistinguishable in shape from a synthetic
+        // pack and serves through the same registry plan.
+        let structural = |name: String, op: LayerOp| {
+            ExportRecord::Structural(PackedLayer { name, op, ..Default::default() })
+        };
+        let quant = |q: usize| ExportRecord::Quantized { q, gelu: false };
+        let mut recs =
+            vec![structural("patchify".into(), LayerOp::SeqView { seq, dim: token_dim })];
+        recs.push(quant(0)); // embed
+        for b in 0..depth {
+            let base = recs.len(); // ln1 of this block
+            recs.push(structural(format!("blk{b}.ln1"), LayerOp::LayerNorm));
+            recs.push(structural(
+                format!("blk{b}.attn"),
+                LayerOp::Attention(AttnDesc {
+                    num_heads: heads,
+                    head_dim: dim / heads,
+                    seq_len: seq,
+                    q_ref: base + 2,
+                    k_ref: base + 3,
+                    v_ref: base + 4,
+                    proj_ref: base + 5,
+                }),
+            ));
+            for i in 0..4 {
+                recs.push(quant(1 + 6 * b + i)); // wq / wk / wv / wproj
+            }
+            recs.push(structural(format!("blk{b}.res1"), LayerOp::Residual { src: base - 1 }));
+            recs.push(structural(format!("blk{b}.ln2"), LayerOp::LayerNorm));
+            recs.push(ExportRecord::Quantized { q: 5 + 6 * b, gelu: true }); // fc1
+            recs.push(quant(6 + 6 * b)); // fc2
+            recs.push(structural(format!("blk{b}.res2"), LayerOp::Residual { src: base + 6 }));
+        }
+        recs.push(structural("ln_f".into(), LayerOp::LayerNorm));
+        recs.push(structural("pool".into(), LayerOp::MeanPool));
+        recs.push(quant(self.layers.len() - 1)); // head
+        Some(recs)
     }
 
     fn q_sizes(&self) -> Vec<usize> {
@@ -644,6 +800,132 @@ mod tests {
         assert!(vhv.iter().all(|v| v.is_finite()));
         for (a, b) in before.iter().zip(&be.q_weights(0).unwrap()) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    fn toy_vit(depth: usize, batch: usize) -> NativeBackend {
+        // seq 4 tokens of 6 features, dim 8, 2 heads, 3 classes
+        NativeBackend::vit("vit", "msq", 4, 6, 8, 2, depth, 3, batch, 7, 1).unwrap()
+    }
+
+    #[test]
+    fn vit_shapes_names_and_relu_policy() {
+        let be = toy_vit(2, 4);
+        assert_eq!(be.num_q_layers(), 14); // embed + 2·6 + head
+        assert_eq!(be.input_elems(), 24);
+        assert_eq!(be.input_shape(), (0, 0, 0));
+        assert_eq!(be.q_layer_name(0), "embed");
+        assert_eq!(be.q_layer_name(1), "blk0.wq");
+        assert_eq!(be.q_layer_name(11), "blk1.fc1");
+        assert_eq!(be.q_layer_name(13), "head");
+        assert_eq!(be.q_sizes()[0], 8 * 6);
+        assert_eq!(be.q_sizes()[11], 16 * 8); // fc1 = 2·dim × dim
+        // no fused ReLU anywhere in the transformer graph
+        assert!((0..14).all(|q| !be.q_layer_relu(q)));
+        assert!((0..14).all(|q| be.q_layer_op(q) == LayerOp::Linear));
+    }
+
+    #[test]
+    fn vit_export_layout_matches_synth_transformer() {
+        // the trained export must be record-for-record the layout
+        // pack-synth --arch transformer emits
+        let be = toy_vit(2, 4);
+        let synth = crate::quant::pack::PackedModel::synth_transformer(
+            4, 6, 8, 2, 2, 3, &[8; 14], 1,
+        )
+        .unwrap();
+        let recs = be.export_records().unwrap();
+        assert_eq!(recs.len(), synth.layers.len());
+        for (rec, sl) in recs.iter().zip(&synth.layers) {
+            match rec {
+                ExportRecord::Quantized { q, gelu } => {
+                    assert_eq!(be.q_layer_name(*q), sl.name);
+                    assert_eq!(*gelu, sl.gelu, "{}", sl.name);
+                    assert!(!sl.op.is_structural());
+                }
+                ExportRecord::Structural(l) => {
+                    assert_eq!(l.name, sl.name);
+                    assert_eq!(l.op, sl.op, "{}", sl.name);
+                    assert_eq!(l.numel, 0, "{}", sl.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vit_train_step_reduces_loss() {
+        let mut be = toy_vit(1, 4);
+        let (x, y) = toy_batch(&be, 9);
+        let bits = vec![8.0f32; 8];
+        let ks = vec![1.0f32; 8];
+        let first = be.train_step(&bits, &ks, 0.0, 0.05, 0.0, &x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..120 {
+            last = be.train_step(&bits, &ks, 0.0, 0.05, 0.0, &x, &y).unwrap();
+        }
+        assert!(
+            last.ce.is_finite() && last.ce < 0.7 * first.ce,
+            "vit loss did not drop: {} -> {}",
+            first.ce,
+            last.ce
+        );
+        // eval path agrees in shape and is finite
+        let (ce_sum, correct) = be.eval_step(&bits, 0.0, &x, &y).unwrap();
+        assert!(ce_sum.is_finite() && (0.0..=4.0).contains(&correct));
+    }
+
+    #[test]
+    fn vit_hessian_probe_is_finite_and_restores_weights() {
+        let mut be = toy_vit(1, 4);
+        let (x, y) = toy_batch(&be, 13);
+        let before = be.q_weights(1).unwrap();
+        let vhv = be.hessian_step(&x, &y, 21).unwrap();
+        assert_eq!(vhv.len(), 8);
+        assert!(vhv.iter().all(|v| v.is_finite()));
+        for (a, b) in before.iter().zip(&be.q_weights(1).unwrap()) {
+            assert!((a - b).abs() < 1e-5, "weights not restored: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn vit_export_serves_like_the_native_forward() {
+        // pack the float weights at 8 bits the way Trainer::export_packed
+        // does, serve through the registry, and compare against the
+        // backend's own quantized forward — the round-trip contract.
+        let be = toy_vit(2, 2);
+        let mut pm = crate::quant::pack::PackedModel {
+            input_dim: be.input_elems(),
+            input_hwc: be.input_shape(),
+            ..Default::default()
+        };
+        for rec in be.export_records().unwrap() {
+            match rec {
+                ExportRecord::Quantized { q, gelu } => {
+                    let mut l = crate::quant::pack::pack_layer(
+                        &be.q_layer_name(q),
+                        &be.q_weights(q).unwrap(),
+                        8,
+                    );
+                    l.op = be.q_layer_op(q);
+                    l.relu = be.q_layer_relu(q);
+                    l.gelu = gelu;
+                    pm.layers.push(l);
+                }
+                ExportRecord::Structural(l) => pm.layers.push(l),
+            }
+        }
+        pm.validate_graph().unwrap();
+        let sm = crate::serve::registry::ServableModel::from_packed(
+            "vit", &pm, be.input_elems(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(17);
+        let x: Vec<f32> = (0..2 * be.input_elems()).map(|_| rng.normal()).collect();
+        let served = sm.infer_batch(&x, 2, None).unwrap();
+        let native = be.forward_logits(Some(&vec![8.0; 14]), 0.0, &x);
+        assert_eq!(served.len(), native.len());
+        for (s, n) in served.iter().zip(&native) {
+            assert!((s - n).abs() < 1e-4, "serve {s} vs native {n}");
         }
     }
 

@@ -18,7 +18,9 @@
 //! * [`ops`] — forward/backward kernels: transposed-B matmul, NHWC
 //!   conv2d against OHWI filters (the `.msqpack` v3 layout), bias,
 //!   ReLU, softmax-CE (f64 log-sum-exp), RoundClamp/DoReFa fake-quant
-//!   with the straight-through estimator. The matmul/conv-shaped ops
+//!   with the straight-through estimator, plus the transformer set —
+//!   multi-head attention, LayerNorm, GELU, sequence mean-pool — each
+//!   with an analytic backward. The matmul/conv/attention-shaped ops
 //!   are thin wrappers over the shared kernel core ([`crate::kernels`]:
 //!   tiled microkernels, SIMD/scalar lane primitives, the serving-side
 //!   conv geometry and RoundClamp affine) and parallelize over
@@ -27,9 +29,11 @@
 //!   graph, no boxed closures; one tape per step);
 //! * [`optim`] — SGD with heavy-ball momentum (the cosine lr schedule
 //!   stays in `coordinator::schedule`, fed per step like the XLA path);
-//! * [`backend`] — [`NativeBackend`]: a quantized MLP (`--model mlp`)
-//!   or small conv net (`--model conv`, 3×3 stride-2 stages + linear
-//!   head) over the synthetic images implementing `Backend`, including
+//! * [`backend`] — [`NativeBackend`]: a quantized MLP (`--model mlp`),
+//!   small conv net (`--model conv`, 3×3 stride-2 stages + linear
+//!   head), or pre-norm ViT (`--model vit-tiny`, one token per image
+//!   row, MHA + GELU-MLP blocks, mean-pool head, exported as pack v4)
+//!   over the synthetic images implementing `Backend`, including
 //!   per-layer β/‖W_n−W‖² stats and finite-difference Hutchinson
 //!   probes (`Hv ≈ (∇L(θ+εv) − ∇L(θ−εv))/2ε`).
 //!

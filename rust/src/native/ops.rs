@@ -245,6 +245,206 @@ pub fn conv2d_backward_bias(dy: &[f32], positions: usize, out_ch: usize, db: &mu
     }
 }
 
+/// Affine-free LayerNorm over each of `rows` rows of `cols`: forwards
+/// through the shared serving kernel ([`kernels::layernorm_row`]) and
+/// caches the per-row `1/√(var+eps)` for the backward.
+pub fn layernorm_forward(x: &[f32], rows: usize, cols: usize, out: &mut [f32], inv: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    debug_assert_eq!(inv.len(), rows);
+    for r in 0..rows {
+        inv[r] = kernels::layernorm_row(
+            &x[r * cols..(r + 1) * cols],
+            kernels::LN_EPS,
+            &mut out[r * cols..(r + 1) * cols],
+        );
+    }
+}
+
+/// LayerNorm backward from the cached normalized output (`xhat`) and
+/// per-row `inv`: `dx = inv·(dy − mean(dy) − xhat·mean(dy∘xhat))`.
+pub fn layernorm_backward(
+    xhat: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(xhat.len(), rows * cols);
+    debug_assert_eq!(dy.len(), rows * cols);
+    debug_assert_eq!(dx.len(), rows * cols);
+    debug_assert_eq!(inv.len(), rows);
+    for r in 0..rows {
+        let xr = &xhat[r * cols..(r + 1) * cols];
+        let dyr = &dy[r * cols..(r + 1) * cols];
+        let mdy = kernels::sum(dyr) / cols as f32;
+        let mdyx = kernels::dot(dyr, xr) / cols as f32;
+        for ((d, &g), &xh) in dx[r * cols..(r + 1) * cols].iter_mut().zip(dyr).zip(xr) {
+            *d += inv[r] * (g - mdy - xh * mdyx);
+        }
+    }
+}
+
+/// GELU (tanh approximation) through the shared kernel.
+pub fn gelu_forward(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = kernels::gelu(v);
+    }
+}
+
+/// `dx[i] += dy[i] · gelu'(x[i])`.
+pub fn gelu_backward(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    for ((d, &g), &v) in dx.iter_mut().zip(dy).zip(x) {
+        *d += g * kernels::gelu_grad(v);
+    }
+}
+
+/// Mean over the token axis: `x` is `m·s` rows of `d`, `out` is `m × d`.
+pub fn mean_pool_forward(x: &[f32], m: usize, s: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * s * d);
+    debug_assert_eq!(out.len(), m * d);
+    let inv = 1.0 / s as f32;
+    for b in 0..m {
+        let ob = &mut out[b * d..(b + 1) * d];
+        ob.fill(0.0);
+        for t in 0..s {
+            axpy(1.0, &x[(b * s + t) * d..(b * s + t + 1) * d], ob);
+        }
+        for o in ob.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// `dx[b, t, j] += dy[b, j] / s` for every token `t`.
+pub fn mean_pool_backward(dy: &[f32], m: usize, s: usize, d: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * d);
+    debug_assert_eq!(dx.len(), m * s * d);
+    let inv = 1.0 / s as f32;
+    for b in 0..m {
+        let g = &dy[b * d..(b + 1) * d];
+        for t in 0..s {
+            axpy(inv, g, &mut dx[(b * s + t) * d..(b * s + t + 1) * d]);
+        }
+    }
+}
+
+/// Batched multi-head attention forward over projected Q/K/V (`m·s`
+/// rows of `d = heads·head_dim` each): per sample, the shared
+/// [`kernels::mha_forward_sample`] core. `probs` caches the
+/// `m · heads · s · s` softmax matrices for the backward. Samples are
+/// disjoint output rows, so they parallelize over the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    m: usize,
+    s: usize,
+    heads: usize,
+    head_dim: usize,
+    ctx: &mut [f32],
+    probs: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let d = heads * head_dim;
+    let se = s * d;
+    let pe = heads * s * s;
+    debug_assert_eq!(q.len(), m * se);
+    debug_assert_eq!(ctx.len(), m * se);
+    debug_assert_eq!(probs.len(), m * pe);
+    let cptr = SendPtr(ctx.as_mut_ptr());
+    let pptr = SendPtr(probs.as_mut_ptr());
+    let (cptr, pptr) = (&cptr, &pptr);
+    kernels::par_blocks(pool, m, m * (2 * s * s * d), |i| {
+        // SAFETY: sample `i` writes only its own ctx/probs rows —
+        // disjoint per task; both buffers outlive the scoped par_for.
+        let ci = unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i * se), se) };
+        let pi = unsafe { std::slice::from_raw_parts_mut(pptr.get().add(i * pe), pe) };
+        kernels::mha_forward_sample(
+            &q[i * se..(i + 1) * se],
+            &k[i * se..(i + 1) * se],
+            &v[i * se..(i + 1) * se],
+            s,
+            heads,
+            head_dim,
+            ci,
+            Some(pi),
+        );
+    });
+}
+
+/// Attention backward from the cached softmax `probs`. Per sample and
+/// head (`P` is `s × s`, `scale = 1/√head_dim`):
+/// `dV += Pᵀ·dctx`, `dP = dctx·Vᵀ`,
+/// `dS = P ∘ (dP − rowsum(dP ∘ P))`, `dQ += scale·dS·K`,
+/// `dK += scale·dSᵀ·Q`. Samples own disjoint gradient rows, so the
+/// parallel axis is the sample.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    dctx: &[f32],
+    m: usize,
+    s: usize,
+    heads: usize,
+    head_dim: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let d = heads * head_dim;
+    let se = s * d;
+    let pe = heads * s * s;
+    debug_assert_eq!(q.len(), m * se);
+    debug_assert_eq!(probs.len(), m * pe);
+    debug_assert_eq!(dctx.len(), m * se);
+    debug_assert_eq!(dq.len(), m * se);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let (qp, kp, vp) = (SendPtr(dq.as_mut_ptr()), SendPtr(dk.as_mut_ptr()), SendPtr(dv.as_mut_ptr()));
+    let (qp, kp, vp) = (&qp, &kp, &vp);
+    kernels::par_blocks(pool, m, m * (4 * s * s * d), |i| {
+        // SAFETY: sample `i` accumulates only into its own se rows of
+        // dq/dk/dv — disjoint per task (see attention_forward).
+        let dqi = unsafe { std::slice::from_raw_parts_mut(qp.get().add(i * se), se) };
+        let dki = unsafe { std::slice::from_raw_parts_mut(kp.get().add(i * se), se) };
+        let dvi = unsafe { std::slice::from_raw_parts_mut(vp.get().add(i * se), se) };
+        let (qi, ki, vi) = (&q[i * se..(i + 1) * se], &k[i * se..(i + 1) * se], &v[i * se..(i + 1) * se]);
+        let (dci, pri) = (&dctx[i * se..(i + 1) * se], &probs[i * pe..(i + 1) * pe]);
+        let mut dp = vec![0f32; s * s];
+        for h in 0..heads {
+            let o = h * head_dim;
+            let ph = &pri[h * s * s..(h + 1) * s * s];
+            for r in 0..s {
+                let dcr = &dci[r * d + o..r * d + o + head_dim];
+                for j in 0..s {
+                    // dV[j] += P[r,j]·dctx[r]; dP[r,j] = dctx[r]·V[j]
+                    axpy(ph[r * s + j], dcr, &mut dvi[j * d + o..j * d + o + head_dim]);
+                    dp[r * s + j] = kernels::dot(dcr, &vi[j * d + o..j * d + o + head_dim]);
+                }
+            }
+            for r in 0..s {
+                let pr = &ph[r * s..(r + 1) * s];
+                let dpr = &mut dp[r * s..(r + 1) * s];
+                let rowsum = kernels::dot(dpr, pr);
+                for (ds, &p) in dpr.iter_mut().zip(pr) {
+                    *ds = p * (*ds - rowsum) * scale;
+                }
+                // dQ[r] += dS[r,j]·K[j]; dK[j] += dS[r,j]·Q[r]
+                let qr = qi[r * d + o..r * d + o + head_dim].to_vec();
+                for j in 0..s {
+                    axpy(dpr[j], &ki[j * d + o..j * d + o + head_dim], &mut dqi[r * d + o..r * d + o + head_dim]);
+                    axpy(dpr[j], &qr, &mut dki[j * d + o..j * d + o + head_dim]);
+                }
+            }
+        }
+    });
+}
+
 pub fn relu_forward(x: &[f32], out: &mut [f32]) {
     for (o, &v) in out.iter_mut().zip(x) {
         *o = v.max(0.0);

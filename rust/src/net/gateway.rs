@@ -27,7 +27,7 @@ use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -51,6 +51,10 @@ pub struct GatewayConfig {
     pub read_timeout: Duration,
     /// HTTP parser limits (line/header/body caps).
     pub limits: Limits,
+    /// Emit one access-log line per request on stderr (trace ID, peer,
+    /// request line, status, body bytes, latency). Off by default so
+    /// tests and benches stay quiet; `msq gateway` turns it on.
+    pub access_log: bool,
     /// Batcher/kernel config for every model server the gateway starts.
     pub server: ServerConfig,
 }
@@ -63,6 +67,7 @@ impl Default for GatewayConfig {
             max_conns: 64,
             read_timeout: Duration::from_millis(250),
             limits: Limits::default(),
+            access_log: false,
             server: ServerConfig::default(),
         }
     }
@@ -180,9 +185,17 @@ fn accept_loop(
         if active >= cfg.max_conns as u64 {
             state.http.connections_rejected.fetch_add(1, Ordering::Relaxed);
             state.http.record_response(503);
-            let _ = Response::error(503, "connection budget exhausted — retry")
-                .header("Retry-After", "1")
-                .write_to(&mut stream, false);
+            let id = router::mint_request_id();
+            if cfg.access_log {
+                let peer = peer_label(&stream);
+                eprintln!("[gateway] {id} {peer} - 503 0B shed(connection budget)");
+            }
+            let _ = router::tag(
+                Response::error(503, "connection budget exhausted — retry")
+                    .header("Retry-After", "1"),
+                &id,
+            )
+            .write_to(&mut stream, false);
             continue; // stream drops → close
         }
         state.http.connections_active.fetch_add(1, Ordering::AcqRel);
@@ -190,6 +203,7 @@ fn accept_loop(
         let conn_cfg = ConnConfig {
             read_timeout: cfg.read_timeout,
             limits: cfg.limits.clone(),
+            access_log: cfg.access_log,
         };
         pool.submit(move || {
             handle_conn(stream, &st, &conn_cfg);
@@ -201,6 +215,11 @@ fn accept_loop(
 struct ConnConfig {
     read_timeout: Duration,
     limits: Limits,
+    access_log: bool,
+}
+
+fn peer_label(stream: &TcpStream) -> String {
+    stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "-".into())
 }
 
 /// One connection's keep-alive loop: parse → route → respond, until the
@@ -208,6 +227,7 @@ struct ConnConfig {
 fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let peer = peer_label(&stream);
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -216,8 +236,25 @@ fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
     loop {
         match reader.read_request(&cfg.limits) {
             Ok(req) => {
+                let t0 = Instant::now();
                 let resp = router::handle(state, &req);
                 state.http.record_response(resp.status);
+                if cfg.access_log {
+                    let id = resp
+                        .extra
+                        .iter()
+                        .find(|(k, _)| k == "x-request-id")
+                        .map(|(_, v)| v.as_str())
+                        .unwrap_or("-");
+                    eprintln!(
+                        "[gateway] {id} {peer} \"{} {}\" {} {}B {:.2}ms",
+                        req.method,
+                        req.target,
+                        resp.status,
+                        resp.body.len(),
+                        t0.elapsed().as_secs_f64() * 1e3,
+                    );
+                }
                 // drain closes the connection after the in-flight response
                 let keep = req.keep_alive() && !state.draining.load(Ordering::Acquire);
                 if resp.write_to(&mut writer, keep).is_err() || !keep {
@@ -232,7 +269,12 @@ fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
             Err(ReadError::Closed) => return,
             Err(ReadError::Bad { status, msg }) => {
                 state.http.record_response(status);
-                let _ = Response::error(status, &msg).write_to(&mut writer, false);
+                let id = router::mint_request_id();
+                if cfg.access_log {
+                    eprintln!("[gateway] {id} {peer} - {status} 0B parse({msg})");
+                }
+                let _ = router::tag(Response::error(status, &msg), &id)
+                    .write_to(&mut writer, false);
                 return; // stream state unknown after a parse error
             }
             Err(ReadError::Io(_)) => return,
@@ -316,9 +358,27 @@ mod tests {
         let gw = toy_gateway(8);
         let mut s = TcpStream::connect(gw.addr()).unwrap();
         s.write_all(b"NOTAREQUEST\r\n\r\n").unwrap(); // no target/version → 400
-        let mut r = HttpReader::new(s);
-        let (code, _) = r.read_response(&Limits::default()).unwrap();
-        assert_eq!(code, 400);
+        // read raw so headers are visible: parse errors still get a trace ID
+        let mut raw = String::new();
+        std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+        assert!(raw.contains("x-request-id: msq-"), "{raw}");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn client_request_id_is_echoed_over_the_wire() {
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        s.write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\nx-request-id: trace-me-42\r\n\
+              Connection: close\r\n\r\n",
+        )
+        .unwrap();
+        let mut raw = String::new();
+        std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+        assert!(raw.contains("x-request-id: trace-me-42"), "{raw}");
         gw.shutdown();
     }
 }

@@ -19,7 +19,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -193,8 +193,59 @@ impl AppState {
     }
 }
 
-/// Route one parsed request. Infallible: every outcome is a `Response`.
+/// Mint a process-unique trace ID: `msq-<boot>-<seq>`, where `boot`
+/// mixes the start timestamp with the pid (two gateways started the
+/// same nanosecond still differ) and `seq` is a monotonic counter.
+pub fn mint_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    static BOOT: OnceLock<u64> = OnceLock::new();
+    let boot = BOOT.get_or_init(|| {
+        let ns = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        ns ^ u64::from(std::process::id()).rotate_left(48)
+    });
+    format!("msq-{:08x}-{}", (boot >> 12) & 0xffff_ffff, SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+/// The trace ID for one request: a sane client-supplied `x-request-id`
+/// is honoured (so callers can stitch gateway log lines into their own
+/// traces); anything absent, oversized, or non-printable is replaced
+/// with a minted one.
+pub fn request_id(req: &Request) -> String {
+    if let Some(v) = req.header("x-request-id") {
+        let v = v.trim();
+        if !v.is_empty() && v.len() <= 128 && v.bytes().all(|b| b.is_ascii_graphic()) {
+            return v.to_string();
+        }
+    }
+    mint_request_id()
+}
+
+/// Attach the trace ID to a response: always as an `x-request-id`
+/// header, and for JSON errors also inside the body, so clients that
+/// only keep the payload can still quote the ID in a report.
+pub(crate) fn tag(mut resp: Response, id: &str) -> Response {
+    if resp.status >= 400 && resp.content_type == "application/json" {
+        if let Some(Json::Obj(mut m)) =
+            std::str::from_utf8(&resp.body).ok().and_then(|t| json::parse(t).ok())
+        {
+            m.insert("request_id".to_string(), Json::Str(id.to_string()));
+            resp.body = Json::Obj(m).to_string().into_bytes();
+        }
+    }
+    resp.header("x-request-id", id)
+}
+
+/// Route one parsed request. Infallible: every outcome is a `Response`,
+/// and every response carries the request's trace ID.
 pub fn handle(state: &AppState, req: &Request) -> Response {
+    let id = request_id(req);
+    tag(route(state, req), &id)
+}
+
+fn route(state: &AppState, req: &Request) -> Response {
     let path = req.path();
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(state),
@@ -594,6 +645,55 @@ mod tests {
         let r = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[1,2,3]]"));
         assert_eq!(r.status, 400);
         assert!(String::from_utf8_lossy(&r.body).contains("expects 6"), "{:?}", r.body);
+    }
+
+    fn resp_id(r: &Response) -> Option<String> {
+        r.extra.iter().find(|(k, _)| k == "x-request-id").map(|(_, v)| v.clone())
+    }
+
+    fn req_with_id(method: &str, target: &str, id: &str, body: &[u8]) -> Request {
+        let mut wire = format!(
+            "{method} {target} HTTP/1.1\r\nHost: t\r\nx-request-id: {id}\r\n\
+             Content-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        wire.extend_from_slice(body);
+        super::super::http::HttpReader::new(Cursor::new(wire))
+            .read_request(&super::super::http::Limits::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn request_ids_are_minted_unique_and_attached_everywhere() {
+        let state = toy_state();
+        let a = handle(&state, &req("GET", "/healthz", b""));
+        let b = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[0,0,0,0,0,0]]"));
+        let (ia, ib) = (resp_id(&a).unwrap(), resp_id(&b).unwrap());
+        assert!(ia.starts_with("msq-"), "{ia}");
+        assert_ne!(ia, ib, "two requests shared a minted trace ID");
+
+        // error responses carry the ID in the header AND the JSON body
+        let r = handle(&state, &req("POST", "/v1/models/ghost/infer", b"[[1]]"));
+        assert_eq!(r.status, 404);
+        let id = resp_id(&r).unwrap();
+        let v = body_json(&r);
+        assert_eq!(v.get("request_id").unwrap().as_str(), Some(id.as_str()));
+        assert!(v.get("error").is_some());
+    }
+
+    #[test]
+    fn client_supplied_request_ids_are_echoed_or_replaced() {
+        let state = toy_state();
+        let r = handle(&state, &req_with_id("GET", "/healthz", "trace-abc.42", b""));
+        assert_eq!(resp_id(&r).as_deref(), Some("trace-abc.42"));
+        // non-printable / oversized client IDs are replaced, not echoed
+        let long = "x".repeat(200);
+        for bad in ["bad id with spaces", long.as_str()] {
+            let r = handle(&state, &req_with_id("GET", "/healthz", bad, b""));
+            let got = resp_id(&r).unwrap();
+            assert!(got.starts_with("msq-"), "echoed a hostile ID: {got:?}");
+        }
     }
 
     #[test]

@@ -35,6 +35,18 @@ pub struct LayerStats {
     pub reg: Vec<f32>,
 }
 
+/// One record in a backend's export layout (see
+/// [`Backend::export_records`]): either "pack quantized layer `q` here"
+/// or a pre-built structural record (SeqView / LayerNorm / Attention /
+/// Residual / MeanPool) emitted verbatim.
+pub enum ExportRecord {
+    /// Quantize-and-pack layer `q`'s float weights at this position;
+    /// `gelu` stamps the fused-GELU flag on the record.
+    Quantized { q: usize, gelu: bool },
+    /// Emit this payload-free structural record as-is.
+    Structural(crate::quant::pack::PackedLayer),
+}
+
 /// One training/eval engine the coordinator can drive.
 pub trait Backend {
     /// "native" | "pjrt" — for logs and reports.
@@ -71,6 +83,15 @@ pub trait Backend {
     /// last.
     fn q_layer_relu(&self, q: usize) -> bool {
         q + 1 < self.num_q_layers()
+    }
+    /// Full `.msqpack` record layout for export, in record order. `None`
+    /// (the default) means the classic chain: one `Quantized` record per
+    /// q-layer, no structural records, no GELU. Backends whose serving
+    /// graph interleaves structural ops (the ViT topology's SeqView /
+    /// LayerNorm / Attention / Residual / MeanPool records) override
+    /// this; `Trainer::export_packed` walks the list.
+    fn export_records(&self) -> Option<Vec<ExportRecord>> {
+        None
     }
     /// Per-quantized-layer weight counts (compression accounting).
     fn q_sizes(&self) -> Vec<usize>;

@@ -17,7 +17,7 @@ pub mod engine;
 pub mod state;
 
 pub use artifacts::{ArtifactMeta, IoDesc, Manifest, QLayer};
-pub use backend::{Backend, LayerStats, StepStats};
+pub use backend::{Backend, ExportRecord, LayerStats, StepStats};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 #[cfg(feature = "pjrt")]

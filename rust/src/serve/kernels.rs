@@ -32,7 +32,10 @@
 //! {scalar, simd} all produce identical logits — see the contract in
 //! [`crate::kernels`].
 
-use crate::kernels::{dot, rc_affine, sum, window_dot, window_sum, SendPtr};
+use crate::kernels::{
+    dequant_affine, dot, matmul_bt, mha_forward_sample, par_blocks, rc_affine, sum, window_dot,
+    window_sum, SendPtr,
+};
 use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
 
@@ -236,6 +239,166 @@ pub fn qconv2d(
             }
         }
     }
+}
+
+/// One attention projection's packed weights: the n-bit code stream of a
+/// `d × d` linear record an attention descriptor references, plus its
+/// quant metadata. The serving registry builds these from the consumed
+/// records at plan time; `qattention` decodes each exactly once per
+/// call.
+#[derive(Clone)]
+pub struct ProjWeights {
+    pub bits: u8,
+    pub scale: f32,
+    pub data: Vec<u8>,
+}
+
+impl std::fmt::Debug for ProjWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProjWeights")
+            .field("bits", &self.bits)
+            .field("scale", &self.scale)
+            .field("payload_bytes", &self.data.len())
+            .finish()
+    }
+}
+
+impl ProjWeights {
+    /// Decode the full `d × d` lattice matrix (codes → RoundClamp
+    /// weights). One allocation per projection per `qattention` call —
+    /// the "decode once per generation" contract.
+    fn decode(&self, d: usize) -> Vec<f32> {
+        let mut w = vec![0f32; d * d];
+        decode_codes_f32(&self.data, 0, self.bits, &mut w);
+        let (alpha, beta) = rc_affine(self.bits as f32, self.scale);
+        dequant_affine(&mut w, alpha, beta);
+        w
+    }
+}
+
+/// Quantized multi-head self-attention over a packed attention record:
+/// per sample, project `x` through the four decoded weight matrices
+/// (`Q/K/V` then output) with the tiled [`matmul_bt`] core, and stream
+/// heads through the shared [`mha_forward_sample`] softmax·V kernel.
+///
+/// `x` and `out` are `batch × seq × d` row-major with
+/// `d = heads · head_dim`. The four projections are decoded exactly once
+/// per call and shared by every sample. With `pool`, samples run in
+/// parallel (disjoint output slices); a single-sample batch parallelizes
+/// inside the matmuls instead — either way results are bit-identical to
+/// the serial path, because per-sample work is a fixed serial reduction
+/// order and `matmul_bt` is itself pooled≡serial.
+#[allow(clippy::too_many_arguments)]
+pub fn qattention(
+    wq: &ProjWeights,
+    wk: &ProjWeights,
+    wv: &ProjWeights,
+    wo: &ProjWeights,
+    heads: usize,
+    head_dim: usize,
+    seq: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let d = heads * head_dim;
+    assert_eq!(x.len(), batch * seq * d, "qattention: x shape");
+    assert_eq!(out.len(), batch * seq * d, "qattention: out shape");
+    if batch == 0 {
+        return;
+    }
+    let mq = wq.decode(d);
+    let mk = wk.decode(d);
+    let mv = wv.decode(d);
+    let mo = wo.decode(d);
+    // multi-sample batches parallelize across samples; batch == 1 lets
+    // the projection matmuls use the pool themselves (no nesting either
+    // way — par_blocks runs this closure serially when batch == 1)
+    let inner = if batch > 1 { None } else { pool };
+    let sample_flops = 4 * seq * d * d + 2 * seq * seq * d;
+    let optr = SendPtr(out.as_mut_ptr());
+    let optr = &optr;
+    par_blocks(pool, batch, batch * sample_flops, |b| {
+        let xb = &x[b * seq * d..(b + 1) * seq * d];
+        let mut q = vec![0f32; seq * d];
+        let mut k = vec![0f32; seq * d];
+        let mut v = vec![0f32; seq * d];
+        let mut ctx = vec![0f32; seq * d];
+        matmul_bt(xb, &mq, None, seq, d, d, &mut q, inner);
+        matmul_bt(xb, &mk, None, seq, d, d, &mut k, inner);
+        matmul_bt(xb, &mv, None, seq, d, d, &mut v, inner);
+        mha_forward_sample(&q, &k, &v, seq, heads, head_dim, &mut ctx, None);
+        // SAFETY: sample `b` writes only out[b·s·d, (b+1)·s·d) — disjoint
+        // per task; `out` outlives the scoped par_for and is not read
+        // until it returns.
+        let ob = unsafe { std::slice::from_raw_parts_mut(optr.get().add(b * seq * d), seq * d) };
+        matmul_bt(&ctx, &mo, None, seq, d, d, ob, inner);
+    });
+}
+
+/// Dense f64 attention oracle over already-dequantized projection
+/// weights — the reference `qattention` is judged against. Same
+/// `doc(hidden) pub` rationale as [`dense_conv_ref`]: ONE statement of
+/// the projection/head indexing convention shared by every test suite.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attn_ref(
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    heads: usize,
+    head_dim: usize,
+    seq: usize,
+    x: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    let d = heads * head_dim;
+    let proj = |w: &[f32], xb: &[f32]| -> Vec<f64> {
+        let mut out = vec![0f64; seq * d];
+        for i in 0..seq {
+            for r in 0..d {
+                out[i * d + r] = (0..d)
+                    .map(|j| w[r * d + j] as f64 * xb[i * d + j] as f64)
+                    .sum();
+            }
+        }
+        out
+    };
+    let mut out = vec![0f32; batch * seq * d];
+    for b in 0..batch {
+        let xf = &x[b * seq * d..(b + 1) * seq * d];
+        let q = proj(wq, xf);
+        let k = proj(wk, xf);
+        let v = proj(wv, xf);
+        let mut ctx = vec![0f64; seq * d];
+        for h in 0..heads {
+            let o = h * head_dim;
+            for i in 0..seq {
+                let mut row = vec![0f64; seq];
+                for (j, rj) in row.iter_mut().enumerate() {
+                    let s: f64 =
+                        (0..head_dim).map(|t| q[i * d + o + t] * k[j * d + o + t]).sum();
+                    *rj = s / (head_dim as f64).sqrt();
+                }
+                let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = row.iter().map(|s| (s - max).exp()).collect();
+                let z: f64 = exps.iter().sum();
+                for t in 0..head_dim {
+                    ctx[i * d + o + t] =
+                        exps.iter().enumerate().map(|(j, e)| e / z * v[j * d + o + t]).sum();
+                }
+            }
+        }
+        for i in 0..seq {
+            for r in 0..d {
+                out[(b * seq + i) * d + r] =
+                    (0..d).map(|j| wo[r * d + j] as f64 * ctx[i * d + j]).sum::<f64>() as f32;
+            }
+        }
+    }
+    out
 }
 
 /// Dense f64 conv oracle over dequantized weights — the reference every
@@ -446,5 +609,125 @@ mod tests {
         let p = pack_layer("c", &rand_vec(d.weight_numel().unwrap(), 1), 4);
         let mut out = vec![0f32; 0];
         qconv2d(&p.data, 4, p.scale, &d, 4, 4, &[], 0, &mut out, None);
+    }
+
+    /// Pack a random d×d projection at `bits` and return it alongside its
+    /// dequantized lattice weights (the reference input).
+    fn rand_proj(
+        g: &mut crate::util::prop::Gen,
+        d: usize,
+        bits: u8,
+    ) -> (ProjWeights, Vec<f32>) {
+        let w = g.vec_normal(d * d, 0.4);
+        let p = pack_layer("p", &w, bits);
+        let wq = unpack_layer(&p).unwrap();
+        (ProjWeights { bits, scale: p.scale, data: p.data }, wq)
+    }
+
+    #[test]
+    fn qattention_matches_f64_reference() {
+        // random shapes and per-projection bit-widths 1..=8 vs the dense
+        // f64 oracle on the dequantized lattice weights
+        crate::util::prop::check(40, |g| {
+            let heads = g.usize_in(1, 3);
+            let head_dim = g.usize_in(1, 5);
+            let seq = g.usize_in(1, 6);
+            let batch = g.usize_in(1, 3);
+            let d = heads * head_dim;
+            let mut projs = Vec::new();
+            let mut refs = Vec::new();
+            for _ in 0..4 {
+                let bits = g.usize_in(1, 8) as u8;
+                let (p, wq) = rand_proj(g, d, bits);
+                projs.push(p);
+                refs.push(wq);
+            }
+            let x = g.vec_normal(batch * seq * d, 0.5);
+            let expect = dense_attn_ref(
+                &refs[0], &refs[1], &refs[2], &refs[3], heads, head_dim, seq, &x, batch,
+            );
+            let mut got = vec![0f32; batch * seq * d];
+            qattention(
+                &projs[0], &projs[1], &projs[2], &projs[3], heads, head_dim, seq, &x, batch,
+                &mut got, None,
+            );
+            for (i, (a, e)) in got.iter().zip(&expect).enumerate() {
+                crate::util::prop::ensure(
+                    (a - e).abs() < 1e-4,
+                    format!("h{heads} hd{head_dim} s{seq} b{batch} idx {i}: {a} vs {e}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qattention_pool_is_bitwise_equal_to_serial() {
+        // property twin of the qgemm/qconv tests: batches > 1 race sample
+        // blocks over the pool, batch == 1 exercises the pooled-matmul
+        // path — both must equal serial execution bit-for-bit
+        let pool = ThreadPool::new(4);
+        crate::util::prop::check(25, |g| {
+            let heads = g.usize_in(1, 4);
+            let head_dim = g.usize_in(1, 6);
+            let seq = g.usize_in(1, 7);
+            let batch = g.usize_in(1, 5);
+            let d = heads * head_dim;
+            let mut projs = Vec::new();
+            for _ in 0..4 {
+                let bits = g.usize_in(1, 8) as u8;
+                projs.push(rand_proj(g, d, bits).0);
+            }
+            let x = g.vec_normal(batch * seq * d, 0.5);
+            let mut serial = vec![0f32; batch * seq * d];
+            let mut pooled = serial.clone();
+            qattention(
+                &projs[0], &projs[1], &projs[2], &projs[3], heads, head_dim, seq, &x, batch,
+                &mut serial, None,
+            );
+            qattention(
+                &projs[0], &projs[1], &projs[2], &projs[3], heads, head_dim, seq, &x, batch,
+                &mut pooled, Some(&pool),
+            );
+            crate::util::prop::ensure(
+                serial == pooled,
+                format!("h{heads} hd{head_dim} s{seq} b{batch}: pooled != serial"),
+            )
+        });
+    }
+
+    #[test]
+    fn qattention_single_token_reduces_to_projection_chain() {
+        // seq = 1: softmax over one score is exactly 1, so the whole op
+        // is out = Wo·(Wv·x) regardless of Q/K contents
+        crate::util::prop::check(1, |g| {
+            let (heads, head_dim) = (2, 3);
+            let d = heads * head_dim;
+            let mut projs = Vec::new();
+            let mut refs = Vec::new();
+            for _ in 0..4 {
+                let (p, wq) = rand_proj(g, d, 6);
+                projs.push(p);
+                refs.push(wq);
+            }
+            let x = rand_vec(d, 77);
+            let mut got = vec![0f32; d];
+            qattention(
+                &projs[0], &projs[1], &projs[2], &projs[3], heads, head_dim, 1, &x, 1, &mut got,
+                None,
+            );
+            // reference: v = Wv x, out = Wo v (f64)
+            let v: Vec<f64> = (0..d)
+                .map(|r| (0..d).map(|j| refs[2][r * d + j] as f64 * x[j] as f64).sum())
+                .collect();
+            for r in 0..d {
+                let e: f64 = (0..d).map(|j| refs[3][r * d + j] as f64 * v[j]).sum();
+                crate::util::prop::ensure(
+                    (got[r] as f64 - e).abs() < 1e-5,
+                    format!("{r}: {} vs {e}", got[r]),
+                )?;
+            }
+            Ok(())
+        });
     }
 }

@@ -6,16 +6,20 @@
 //! really costs 1/16th of FP32 at serve time, not just on disk).
 //!
 //! Loading builds an **op-graph plan** from the per-layer descriptors
-//! (pack v3): each layer is planned as a `linear` (rows × cols matrix
-//! whose cols chain from the previous layer's output width) or a
+//! (pack v3/v4): each layer is planned as a `linear` (rows × cols matrix
+//! whose cols chain from the previous layer's output width), a
 //! `conv2d` (OHWI filters over an NHWC map whose spatial shape chains
-//! from the v3 input-shape header), with fused ReLU wherever the
-//! descriptor says so. Pre-v3 packs carry no descriptors; the loader
-//! synthesizes the dense-MLP chain they implied, so v1/v2 files serve
-//! byte-for-byte as before. The input width itself comes from the
-//! `.msqpack` header ([`resolve_input_dim`]); an explicit `--input-dim`
-//! is an *override* and the only option for v1 packs, which predate the
-//! header field.
+//! from the v3 input-shape header), or one of the v4 transformer ops
+//! (`seqview` / `layernorm` / `attention` / `residual` / `meanpool`,
+//! plus position-wise linears over token sequences), with fused
+//! ReLU/GELU wherever the descriptor says so. Attention records
+//! *consume* the four projection linears they reference — those fold
+//! into the attention plan and never execute standalone. Pre-v3 packs
+//! carry no descriptors; the loader synthesizes the dense-MLP chain
+//! they implied, so v1/v2 files serve byte-for-byte as before. The
+//! input width itself comes from the `.msqpack` header
+//! ([`resolve_input_dim`]); an explicit `--input-dim` is an *override*
+//! and the only option for v1 packs, which predate the header field.
 //!
 //! [`ModelRegistry`] is the concurrent name → model map the server and
 //! CLI share; models are immutable once loaded (`Arc`), so lookups are
@@ -28,6 +32,8 @@ use std::sync::{Arc, RwLock};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::kernels;
+use super::kernels::ProjWeights;
+use crate::kernels::{axpy, gelu, layernorm_rows, LN_EPS};
 use crate::quant::pack::{Conv2dDesc, LayerOp, PackedLayer, PackedModel};
 use crate::util::threadpool::ThreadPool;
 
@@ -58,6 +64,10 @@ pub fn chain_dims(pm: &PackedModel, input_dim: usize) -> Result<Vec<usize>> {
     ensure!(
         !pm.has_conv(),
         "pack has conv layers — the MLP dim chain is undefined (serve it instead)"
+    );
+    ensure!(
+        !pm.has_transformer(),
+        "pack has transformer layers — the MLP dim chain is undefined (serve it instead)"
     );
     let mut dims = Vec::with_capacity(pm.layers.len());
     let mut cols = input_dim;
@@ -92,6 +102,8 @@ enum ActShape {
     Flat(usize),
     /// NHWC map of `h × w × c` (conv traffic).
     Spatial(usize, usize, usize),
+    /// Token sequence of `seq × dim` (transformer traffic, v4).
+    Seq(usize, usize),
 }
 
 impl ActShape {
@@ -99,6 +111,7 @@ impl ActShape {
         match self {
             ActShape::Flat(d) => d,
             ActShape::Spatial(h, w, c) => h * w * c,
+            ActShape::Seq(s, d) => s * d,
         }
     }
 }
@@ -111,9 +124,34 @@ pub enum LayerKind {
     Linear { rows: usize, cols: usize },
     /// OHWI filters over an `in_h × in_w × in_ch` NHWC map.
     Conv2d { desc: Conv2dDesc, in_h: usize, in_w: usize, out_h: usize, out_w: usize },
+    /// Position-wise `rows × cols` matrix over every token of a
+    /// `seq × cols` sequence (v4 transformer traffic).
+    LinearSeq { rows: usize, cols: usize, seq: usize },
+    /// Reshape `seq·dim` flat features into a `seq × dim` sequence (v4).
+    SeqView { seq: usize, dim: usize },
+    /// Affine-free LayerNorm over each of `rows` rows of `cols` (v4).
+    LayerNorm { rows: usize, cols: usize },
+    /// Multi-head self-attention over a `seq × heads·head_dim` sequence;
+    /// the four projections were folded out of consumed linear records
+    /// at plan time (v4).
+    Attention {
+        heads: usize,
+        head_dim: usize,
+        seq: usize,
+        q: ProjWeights,
+        k: ProjWeights,
+        v: ProjWeights,
+        proj: ProjWeights,
+    },
+    /// Elementwise add of planned layer `src`'s saved output (v4). The
+    /// executor handles this directly — `forward` is never dispatched.
+    Residual { src: usize, elems: usize },
+    /// Mean over the sequence axis: `seq × dim → dim` (v4).
+    MeanPool { seq: usize, dim: usize },
 }
 
-/// One packed layer plus its resolved plan (`kind`) and fused ReLU flag.
+/// One packed layer plus its resolved plan (`kind`) and fused-activation
+/// flags.
 pub struct QuantLayer {
     pub name: String,
     pub bits: u8,
@@ -122,6 +160,8 @@ pub struct QuantLayer {
     /// ReLU fused after this layer (from the v3 descriptor; implied MLP
     /// chain for pre-v3 packs).
     pub relu: bool,
+    /// GELU fused after this layer (v4; exclusive with `relu`).
+    pub gelu: bool,
     data: Vec<u8>,
 }
 
@@ -189,9 +229,176 @@ impl QuantLayer {
             scale: l.scale,
             kind,
             relu: l.relu,
+            gelu: l.gelu,
             data: l.data.clone(),
         };
         Ok((q, out_shape))
+    }
+
+    /// Graph-aware planner for the v4 ops (delegates flat linear and conv
+    /// records to [`QuantLayer::plan`]). `planned_of[i]` maps pack layer
+    /// index → planned layer index (`usize::MAX` = not planned yet or
+    /// consumed), `out_shapes[p]` is planned layer `p`'s output shape —
+    /// both needed to resolve residual sources. The caller has already
+    /// run [`PackedModel::validate_graph`], so attention refs are known
+    /// to be in-range distinct linears of the right size.
+    fn plan_graph(
+        l: &PackedLayer,
+        shape: ActShape,
+        pm: &PackedModel,
+        planned_of: &[usize],
+        out_shapes: &[ActShape],
+    ) -> Result<(QuantLayer, ActShape)> {
+        let structural = |kind: LayerKind, out: ActShape| -> (QuantLayer, ActShape) {
+            (
+                QuantLayer {
+                    name: l.name.clone(),
+                    bits: l.bits,
+                    scale: l.scale,
+                    kind,
+                    relu: l.relu,
+                    gelu: l.gelu,
+                    data: l.data.clone(),
+                },
+                out,
+            )
+        };
+        match l.op {
+            LayerOp::Conv2d(_) => Self::plan(l, shape),
+            LayerOp::Linear => {
+                let ActShape::Seq(s, d) = shape else {
+                    return Self::plan(l, shape);
+                };
+                l.validate()?;
+                ensure!(
+                    (1..=8).contains(&l.bits),
+                    "layer {:?}: serving kernels support 1..=8 bits, got {}",
+                    l.name,
+                    l.bits
+                );
+                if l.numel == 0 || l.numel % d != 0 {
+                    bail!(
+                        "layer {:?}: {} weights do not factor over token dim {d}",
+                        l.name,
+                        l.numel
+                    );
+                }
+                let rows = l.numel / d;
+                s.checked_mul(rows)
+                    .filter(|&n| n <= MAX_ACT_ELEMS)
+                    .with_context(|| format!("layer {:?}: implausible sequence size", l.name))?;
+                Ok(structural(
+                    LayerKind::LinearSeq { rows, cols: d, seq: s },
+                    ActShape::Seq(s, rows),
+                ))
+            }
+            LayerOp::SeqView { seq, dim } => {
+                l.validate()?;
+                let ActShape::Flat(n) = shape else {
+                    bail!("layer {:?}: seqview needs a flat input, got {shape:?}", l.name);
+                };
+                let prod = seq
+                    .checked_mul(dim)
+                    .filter(|&p| p <= MAX_ACT_ELEMS)
+                    .with_context(|| format!("layer {:?}: implausible seqview size", l.name))?;
+                ensure!(
+                    prod == n,
+                    "layer {:?}: seqview {seq}x{dim} does not match input width {n}",
+                    l.name
+                );
+                Ok(structural(LayerKind::SeqView { seq, dim }, ActShape::Seq(seq, dim)))
+            }
+            LayerOp::LayerNorm => {
+                l.validate()?;
+                let (rows, cols) = match shape {
+                    ActShape::Seq(s, d) => (s, d),
+                    ActShape::Flat(d) => (1, d),
+                    ActShape::Spatial(..) => {
+                        bail!("layer {:?}: layernorm over a spatial map is not planned", l.name)
+                    }
+                };
+                ensure!(cols > 0, "layer {:?}: zero-width layernorm", l.name);
+                Ok(structural(LayerKind::LayerNorm { rows, cols }, shape))
+            }
+            LayerOp::MeanPool => {
+                l.validate()?;
+                let ActShape::Seq(s, d) = shape else {
+                    bail!("layer {:?}: meanpool needs a token sequence, got {shape:?}", l.name);
+                };
+                Ok(structural(LayerKind::MeanPool { seq: s, dim: d }, ActShape::Flat(d)))
+            }
+            LayerOp::Residual { src } => {
+                l.validate()?;
+                let p = planned_of.get(src).copied().unwrap_or(usize::MAX);
+                ensure!(
+                    p != usize::MAX,
+                    "layer {:?}: residual source {src} is not an executed layer",
+                    l.name
+                );
+                ensure!(
+                    out_shapes[p] == shape,
+                    "layer {:?}: residual source shape {:?} does not match incoming {shape:?}",
+                    l.name,
+                    out_shapes[p]
+                );
+                Ok(structural(LayerKind::Residual { src: p, elems: shape.elems() }, shape))
+            }
+            LayerOp::Attention(a) => {
+                l.validate()?;
+                let d = a
+                    .model_dim()
+                    .with_context(|| format!("layer {:?}: head product overflows", l.name))?;
+                let ActShape::Seq(s, dim) = shape else {
+                    bail!(
+                        "layer {:?}: attention needs a token sequence (seqview first), got \
+                         {shape:?}",
+                        l.name
+                    );
+                };
+                ensure!(
+                    dim == d,
+                    "layer {:?}: attention model dim {d} vs incoming token dim {dim}",
+                    l.name
+                );
+                ensure!(
+                    s == a.seq_len,
+                    "layer {:?}: descriptor seq_len {} vs incoming sequence {s}",
+                    l.name,
+                    a.seq_len
+                );
+                // score matrices are heads·s·s floats per sample
+                a.num_heads
+                    .checked_mul(s)
+                    .and_then(|x| x.checked_mul(s))
+                    .filter(|&n| n <= MAX_ACT_ELEMS)
+                    .with_context(|| {
+                        format!("layer {:?}: implausible attention score size", l.name)
+                    })?;
+                let mk = |r: usize| -> Result<ProjWeights> {
+                    let t = &pm.layers[r];
+                    t.validate()?;
+                    ensure!(
+                        (1..=8).contains(&t.bits),
+                        "layer {:?}: serving kernels support 1..=8 bits, got {}",
+                        t.name,
+                        t.bits
+                    );
+                    Ok(ProjWeights { bits: t.bits, scale: t.scale, data: t.data.clone() })
+                };
+                Ok(structural(
+                    LayerKind::Attention {
+                        heads: a.num_heads,
+                        head_dim: a.head_dim,
+                        seq: s,
+                        q: mk(a.q_ref)?,
+                        k: mk(a.k_ref)?,
+                        v: mk(a.v_ref)?,
+                        proj: mk(a.proj_ref)?,
+                    },
+                    shape,
+                ))
+            }
+        }
     }
 
     /// Linear-only constructor kept for hand-built MLP plans (tests, and
@@ -210,6 +417,12 @@ impl QuantLayer {
         match self.kind {
             LayerKind::Linear { cols, .. } => cols,
             LayerKind::Conv2d { desc, in_h, in_w, .. } => in_h * in_w * desc.in_ch,
+            LayerKind::LinearSeq { cols, seq, .. } => seq * cols,
+            LayerKind::SeqView { seq, dim } => seq * dim,
+            LayerKind::LayerNorm { rows, cols } => rows * cols,
+            LayerKind::Attention { heads, head_dim, seq, .. } => seq * heads * head_dim,
+            LayerKind::Residual { elems, .. } => elems,
+            LayerKind::MeanPool { seq, dim } => seq * dim,
         }
     }
 
@@ -218,27 +431,46 @@ impl QuantLayer {
         match self.kind {
             LayerKind::Linear { rows, .. } => rows,
             LayerKind::Conv2d { desc, out_h, out_w, .. } => out_h * out_w * desc.out_ch,
+            LayerKind::LinearSeq { rows, seq, .. } => seq * rows,
+            LayerKind::MeanPool { dim, .. } => dim,
+            // the remaining v4 ops are shape-preserving
+            _ => self.in_elems(),
         }
     }
 
-    /// Packed weight element count.
+    /// Packed weight element count (attention counts its four folded
+    /// projections).
     pub fn weight_numel(&self) -> usize {
         match self.kind {
-            LayerKind::Linear { rows, cols } => rows * cols,
+            LayerKind::Linear { rows, cols } | LayerKind::LinearSeq { rows, cols, .. } => {
+                rows * cols
+            }
             LayerKind::Conv2d { desc, .. } => desc.weight_numel().unwrap_or(0),
+            LayerKind::Attention { heads, head_dim, .. } => {
+                let d = heads * head_dim;
+                4 * d * d
+            }
+            _ => 0,
         }
     }
 
     pub fn kind_name(&self) -> &'static str {
         match self.kind {
-            LayerKind::Linear { .. } => "linear",
+            LayerKind::Linear { .. } | LayerKind::LinearSeq { .. } => "linear",
             LayerKind::Conv2d { .. } => "conv2d",
+            LayerKind::SeqView { .. } => "seqview",
+            LayerKind::LayerNorm { .. } => "layernorm",
+            LayerKind::Attention { .. } => "attention",
+            LayerKind::Residual { .. } => "residual",
+            LayerKind::MeanPool { .. } => "meanpool",
         }
     }
 
-    /// Dispatch the layer's quantized kernel: `qgemm` for linear,
-    /// `qconv2d` for conv (both decode codes on the fly; see
-    /// [`kernels`]). ReLU fusion is applied by the caller.
+    /// Dispatch the layer's kernel: `qgemm` for (position-wise) linear,
+    /// `qconv2d` for conv, `qattention` for attention (all decode codes
+    /// on the fly; see [`kernels`]). ReLU/GELU fusion is applied by the
+    /// caller; `Residual` is resolved by the executor and never reaches
+    /// here.
     pub fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], pool: Option<&ThreadPool>) {
         match &self.kind {
             LayerKind::Linear { rows, cols } => kernels::qgemm(
@@ -247,11 +479,47 @@ impl QuantLayer {
             LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d(
                 &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, out, pool,
             ),
+            // position-wise linear IS a qgemm with batch·seq rows of cols
+            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm(
+                &self.data, self.bits, self.scale, *rows, *cols, x, batch * seq, out, pool,
+            ),
+            LayerKind::SeqView { .. } => out.copy_from_slice(x),
+            LayerKind::LayerNorm { rows, cols } => {
+                layernorm_rows(x, batch * rows, *cols, LN_EPS, out);
+            }
+            LayerKind::Attention { heads, head_dim, seq, q, k, v, proj } => {
+                kernels::qattention(
+                    q, k, v, proj, *heads, *head_dim, *seq, x, batch, out, pool,
+                );
+            }
+            LayerKind::Residual { .. } => {
+                unreachable!("residual layers are executed by infer_batch")
+            }
+            LayerKind::MeanPool { seq, dim } => {
+                let inv = 1.0 / *seq as f32;
+                for b in 0..batch {
+                    let ob = &mut out[b * dim..(b + 1) * dim];
+                    ob.fill(0.0);
+                    for t in 0..*seq {
+                        axpy(1.0, &x[(b * seq + t) * dim..(b * seq + t + 1) * dim], ob);
+                    }
+                    for o in ob.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
         }
     }
 
+    /// Resident packed bytes (attention owns its consumed projections).
     pub fn payload_bytes(&self) -> usize {
-        self.data.len()
+        let own = self.data.len();
+        match &self.kind {
+            LayerKind::Attention { q, k, v, proj, .. } => {
+                own + q.data.len() + k.data.len() + v.data.len() + proj.data.len()
+            }
+            _ => own,
+        }
     }
 }
 
@@ -289,10 +557,28 @@ impl ServableModel {
             // the dim chain then accepts or rejects it as before
             _ => ActShape::Flat(input_dim),
         };
-        let mut layers = Vec::with_capacity(pm.layers.len());
+        pm.validate_graph().with_context(|| format!("model {name:?}"))?;
+        // attention projections are *consumed*: folded into the attention
+        // layer's plan, never executed as standalone linears
+        let mut consumed = vec![false; pm.layers.len()];
         for l in &pm.layers {
-            let (q, next) =
-                QuantLayer::plan(l, shape).with_context(|| format!("model {name:?}"))?;
+            if let LayerOp::Attention(a) = l.op {
+                for r in a.refs() {
+                    consumed[r] = true;
+                }
+            }
+        }
+        let mut layers = Vec::with_capacity(pm.layers.len());
+        let mut planned_of = vec![usize::MAX; pm.layers.len()];
+        let mut out_shapes: Vec<ActShape> = Vec::with_capacity(pm.layers.len());
+        for (i, l) in pm.layers.iter().enumerate() {
+            if consumed[i] {
+                continue;
+            }
+            let (q, next) = QuantLayer::plan_graph(l, shape, pm, &planned_of, &out_shapes)
+                .with_context(|| format!("model {name:?}"))?;
+            planned_of[i] = layers.len();
+            out_shapes.push(next);
             shape = next;
             layers.push(q);
         }
@@ -353,16 +639,47 @@ impl ServableModel {
             batch,
             self.input_dim
         );
+        // activations that later residual layers will add back in: planned
+        // index → saved post-activation output
+        let mut saved: HashMap<usize, Vec<f32>> = HashMap::new();
+        let save_set: Vec<usize> = self
+            .layers
+            .iter()
+            .filter_map(|l| match l.kind {
+                LayerKind::Residual { src, .. } => Some(src),
+                _ => None,
+            })
+            .collect();
         let mut cur: Vec<f32> = Vec::new();
         for (i, layer) in self.layers.iter().enumerate() {
             // layer 0 reads the caller's buffer directly (no input copy)
             let src: &[f32] = if i == 0 { x } else { &cur };
-            let mut next = vec![0f32; batch * layer.out_elems()];
-            layer.forward(src, batch, &mut next, pool);
+            let mut next;
+            if let LayerKind::Residual { src: from, elems } = layer.kind {
+                let skip = saved
+                    .get(&from)
+                    .unwrap_or_else(|| panic!("residual source {from} was not saved"));
+                debug_assert_eq!(src.len(), batch * elems);
+                debug_assert_eq!(skip.len(), batch * elems);
+                next = src.to_vec();
+                for (n, s) in next.iter_mut().zip(skip.iter()) {
+                    *n += s;
+                }
+            } else {
+                next = vec![0f32; batch * layer.out_elems()];
+                layer.forward(src, batch, &mut next, pool);
+            }
             if layer.relu {
                 for v in next.iter_mut() {
                     *v = v.max(0.0);
                 }
+            } else if layer.gelu {
+                for v in next.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            if save_set.contains(&i) {
+                saved.insert(i, next.clone());
             }
             cur = next;
         }
@@ -654,5 +971,188 @@ mod tests {
         assert_eq!(mlp_hidden_dims(&pm, 12).unwrap(), vec![8]);
         assert!(chain_dims(&pm, 7).is_err());
         assert!(chain_dims(&pm, 0).is_err());
+    }
+
+    /// 4 tokens of 6 features -> dim 4, 2 heads, hidden 8, 3 classes,
+    /// mixed 3..=8-bit payload layers.
+    fn toy_transformer(depth: usize, seed: u64) -> PackedModel {
+        let bits: Vec<u8> = (0..2 + 6 * depth).map(|q| 3 + (q as u8 % 6)).collect();
+        PackedModel::synth_transformer(4, 6, 4, 2, depth, 3, &bits, seed).unwrap()
+    }
+
+    #[test]
+    fn transformer_plan_chains_shapes() {
+        let pm = toy_transformer(2, 11);
+        let m = ServableModel::from_packed_auto("vit", &pm, None).unwrap();
+        assert_eq!(m.input_dim, 24);
+        // 27 records minus 8 consumed attention projections
+        assert_eq!(m.layers.len(), 19);
+        let kinds: Vec<&str> = m.layers.iter().map(|l| l.kind_name()).collect();
+        let block = ["layernorm", "attention", "residual", "layernorm", "linear", "linear",
+            "residual"];
+        let mut want = vec!["seqview", "linear"];
+        want.extend(block);
+        want.extend(block);
+        want.extend(["layernorm", "meanpool", "linear"]);
+        assert_eq!(kinds, want);
+        match &m.layers[3].kind {
+            LayerKind::Attention { heads, head_dim, seq, .. } => {
+                assert_eq!((*heads, *head_dim, *seq), (2, 2, 4));
+            }
+            k => panic!("layer 3 should be attention, got {k:?}"),
+        }
+        // block-0 res1 adds the embed output; res2 adds res1's
+        match m.layers[4].kind {
+            LayerKind::Residual { src, elems } => assert_eq!((src, elems), (1, 16)),
+            ref k => panic!("layer 4 should be residual, got {k:?}"),
+        }
+        match m.layers[8].kind {
+            LayerKind::Residual { src, .. } => assert_eq!(src, 4),
+            ref k => panic!("layer 8 should be residual, got {k:?}"),
+        }
+        // fc1 carries the fused GELU, nothing carries ReLU
+        assert!(m.layers[6].gelu && !m.layers[6].relu);
+        assert!(m.layers.iter().all(|l| !l.relu));
+        assert_eq!(m.output_dim(), 3);
+        // accounting sees the folded projections exactly once
+        assert_eq!(m.payload_bytes(), pm.payload_bytes());
+        assert_eq!(m.fp32_bytes(), pm.fp32_bytes());
+        // and the MLP dim chain refuses transformer packs outright
+        let err = chain_dims(&pm, 24).unwrap_err();
+        assert!(err.to_string().contains("transformer"), "{err}");
+    }
+
+    fn matmul_ref(w: &[f32], x: &[f64], rows: usize, cols: usize, tokens: usize) -> Vec<f64> {
+        let mut out = vec![0f64; tokens * rows];
+        for t in 0..tokens {
+            for r in 0..rows {
+                out[t * rows + r] =
+                    (0..cols).map(|j| w[r * cols + j] as f64 * x[t * cols + j]).sum();
+            }
+        }
+        out
+    }
+
+    fn ln_ref(x: &[f64], cols: usize) -> Vec<f64> {
+        let mut out = vec![0f64; x.len()];
+        for (r, row) in x.chunks(cols).enumerate() {
+            let mean = row.iter().sum::<f64>() / cols as f64;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / cols as f64;
+            let inv = 1.0 / (var + LN_EPS as f64).sqrt();
+            for (o, v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+                *o = (v - mean) * inv;
+            }
+        }
+        out
+    }
+
+    fn gelu_ref(x: f64) -> f64 {
+        let c = (2.0 / std::f64::consts::PI).sqrt();
+        0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+    }
+
+    fn mha_ref(q: &[f64], k: &[f64], v: &[f64], s: usize, heads: usize, hd: usize) -> Vec<f64> {
+        let d = heads * hd;
+        let mut ctx = vec![0f64; s * d];
+        for h in 0..heads {
+            let o = h * hd;
+            for i in 0..s {
+                let mut row = vec![0f64; s];
+                for (j, rj) in row.iter_mut().enumerate() {
+                    *rj = (0..hd).map(|t| q[i * d + o + t] * k[j * d + o + t]).sum::<f64>()
+                        / (hd as f64).sqrt();
+                }
+                let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = row.iter().map(|x| (x - max).exp()).collect();
+                let z: f64 = exps.iter().sum();
+                for t in 0..hd {
+                    ctx[i * d + o + t] =
+                        exps.iter().enumerate().map(|(j, e)| e / z * v[j * d + o + t]).sum();
+                }
+            }
+        }
+        ctx
+    }
+
+    #[test]
+    fn transformer_infer_matches_dense_reference() {
+        let (s, td, d, heads, classes) = (4usize, 6usize, 4usize, 2usize, 3usize);
+        let pm = toy_transformer(1, 23);
+        let m = ServableModel::from_packed_auto("vit", &pm, None).unwrap();
+        let batch = 2;
+        let x = rand_vec(batch * s * td, 17);
+
+        // f64 straight-line interpreter over the depth-1 record layout
+        let w = |i: usize| unpack_layer(&pm.layers[i]).unwrap();
+        let (wemb, wq, wk, wv, wp) = (w(1), w(4), w(5), w(6), w(7));
+        let (w1, w2, wh) = (w(10), w(11), w(15));
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let tok: Vec<f64> =
+                x[b * s * td..(b + 1) * s * td].iter().map(|&v| v as f64).collect();
+            let e = matmul_ref(&wemb, &tok, d, td, s);
+            let n1 = ln_ref(&e, d);
+            let qm = matmul_ref(&wq, &n1, d, d, s);
+            let km = matmul_ref(&wk, &n1, d, d, s);
+            let vm = matmul_ref(&wv, &n1, d, d, s);
+            let ctx = mha_ref(&qm, &km, &vm, s, heads, d / heads);
+            let a = matmul_ref(&wp, &ctx, d, d, s);
+            let r1: Vec<f64> = a.iter().zip(&e).map(|(p, q)| p + q).collect();
+            let n2 = ln_ref(&r1, d);
+            let mut h1 = matmul_ref(&w1, &n2, 2 * d, d, s);
+            for v in h1.iter_mut() {
+                *v = gelu_ref(*v);
+            }
+            let h2 = matmul_ref(&w2, &h1, d, 2 * d, s);
+            let r2: Vec<f64> = h2.iter().zip(&r1).map(|(p, q)| p + q).collect();
+            let nf = ln_ref(&r2, d);
+            let mut pooled = vec![0f64; d];
+            for t in 0..s {
+                for (j, p) in pooled.iter_mut().enumerate() {
+                    *p += nf[t * d + j];
+                }
+            }
+            for p in pooled.iter_mut() {
+                *p /= s as f64;
+            }
+            expect.extend(matmul_ref(&wh, &pooled, classes, d, 1));
+        }
+
+        let got = m.infer_batch(&x, batch, None).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert!((*g as f64 - e).abs() < 1e-4, "idx {i}: {g} vs {e}");
+        }
+        // pooled execution is bit-identical to serial
+        let pool = ThreadPool::new(4);
+        assert_eq!(m.infer_batch(&x, batch, Some(&pool)).unwrap(), got);
+        // and a disk round-trip through the registry serves the same bits
+        let path = std::env::temp_dir().join("msq_registry_vit.msqpack");
+        pm.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        let m2 = reg.load_file("vit", &path, None).unwrap();
+        assert_eq!(m2.infer_batch(&x, batch, None).unwrap(), got);
+    }
+
+    #[test]
+    fn attention_without_seqview_is_rejected() {
+        let bits = [8u8; 8];
+        let mut pm = PackedModel::synth_transformer(2, 3, 4, 2, 1, 3, &bits, 5).unwrap();
+        // strip the reshape: activations stay flat all the way to the
+        // attention layer, which must refuse them
+        pm.layers[0].op = LayerOp::LayerNorm;
+        let err = ServableModel::from_packed_auto("vit", &pm, None).unwrap_err();
+        assert!(format!("{err:#}").contains("token sequence"), "{err:#}");
+    }
+
+    #[test]
+    fn residual_shape_mismatch_is_rejected() {
+        let bits = [8u8; 8];
+        let mut pm = PackedModel::synth_transformer(4, 6, 4, 2, 1, 3, &bits, 5).unwrap();
+        // res1 normally adds the embed output (4x4 tokens); point it at
+        // the patchify output (4x6 tokens) instead
+        pm.layers[8].op = LayerOp::Residual { src: 0 };
+        let err = ServableModel::from_packed_auto("vit", &pm, None).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
     }
 }

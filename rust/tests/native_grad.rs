@@ -9,7 +9,7 @@
 //! claims to be.
 
 use msq::native::ops::{self, Quantizer};
-use msq::native::{Tape, Tensor};
+use msq::native::{NodeId, Tape, Tensor};
 use msq::quant;
 
 const EPS: f32 = 1e-2;
@@ -200,6 +200,149 @@ fn roundclamp_ste_gradient_matches_fd_at_the_quantized_point() {
         let ng = fd(&fq, |f| &mut f.w1, i);
         let rel = (ag - ng).abs() / (ag.abs() + ng.abs()).max(0.1);
         assert!(rel < REL_TOL, "ste w1[{i}]: {ag} vs fd {ng} (rel {rel})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer ops: FD checks through a full pre-norm attention block
+// (reshape → layernorm → MHA → residual add → GELU → mean-pool → head).
+// Every op here is smooth, so central differences apply everywhere —
+// no kink-dodging needed.
+// ---------------------------------------------------------------------------
+
+const TM: usize = 2; // samples
+const TS: usize = 3; // tokens per sample
+const TD: usize = 4; // model dim (2 heads × head_dim 2)
+
+#[derive(Clone)]
+struct TFix {
+    x: Vec<f32>,  // TM × (TS·TD), reshaped to (TM·TS) × TD on the tape
+    wq: Vec<f32>, // TD × TD
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    wh: Vec<f32>, // 2 × TD classifier head
+    labels: Vec<i32>,
+}
+
+fn tfix() -> TFix {
+    // deterministic, aperiodic-enough values in [-0.5, 0.5): keeps every
+    // layernorm row variance O(0.1) and all attention logits O(1)
+    let gen = |n: usize, salt: usize| -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 + salt * 13 + 11) % 19) as f32 / 19.0 - 0.5).collect()
+    };
+    TFix {
+        x: gen(TM * TS * TD, 1),
+        wq: gen(TD * TD, 2),
+        wk: gen(TD * TD, 3),
+        wv: gen(TD * TD, 4),
+        wo: gen(TD * TD, 5),
+        wh: gen(2 * TD, 6),
+        labels: vec![1, 0],
+    }
+}
+
+/// CE(head(mean_pool(gelu(tokens + proj(attn(LN(tokens)))))), labels)
+/// where tokens = reshape(x) — one block of the vit-tiny graph.
+fn tbuild(tape: &mut Tape, f: &TFix) -> ([NodeId; 6], f32, NodeId) {
+    let x = tape.leaf(Tensor::from_vec(TM, TS * TD, f.x.clone()));
+    let wq = tape.leaf(Tensor::from_vec(TD, TD, f.wq.clone()));
+    let wk = tape.leaf(Tensor::from_vec(TD, TD, f.wk.clone()));
+    let wv = tape.leaf(Tensor::from_vec(TD, TD, f.wv.clone()));
+    let wo = tape.leaf(Tensor::from_vec(TD, TD, f.wo.clone()));
+    let wh = tape.leaf(Tensor::from_vec(2, TD, f.wh.clone()));
+    let zero_d = tape.leaf(Tensor::zeros(1, TD));
+    let zero_c = tape.leaf(Tensor::zeros(1, 2));
+    let tokens = tape.reshape(x, TM * TS, TD);
+    let ln = tape.layer_norm(tokens);
+    let q = tape.linear(ln, wq, zero_d);
+    let k = tape.linear(ln, wk, zero_d);
+    let v = tape.linear(ln, wv, zero_d);
+    let ctx = tape.attention(q, k, v, TS, 2, TD / 2);
+    let proj = tape.linear(ctx, wo, zero_d);
+    let res = tape.add(tokens, proj);
+    let g = tape.gelu(res);
+    let pooled = tape.mean_pool(g, TS);
+    let y = tape.linear(pooled, wh, zero_c);
+    let out = tape.softmax_ce(y, &f.labels);
+    ([x, wq, wk, wv, wo, wh], out.ce_mean, out.id)
+}
+
+fn tloss(f: &TFix) -> f32 {
+    let mut tape = Tape::new(None);
+    tbuild(&mut tape, f).1
+}
+
+fn tanalytic(f: &TFix) -> [Vec<f32>; 6] {
+    let mut tape = Tape::new(None);
+    let (leaves, _, loss) = tbuild(&mut tape, f);
+    tape.backward(loss);
+    [
+        tape.grad(leaves[0]).to_vec(),
+        tape.grad(leaves[1]).to_vec(),
+        tape.grad(leaves[2]).to_vec(),
+        tape.grad(leaves[3]).to_vec(),
+        tape.grad(leaves[4]).to_vec(),
+        tape.grad(leaves[5]).to_vec(),
+    ]
+}
+
+fn tcheck(name: &str, a: &[f32], f: &TFix, pick: fn(&mut TFix) -> &mut Vec<f32>) {
+    for (i, &ag) in a.iter().enumerate() {
+        let mut fp = f.clone();
+        pick(&mut fp)[i] += EPS;
+        let mut fm = f.clone();
+        pick(&mut fm)[i] -= EPS;
+        let ng = (tloss(&fp) - tloss(&fm)) / (2.0 * EPS);
+        let rel = (ag - ng).abs() / (ag.abs() + ng.abs()).max(0.1);
+        assert!(rel < REL_TOL, "{name}[{i}]: analytic {ag} vs fd {ng} (rel {rel})");
+    }
+}
+
+#[test]
+fn attention_projection_gradients_match_fd() {
+    // wq/wk exercise the dS = P∘(dP − rowsum)·scale softmax-jacobian
+    // path; wv the probability-weighted value accumulation
+    let f = tfix();
+    let a = tanalytic(&f);
+    tcheck("wq", &a[1], &f, |f| &mut f.wq);
+    tcheck("wk", &a[2], &f, |f| &mut f.wk);
+    tcheck("wv", &a[3], &f, |f| &mut f.wv);
+}
+
+#[test]
+fn layernorm_and_input_gradients_match_fd() {
+    // dL/dx flows through reshape, layernorm (both the normalized path
+    // and the residual skip), attention, gelu, and mean-pool at once
+    let f = tfix();
+    let a = tanalytic(&f);
+    tcheck("x", &a[0], &f, |f| &mut f.x);
+}
+
+#[test]
+fn gelu_meanpool_and_head_gradients_match_fd() {
+    let f = tfix();
+    let a = tanalytic(&f);
+    tcheck("wo", &a[4], &f, |f| &mut f.wo);
+    tcheck("wh", &a[5], &f, |f| &mut f.wh);
+}
+
+#[test]
+fn transformer_ops_agree_between_serial_and_pooled_tapes() {
+    // parallel attention partitions samples only — gradients must be
+    // bit-identical to the serial tape, not merely close
+    let f = tfix();
+    let pool = msq::util::threadpool::ThreadPool::new(3);
+    let serial = tanalytic(&f);
+    let mut tape = Tape::new(Some(&pool));
+    let (leaves, _, loss) = tbuild(&mut tape, &f);
+    tape.backward(loss);
+    for (i, name) in ["x", "wq", "wk", "wv", "wo", "wh"].iter().enumerate() {
+        assert_eq!(
+            tape.grad(leaves[i]),
+            &serial[i][..],
+            "pooled {name} gradient diverged from serial bits"
+        );
     }
 }
 

@@ -8,6 +8,10 @@
 //! * `v2_mlp.msqpack`  — magic `MSQPACK2`, input-dim header, same layers
 //! * `v3_conv.msqpack` — magic `MSQPACK3`, spatial input shape + per-
 //!   layer op descriptors (one conv2d + relu, one linear head)
+//! * `v4_vit.msqpack`  — magic `MSQPACK4`, a depth-1 pre-norm ViT
+//!   (seqview → embed → LN/MHA/residual/LN/GELU-MLP/residual → LN →
+//!   mean-pool → head) exercising every transformer descriptor and the
+//!   fused-GELU flag
 //!
 //! The suite pins (a) the derived dims/descriptors of each fixture, (b)
 //! byte-identical v3 write→read round trips, (c) cross-version serving
@@ -17,13 +21,14 @@
 //! products and garbage descriptors must all return `Err` — never panic,
 //! never OOM.
 
-use msq::quant::pack::{unpack_layer, Conv2dDesc, LayerOp, PackedModel};
+use msq::quant::pack::{unpack_layer, AttnDesc, Conv2dDesc, LayerOp, PackedModel};
 use msq::serve::{LayerKind, ServableModel};
 use msq::util::prng::Rng;
 
 const V1: &[u8] = include_bytes!("fixtures/v1_mlp.msqpack");
 const V2: &[u8] = include_bytes!("fixtures/v2_mlp.msqpack");
 const V3: &[u8] = include_bytes!("fixtures/v3_conv.msqpack");
+const V4: &[u8] = include_bytes!("fixtures/v4_vit.msqpack");
 
 #[test]
 fn v1_fixture_parses_and_serves_with_override() {
@@ -164,6 +169,72 @@ fn pre_v3_fixtures_reserialize_as_v3_and_still_serve() {
     );
 }
 
+#[test]
+fn v4_fixture_descriptors_and_flags() {
+    let pm = PackedModel::parse(V4).expect("v4 fixture must parse");
+    assert_eq!(pm.input_dim, 6);
+    assert_eq!(pm.input_hwc, (0, 0, 0), "flat input — seqview does the reshaping");
+    assert!(pm.has_transformer());
+    assert_eq!(pm.layers.len(), 16);
+
+    assert_eq!(pm.layers[0].op, LayerOp::SeqView { seq: 2, dim: 3 });
+    assert_eq!(pm.layers[0].numel, 0, "structural records carry no payload");
+    assert_eq!((pm.layers[1].name.as_str(), pm.layers[1].numel), ("embed", 6));
+    assert_eq!(pm.layers[2].op, LayerOp::LayerNorm);
+    match pm.layers[3].op {
+        LayerOp::Attention(a) => assert_eq!(
+            a,
+            AttnDesc {
+                num_heads: 1,
+                head_dim: 2,
+                seq_len: 2,
+                q_ref: 4,
+                k_ref: 5,
+                v_ref: 6,
+                proj_ref: 7,
+            }
+        ),
+        other => panic!("record 3 must be attention, got {other:?}"),
+    }
+    assert_eq!(pm.layers[8].op, LayerOp::Residual { src: 1 });
+    assert!(pm.layers[10].gelu, "fc1 must carry the fused-GELU flag");
+    assert!(!pm.layers[10].relu);
+    assert_eq!(pm.layers[12].op, LayerOp::Residual { src: 8 });
+    assert_eq!(pm.layers[14].op, LayerOp::MeanPool);
+    assert_eq!((pm.layers[15].name.as_str(), pm.layers[15].numel), ("head", 4));
+    // the quantized payloads are 8-bit, so bytes == codes, 42 in total
+    assert_eq!(pm.payload_bytes(), 42);
+}
+
+#[test]
+fn v4_fixture_roundtrip_is_bit_identical() {
+    // parse -> serialize must reproduce the fixture byte-for-byte, and
+    // the v4 magic must persist (a transformer pack can never silently
+    // downgrade to v3 on re-save)
+    let pm = PackedModel::parse(V4).unwrap();
+    let bytes = pm.to_bytes().unwrap();
+    assert_eq!(bytes, V4, "canonical v4 serialization drifted from the golden fixture");
+    assert_eq!(&bytes[..8], b"MSQPACK4");
+    let again = PackedModel::parse(&bytes).unwrap();
+    assert_eq!(again.to_bytes().unwrap(), bytes);
+}
+
+#[test]
+fn v4_fixture_serves_bit_stably() {
+    let pm = PackedModel::parse(V4).unwrap();
+    let m = ServableModel::from_packed_auto("v4", &pm, None).unwrap();
+    assert_eq!(m.input_dim, 6);
+    assert_eq!(m.output_dim(), 2);
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..4 * 6).map(|_| rng.normal()).collect();
+    let serial = m.infer_batch(&x, 4, None).unwrap();
+    assert_eq!(serial.len(), 8);
+    assert!(serial.iter().all(|v| v.is_finite()));
+    let pool = msq::util::threadpool::ThreadPool::new(3);
+    let pooled = m.infer_batch(&x, 4, Some(&pool)).unwrap();
+    assert_eq!(serial, pooled, "pooled transformer serving diverged from serial bits");
+}
+
 // ---------------------------------------------------------------------------
 // Adversarial loader behaviour (same style as the net/http.rs property
 // tests): hostile bytes must produce Err, never a panic or an OOM.
@@ -171,7 +242,7 @@ fn pre_v3_fixtures_reserialize_as_v3_and_still_serve() {
 
 #[test]
 fn every_truncation_of_every_fixture_errors() {
-    for (name, full) in [("v1", V1), ("v2", V2), ("v3", V3)] {
+    for (name, full) in [("v1", V1), ("v2", V2), ("v3", V3), ("v4", V4)] {
         for cut in 0..full.len() {
             assert!(
                 PackedModel::parse(&full[..cut]).is_err(),
@@ -260,6 +331,102 @@ fn garbage_descriptor_bytes_error() {
     bytes[56..60].copy_from_slice(&11u32.to_le_bytes()); // in_ch 2 -> 11
     let err = PackedModel::parse(&bytes).unwrap_err().to_string();
     assert!(err.contains("conv descriptor"), "{err}");
+}
+
+#[test]
+fn v4_random_single_byte_mutations_never_panic() {
+    // same contract as the v3 fuzz, over the transformer fixture: parse
+    // may succeed or fail, planning may fail — nothing may panic
+    msq::util::prop::check(300, |g| {
+        let mut bytes = V4.to_vec();
+        let idx = g.usize_in(0, bytes.len() - 1);
+        bytes[idx] = g.usize_in(0, 255) as u8;
+        if let Ok(pm) = PackedModel::parse(&bytes) {
+            let _ = ServableModel::from_packed_auto("fuzz", &pm, None);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn v3_magic_on_transformer_content_is_rejected() {
+    // the transformer ops exist only from v4 on; a v3 file carrying an
+    // attention record is corrupt, not forward-compatible
+    let mut bytes = V4.to_vec();
+    bytes[..8].copy_from_slice(b"MSQPACK3");
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("op kind"), "{err}");
+}
+
+#[test]
+fn lying_attention_descriptors_are_rejected() {
+    // offsets into the v4 fixture (guarded below so layout drift fails
+    // loudly): the blk0.attn descriptor's u32s start at 146
+    let heads_at = 146;
+    let q_ref_at = 158;
+    assert_eq!(
+        u32::from_le_bytes(V4[heads_at..heads_at + 4].try_into().unwrap()),
+        1,
+        "fixture layout drifted: expected num_heads at {heads_at}"
+    );
+    assert_eq!(u32::from_le_bytes(V4[q_ref_at..q_ref_at + 4].try_into().unwrap()), 4);
+
+    // a lying head count: 3 heads x head_dim 2 wants 36-weight
+    // projections, the referenced records carry 4 — graph validation
+    // must kill it before any executor sizes buffers from it
+    let mut bytes = V4.to_vec();
+    bytes[heads_at..heads_at + 4].copy_from_slice(&3u32.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("heads need"), "{err}");
+
+    // zero heads dies in the per-layer descriptor check
+    let mut bytes = V4.to_vec();
+    bytes[heads_at..heads_at + 4].copy_from_slice(&0u32.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("zero fields"), "{err}");
+
+    // a projection ref past the record table
+    let mut bytes = V4.to_vec();
+    bytes[q_ref_at..q_ref_at + 4].copy_from_slice(&99u32.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+
+    // a ref at a structural record (ln1, index 2) instead of a linear
+    let mut bytes = V4.to_vec();
+    bytes[q_ref_at..q_ref_at + 4].copy_from_slice(&2u32.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("expected linear"), "{err}");
+}
+
+#[test]
+fn corrupt_v4_graph_structure_is_rejected() {
+    // residual re-reading a consumed attention projection (wq, index 4)
+    let src_at = 309;
+    assert_eq!(
+        u32::from_le_bytes(V4[src_at..src_at + 4].try_into().unwrap()),
+        1,
+        "fixture layout drifted: expected res1 src at {src_at}"
+    );
+    let mut bytes = V4.to_vec();
+    bytes[src_at..src_at + 4].copy_from_slice(&4u32.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("consumed attention projection"), "{err}");
+
+    // ReLU and GELU both set on fc1 are mutually exclusive
+    let flags_at = 366;
+    assert_eq!(V4[flags_at], 2, "fixture layout drifted: expected fc1 GELU flag at {flags_at}");
+    let mut bytes = V4.to_vec();
+    bytes[flags_at] = 3;
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("mutually exclusive"), "{err}");
+
+    // a structural record claiming payload elements
+    let numel_at = 49; // patchify numel u64
+    assert_eq!(V4[numel_at..numel_at + 8], [0u8; 8], "fixture layout drifted");
+    let mut bytes = V4.to_vec();
+    bytes[numel_at..numel_at + 8].copy_from_slice(&5u64.to_le_bytes());
+    let err = PackedModel::parse(&bytes).unwrap_err().to_string();
+    assert!(err.contains("carry no payload"), "{err}");
 }
 
 #[test]
