@@ -165,6 +165,39 @@ fn main() {
     results.push(r_core);
     results.push(r_core_pool);
 
+    // --- profiler overhead: the zero-cost-when-off claim, measured.
+    // Same batched forward with kernel profiling disabled vs enabled:
+    // "off" pays one relaxed atomic load per kernel call, "on" adds the
+    // per-row clock reads and per-block counter flushes.
+    let px: Vec<f32> = (0..8 * dims[0]).map(|_| rng.normal()).collect();
+    let pmodel = model.clone();
+    msq::obs::profiler().enable(false);
+    let r_prof_off = bench("infer_batch b=8 profiler=off", 2, 20, || {
+        std::hint::black_box(pmodel.infer_batch(&px, 8, None).unwrap());
+    });
+    r_prof_off.report(None);
+    msq::obs::profiler().reset();
+    msq::obs::profiler().enable(true);
+    let r_prof_on = bench("infer_batch b=8 profiler=on", 2, 20, || {
+        std::hint::black_box(pmodel.infer_batch(&px, 8, None).unwrap());
+    });
+    r_prof_on.report(None);
+    msq::obs::profiler().enable(false);
+    let overhead = r_prof_on.mean_s / r_prof_off.mean_s.max(1e-12) - 1.0;
+    println!(
+        "profiler: off {:.3} ms, on {:.3} ms ({:+.1}% overhead when enabled)",
+        r_prof_off.mean_s * 1e3,
+        r_prof_on.mean_s * 1e3,
+        overhead * 100.0
+    );
+    let profiler_section = Json::obj(vec![
+        ("off_ms", Json::Num(r_prof_off.mean_s * 1e3)),
+        ("on_ms", Json::Num(r_prof_on.mean_s * 1e3)),
+        ("enabled_overhead_frac", Json::Num(overhead)),
+    ]);
+    results.push(r_prof_off);
+    results.push(r_prof_on);
+
     // --- system-level: dynamic batching under closed-loop load
     let cfg = ServerConfig::default();
     let server = Server::start(model.clone(), cfg);
@@ -220,6 +253,7 @@ fn main() {
         ("p99_ms", Json::Num(p99 * 1e3)),
         ("server", server.metrics.snapshot(server.queue_depth())),
         ("kernel_core", kernel_core),
+        ("profiler", profiler_section),
         (
             "conv",
             Json::obj(vec![

@@ -14,8 +14,20 @@ use super::hessian::{omega, HessianEstimator};
 use super::report::{PruneEvent, RunReport};
 use super::schedule::cosine_lr;
 use crate::data::{Batcher, Dataset};
+use crate::metrics::Jsonl;
 use crate::runtime::backend::Backend;
+use crate::util::json::Json;
 use crate::util::timer::{peak_rss_bytes, Timer};
+
+/// `[f32,…]` telemetry array.
+fn arr_f32(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// `[bits,…]` telemetry array.
+fn arr_u8(v: &[u8]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
 
 /// Full configuration of one training run (paper Sec. 4.1 + supp Table 2).
 #[derive(Clone, Debug)]
@@ -83,6 +95,12 @@ pub struct Trainer<B: Backend> {
     pub backend: B,
     pub cfg: MsqConfig,
     pub bitstate: BitState,
+    /// When set, the run streams one JSON object per line: `run_start`,
+    /// one `epoch` event per epoch (loss, bit-width histogram, LSB
+    /// sparsity), one `prune` event per pruning round (β, Ω, bit moves),
+    /// and a closing `run_end` — the structured replacement for the
+    /// `verbose` prints, rendered back into a table by `msq report`.
+    pub telemetry: Option<Jsonl>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -110,7 +128,34 @@ impl<B: Backend> Trainer<B> {
         if let Some(fb) = cfg.fixed_bits {
             bitstate.scheme.bits.iter_mut().for_each(|b| *b = fb);
         }
-        Ok(Trainer { backend, cfg, bitstate })
+        Ok(Trainer { backend, cfg, bitstate, telemetry: None })
+    }
+
+    /// Stream telemetry events to a JSONL file (see `docs/OBSERVABILITY.md`
+    /// for the schema; `msq report` renders it back into a table).
+    pub fn telemetry_to(&mut self, path: &std::path::Path) -> Result<()> {
+        self.telemetry = Some(Jsonl::create(path)?);
+        Ok(())
+    }
+
+    /// Write one telemetry event if a sink is attached.
+    fn emit(&mut self, ev: Json) -> Result<()> {
+        if let Some(t) = self.telemetry.as_mut() {
+            t.write(&ev)?;
+        }
+        Ok(())
+    }
+
+    /// `{bits → layer count}` histogram of the current bit assignment.
+    fn bit_histogram(&self) -> Json {
+        let mut h: std::collections::BTreeMap<String, Json> = Default::default();
+        for &b in &self.bitstate.scheme.bits {
+            match h.entry(b.to_string()).or_insert(Json::Num(0.0)) {
+                Json::Num(n) => *n += 1.0,
+                _ => unreachable!(),
+            }
+        }
+        Json::Obj(h)
     }
 
     /// Run the full schedule on `ds`; returns the report.
@@ -125,6 +170,21 @@ impl<B: Backend> Trainer<B> {
             trainable_params: self.backend.trainable_params(),
             ..Default::default()
         };
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("run_start".into())),
+            ("label", Json::Str(report.label.clone())),
+            ("model", Json::Str(cfg.model.clone())),
+            ("method", Json::Str(cfg.method.clone())),
+            ("epochs", Json::Num(cfg.epochs as f64)),
+            ("lam", Json::Num(cfg.lam as f64)),
+            ("alpha", Json::Num(cfg.alpha as f64)),
+            ("interval", Json::Num(cfg.interval as f64)),
+            ("gamma", Json::Num(cfg.gamma)),
+            ("n0", Json::Num(cfg.n0 as f64)),
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("trainable_params", Json::Num(report.trainable_params as f64)),
+            ("layers", Json::Num(self.bitstate.scheme.bits.len() as f64)),
+        ]))?;
 
         let batch = self.backend.batch();
         let elems = self.backend.input_elems();
@@ -142,6 +202,9 @@ impl<B: Backend> Trainer<B> {
         let mut step_time_acc = 0f64;
 
         for epoch in 0..cfg.epochs {
+            // records one epoch wall-clock observation into the global
+            // registry on drop (panic-safe)
+            let _epoch_span = crate::obs::global().span("msq_train_epoch_seconds", &[]);
             let mut ep_loss = 0f64;
             let mut ep_correct = 0f64;
             let bits = self.bitstate.bits_f32();
@@ -211,6 +274,33 @@ impl<B: Backend> Trainer<B> {
                     );
                 }
             }
+
+            // ---- telemetry ------------------------------------------------
+            if self.telemetry.is_some() {
+                // LSB sparsity = mean β from the most recent prune-round
+                // stats pass; null until the first round (computing it
+                // every epoch would add a stats pass and perturb timing)
+                let lsb = report.prune_events.last().map(|e| {
+                    e.beta.iter().map(|&b| b as f64).sum::<f64>()
+                        / e.beta.len().max(1) as f64
+                });
+                let mut ev = vec![
+                    ("event", Json::Str("epoch".into())),
+                    ("epoch", Json::Num(epoch as f64)),
+                    ("loss", Json::Num(*report.train_loss.last().unwrap() as f64)),
+                    ("train_acc", Json::Num(*report.train_acc.last().unwrap() as f64)),
+                    ("avg_bits", Json::Num(self.bitstate.scheme.avg_bits())),
+                    ("compression", Json::Num(self.bitstate.compression())),
+                    ("lsb_sparsity", lsb.map(Json::Num).unwrap_or(Json::Null)),
+                    ("bits", arr_u8(&self.bitstate.scheme.bits)),
+                    ("bit_hist", self.bit_histogram()),
+                ];
+                if do_eval {
+                    ev.push(("eval_acc", Json::Num(*report.eval_acc.last().unwrap() as f64)));
+                    ev.push(("eval_loss", Json::Num(*report.eval_loss.last().unwrap() as f64)));
+                }
+                self.emit(Json::obj(ev))?;
+            }
         }
 
         report.steps = step;
@@ -220,6 +310,19 @@ impl<B: Backend> Trainer<B> {
         report.total_seconds = timer.seconds();
         report.step_seconds_mean = step_time_acc / step.max(1) as f64;
         report.peak_rss_bytes = peak_rss_bytes().unwrap_or(0);
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("run_end".into())),
+            ("steps", Json::Num(report.steps as f64)),
+            ("final_compression", Json::Num(report.final_compression)),
+            ("final_acc", Json::Num(report.final_acc as f64)),
+            ("best_acc", Json::Num(report.best_acc as f64)),
+            ("total_seconds", Json::Num(report.total_seconds)),
+            ("step_seconds_mean", Json::Num(report.step_seconds_mean)),
+            ("peak_rss_bytes", Json::Num(report.peak_rss_bytes as f64)),
+        ]))?;
+        if let Some(t) = self.telemetry.as_mut() {
+            t.flush()?;
+        }
         Ok(report)
     }
 
@@ -276,6 +379,16 @@ impl<B: Backend> Trainer<B> {
             prune_bits: self.bitstate.prune_bits.clone(),
             compression: self.bitstate.compression(),
         };
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("prune".into())),
+            ("epoch", Json::Num(epoch as f64)),
+            ("beta", arr_f32(&event.beta)),
+            ("omega", arr_f32(&event.omega)),
+            ("bits_before", arr_u8(&event.bits_before)),
+            ("bits_after", arr_u8(&event.bits_after)),
+            ("prune_bits", arr_u8(&event.prune_bits)),
+            ("compression", Json::Num(event.compression)),
+        ]))?;
         if cfg.verbose {
             println!("[{}_{}] {}", cfg.model, cfg.method, event.summary());
         }

@@ -52,6 +52,7 @@ pub mod kernels;
 pub mod metrics;
 pub mod native;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -18,7 +18,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use msq::coordinator::bsq::BsqTrainer;
@@ -44,7 +44,7 @@ const VALUE_OPTS: &[&str] = &[
     "set", "export", "packed", "requests", "concurrency", "max-batch", "max-delay-ms",
     "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden", "host", "port",
     "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s", "arch",
-    "size", "channels", "seq", "heads", "depth", "dim",
+    "size", "channels", "seq", "heads", "depth", "dim", "telemetry", "admin-token",
 ];
 
 fn main() -> Result<()> {
@@ -58,15 +58,18 @@ fn main() -> Result<()> {
         Some("gateway") => cmd_gateway(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("pack-synth") => cmd_pack_synth(&args),
+        Some("report") => cmd_report(&args),
         _ => {
             eprintln!(
-                "usage: msq <train|info|eval-init|eval-packed|serve|gateway|loadgen|pack-synth>\n\
+                "usage: msq <train|info|eval-init|eval-packed|serve|gateway|loadgen|pack-synth|report>\n\
                  train:      [--backend native|pjrt] [--model M] [--method msq|dorefa|bsq|csq]\n\
                  \x20           [--epochs N] [--batch B] [--hidden 256,128] [--threads T]\n\
                  \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
                  \x20           [--n-act BITS] [--fixed-bits N] [--no-hessian] [--quiet]\n\
                  \x20           [--train-size N] [--test-size N] [--seed S] [--out run.json]\n\
                  \x20           [--export model.msqpack] [--channels 8,16]\n\
+                 \x20           [--telemetry run.jsonl] (stream structured per-epoch/prune\n\
+                 \x20            events; render them later with `msq report run.jsonl`)\n\
                  \x20           (native: pure-Rust training, default build — --model mlp\n\
                  \x20            [--hidden …], --model conv [--channels …], or\n\
                  \x20            --model vit-tiny [--dim 16 --heads 2 --depth 2];\n\
@@ -79,9 +82,13 @@ fn main() -> Result<()> {
                  gateway:    --packed [name=]model.msqpack … [--host 127.0.0.1] [--port 8080]\n\
                  \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
-                 \x20           [--threads 0] [--run-secs N] [--quiet]\n\
+                 \x20           [--threads 0] [--run-secs N] [--quiet] [--profile]\n\
+                 \x20           [--admin-token TOKEN]\n\
                  \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
-                 \x20            GET /metrics, POST /admin/reload; --port 0 = ephemeral)\n\
+                 \x20            GET /metrics, GET /debug/stats, POST /admin/reload;\n\
+                 \x20            --port 0 = ephemeral; --profile enables per-layer kernel\n\
+                 \x20            profiling; --admin-token gates /admin/reload with a\n\
+                 \x20            Bearer token)\n\
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
                  \x20           [--json]\n\
@@ -92,7 +99,10 @@ fn main() -> Result<()> {
                  \x20            in_ch,channels…,classes over a --size x --size input,\n\
                  \x20            3x3 stride-2 pad-1 stages + linear head, pack v3;\n\
                  \x20            transformer: --dims are token_dim,model_dim,classes over\n\
-                 \x20            --seq tokens, pre-norm MHA/GELU-MLP blocks, pack v4)"
+                 \x20            --seq tokens, pre-norm MHA/GELU-MLP blocks, pack v4)\n\
+                 report:     <telemetry.jsonl> (render a --telemetry stream: per-epoch\n\
+                 \x20           trajectory, prune rounds, run summary; nonzero exit on\n\
+                 \x20           schema violations)"
             );
             Ok(())
         }
@@ -205,6 +215,8 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         read_timeout: Duration::from_millis(args.opt_u64("read-timeout-ms", 250)),
         limits,
         access_log: !args.flag("quiet"),
+        admin_token: args.opt("admin-token").map(String::from),
+        profile: args.flag("profile"),
         server: server_config(args),
     };
     let gw = msq::net::Gateway::start(cfg, &models)?;
@@ -245,6 +257,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     );
     let report = msq::net::loadgen::run(&cfg)?;
     eprintln!("[loadgen] {}", report.summary());
+    let stages = report.stage_summary();
+    if !stages.is_empty() {
+        eprint!("{stages}");
+    }
     let j = report.to_json();
     if let Some(out) = args.opt("out") {
         std::fs::write(out, j.to_string() + "\n").with_context(|| format!("writing {out}"))?;
@@ -252,6 +268,162 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     if args.flag("json") {
         println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+/// `msq report` — validate and render a `--telemetry` JSONL stream as
+/// the training-trajectory tables the run's stdout used to approximate.
+/// Exits nonzero on any schema violation (bad JSON, missing `event`,
+/// unknown event type, missing required fields), naming the line.
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.opt("telemetry"))
+        .context("usage: msq report <telemetry.jsonl>")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut run_start: Option<Json> = None;
+    let mut run_end: Option<Json> = None;
+    let mut epochs: Vec<Json> = Vec::new();
+    let mut prunes: Vec<Json> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: invalid JSON: {e}", i + 1))?;
+        let ev = v
+            .get("event")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .with_context(|| format!("{path}:{}: missing \"event\" field", i + 1))?;
+        match ev.as_str() {
+            "run_start" => run_start = Some(v),
+            "run_end" => run_end = Some(v),
+            "epoch" => {
+                for k in ["epoch", "loss", "train_acc", "avg_bits", "compression"] {
+                    ensure!(
+                        v.get(k).and_then(Json::as_f64).is_some(),
+                        "{path}:{}: epoch event missing numeric {k:?}",
+                        i + 1
+                    );
+                }
+                epochs.push(v);
+            }
+            "prune" => {
+                for k in ["beta", "bits_before", "bits_after"] {
+                    ensure!(
+                        v.get(k).and_then(Json::as_arr).is_some(),
+                        "{path}:{}: prune event missing array {k:?}",
+                        i + 1
+                    );
+                }
+                prunes.push(v);
+            }
+            other => bail!("{path}:{}: unknown event {other:?}", i + 1),
+        }
+    }
+    ensure!(
+        run_start.is_some() || !epochs.is_empty(),
+        "{path}: no telemetry events (is this a --telemetry stream?)"
+    );
+
+    if let Some(s) = &run_start {
+        println!(
+            "[report] {} — {} epochs, {} layers, {} params",
+            s.get("label").and_then(Json::as_str).unwrap_or("?"),
+            s.get("epochs").and_then(Json::as_f64).unwrap_or(0.0),
+            s.get("layers").and_then(Json::as_f64).unwrap_or(0.0),
+            s.get("trainable_params").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+    let fmt_opt = |v: Option<f64>, prec: usize| match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".to_string(),
+    };
+    let mut t = metrics::Table::new(&[
+        "epoch", "loss", "train_acc", "eval_acc", "avg_bits", "comp_x", "lsb_sparsity",
+        "bit_hist",
+    ]);
+    for e in &epochs {
+        let num = |k: &str| e.get(k).and_then(Json::as_f64);
+        let hist = match e.get("bit_hist") {
+            Some(Json::Obj(m)) => {
+                let mut ents: Vec<(usize, f64)> = m
+                    .iter()
+                    .map(|(b, n)| (b.parse().unwrap_or(0), n.as_f64().unwrap_or(0.0)))
+                    .collect();
+                ents.sort_unstable_by_key(|&(b, _)| b);
+                ents.iter()
+                    .map(|(b, n)| format!("{b}b:{n:.0}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            }
+            _ => "-".to_string(),
+        };
+        t.row(&[
+            fmt_opt(num("epoch"), 0),
+            fmt_opt(num("loss"), 4),
+            fmt_opt(num("train_acc"), 3),
+            fmt_opt(num("eval_acc"), 3),
+            fmt_opt(num("avg_bits"), 2),
+            fmt_opt(num("compression"), 2),
+            fmt_opt(num("lsb_sparsity"), 3),
+            hist,
+        ]);
+    }
+    t.print();
+
+    if !prunes.is_empty() {
+        println!("\n[report] prune rounds:");
+        let mut t = metrics::Table::new(&["epoch", "beta_mean", "beta_min", "layers_pruned", "comp_x"]);
+        for p in &prunes {
+            let beta: Vec<f64> = p
+                .get("beta")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let pruned = match (
+                p.get("bits_before").and_then(Json::as_arr),
+                p.get("bits_after").and_then(Json::as_arr),
+            ) {
+                (Some(b0), Some(b1)) => b0
+                    .iter()
+                    .zip(b1)
+                    .filter(|(x, y)| x.as_f64() != y.as_f64())
+                    .count(),
+                _ => 0,
+            };
+            let mean = if beta.is_empty() {
+                None
+            } else {
+                Some(beta.iter().sum::<f64>() / beta.len() as f64)
+            };
+            let min = beta.iter().copied().reduce(f64::min);
+            t.row(&[
+                fmt_opt(p.get("epoch").and_then(Json::as_f64), 0),
+                fmt_opt(mean, 3),
+                fmt_opt(min, 3),
+                pruned.to_string(),
+                fmt_opt(p.get("compression").and_then(Json::as_f64), 2),
+            ]);
+        }
+        t.print();
+    }
+
+    if let Some(e) = &run_end {
+        let num = |k: &str| e.get(k).and_then(Json::as_f64);
+        println!(
+            "\n[report] final: acc {} (best {}) comp {}x | {} steps, {} mean step, {}",
+            fmt_opt(num("final_acc"), 3),
+            fmt_opt(num("best_acc"), 3),
+            fmt_opt(num("final_compression"), 2),
+            fmt_opt(num("steps"), 0),
+            metrics::fmt_duration(num("step_seconds_mean").unwrap_or(0.0)),
+            metrics::fmt_duration(num("total_seconds").unwrap_or(0.0)),
+        );
     }
     Ok(())
 }
@@ -717,6 +889,10 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         backend.trainable_params(),
     );
     let mut trainer = Trainer::from_backend(backend, cfg.clone())?;
+    if let Some(p) = args.opt("telemetry") {
+        trainer.telemetry_to(Path::new(p))?;
+        eprintln!("[msq] telemetry -> {p}");
+    }
     let report = trainer.run(&ds)?;
     // the native loop always realizes its compression as bytes
     let export = args

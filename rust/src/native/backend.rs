@@ -527,6 +527,11 @@ impl Backend for NativeBackend {
         x: &[f32],
         y: &[i32],
     ) -> Result<StepStats> {
+        // one wall-clock observation per optimizer step into the global
+        // registry (rendered by `/metrics` when a gateway shares the
+        // process, and by telemetry consumers otherwise); recorded on
+        // drop so error paths are counted too
+        let _step_span = crate::obs::global().span("msq_native_step_seconds", &[]);
         ensure!(bits.len() == self.layers.len(), "bits len {}", bits.len());
         ensure!(ks.len() == self.layers.len(), "ks len {}", ks.len());
         let (mut grads, ce, correct) = self.grads(Some(bits), n_act, x, y)?;

@@ -55,6 +55,16 @@ pub struct GatewayConfig {
     /// request line, status, body bytes, latency). Off by default so
     /// tests and benches stay quiet; `msq gateway` turns it on.
     pub access_log: bool,
+    /// When set, `POST /admin/reload` requires `Authorization: Bearer
+    /// <token>`; requests without it are answered 401. `None` (the
+    /// default) leaves the endpoint open — fine on loopback, set a token
+    /// before exposing the gateway.
+    pub admin_token: Option<String>,
+    /// Enable kernel-level profiling ([`crate::obs::Profiler`]) at
+    /// startup: per-layer decode-vs-matmul time, bytes decoded, codes/s,
+    /// surfaced on `/metrics` and `/debug/stats`. Off by default — the
+    /// disabled path is one relaxed atomic load per kernel call.
+    pub profile: bool,
     /// Batcher/kernel config for every model server the gateway starts.
     pub server: ServerConfig,
 }
@@ -68,6 +78,8 @@ impl Default for GatewayConfig {
             read_timeout: Duration::from_millis(250),
             limits: Limits::default(),
             access_log: false,
+            admin_token: None,
+            profile: false,
             server: ServerConfig::default(),
         }
     }
@@ -90,7 +102,12 @@ impl Gateway {
     /// Bind, load every model, and start accepting.
     pub fn start(cfg: GatewayConfig, models: &[ModelSpec]) -> Result<Gateway> {
         let pool = Arc::new(ThreadPool::new(cfg.max_conns.max(1)));
-        let state = Arc::new(AppState::new(cfg.server.clone(), pool.clone()));
+        let mut state = AppState::new(cfg.server.clone(), pool.clone());
+        state.admin_token = cfg.admin_token.clone();
+        let state = Arc::new(state);
+        if cfg.profile {
+            crate::obs::profiler().enable(true);
+        }
         for (name, path, dim) in models {
             state.load_model(name, path, *dim)?;
         }
@@ -257,7 +274,12 @@ fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
                 }
                 // drain closes the connection after the in-flight response
                 let keep = req.keep_alive() && !state.draining.load(Ordering::Acquire);
-                if resp.write_to(&mut writer, keep).is_err() || !keep {
+                // serialize stage: header + body hit the socket here, after
+                // the router already stamped parse/queue/batch/kernel
+                let t_ser = Instant::now();
+                let wrote = resp.write_to(&mut writer, keep);
+                state.obs.stage("serialize").record_duration(t_ser.elapsed());
+                if wrote.is_err() || !keep {
                     return;
                 }
             }
@@ -326,7 +348,14 @@ mod tests {
         assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
         let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.path(&["outputs", "0"]).unwrap().as_arr().unwrap().len(), 3);
+        let (code, body) = roundtrip(addr, "GET", "/debug/stats", b"");
+        assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(v.path(&["stages", "queue"]).is_some(), "stages missing from /debug/stats");
+        let state = gw.state().clone();
         gw.shutdown(); // must drain and join without hanging
+        // every worker joined → all three responses stamped the serialize stage
+        assert!(state.obs.stage("serialize").count() >= 3);
     }
 
     #[test]

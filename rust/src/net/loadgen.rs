@@ -59,6 +59,8 @@ pub struct LoadReport {
     pub by_status: BTreeMap<u16, usize>,
     /// Transport failures (connect/read errors).
     pub errors: usize,
+    /// (non-2xx + transport errors) / sent, in [0, 1].
+    pub error_rate: f64,
     pub wall_s: f64,
     pub rps: f64,
     pub p50_ms: f64,
@@ -66,6 +68,22 @@ pub struct LoadReport {
     pub p99_ms: f64,
     pub mean_ms: f64,
     pub max_ms: f64,
+    /// Server-side per-stage breakdown: the delta of the gateway's
+    /// `/debug/stats` stage histograms between run start and end. Empty
+    /// when the gateway predates the endpoint (best-effort scrape).
+    pub stages: Vec<StageSlo>,
+}
+
+/// One request-lifecycle stage's share of the run, as seen by the server.
+#[derive(Clone, Debug)]
+pub struct StageSlo {
+    pub stage: String,
+    /// Stage observations recorded during the run.
+    pub count: u64,
+    /// Mean stage duration over those observations, milliseconds.
+    pub mean_ms: f64,
+    /// Total stage time during the run, seconds.
+    pub sum_s: f64,
 }
 
 impl LoadReport {
@@ -80,10 +98,23 @@ impl LoadReport {
                 ])
             })
             .collect();
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("stage", Json::Str(s.stage.clone())),
+                    ("count", Json::Num(s.count as f64)),
+                    ("mean_ms", Json::Num(s.mean_ms)),
+                    ("sum_s", Json::Num(s.sum_s)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("error_rate", Json::Num(self.error_rate)),
             ("by_status", Json::Arr(by_status)),
             ("wall_s", Json::Num(self.wall_s)),
             ("rps", Json::Num(self.rps)),
@@ -92,22 +123,40 @@ impl LoadReport {
             ("p99_ms", Json::Num(self.p99_ms)),
             ("mean_ms", Json::Num(self.mean_ms)),
             ("max_ms", Json::Num(self.max_ms)),
+            ("stages", Json::Arr(stages)),
         ])
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} ok / {} non-2xx / {} errors | {:.0} req/s | p50 {:.2} ms p95 {:.2} ms \
-             p99 {:.2} ms",
+            "{} ok / {} non-2xx / {} errors ({:.2}% err) | {:.0} req/s | p50 {:.2} ms \
+             p95 {:.2} ms p99 {:.2} ms",
             self.ok,
             self.by_status.values().sum::<usize>(),
             self.errors,
+            self.error_rate * 100.0,
             self.rps,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
         )
+    }
+
+    /// Multi-line per-stage SLO breakdown (empty string when the gateway
+    /// exposed no `/debug/stats` stage data).
+    pub fn stage_summary(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            if s.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  stage {:<9} {:>8} obs  mean {:>8.3} ms  total {:>8.3} s\n",
+                s.stage, s.count, s.mean_ms, s.sum_s,
+            ));
+        }
+        out
     }
 }
 
@@ -139,10 +188,53 @@ fn discover_input_dim(cfg: &LoadgenConfig) -> Result<usize> {
     bail!("gateway does not serve model {:?} (see GET /v1/models)", cfg.model)
 }
 
+/// Scrape `GET /debug/stats` for per-stage `(count, sum_s)` pairs.
+/// Best-effort: any failure (old gateway, transport error) yields an
+/// empty map, so SLO deltas degrade to "no stage data" not a hard error.
+fn scrape_stages(cfg: &LoadgenConfig) -> BTreeMap<String, (f64, f64)> {
+    let mut out = BTreeMap::new();
+    let Ok(mut s) = TcpStream::connect(&cfg.addr) else { return out };
+    if s.set_read_timeout(Some(cfg.timeout)).is_err()
+        || write_request(&mut s, "GET", "/debug/stats", None, b"").is_err()
+    {
+        return out;
+    }
+    let mut r = HttpReader::new(s);
+    let Ok((200, body)) = r.read_response(&Limits::default()) else { return out };
+    let Ok(text) = std::str::from_utf8(&body) else { return out };
+    let Ok(v) = json::parse(text) else { return out };
+    if let Some(Json::Obj(map)) = v.get("stages") {
+        for (stage, st) in map {
+            let count = st.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+            let sum_s = st.get("sum_s").and_then(Json::as_f64).unwrap_or(0.0);
+            out.insert(stage.clone(), (count, sum_s));
+        }
+    }
+    out
+}
+
+/// Per-stage deltas between two scrapes, in taxonomy order.
+fn stage_deltas(
+    before: &BTreeMap<String, (f64, f64)>,
+    after: &BTreeMap<String, (f64, f64)>,
+) -> Vec<StageSlo> {
+    let mut out = Vec::new();
+    for stage in crate::obs::STAGES {
+        let Some(&(c1, s1)) = after.get(stage) else { continue };
+        let (c0, s0) = before.get(stage).copied().unwrap_or((0.0, 0.0));
+        let count = (c1 - c0).max(0.0) as u64;
+        let sum_s = (s1 - s0).max(0.0);
+        let mean_ms = if count > 0 { sum_s / count as f64 * 1e3 } else { 0.0 };
+        out.push(StageSlo { stage: stage.to_string(), count, mean_ms, sum_s });
+    }
+    out
+}
+
 /// Run the closed loop; blocks until all requests are answered.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     ensure_valid(cfg)?;
     let input_dim = discover_input_dim(cfg)?;
+    let stages_before = scrape_stages(cfg);
     let target = format!("/v1/models/{}/infer", cfg.model);
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
     let by_status: Mutex<BTreeMap<u16, usize>> = Mutex::new(BTreeMap::new());
@@ -187,13 +279,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         }
     });
     let wall_s = t0.elapsed().as_secs_f64();
+    let stages = stage_deltas(&stages_before, &scrape_stages(cfg));
     let lats = latencies.into_inner().unwrap();
     let ok = ok.into_inner();
+    let by_status = by_status.into_inner().unwrap();
+    let errors = errors.into_inner();
+    let failed = by_status.values().sum::<usize>() + errors;
     Ok(LoadReport {
         sent: cfg.requests,
         ok,
-        by_status: by_status.into_inner().unwrap(),
-        errors: errors.into_inner(),
+        by_status,
+        errors,
+        error_rate: failed as f64 / cfg.requests.max(1) as f64,
         wall_s,
         rps: ok as f64 / wall_s.max(1e-9),
         p50_ms: percentile(&lats, 50.0) * 1e3,
@@ -205,6 +302,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             lats.iter().sum::<f64>() / lats.len() as f64 * 1e3
         },
         max_ms: lats.iter().copied().fold(0.0f64, f64::max) * 1e3,
+        stages,
     })
 }
 
@@ -310,8 +408,16 @@ mod tests {
         assert_eq!(report.ok, 60, "{report:?}");
         assert!(report.p99_ms >= report.p50_ms);
         assert!(report.rps > 0.0);
+        assert_eq!(report.error_rate, 0.0, "{report:?}");
+        // server-side stage SLO: 60 requests × 2 rows each → 120 queue
+        // observations, all recorded before their responses were written
+        let q = report.stages.iter().find(|s| s.stage == "queue").expect("queue stage");
+        assert_eq!(q.count, 120, "{report:?}");
+        assert!(report.stages.iter().any(|s| s.stage == "serialize"), "{report:?}");
         let j = report.to_json().to_string();
         assert!(j.contains("\"p99_ms\""), "{j}");
+        assert!(j.contains("\"stages\""), "{j}");
+        assert!(j.contains("\"error_rate\""), "{j}");
         // unknown model errors cleanly
         assert!(run(&LoadgenConfig {
             addr: gw.addr().to_string(),

@@ -5,9 +5,11 @@
 //! ```text
 //! GET  /healthz                    liveness + model inventory (503 when draining)
 //! GET  /metrics                    Prometheus text format
+//! GET  /debug/stats                JSON dump: stage histograms, per-model metrics, profiler
 //! GET  /v1/models                  model inventory
 //! POST /v1/models/{name}/infer     JSON batch [[f32,…],…] → logits
-//! POST /admin/reload               zero-downtime .msqpack hot-swap
+//! POST /admin/reload               zero-downtime .msqpack hot-swap (Bearer-gated when
+//!                                  an admin token is configured)
 //! ```
 //!
 //! Backpressure maps [`SubmitError`] onto status codes: `QueueFull` →
@@ -20,7 +22,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -82,10 +84,22 @@ pub struct AppState {
     pub http: HttpMetrics,
     pub started: Instant,
     pub conn_pool: Arc<ThreadPool>,
+    /// Per-gateway observability registry: request-lifecycle stage
+    /// histograms plus reload counters, rendered into `/metrics` and
+    /// dumped by `GET /debug/stats`.
+    pub obs: crate::obs::Registry,
+    /// When set, `POST /admin/reload` requires `Authorization: Bearer
+    /// <token>` and answers 401 otherwise.
+    pub admin_token: Option<String>,
 }
 
 impl AppState {
     pub fn new(server_cfg: ServerConfig, conn_pool: Arc<ThreadPool>) -> AppState {
+        let obs = crate::obs::Registry::new();
+        obs.init_stages();
+        obs.describe("msq_reload_outcomes_total", "Reload attempts by outcome");
+        obs.describe("msq_reload_duration_seconds", "Wall time of /admin/reload handling");
+        obs.describe("msq_reload_generation", "Generation after the last successful reload");
         AppState {
             models: RwLock::new(BTreeMap::new()),
             server_cfg,
@@ -93,6 +107,8 @@ impl AppState {
             http: HttpMetrics::default(),
             started: Instant::now(),
             conn_pool,
+            obs,
+            admin_token: None,
         }
     }
 
@@ -250,6 +266,7 @@ fn route(state: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(state),
         ("GET", "/metrics") => Response::prometheus(render_metrics(state)),
+        ("GET", "/debug/stats") => debug_stats(state),
         ("GET", "/v1/models") => {
             Response::json(200, &Json::obj(vec![("models", state.model_infos())]))
         }
@@ -267,7 +284,7 @@ fn route(state: &AppState, req: &Request) -> Response {
                 return infer(state, name, req);
             }
             match path {
-                "/healthz" | "/metrics" | "/v1/models" | "/admin/reload" => {
+                "/healthz" | "/metrics" | "/debug/stats" | "/v1/models" | "/admin/reload" => {
                     Response::error(405, "method not allowed")
                 }
                 _ => Response::error(404, "no such route"),
@@ -298,6 +315,7 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
         Some(s) => s,
         None => return Response::error(404, &format!("no model {name:?} (see /v1/models)")),
     };
+    let t_parse = Instant::now();
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => return Response::error(400, "body must be UTF-8 JSON"),
@@ -315,8 +333,17 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
             )
         }
     };
+    let parse_d = t_parse.elapsed();
+    state.obs.stage("parse").record_duration(parse_d);
     let batch = rows.len();
     let t0 = Instant::now();
+    // decode-stage attribution via the kernel profiler aggregate delta
+    // (only meaningful — and only paid for — when profiling is on)
+    let k0 = if crate::obs::profiler().on() {
+        Some(crate::obs::profiler().kernel_snapshot())
+    } else {
+        None
+    };
     let mut rxs = Vec::with_capacity(batch);
     for row in rows {
         match server.submit(row) {
@@ -333,15 +360,47 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
     }
     let mut outputs = Vec::with_capacity(batch);
     let mut argmax = Vec::with_capacity(batch);
+    // per-request stage durations: rows may ride different flushed
+    // batches, so the request-level figure is the max over its rows
+    let (mut queue_d, mut kernel_d, mut form_d) =
+        (Duration::ZERO, Duration::ZERO, Duration::ZERO);
     for rx in rxs {
         match rx.recv() {
             Ok(r) => {
+                let form = r.latency.saturating_sub(r.queue_wait + r.compute);
+                state.obs.stage("queue").record_duration(r.queue_wait);
+                state.obs.stage("batch").record_duration(form);
+                state.obs.stage("kernel").record_duration(r.compute);
+                queue_d = queue_d.max(r.queue_wait);
+                kernel_d = kernel_d.max(r.compute);
+                form_d = form_d.max(form);
                 outputs.push(Json::arr_f32(&r.logits));
                 argmax.push(Json::Num(r.argmax as f64));
             }
             Err(_) => return Response::error(503, "model shut down mid-request"),
         }
     }
+    let decode_s = k0.map(|(d0, _, _, _)| {
+        let s = crate::obs::profiler().kernel_snapshot().0.saturating_sub(d0) as f64 / 1e9;
+        state.obs.stage("decode").record(s);
+        s
+    });
+    let total = t0.elapsed();
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    // Server-Timing: the stages this handler can know before the body
+    // is written (serialize lands in the histograms only), keyed to the
+    // request's x-request-id by riding the same tagged response.
+    let mut timing = format!(
+        "parse;dur={:.3}, queue;dur={:.3}, batch;dur={:.3}, kernel;dur={:.3}",
+        ms(parse_d),
+        ms(queue_d),
+        ms(form_d),
+        ms(kernel_d)
+    );
+    if let Some(s) = decode_s {
+        timing.push_str(&format!(", decode;dur={:.3}", s * 1e3));
+    }
+    timing.push_str(&format!(", total;dur={:.3}", ms(parse_d + total)));
     Response::json(
         200,
         &Json::obj(vec![
@@ -349,9 +408,66 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
             ("outputs", Json::Arr(outputs)),
             ("argmax", Json::Arr(argmax)),
             ("batch", Json::Num(batch as f64)),
-            ("latency_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3)),
+            ("latency_ms", Json::Num(total.as_secs_f64() * 1e3)),
         ]),
     )
+    .header("Server-Timing", &timing)
+}
+
+/// `GET /debug/stats` — one JSON page with everything the gateway
+/// knows: per-stage lifecycle histograms, per-model `ServeMetrics`
+/// snapshots, connection counters, the obs registry dump, and the
+/// kernel profiler table (aggregates + per-layer, when enabled).
+fn debug_stats(state: &AppState) -> Response {
+    let map = state.models.read().unwrap();
+    let mut models = BTreeMap::new();
+    for (n, e) in map.iter() {
+        models.insert(n.clone(), e.server.metrics.snapshot(e.server.queue_depth()));
+    }
+    drop(map);
+    let mut stages = BTreeMap::new();
+    for s in crate::obs::STAGES {
+        let h = state.obs.stage(s).snapshot();
+        stages.insert(
+            s.to_string(),
+            Json::obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("sum_s", Json::Num(h.sum())),
+                ("mean_ms", Json::Num(h.mean() * 1e3)),
+                ("p50_ms", Json::Num(h.percentile(50.0) * 1e3)),
+                ("p95_ms", Json::Num(h.percentile(95.0) * 1e3)),
+                ("p99_ms", Json::Num(h.percentile(99.0) * 1e3)),
+                ("max_ms", Json::Num(h.max() * 1e3)),
+            ]),
+        );
+    }
+    let h = &state.http;
+    let body = Json::obj(vec![
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+        ("draining", Json::Bool(state.draining.load(Ordering::Acquire))),
+        (
+            "connections",
+            Json::obj(vec![
+                ("total", Json::Num(h.connections_total.load(Ordering::Relaxed) as f64)),
+                ("rejected", Json::Num(h.connections_rejected.load(Ordering::Relaxed) as f64)),
+                ("active", Json::Num(h.connections_active.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+        (
+            "responses",
+            Json::Obj(
+                h.responses()
+                    .into_iter()
+                    .map(|(c, n)| (c.to_string(), Json::Num(n as f64)))
+                    .collect(),
+            ),
+        ),
+        ("stages", Json::Obj(stages)),
+        ("models", Json::Obj(models)),
+        ("registry", state.obs.to_json()),
+        ("profiler", crate::obs::profiler().to_json()),
+    ]);
+    Response::json(200, &body)
 }
 
 /// 4xx/5xx mapping for [`SubmitError`] (the documented backpressure
@@ -377,12 +493,34 @@ fn reload(state: &AppState, req: &Request) -> Response {
     if state.draining.load(Ordering::Acquire) {
         return Response::error(503, "gateway is draining");
     }
+    // bearer-token gate: when the gateway was started with an admin
+    // token, an absent/mismatched Authorization header is a hard 401
+    if let Some(token) = &state.admin_token {
+        let ok = req
+            .header("authorization")
+            .map(str::trim)
+            .and_then(|v| v.strip_prefix("Bearer "))
+            .map(|t| t.trim() == token)
+            .unwrap_or(false);
+        if !ok {
+            state
+                .obs
+                .counter("msq_reload_outcomes_total", &[("outcome", "unauthorized")])
+                .inc();
+            return Response::error(401, "reload requires 'Authorization: Bearer <admin-token>'");
+        }
+    }
+    let t_reload = Instant::now();
+    let fail = |state: &AppState, resp: Response| {
+        state.obs.counter("msq_reload_outcomes_total", &[("outcome", "error")]).inc();
+        resp
+    };
     let spec = if req.body.is_empty() {
         Json::Null
     } else {
         match std::str::from_utf8(&req.body).ok().map(json::parse) {
             Some(Ok(v)) => v,
-            _ => return Response::error(400, "reload body must be JSON"),
+            _ => return fail(state, Response::error(400, "reload body must be JSON")),
         }
     };
     let name = spec.get("model").and_then(Json::as_str).map(str::to_string);
@@ -397,7 +535,7 @@ fn reload(state: &AppState, req: &Request) -> Response {
                 Some(n) => n.clone(),
                 None => match model_name_from_path(p) {
                     Ok(stem) => stem,
-                    Err(e) => return Response::error(400, &e.to_string()),
+                    Err(e) => return fail(state, Response::error(400, &e.to_string())),
                 },
             };
             targets.push((n, p.clone(), dim));
@@ -410,7 +548,9 @@ fn reload(state: &AppState, req: &Request) -> Response {
                     e.source.clone(),
                     dim.or(e.input_dim_override),
                 )),
-                None => return Response::error(404, &format!("no model {n:?} to reload")),
+                None => {
+                    return fail(state, Response::error(404, &format!("no model {n:?} to reload")))
+                }
             }
         }
         (None, None) => {
@@ -421,7 +561,10 @@ fn reload(state: &AppState, req: &Request) -> Response {
         }
     }
     if targets.is_empty() {
-        return Response::error(400, "no models loaded — pass {\"model\":…, \"path\":…}");
+        return fail(
+            state,
+            Response::error(400, "no models loaded — pass {\"model\":…, \"path\":…}"),
+        );
     }
     let mut reloaded = Vec::new();
     for (n, p, d) in targets {
@@ -429,17 +572,35 @@ fn reload(state: &AppState, req: &Request) -> Response {
             Ok(info) => reloaded.push(info),
             Err(e) => {
                 // partial reloads keep their new servers; report both halves
-                return Response::json(
-                    400,
-                    &Json::obj(vec![
-                        ("error", Json::Str(format!("reloading {n:?}: {e}"))),
-                        ("reloaded", Json::Arr(reloaded)),
-                    ]),
+                state.obs.hist("msq_reload_duration_seconds", &[]).record_duration(
+                    t_reload.elapsed(),
+                );
+                return fail(
+                    state,
+                    Response::json(
+                        400,
+                        &Json::obj(vec![
+                            ("error", Json::Str(format!("reloading {n:?}: {e}"))),
+                            ("reloaded", Json::Arr(reloaded)),
+                        ]),
+                    ),
                 );
             }
         }
     }
     state.http.reloads_total.fetch_add(1, Ordering::Relaxed);
+    // tag the event into the registry: outcome, duration, and the new
+    // generation of every swapped model
+    state.obs.counter("msq_reload_outcomes_total", &[("outcome", "ok")]).inc();
+    state.obs.hist("msq_reload_duration_seconds", &[]).record_duration(t_reload.elapsed());
+    for info in &reloaded {
+        if let (Some(n), Some(g)) = (
+            info.get("name").and_then(Json::as_str),
+            info.get("generation").and_then(Json::as_f64),
+        ) {
+            state.obs.gauge("msq_reload_generation", &[("model", n)]).set(g);
+        }
+    }
     Response::json(200, &Json::obj(vec![("reloaded", Json::Arr(reloaded))]))
 }
 
@@ -518,6 +679,10 @@ pub fn render_metrics(state: &AppState) -> String {
         p.summary("msq_request_latency_seconds", &lbl, &m.latency_hist(), &[0.5, 0.9, 0.95, 0.99]);
     }
     drop(map);
+    // the obs registry: per-stage lifecycle histograms + reload events
+    state.obs.render(&mut p, &crate::obs::QUANTILES);
+    // global kernel profiler aggregates (zeros unless profiling is on)
+    crate::obs::profiler().render(&mut p);
     p.finish()
 }
 
@@ -727,6 +892,98 @@ mod tests {
         );
         assert!(text.contains("msq_request_latency_seconds_count{model=\"toy\"} 1"), "{text}");
         assert!(text.contains("msq_queue_depth{model=\"toy\"}"), "{text}");
+    }
+
+    #[test]
+    fn infer_carries_server_timing_and_debug_stats_agree() {
+        let state = toy_state();
+        let r = handle(&state, &req("POST", "/v1/models/toy/infer", b"[[0,0,0,0,0,0]]"));
+        assert_eq!(r.status, 200);
+        let timing = r
+            .extra
+            .iter()
+            .find(|(k, _)| k == "Server-Timing")
+            .map(|(_, v)| v.clone())
+            .expect("infer response carries Server-Timing");
+        for stage in ["parse;dur=", "queue;dur=", "batch;dur=", "kernel;dur=", "total;dur="] {
+            assert!(timing.contains(stage), "missing {stage} in {timing:?}");
+        }
+        // the same response is keyed by its x-request-id
+        assert!(resp_id(&r).is_some());
+
+        let d = handle(&state, &req("GET", "/debug/stats", b""));
+        assert_eq!(d.status, 200);
+        let v = body_json(&d);
+        // stage sums partition the recorded end-to-end latency: the
+        // batch stage is defined as latency − queue − kernel, so the
+        // three sums reconstruct the ServeMetrics latency sum exactly
+        // (modulo float rounding)
+        let stage_sum = |s: &str| v.path(&["stages", s, "sum_s"]).unwrap().as_f64().unwrap();
+        let stage_count = |s: &str| v.path(&["stages", s, "count"]).unwrap().as_f64().unwrap();
+        assert_eq!(stage_count("queue"), 1.0);
+        assert_eq!(stage_count("kernel"), 1.0);
+        assert_eq!(stage_count("parse"), 1.0);
+        let e2e_sum = v.path(&["models", "toy", "mean_ms"]).unwrap().as_f64().unwrap() / 1e3
+            * v.path(&["models", "toy", "completed"]).unwrap().as_f64().unwrap();
+        let stages = stage_sum("queue") + stage_sum("batch") + stage_sum("kernel");
+        assert!(
+            (stages - e2e_sum).abs() < 1e-6,
+            "stage sums {stages} diverge from e2e latency sum {e2e_sum}"
+        );
+        // the registry dump and profiler section are present
+        assert!(v.path(&["registry"]).is_some());
+        assert_eq!(v.path(&["profiler", "enabled"]).unwrap().as_bool(), Some(false));
+        // /metrics renders the stage family alongside the legacy series
+        let text = render_metrics(&state);
+        assert!(text.contains("# TYPE msq_stage_duration_seconds summary"), "{text}");
+        for s in crate::obs::STAGES {
+            assert!(
+                text.contains(&format!("msq_stage_duration_seconds_count{{stage=\"{s}\"}}")),
+                "missing stage {s}:\n{text}"
+            );
+        }
+    }
+
+    fn req_with_auth(method: &str, target: &str, auth: Option<&str>, body: &[u8]) -> Request {
+        let mut wire = format!("{method} {target} HTTP/1.1\r\nHost: t\r\n").into_bytes();
+        if let Some(a) = auth {
+            wire.extend_from_slice(format!("Authorization: {a}\r\n").as_bytes());
+        }
+        wire.extend_from_slice(format!("Content-Length: {}\r\n\r\n", body.len()).as_bytes());
+        wire.extend_from_slice(body);
+        super::super::http::HttpReader::new(Cursor::new(wire))
+            .read_request(&super::super::http::Limits::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn reload_requires_bearer_token_when_configured() {
+        let mut state = toy_state();
+        state.admin_token = Some("s3cret".to_string());
+        // no header, wrong scheme, wrong token: 401 and no reload
+        for auth in [None, Some("Basic s3cret"), Some("Bearer nope")] {
+            let r = handle(&state, &req_with_auth("POST", "/admin/reload", auth, b""));
+            assert_eq!(r.status, 401, "auth {auth:?}");
+        }
+        assert_eq!(state.http.reloads_total.load(Ordering::Relaxed), 0);
+        // correct token reloads and tags the registry
+        let r = handle(
+            &state,
+            &req_with_auth("POST", "/admin/reload", Some("Bearer s3cret"), b""),
+        );
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let text = render_metrics(&state);
+        assert!(text.contains("msq_reload_outcomes_total{outcome=\"ok\"} 1"), "{text}");
+        assert!(
+            text.contains("msq_reload_outcomes_total{outcome=\"unauthorized\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("msq_reload_duration_seconds_count 1"), "{text}");
+        assert!(text.contains("msq_reload_generation{model=\"toy\"} 2"), "{text}");
+        // without a configured token the route stays open (dev default)
+        let open = toy_state();
+        let r = handle(&open, &req_with_auth("POST", "/admin/reload", None, b""));
+        assert_eq!(r.status, 200);
     }
 
     #[test]

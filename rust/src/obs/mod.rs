@@ -1,0 +1,676 @@
+//! obs — dependency-free, low-overhead observability core shared by the
+//! serving and training paths.
+//!
+//! Three pieces, all pure `std`:
+//!
+//! * a [`Registry`] of named counters / gauges / histograms with
+//!   Prometheus-style label sets. Counters and gauges are lock-free
+//!   atomics; histograms wrap the log-bucketed
+//!   [`crate::metrics::LatencyHist`] behind a mutex (the same idiom
+//!   `serve::ServeMetrics` uses). A registry renders itself into a
+//!   [`crate::metrics::Prom`] page alongside the existing hand-rolled
+//!   series, and dumps to JSON for `GET /debug/stats`.
+//! * a [`Span`] RAII timer: `Span::enter(hist)` starts a monotonic
+//!   clock, and the drop (including drop during unwind) records the
+//!   elapsed seconds into the histogram — so a panic inside a span
+//!   still leaves a sample behind.
+//! * a [`Profiler`] handle for kernel-level cost accounting
+//!   (decode-vs-matmul nanoseconds, bytes decoded, codes consumed, and
+//!   a per-model per-layer table). It is **zero-cost when off**: the
+//!   serving kernels load one relaxed `AtomicBool` per call and skip
+//!   every clock read when disabled — guarded by a bench section in
+//!   `benches/serve_throughput.rs`.
+//!
+//! The request-lifecycle **stage taxonomy** (see `docs/OBSERVABILITY.md`)
+//! hangs off [`STAGES`]: parse → queue → batch → decode → kernel →
+//! serialize, each an entry of the `msq_stage_duration_seconds` summary
+//! family keyed by a `stage` label.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyHist, Prom};
+use crate::util::json::Json;
+
+/// The request-lifecycle stages, in pipeline order. Every stage is one
+/// `{stage="…"}` series of the `msq_stage_duration_seconds` family.
+pub const STAGES: [&str; 6] = ["parse", "queue", "batch", "decode", "kernel", "serialize"];
+
+/// Metric family name for the per-stage request-lifecycle histograms.
+pub const STAGE_FAMILY: &str = "msq_stage_duration_seconds";
+
+/// Quantiles rendered for every histogram family on `/metrics`.
+pub const QUANTILES: [f64; 4] = [0.5, 0.9, 0.95, 0.99];
+
+// ---------------------------------------------------------------------------
+// primitive metrics
+
+/// Monotonically increasing lock-free counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (bit-cast into an atomic word).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Thread-safe histogram of seconds: a mutex around the log-bucketed
+/// [`LatencyHist`]. `record` is O(1); contention is one short critical
+/// section per sample, matching the `ServeMetrics` latency path.
+#[derive(Default)]
+pub struct Hist {
+    inner: Mutex<LatencyHist>,
+}
+
+impl Hist {
+    fn lock(&self) -> MutexGuard<'_, LatencyHist> {
+        // A panic while holding the lock cannot corrupt a LatencyHist
+        // (its record is a pair of integer bumps), so poisoning is
+        // recoverable by construction.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.lock().record(seconds);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.lock().count()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.lock().sum()
+    }
+
+    /// Clone-out snapshot for rendering without holding the lock.
+    pub fn snapshot(&self) -> LatencyHist {
+        self.lock().clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spans
+
+/// RAII timer over a [`Hist`]: started by [`Span::enter`], it records
+/// the elapsed monotonic time on drop — **including drops that happen
+/// during a panic unwind**, so instrumented sections never lose their
+/// sample to an error path. Nesting is plain lexical scoping: an inner
+/// span records into its own histogram independently of the outer one.
+pub struct Span {
+    hist: Arc<Hist>,
+    start: Instant,
+    done: bool,
+}
+
+impl Span {
+    pub fn enter(hist: Arc<Hist>) -> Span {
+        Span { hist, start: Instant::now(), done: false }
+    }
+
+    /// Elapsed time so far, without ending the span.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// End the span now and return the recorded duration.
+    pub fn stop(mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.hist.record(d.as_secs_f64());
+        self.done = true;
+        d
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.done {
+            self.hist.record(self.start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+impl Key {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Key {
+        Key {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        }
+    }
+}
+
+enum Slot {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Hist(_) => "summary",
+        }
+    }
+}
+
+/// Named metric store: get-or-create handles by `(family, labels)` key,
+/// concurrent updates through the returned `Arc`s, and one-call
+/// rendering into Prometheus text or `/debug/stats` JSON.
+///
+/// Families are implicitly typed by their first registration; asking
+/// for the same key as a different type is a programming error and
+/// panics (metric names are compile-time constants in this codebase).
+#[derive(Default)]
+pub struct Registry {
+    slots: RwLock<BTreeMap<Key, Slot>>,
+    help: RwLock<BTreeMap<String, String>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Attach `# HELP` text to a family name.
+    pub fn describe(&self, name: &str, help: &str) {
+        self.help.write().unwrap().insert(name.to_string(), help.to_string());
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.slot(name, labels, || Slot::Counter(Arc::new(Counter::default()))) {
+            Slot::Counter(c) => c,
+            s => panic!("obs: {name} already registered as a {}", s.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.slot(name, labels, || Slot::Gauge(Arc::new(Gauge::default()))) {
+            Slot::Gauge(g) => g,
+            s => panic!("obs: {name} already registered as a {}", s.kind()),
+        }
+    }
+
+    pub fn hist(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Hist> {
+        match self.slot(name, labels, || Slot::Hist(Arc::new(Hist::default()))) {
+            Slot::Hist(h) => h,
+            s => panic!("obs: {name} already registered as a {}", s.kind()),
+        }
+    }
+
+    /// Enter a span over the named histogram (get-or-create).
+    pub fn span(&self, name: &str, labels: &[(&str, &str)]) -> Span {
+        Span::enter(self.hist(name, labels))
+    }
+
+    /// Histogram handle for one request-lifecycle stage (see [`STAGES`]).
+    pub fn stage(&self, stage: &str) -> Arc<Hist> {
+        self.hist(STAGE_FAMILY, &[("stage", stage)])
+    }
+
+    /// Pre-register every lifecycle stage so `/metrics` exposes all six
+    /// `{stage="…"}` series from the first scrape, samples or not.
+    pub fn init_stages(&self) {
+        self.describe(
+            STAGE_FAMILY,
+            "Per-stage request lifecycle time (parse/queue/batch/decode/kernel/serialize)",
+        );
+        for s in STAGES {
+            let _ = self.stage(s);
+        }
+    }
+
+    fn slot(&self, name: &str, labels: &[(&str, &str)], make: impl FnOnce() -> Slot) -> Slot {
+        let key = Key::new(name, labels);
+        if let Some(s) = self.slots.read().unwrap().get(&key) {
+            return clone_slot(s);
+        }
+        let mut w = self.slots.write().unwrap();
+        clone_slot(w.entry(key).or_insert_with(make))
+    }
+
+    /// Render every family into a Prometheus page: `# HELP`/`# TYPE`
+    /// once per family (the BTreeMap keeps label sets of one family
+    /// contiguous), then one sample per counter/gauge and a
+    /// quantile+`_sum`+`_count` block per histogram.
+    pub fn render(&self, p: &mut Prom, quantiles: &[f64]) {
+        let slots = self.slots.read().unwrap();
+        let help = self.help.read().unwrap();
+        let mut last_family = String::new();
+        for (key, slot) in slots.iter() {
+            if key.name != last_family {
+                let h = help.get(&key.name).map(String::as_str).unwrap_or("");
+                p.family(&key.name, slot.kind(), h);
+                last_family.clone_from(&key.name);
+            }
+            let labels: Vec<(&str, &str)> =
+                key.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            match slot {
+                Slot::Counter(c) => p.sample(&key.name, &labels, c.get() as f64),
+                Slot::Gauge(g) => p.sample(&key.name, &labels, g.get()),
+                Slot::Hist(h) => p.summary(&key.name, &labels, &h.snapshot(), quantiles),
+            }
+        }
+    }
+
+    /// JSON dump for `GET /debug/stats`: counters and gauges as numbers,
+    /// histograms as `{count, sum_s, mean_ms, p50_ms, p95_ms, p99_ms,
+    /// max_ms}` objects, keyed by `family{label="…"}`.
+    pub fn to_json(&self) -> Json {
+        let slots = self.slots.read().unwrap();
+        let mut out = BTreeMap::new();
+        for (key, slot) in slots.iter() {
+            let mut name = key.name.clone();
+            if !key.labels.is_empty() {
+                name.push('{');
+                for (i, (k, v)) in key.labels.iter().enumerate() {
+                    if i > 0 {
+                        name.push(',');
+                    }
+                    name.push_str(&format!("{k}=\"{v}\""));
+                }
+                name.push('}');
+            }
+            let v = match slot {
+                Slot::Counter(c) => Json::Num(c.get() as f64),
+                Slot::Gauge(g) => Json::Num(g.get()),
+                Slot::Hist(h) => {
+                    let s = h.snapshot();
+                    Json::obj(vec![
+                        ("count", Json::Num(s.count() as f64)),
+                        ("sum_s", Json::Num(s.sum())),
+                        ("mean_ms", Json::Num(s.mean() * 1e3)),
+                        ("p50_ms", Json::Num(s.percentile(50.0) * 1e3)),
+                        ("p95_ms", Json::Num(s.percentile(95.0) * 1e3)),
+                        ("p99_ms", Json::Num(s.percentile(99.0) * 1e3)),
+                        ("max_ms", Json::Num(s.max() * 1e3)),
+                    ])
+                }
+            };
+            out.insert(name, v);
+        }
+        Json::Obj(out)
+    }
+}
+
+fn clone_slot(s: &Slot) -> Slot {
+    match s {
+        Slot::Counter(c) => Slot::Counter(c.clone()),
+        Slot::Gauge(g) => Slot::Gauge(g.clone()),
+        Slot::Hist(h) => Slot::Hist(h.clone()),
+    }
+}
+
+/// The process-wide registry. Serving attaches a *per-gateway* registry
+/// to `AppState` (so unit tests don't cross-talk); the global one holds
+/// process-singleton series — kernel profiler aggregates and training
+/// spans.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// kernel profiler
+
+/// Per-layer cost row of the profiler table (all times monotonic ns).
+#[derive(Clone, Default)]
+pub struct LayerStat {
+    pub kind: String,
+    pub bits: u8,
+    pub calls: u64,
+    pub rows: u64,
+    pub total_ns: u64,
+    pub decode_ns: u64,
+    pub matmul_ns: u64,
+    pub bytes: u64,
+    pub codes: u64,
+}
+
+/// Zero-cost-when-off kernel profiler. The serving kernels
+/// (`serve::kernels::{qgemm, qconv2d, qattention}`) check [`Profiler::on`]
+/// once per call (one relaxed atomic load) and, only when enabled, time
+/// their bit-stream decode separately from the code·activation matmul,
+/// accumulating into lock-free aggregate counters. `ServableModel::
+/// infer_batch` additionally attributes the deltas to a per-model
+/// per-layer table (one mutex lock per layer per batch, again only when
+/// enabled).
+///
+/// Timing never changes the arithmetic, so the {serial, pooled} ×
+/// {scalar, simd} bit-exactness contract is untouched either way.
+#[derive(Default)]
+pub struct Profiler {
+    enabled: AtomicBool,
+    decode_ns: AtomicU64,
+    matmul_ns: AtomicU64,
+    bytes: AtomicU64,
+    codes: AtomicU64,
+    layers: Mutex<BTreeMap<String, LayerStat>>,
+}
+
+/// Aggregate kernel counters: (decode_ns, matmul_ns, bytes, codes).
+pub type KernelSnapshot = (u64, u64, u64, u64);
+
+impl Profiler {
+    pub fn enable(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Fold one kernel call's costs into the aggregates. Kernels batch
+    /// this per work block, not per row, to keep atomic traffic low.
+    pub fn add_kernel(&self, decode_ns: u64, matmul_ns: u64, bytes: u64, codes: u64) {
+        self.decode_ns.fetch_add(decode_ns, Ordering::Relaxed);
+        self.matmul_ns.fetch_add(matmul_ns, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.codes.fetch_add(codes, Ordering::Relaxed);
+    }
+
+    pub fn kernel_snapshot(&self) -> KernelSnapshot {
+        (
+            self.decode_ns.load(Ordering::Relaxed),
+            self.matmul_ns.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.codes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Attribute one layer-forward to the per-layer table. `key` should
+    /// order layers within a model, e.g. `"model/03:fc2"`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_layer(
+        &self,
+        key: &str,
+        kind: &str,
+        bits: u8,
+        rows: u64,
+        total_ns: u64,
+        decode_ns: u64,
+        matmul_ns: u64,
+        bytes: u64,
+        codes: u64,
+    ) {
+        let mut t = self.layers.lock().unwrap_or_else(|p| p.into_inner());
+        let e = t.entry(key.to_string()).or_default();
+        e.kind = kind.to_string();
+        e.bits = bits;
+        e.calls += 1;
+        e.rows += rows;
+        e.total_ns += total_ns;
+        e.decode_ns += decode_ns;
+        e.matmul_ns += matmul_ns;
+        e.bytes += bytes;
+        e.codes += codes;
+    }
+
+    /// Clear both the aggregates and the per-layer table (does not
+    /// change the enabled flag).
+    pub fn reset(&self) {
+        self.decode_ns.store(0, Ordering::Relaxed);
+        self.matmul_ns.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+        self.codes.store(0, Ordering::Relaxed);
+        self.layers.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// JSON view for `/debug/stats`: the aggregate decode/matmul split
+    /// plus the per-model per-layer table (layer time, decode share,
+    /// bytes decoded, codes/sec).
+    pub fn to_json(&self) -> Json {
+        let (dec, mm, bytes, codes) = self.kernel_snapshot();
+        let layers = self.layers.lock().unwrap_or_else(|p| p.into_inner());
+        let mut table = BTreeMap::new();
+        for (key, s) in layers.iter() {
+            let total_s = s.total_ns as f64 / 1e9;
+            table.insert(
+                key.clone(),
+                Json::obj(vec![
+                    ("kind", Json::Str(s.kind.clone())),
+                    ("bits", Json::Num(s.bits as f64)),
+                    ("calls", Json::Num(s.calls as f64)),
+                    ("rows", Json::Num(s.rows as f64)),
+                    ("total_ms", Json::Num(s.total_ns as f64 / 1e6)),
+                    ("decode_ms", Json::Num(s.decode_ns as f64 / 1e6)),
+                    ("matmul_ms", Json::Num(s.matmul_ns as f64 / 1e6)),
+                    ("bytes_decoded", Json::Num(s.bytes as f64)),
+                    (
+                        "codes_per_sec",
+                        Json::Num(if total_s > 0.0 { s.codes as f64 / total_s } else { 0.0 }),
+                    ),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.on())),
+            ("decode_ms", Json::Num(dec as f64 / 1e6)),
+            ("matmul_ms", Json::Num(mm as f64 / 1e6)),
+            ("bytes_decoded", Json::Num(bytes as f64)),
+            ("codes", Json::Num(codes as f64)),
+            ("layers", Json::Obj(table)),
+        ])
+    }
+
+    /// Render the aggregate counters as Prometheus series (the
+    /// per-layer table stays on `/debug/stats` — unbounded label sets
+    /// don't belong on a scrape page).
+    pub fn render(&self, p: &mut Prom) {
+        let (dec, mm, bytes, codes) = self.kernel_snapshot();
+        p.family("msq_profiler_enabled", "gauge", "1 when kernel profiling is on");
+        p.sample("msq_profiler_enabled", &[], if self.on() { 1.0 } else { 0.0 });
+        p.family(
+            "msq_kernel_seconds_total",
+            "counter",
+            "Cumulative kernel time split by phase (decode vs matmul)",
+        );
+        p.sample("msq_kernel_seconds_total", &[("phase", "decode")], dec as f64 / 1e9);
+        p.sample("msq_kernel_seconds_total", &[("phase", "matmul")], mm as f64 / 1e9);
+        p.family(
+            "msq_kernel_bytes_decoded_total",
+            "counter",
+            "Packed payload bytes streamed through the bit-stream decoder",
+        );
+        p.sample("msq_kernel_bytes_decoded_total", &[], bytes as f64);
+        p.family(
+            "msq_kernel_codes_total",
+            "counter",
+            "Quantized weight codes consumed by the serving kernels",
+        );
+        p.sample("msq_kernel_codes_total", &[], codes as f64);
+    }
+}
+
+/// The process-wide kernel profiler (off by default).
+pub fn profiler() -> &'static Profiler {
+    static PROF: OnceLock<Profiler> = OnceLock::new();
+    PROF.get_or_init(Profiler::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_counter_and_hist_updates_are_lossless() {
+        // N threads × M updates through shared handles: nothing dropped.
+        const THREADS: usize = 8;
+        const PER: usize = 1000;
+        let reg = Arc::new(Registry::new());
+        let c = reg.counter("msq_test_total", &[]);
+        let h = reg.hist("msq_test_seconds", &[]);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let (c, h) = (c.clone(), h.clone());
+                s.spawn(move || {
+                    for i in 0..PER {
+                        c.inc();
+                        h.record(1e-6 * (t * PER + i + 1) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), (THREADS * PER) as u64);
+        assert_eq!(h.count(), (THREADS * PER) as u64);
+        assert!(h.sum() > 0.0);
+        // get-or-create returns the same underlying metric
+        assert_eq!(reg.counter("msq_test_total", &[]).get(), (THREADS * PER) as u64);
+    }
+
+    #[test]
+    fn span_nesting_records_each_level() {
+        let reg = Registry::new();
+        let outer_h = reg.hist("outer_seconds", &[]);
+        let inner_h = reg.hist("inner_seconds", &[]);
+        let outer = Span::enter(outer_h.clone());
+        {
+            let inner = Span::enter(inner_h.clone());
+            std::thread::sleep(Duration::from_millis(2));
+            drop(inner);
+        }
+        std::thread::sleep(Duration::from_millis(1));
+        let total = outer.stop();
+        assert_eq!(outer_h.count(), 1);
+        assert_eq!(inner_h.count(), 1);
+        // inner elapsed is a strict subset of outer elapsed
+        assert!(inner_h.sum() <= total.as_secs_f64() + 1e-9);
+        assert!(outer_h.sum() >= inner_h.sum());
+    }
+
+    #[test]
+    fn span_records_on_panic_unwind() {
+        let reg = Registry::new();
+        let h = reg.hist("panicky_seconds", &[]);
+        let h2 = h.clone();
+        let r = std::panic::catch_unwind(move || {
+            let _span = Span::enter(h2);
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        assert_eq!(h.count(), 1, "span must record during unwind");
+    }
+
+    #[test]
+    fn registry_renders_well_formed_prometheus_text() {
+        let reg = Registry::new();
+        reg.describe("msq_widgets_total", "Widgets made");
+        reg.counter("msq_widgets_total", &[("kind", "a")]).add(3);
+        reg.counter("msq_widgets_total", &[("kind", "b")]).inc();
+        reg.gauge("msq_depth", &[]).set(2.5);
+        reg.init_stages();
+        reg.stage("parse").record(0.004);
+
+        let mut p = Prom::new();
+        reg.render(&mut p, &QUANTILES);
+        let text = p.finish();
+
+        // one family header per family, in sorted order, each before its samples
+        assert_eq!(text.matches("# TYPE msq_widgets_total counter").count(), 1);
+        assert_eq!(text.matches("# TYPE msq_depth gauge").count(), 1);
+        assert_eq!(text.matches(&format!("# TYPE {STAGE_FAMILY} summary")).count(), 1);
+        assert!(text.contains("# HELP msq_widgets_total Widgets made"));
+        assert!(text.contains("msq_widgets_total{kind=\"a\"} 3"));
+        assert!(text.contains("msq_widgets_total{kind=\"b\"} 1"));
+        assert!(text.contains("msq_depth 2.5"));
+        // all six stages render series even when empty
+        for s in STAGES {
+            assert!(
+                text.contains(&format!("{STAGE_FAMILY}_count{{stage=\"{s}\"}}")),
+                "missing stage series {s}:\n{text}"
+            );
+        }
+        assert!(text.contains(&format!("{STAGE_FAMILY}{{stage=\"parse\",quantile=\"0.5\"}}")));
+        // every non-comment line is `name{...} value` with a parseable value
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, val) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(
+                val.parse::<f64>().is_ok() || val == "+Inf" || val == "-Inf" || val == "NaN",
+                "bad sample value in line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_json_dump_shape() {
+        let reg = Registry::new();
+        reg.counter("msq_c_total", &[]).add(7);
+        reg.stage("kernel").record(0.010);
+        let j = reg.to_json();
+        assert_eq!(j.get("msq_c_total").and_then(Json::as_f64), Some(7.0));
+        let k = j.get(&format!("{STAGE_FAMILY}{{stage=\"kernel\"}}")).expect("stage entry");
+        assert_eq!(k.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(k.get("sum_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn profiler_accumulates_and_resets() {
+        let p = Profiler::default();
+        assert!(!p.on());
+        p.enable(true);
+        p.add_kernel(100, 200, 32, 64);
+        p.add_kernel(50, 100, 16, 32);
+        p.record_layer("m/00:fc1", "linear", 4, 8, 450, 150, 300, 48, 96);
+        assert_eq!(p.kernel_snapshot(), (150, 300, 48, 96));
+        let j = p.to_json();
+        assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(true));
+        let layer = j.path(&["layers", "m/00:fc1"]).expect("layer row");
+        assert_eq!(layer.get("calls").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(layer.get("bits").and_then(Json::as_f64), Some(4.0));
+        p.reset();
+        assert_eq!(p.kernel_snapshot(), (0, 0, 0, 0));
+        assert!(p.to_json().path(&["layers", "m/00:fc1"]).is_none());
+        p.enable(false);
+    }
+
+    #[test]
+    fn profiler_prom_render_has_phase_split() {
+        let p = Profiler::default();
+        p.add_kernel(2_000_000_000, 4_000_000_000, 1024, 2048);
+        let mut prom = Prom::new();
+        p.render(&mut prom);
+        let text = prom.finish();
+        assert!(text.contains("msq_kernel_seconds_total{phase=\"decode\"} 2"));
+        assert!(text.contains("msq_kernel_seconds_total{phase=\"matmul\"} 4"));
+        assert!(text.contains("msq_kernel_bytes_decoded_total 1024"));
+    }
+}

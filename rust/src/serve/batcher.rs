@@ -53,6 +53,12 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// Queue + compute time, submit to response.
     pub latency: Duration,
+    /// Time spent waiting in the queue before the batch flushed (the
+    /// `queue` lifecycle stage — see `obs::STAGES`).
+    pub queue_wait: Duration,
+    /// Time inside the batch executor (the `kernel` lifecycle stage).
+    /// Shared by every request in the flushed batch.
+    pub compute: Duration,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -227,10 +233,12 @@ fn dispatcher(
         };
 
         // Phase 2: execute outside the lock — submitters stay unblocked.
+        let flushed = Instant::now();
         let inputs: Vec<Vec<f32>> =
             batch.iter_mut().map(|p| std::mem::take(&mut p.input)).collect();
         let n = batch.len();
         let outputs = run(inputs);
+        let compute = flushed.elapsed();
         debug_assert_eq!(outputs.len(), n, "BatchFn must preserve arity");
         for (p, logits) in batch.into_iter().zip(outputs) {
             let argmax = logits
@@ -245,6 +253,8 @@ fn dispatcher(
                 argmax,
                 batch_size: n,
                 latency: p.enqueued.elapsed(),
+                queue_wait: flushed.saturating_duration_since(p.enqueued),
+                compute,
             };
             if let Some(h) = &hook {
                 h(&resp);
@@ -303,6 +313,34 @@ mod tests {
         assert!(r1.latency >= Duration::from_millis(90), "flushed early: {:?}", r1.latency);
         assert_eq!(r1.logits, vec![1.0]);
         assert_eq!(r2.logits, vec![2.0]);
+    }
+
+    #[test]
+    fn stage_fields_partition_latency() {
+        // deadline flush + slow executor: queue_wait covers the deadline
+        // wait, compute covers the executor, and both fit inside the
+        // end-to-end latency (argmax/delivery is the only remainder).
+        let run: Box<BatchFn> = Box::new(|inputs| {
+            thread::sleep(Duration::from_millis(5));
+            inputs
+        });
+        let cfg = BatchConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_millis(20),
+            queue_cap: 64,
+        };
+        let b = DynamicBatcher::new(cfg, run);
+        let rx = b.submit(vec![1.0]).unwrap();
+        let r = recv(&rx);
+        assert!(r.queue_wait >= Duration::from_millis(15), "queue_wait {:?}", r.queue_wait);
+        assert!(r.compute >= Duration::from_millis(5), "compute {:?}", r.compute);
+        assert!(
+            r.queue_wait + r.compute <= r.latency,
+            "stages exceed e2e: {:?} + {:?} > {:?}",
+            r.queue_wait,
+            r.compute,
+            r.latency
+        );
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::kernels::{
 };
 use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
+use std::time::Instant;
 
 // Re-exported for API continuity: the decode primitive and the window
 // geometry moved into the shared kernel core, but they remain part of
@@ -80,15 +81,33 @@ pub fn qgemm(
     let (alpha, beta) = rc_affine(bits as f32, scale);
     let xsums: Vec<f32> = (0..batch).map(|b| sum(&x[b * cols..(b + 1) * cols])).collect();
 
+    // One relaxed load per call; when off, no clocks are read in the
+    // hot loop (see `obs::Profiler` — zero-cost-when-off contract).
+    let prof = crate::obs::profiler().on();
+    let row_bytes = (cols * bits as usize).div_ceil(8) as u64;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let r0 = blk * ROW_BLOCK;
         let r1 = (r0 + ROW_BLOCK).min(rows);
+        let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         for r in r0..r1 {
+            let t0 = if prof { Some(Instant::now()) } else { None };
             decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
+            let t1 = t0.map(|t| {
+                let now = Instant::now();
+                dec_ns += now.duration_since(t).as_nanos() as u64;
+                now
+            });
             for b in 0..batch {
                 let acc = dot(scratch, &x[b * cols..(b + 1) * cols]);
                 write(b * rows + r, alpha * acc + beta * xsums[b]);
             }
+            if let Some(t) = t1 {
+                mm_ns += t.elapsed().as_nanos() as u64;
+            }
+        }
+        if prof {
+            let nrows = (r1 - r0) as u64;
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nrows * row_bytes, nrows * cols as u64);
         }
     };
 
@@ -191,12 +210,21 @@ pub fn qconv2d(
     }
 
     let flen = d.filter_len();
+    let prof = crate::obs::profiler().on();
+    let filter_bytes = (flen * bits as usize).div_ceil(8) as u64;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let oc0 = blk * FILTER_BLOCK;
         let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
+        let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         for oc in oc0..oc1 {
             // decode this filter's kh·kw·in_ch codes exactly once
+            let t0 = if prof { Some(Instant::now()) } else { None };
             decode_codes_f32(data, oc * flen * bits as usize, bits, scratch);
+            let t1 = t0.map(|t| {
+                let now = Instant::now();
+                dec_ns += now.duration_since(t).as_nanos() as u64;
+                now
+            });
             for b in 0..batch {
                 let xb = &x[b * in_elems..(b + 1) * in_elems];
                 for oy in 0..out_h {
@@ -212,6 +240,13 @@ pub fn qconv2d(
                     }
                 }
             }
+            if let Some(t) = t1 {
+                mm_ns += t.elapsed().as_nanos() as u64;
+            }
+        }
+        if prof {
+            let nf = (oc1 - oc0) as u64;
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nf * filter_bytes, nf * flen as u64);
         }
     };
 
@@ -308,10 +343,12 @@ pub fn qattention(
     if batch == 0 {
         return;
     }
+    let prof_t0 = if crate::obs::profiler().on() { Some(Instant::now()) } else { None };
     let mq = wq.decode(d);
     let mk = wk.decode(d);
     let mv = wv.decode(d);
     let mo = wo.decode(d);
+    let prof_t1 = prof_t0.map(|_| Instant::now());
     // multi-sample batches parallelize across samples; batch == 1 lets
     // the projection matmuls use the pool themselves (no nesting either
     // way — par_blocks runs this closure serially when batch == 1)
@@ -335,6 +372,12 @@ pub fn qattention(
         let ob = unsafe { std::slice::from_raw_parts_mut(optr.get().add(b * seq * d), seq * d) };
         matmul_bt(&ctx, &mo, None, seq, d, d, ob, inner);
     });
+    if let (Some(t0), Some(t1)) = (prof_t0, prof_t1) {
+        let dec_ns = t1.duration_since(t0).as_nanos() as u64;
+        let mm_ns = t1.elapsed().as_nanos() as u64;
+        let bytes = (wq.data.len() + wk.data.len() + wv.data.len() + wo.data.len()) as u64;
+        crate::obs::profiler().add_kernel(dec_ns, mm_ns, bytes, 4 * (d * d) as u64);
+    }
 }
 
 /// Dense f64 attention oracle over already-dequantized projection

@@ -650,8 +650,18 @@ impl ServableModel {
                 _ => None,
             })
             .collect();
+        // Per-layer profiling: when the global profiler is on (one
+        // relaxed load per batch), each layer-forward is timed and the
+        // kernel aggregate deltas (decode/matmul ns, bytes, codes) are
+        // attributed to this model's per-layer table. Forwards for one
+        // model run on a single dispatcher thread, so delta attribution
+        // is exact in the single-model case and best-effort when
+        // several models infer concurrently.
+        let prof = crate::obs::profiler().on();
+        let mut kprev = if prof { Some(crate::obs::profiler().kernel_snapshot()) } else { None };
         let mut cur: Vec<f32> = Vec::new();
         for (i, layer) in self.layers.iter().enumerate() {
+            let t0 = if prof { Some(std::time::Instant::now()) } else { None };
             // layer 0 reads the caller's buffer directly (no input copy)
             let src: &[f32] = if i == 0 { x } else { &cur };
             let mut next;
@@ -677,6 +687,23 @@ impl ServableModel {
                 for v in next.iter_mut() {
                     *v = gelu(*v);
                 }
+            }
+            if let (Some(t0), Some(prev)) = (t0, kprev.as_mut()) {
+                let total_ns = t0.elapsed().as_nanos() as u64;
+                let now = crate::obs::profiler().kernel_snapshot();
+                let (d0, m0, b0, c0) = *prev;
+                *prev = now;
+                crate::obs::profiler().record_layer(
+                    &format!("{}/{:02}:{}", self.name, i, layer.name),
+                    layer.kind_name(),
+                    layer.bits,
+                    batch as u64,
+                    total_ns,
+                    now.0.saturating_sub(d0),
+                    now.1.saturating_sub(m0),
+                    now.2.saturating_sub(b0),
+                    now.3.saturating_sub(c0),
+                );
             }
             if save_set.contains(&i) {
                 saved.insert(i, next.clone());

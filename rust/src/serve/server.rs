@@ -50,6 +50,11 @@ pub struct ServeMetrics {
     rejected: AtomicU64,
     completed: AtomicU64,
     latency: Mutex<LatencyHist>,
+    /// Queue-wait slice of each request's latency (the `queue` stage).
+    queue_wait: Mutex<LatencyHist>,
+    /// Batch-executor slice of each request's latency (the `kernel`
+    /// stage — the quantized forward pass its batch ran).
+    compute: Mutex<LatencyHist>,
     /// Request-weighted batch occupancy (mean batch a request rode in).
     occupancy: Mutex<Running>,
     rate: Mutex<RateCounter>,
@@ -63,6 +68,8 @@ impl ServeMetrics {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             latency: Mutex::new(LatencyHist::new()),
+            queue_wait: Mutex::new(LatencyHist::new()),
+            compute: Mutex::new(LatencyHist::new()),
             occupancy: Mutex::new(Running::new()),
             rate: Mutex::new(RateCounter::new(10)),
         }
@@ -84,6 +91,8 @@ impl ServeMetrics {
     pub fn record_completion(&self, r: &InferResponse) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latency.lock().unwrap().record(r.latency.as_secs_f64());
+        self.queue_wait.lock().unwrap().record(r.queue_wait.as_secs_f64());
+        self.compute.lock().unwrap().record(r.compute.as_secs_f64());
         self.occupancy.lock().unwrap().push(r.batch_size as f64);
         self.rate.lock().unwrap().add(self.now_secs(), 1);
     }
@@ -109,6 +118,16 @@ impl ServeMetrics {
     /// Prometheus summary quantiles from it without holding the lock).
     pub fn latency_hist(&self) -> LatencyHist {
         self.latency.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the queue-wait stage histogram.
+    pub fn queue_wait_hist(&self) -> LatencyHist {
+        self.queue_wait.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the batch-executor (kernel) stage histogram.
+    pub fn compute_hist(&self) -> LatencyHist {
+        self.compute.lock().unwrap().clone()
     }
 
     /// Request-weighted mean batch occupancy.
@@ -143,6 +162,8 @@ impl ServeMetrics {
             ("p99_ms", Json::Num(lat.percentile(99.0) * 1e3)),
             ("mean_ms", Json::Num(lat.mean() * 1e3)),
             ("max_ms", Json::Num(lat.max() * 1e3)),
+            ("queue_mean_ms", Json::Num(self.queue_wait.lock().unwrap().mean() * 1e3)),
+            ("compute_mean_ms", Json::Num(self.compute.lock().unwrap().mean() * 1e3)),
             ("mean_batch", Json::Num(self.occupancy.lock().unwrap().mean())),
         ])
     }

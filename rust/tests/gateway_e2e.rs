@@ -266,6 +266,116 @@ fn gateway_backpressure_maps_queue_full_to_429() {
 }
 
 #[test]
+fn stage_metrics_server_timing_and_debug_stats_end_to_end() {
+    let path = write_pack(21, "msq_gw_obs.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 8,
+            read_timeout: Duration::from_millis(50),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("m".to_string(), path, None)],
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // one infer over a raw socket so response headers stay visible
+    let body = Json::Arr(vec![Json::arr_f32(&[0.25; 24])]).to_string();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let t0 = std::time::Instant::now();
+    let req = format!(
+        "POST /v1/models/m/infer HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    std::io::Write::write_all(&mut s, req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
+    let e2e = t0.elapsed();
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("Server-Timing:"), "{raw}");
+    for stage in ["parse", "queue", "batch", "kernel", "total"] {
+        assert!(raw.contains(&format!("{stage};dur=")), "missing {stage} in {raw}");
+    }
+
+    // /debug/stats agrees: one observation per request stage, and the
+    // server-side stage sum is bounded by the client-observed latency
+    let (status, v) = request(addr, "GET", "/debug/stats", b"");
+    assert_eq!(status, 200);
+    let mut server_side = 0.0;
+    for stage in ["queue", "batch", "kernel"] {
+        assert_eq!(
+            v.path(&["stages", stage, "count"]).unwrap().as_f64(),
+            Some(1.0),
+            "{v:?}"
+        );
+        server_side += v.path(&["stages", stage, "sum_s"]).unwrap().as_f64().unwrap();
+    }
+    assert!(server_side > 0.0, "{v:?}");
+    assert!(
+        server_side <= e2e.as_secs_f64(),
+        "stage sum {server_side}s exceeds end-to-end {:?}",
+        e2e
+    );
+    assert!(v.path(&["profiler", "enabled"]).is_some(), "{v:?}");
+    assert!(v.get("registry").is_some(), "{v:?}");
+
+    // /metrics renders the stage families alongside the model series
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_request(&mut s, "GET", "/metrics", None, b"").unwrap();
+    let (_, bytes) = HttpReader::new(s).read_response(&Limits::default()).unwrap();
+    let text = String::from_utf8(bytes).unwrap();
+    assert!(text.contains("# TYPE msq_stage_duration_seconds summary"), "{text}");
+    assert!(text.contains("msq_stage_duration_seconds_count{stage=\"queue\"} 1"), "{text}");
+    assert!(text.contains("msq_stage_duration_seconds_count{stage=\"serialize\"}"), "{text}");
+    gw.shutdown();
+}
+
+#[test]
+fn gateway_admin_token_gates_reload_over_the_wire() {
+    let path = write_pack(31, "msq_gw_token.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 4,
+            read_timeout: Duration::from_millis(50),
+            admin_token: Some("hunter2".into()),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("m".to_string(), path.clone(), None)],
+    )
+    .unwrap();
+    let addr = gw.addr();
+    let body = format!(r#"{{"model": "m", "path": {:?}}}"#, path.display().to_string());
+
+    // no Authorization header → 401, nothing reloaded
+    let (status, v) = request(addr, "POST", "/admin/reload", body.as_bytes());
+    assert_eq!(status, 401, "{v:?}");
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("Bearer"), "{v:?}");
+
+    // correct bearer token → 200, generation bumps
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "POST /admin/reload HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Authorization: Bearer hunter2\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    std::io::Write::write_all(&mut s, req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("\"generation\": 2") || raw.contains("\"generation\":2"), "{raw}");
+    gw.shutdown();
+}
+
+#[test]
 fn gateway_connection_budget_sheds_with_503() {
     let path = write_pack(4, "msq_gw_budget.msqpack");
     let gw = Gateway::start(
