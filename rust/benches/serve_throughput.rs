@@ -198,6 +198,39 @@ fn main() {
     results.push(r_prof_off);
     results.push(r_prof_on);
 
+    // --- qstats overhead: same shape of claim for the activation
+    // observers. "off" is the one relaxed atomic load per kernel call;
+    // "on" at rate 1.0 adds the per-call min/max/absmax fold plus the
+    // histogram merge — the worst case (sampling only lowers it).
+    let qs = msq::obs::qstats::qstats();
+    qs.enable(false);
+    let r_qs_off = bench("infer_batch b=8 qstats=off", 2, 20, || {
+        std::hint::black_box(pmodel.infer_batch(&px, 8, None).unwrap());
+    });
+    r_qs_off.report(None);
+    qs.set_rate(1.0);
+    qs.enable(true);
+    let r_qs_on = bench("infer_batch b=8 qstats=on", 2, 20, || {
+        std::hint::black_box(pmodel.infer_batch(&px, 8, None).unwrap());
+    });
+    r_qs_on.report(None);
+    qs.enable(false);
+    qs.reset_all();
+    let qs_overhead = r_qs_on.mean_s / r_qs_off.mean_s.max(1e-12) - 1.0;
+    println!(
+        "qstats: off {:.3} ms, on {:.3} ms ({:+.1}% overhead when enabled)",
+        r_qs_off.mean_s * 1e3,
+        r_qs_on.mean_s * 1e3,
+        qs_overhead * 100.0
+    );
+    let qstats_section = Json::obj(vec![
+        ("off_ms", Json::Num(r_qs_off.mean_s * 1e3)),
+        ("on_ms", Json::Num(r_qs_on.mean_s * 1e3)),
+        ("enabled_overhead_frac", Json::Num(qs_overhead)),
+    ]);
+    results.push(r_qs_off);
+    results.push(r_qs_on);
+
     // --- system-level: dynamic batching under closed-loop load
     let cfg = ServerConfig::default();
     let server = Server::start(model.clone(), cfg);
@@ -254,6 +287,7 @@ fn main() {
         ("server", server.metrics.snapshot(server.queue_depth())),
         ("kernel_core", kernel_core),
         ("profiler", profiler_section),
+        ("qstats", qstats_section),
         (
             "conv",
             Json::obj(vec![

@@ -389,6 +389,15 @@ impl<B: Backend> Trainer<B> {
             ("prune_bits", arr_u8(&event.prune_bits)),
             ("compression", Json::Num(event.compression)),
         ]))?;
+        // per-layer quantization error measured at this round's bit
+        // widths — the trainer-side half of the quant-health telemetry
+        // (`msq report` renders these as a qerr trajectory table)
+        self.emit(Json::obj(vec![
+            ("event", Json::Str("quant_error".into())),
+            ("epoch", Json::Num(epoch as f64)),
+            ("qerr", arr_f32(&qerr)),
+            ("bits", arr_u8(&event.bits_before)),
+        ]))?;
         if cfg.verbose {
             println!("[{}_{}] {}", cfg.model, cfg.method, event.summary());
         }

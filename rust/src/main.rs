@@ -8,6 +8,7 @@
 //! msq info                                  # list artifacts
 //! msq pack-synth --dims 3072,256,10 --bits 4,8 --out demo.msqpack
 //! msq serve --model mlp --packed demo.msqpack [--requests N]
+//! msq inspect demo.msqpack [--json]          # static quantization analysis
 //! ```
 //!
 //! `train --backend native`, `eval-packed`, `pack-synth` and `serve` all
@@ -58,10 +59,11 @@ fn main() -> Result<()> {
         Some("gateway") => cmd_gateway(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("pack-synth") => cmd_pack_synth(&args),
+        Some("inspect") => cmd_inspect(&args),
         Some("report") => cmd_report(&args),
         _ => {
             eprintln!(
-                "usage: msq <train|info|eval-init|eval-packed|serve|gateway|loadgen|pack-synth|report>\n\
+                "usage: msq <train|info|eval-init|eval-packed|serve|gateway|loadgen|pack-synth|inspect|report>\n\
                  train:      [--backend native|pjrt] [--model M] [--method msq|dorefa|bsq|csq]\n\
                  \x20           [--epochs N] [--batch B] [--hidden 256,128] [--threads T]\n\
                  \x20           [--lam L] [--alpha A] [--interval I] [--gamma G] [--lr LR]\n\
@@ -83,12 +85,14 @@ fn main() -> Result<()> {
                  \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
                  \x20           [--threads 0] [--run-secs N] [--quiet] [--profile]\n\
-                 \x20           [--admin-token TOKEN]\n\
+                 \x20           [--admin-token TOKEN] [--qstats[=RATE]]\n\
                  \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
-                 \x20            GET /metrics, GET /debug/stats, POST /admin/reload;\n\
-                 \x20            --port 0 = ephemeral; --profile enables per-layer kernel\n\
-                 \x20            profiling; --admin-token gates /admin/reload with a\n\
-                 \x20            Bearer token)\n\
+                 \x20            GET /metrics, GET /debug/stats, GET /debug/model/{{name}},\n\
+                 \x20            POST /admin/reload; --port 0 = ephemeral; --profile\n\
+                 \x20            enables per-layer kernel profiling; --qstats enables\n\
+                 \x20            activation observers (RATE in (0,1] samples 1-in-1/RATE\n\
+                 \x20            calls, default 1.0); --admin-token gates /admin/reload\n\
+                 \x20            and GET /debug/* with a Bearer token)\n\
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
                  \x20           [--json]\n\
@@ -100,9 +104,13 @@ fn main() -> Result<()> {
                  \x20            3x3 stride-2 pad-1 stages + linear head, pack v3;\n\
                  \x20            transformer: --dims are token_dim,model_dim,classes over\n\
                  \x20            --seq tokens, pre-norm MHA/GELU-MLP blocks, pack v4)\n\
+                 inspect:    <model.msqpack> [--json] (static quantization analysis\n\
+                 \x20           without serving: op graph plus per-layer bits, code\n\
+                 \x20           entropy, quant-error proxy and payload size — the same\n\
+                 \x20           numbers a gateway reports at GET /debug/model/{{name}})\n\
                  report:     <telemetry.jsonl> (render a --telemetry stream: per-epoch\n\
-                 \x20           trajectory, prune rounds, run summary; nonzero exit on\n\
-                 \x20           schema violations)"
+                 \x20           trajectory, prune rounds, quant-error rounds, run\n\
+                 \x20           summary; nonzero exit on schema violations)"
             );
             Ok(())
         }
@@ -208,6 +216,22 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         None => 8080,
         Some(s) => s.parse().with_context(|| format!("bad --port {s:?} (0..=65535)"))?,
     };
+    // bare `--qstats` = observe every kernel call; `--qstats=0.25` =
+    // deterministic 1-in-4 sampling ("qstats" is deliberately NOT in
+    // VALUE_OPTS so the bare form stays a flag)
+    let qstats = match args.opt("qstats") {
+        Some(s) => {
+            let rate: f32 =
+                s.parse().with_context(|| format!("bad --qstats rate {s:?} (want 0 < r <= 1)"))?;
+            ensure!(
+                rate > 0.0 && rate <= 1.0,
+                "--qstats rate must be in (0, 1], got {rate}"
+            );
+            Some(rate)
+        }
+        None if args.flag("qstats") => Some(1.0),
+        None => None,
+    };
     let cfg = msq::net::GatewayConfig {
         host: args.opt_or("host", "127.0.0.1").to_string(),
         port,
@@ -217,6 +241,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         access_log: !args.flag("quiet"),
         admin_token: args.opt("admin-token").map(String::from),
         profile: args.flag("profile"),
+        qstats,
         server: server_config(args),
     };
     let gw = msq::net::Gateway::start(cfg, &models)?;
@@ -288,6 +313,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     let mut run_end: Option<Json> = None;
     let mut epochs: Vec<Json> = Vec::new();
     let mut prunes: Vec<Json> = Vec::new();
+    let mut qerrs: Vec<Json> = Vec::new();
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -321,6 +347,21 @@ fn cmd_report(args: &Args) -> Result<()> {
                     );
                 }
                 prunes.push(v);
+            }
+            "quant_error" => {
+                ensure!(
+                    v.get("epoch").and_then(Json::as_f64).is_some(),
+                    "{path}:{}: quant_error event missing numeric \"epoch\"",
+                    i + 1
+                );
+                for k in ["qerr", "bits"] {
+                    ensure!(
+                        v.get(k).and_then(Json::as_arr).is_some(),
+                        "{path}:{}: quant_error event missing array {k:?}",
+                        i + 1
+                    );
+                }
+                qerrs.push(v);
             }
             other => bail!("{path}:{}: unknown event {other:?}", i + 1),
         }
@@ -408,6 +449,46 @@ fn cmd_report(args: &Args) -> Result<()> {
                 fmt_opt(min, 3),
                 pruned.to_string(),
                 fmt_opt(p.get("compression").and_then(Json::as_f64), 2),
+            ]);
+        }
+        t.print();
+    }
+
+    if !qerrs.is_empty() {
+        println!("\n[report] per-layer quantization error (prune-round snapshots):");
+        let mut t = metrics::Table::new(&[
+            "epoch", "qerr_mean", "qerr_max", "worst_layer", "bits@worst",
+        ]);
+        for q in &qerrs {
+            let qerr: Vec<f64> = q
+                .get("qerr")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let bits: Vec<f64> = q
+                .get("bits")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let mean = if qerr.is_empty() {
+                None
+            } else {
+                Some(qerr.iter().sum::<f64>() / qerr.len() as f64)
+            };
+            let worst = qerr
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, &e)| (i, e));
+            t.row(&[
+                fmt_opt(q.get("epoch").and_then(Json::as_f64), 0),
+                fmt_opt(mean, 5),
+                fmt_opt(worst.map(|(_, e)| e), 5),
+                worst.map(|(i, _)| i.to_string()).unwrap_or_else(|| "-".to_string()),
+                worst
+                    .and_then(|(i, _)| bits.get(i))
+                    .map(|b| format!("{b:.0}"))
+                    .unwrap_or_else(|| "-".to_string()),
             ]);
         }
         t.print();
@@ -650,6 +731,64 @@ fn cmd_pack_synth(args: &Args) -> Result<()> {
         pm.payload_bytes(),
         pm.compression(),
         pm.input_dim,
+    );
+    Ok(())
+}
+
+/// `msq inspect` — static quantization analysis of a `.msqpack` without
+/// serving it: the op graph plus the per-layer bits / code-entropy /
+/// quant-error / payload table a gateway computes at load time. The
+/// `--json` output is byte-identical to the `"analysis"` object of
+/// `GET /debug/model/{name}` for the same file, so offline and served
+/// views can be diffed directly.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.opt("packed"))
+        .context("usage: msq inspect <model.msqpack> [--json]")?;
+    let pm = PackedModel::load(Path::new(path))?;
+    let a = msq::serve::analyze_packed(&pm);
+    if args.flag("json") {
+        println!("{}", a.to_json().to_string());
+        return Ok(());
+    }
+    println!(
+        "[inspect] {path}: {} records, input dim {}, {} B payload ({:.2}x vs fp32)",
+        pm.layers.len(),
+        pm.input_dim,
+        pm.payload_bytes(),
+        pm.compression(),
+    );
+    let graph: Vec<String> =
+        a.layers.iter().map(|l| format!("{}({})", l.name, l.kind)).collect();
+    println!("[inspect] graph: {}", graph.join(" -> "));
+    let mut t = metrics::Table::new(&[
+        "layer", "kind", "bits", "numel", "bytes", "entropy_b", "entropy_util", "sat_pct",
+        "qerr_drop",
+    ]);
+    let quant = |l: &msq::serve::LayerAnalysis, s: String| {
+        // structural records (reshape/residual/…) carry no codebook
+        if l.numel == 0 { "-".to_string() } else { s }
+    };
+    for (i, l) in a.layers.iter().enumerate() {
+        t.row(&[
+            format!("{i:02}:{}", l.name),
+            l.kind.to_string(),
+            quant(l, l.bits.to_string()),
+            quant(l, l.numel.to_string()),
+            quant(l, l.payload_bytes.to_string()),
+            quant(l, format!("{:.3}", l.entropy_bits)),
+            quant(l, format!("{:.3}", l.entropy_util)),
+            quant(l, format!("{:.2}", l.sat_frac * 100.0)),
+            quant(l, format!("{:.4}", l.qerr_drop_rel)),
+        ]);
+    }
+    t.print();
+    println!(
+        "[inspect] totals: {} weights, {} payload bytes, avg {:.2} bits/weight",
+        a.total_numel, a.total_payload_bytes, a.avg_bits
     );
     Ok(())
 }

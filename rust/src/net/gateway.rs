@@ -65,6 +65,13 @@ pub struct GatewayConfig {
     /// surfaced on `/metrics` and `/debug/stats`. Off by default — the
     /// disabled path is one relaxed atomic load per kernel call.
     pub profile: bool,
+    /// Enable activation observers ([`crate::obs::qstats`]) at startup
+    /// with this sample rate (`Some(1.0)` = every kernel call, `Some(r)`
+    /// = a deterministic 1-in-⌈1/r⌉ stride). Feeds the per-layer
+    /// `msq_layer_act_*` series, saturation counters, and the
+    /// `/debug/model/{name}` activations table. `None` (default) keeps
+    /// the observers off — one relaxed atomic load per kernel call.
+    pub qstats: Option<f32>,
     /// Batcher/kernel config for every model server the gateway starts.
     pub server: ServerConfig,
 }
@@ -80,6 +87,7 @@ impl Default for GatewayConfig {
             access_log: false,
             admin_token: None,
             profile: false,
+            qstats: None,
             server: ServerConfig::default(),
         }
     }
@@ -107,6 +115,11 @@ impl Gateway {
         let state = Arc::new(state);
         if cfg.profile {
             crate::obs::profiler().enable(true);
+        }
+        if let Some(rate) = cfg.qstats {
+            let qs = crate::obs::qstats::qstats();
+            qs.set_rate(rate);
+            qs.enable(true);
         }
         for (name, path, dim) in models {
             state.load_model(name, path, *dim)?;

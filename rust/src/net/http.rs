@@ -2,7 +2,9 @@
 //! response writer, and the client half the load generator reuses.
 //!
 //! Scope is exactly what the gateway needs — origin-form targets,
-//! `Content-Length` bodies only (chunked transfer is answered with 501),
+//! `Content-Length` and `chunked` bodies (any other transfer coding is
+//! answered with 501, and a request carrying *both* framings is a 400
+//! request-smuggling refusal per RFC 9112 §6.1),
 //! keep-alive with the HTTP/1.0/1.1 defaults, and hard limits on line
 //! length, header count, and body size so a hostile peer cannot balloon
 //! memory. Every malformed input maps to a 4xx/5xx [`ReadError::Bad`];
@@ -103,6 +105,14 @@ enum Fill {
     Data,
     Eof,
     Timeout,
+}
+
+/// Message-body framing declared by the headers.
+enum BodyKind {
+    /// `Content-Length: n` (0 when absent).
+    Len(usize),
+    /// `Transfer-Encoding: chunked`.
+    Chunked,
 }
 
 /// Buffered reader over a byte stream; owns the partial-read state so
@@ -230,11 +240,27 @@ impl<R: Read> HttpReader<R> {
         }
     }
 
-    /// The declared `Content-Length`, validated against `limits` and
-    /// duplicate/garbage values; `Transfer-Encoding` is refused (501).
-    fn body_len(headers: &[(String, String)], limits: &Limits) -> Result<usize, ReadError> {
-        if headers.iter().any(|(k, _)| k == "transfer-encoding") {
-            return Err(bad(501, "chunked bodies unsupported — send Content-Length"));
+    /// How the message body is framed: a validated `Content-Length`, or
+    /// chunked transfer coding. `chunked` must be the *only* coding
+    /// (anything else is 501), and combining it with `Content-Length`
+    /// is refused outright (400) — ambiguous framing is the classic
+    /// request-smuggling vector.
+    fn body_kind(headers: &[(String, String)], limits: &Limits) -> Result<BodyKind, ReadError> {
+        let codings: Vec<String> = headers
+            .iter()
+            .filter(|(k, _)| k == "transfer-encoding")
+            .flat_map(|(_, v)| v.split(','))
+            .map(|c| c.trim().to_ascii_lowercase())
+            .filter(|c| !c.is_empty())
+            .collect();
+        if !codings.is_empty() {
+            if codings != ["chunked"] {
+                return Err(bad(501, format!("unsupported transfer coding {codings:?}")));
+            }
+            if headers.iter().any(|(k, _)| k == "content-length") {
+                return Err(bad(400, "both Content-Length and chunked framing"));
+            }
+            return Ok(BodyKind::Chunked);
         }
         let mut len: Option<usize> = None;
         for (k, v) in headers {
@@ -253,7 +279,55 @@ impl<R: Read> HttpReader<R> {
         if n > limits.max_body {
             return Err(bad(413, format!("body {n} bytes exceeds limit {}", limits.max_body)));
         }
-        Ok(n)
+        Ok(BodyKind::Len(n))
+    }
+
+    /// `chunked` body: `size-hex[;ext]\r\n data \r\n` repeated, a `0`
+    /// chunk, then an (ignored but validated) trailer section. The
+    /// cumulative size honours `limits.max_body` exactly like a declared
+    /// length; every malformed framing byte is a 4xx, never a panic.
+    fn read_chunked(&mut self, limits: &Limits) -> Result<Vec<u8>, ReadError> {
+        let mut body = Vec::new();
+        loop {
+            let line = self.read_line(limits.max_line, false)?;
+            let size = line.split(';').next().unwrap_or("").trim();
+            if size.is_empty() || !size.bytes().all(|b| b.is_ascii_hexdigit()) {
+                return Err(bad(400, format!("bad chunk size {size:?}")));
+            }
+            let n = usize::from_str_radix(size, 16)
+                .map_err(|_| bad(413, "chunk size exceeds limit"))?;
+            if n == 0 {
+                break;
+            }
+            if body.len() + n > limits.max_body {
+                return Err(bad(
+                    413,
+                    format!("chunked body exceeds limit {}", limits.max_body),
+                ));
+            }
+            body.extend_from_slice(&self.read_body(n)?);
+            if !self.read_line(limits.max_line, false)?.is_empty() {
+                return Err(bad(400, "missing chunk terminator"));
+            }
+        }
+        // trailer section: header-shaped lines until the blank line that
+        // ends the message (we validate and drop them)
+        let mut count = 0usize;
+        loop {
+            let l = self.read_line(limits.max_line, false)?;
+            if l.is_empty() {
+                return Ok(body);
+            }
+            count += 1;
+            if count > limits.max_headers {
+                return Err(bad(431, "too many trailers"));
+            }
+            let colon = l.find(':').ok_or_else(|| bad(400, "malformed trailer"))?;
+            let name = l[..colon].trim();
+            if name.is_empty() || !name.bytes().all(is_token_byte) {
+                return Err(bad(400, "malformed trailer name"));
+            }
+        }
     }
 
     /// Parse one request (blocking until a full message or a failure).
@@ -283,8 +357,11 @@ impl<R: Read> HttpReader<R> {
             return Err(bad(400, "target must be origin-form (/path)"));
         }
         let headers = self.read_headers(limits)?;
-        let n = Self::body_len(&headers, limits)?;
-        let body = if n > 0 { self.read_body(n)? } else { Vec::new() };
+        let body = match Self::body_kind(&headers, limits)? {
+            BodyKind::Len(0) => Vec::new(),
+            BodyKind::Len(n) => self.read_body(n)?,
+            BodyKind::Chunked => self.read_chunked(limits)?,
+        };
         Ok(Request { method, target, http11, headers, body })
     }
 
@@ -303,8 +380,11 @@ impl<R: Read> HttpReader<R> {
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| ReadError::Io(format!("malformed status line {line:?}")))?;
         let headers = self.read_headers(limits)?;
-        let n = Self::body_len(&headers, limits)?;
-        let body = if n > 0 { self.read_body(n)? } else { Vec::new() };
+        let body = match Self::body_kind(&headers, limits)? {
+            BodyKind::Len(0) => Vec::new(),
+            BodyKind::Len(n) => self.read_body(n)?,
+            BodyKind::Chunked => self.read_chunked(limits)?,
+        };
         Ok((status, body))
     }
 }
@@ -486,7 +566,7 @@ mod tests {
                 b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nab",
                 400,
             ), // conflicting lengths
-            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n", 501),
             (b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n", 413),
         ];
         for (bytes, want) in cases {
@@ -500,6 +580,101 @@ mod tests {
                 ),
             }
         }
+    }
+
+    #[test]
+    fn chunked_bodies_parse_and_preserve_order() {
+        let req = parse_bytes(
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.body, b"Wikipedia");
+        // chunk extensions are ignored; trailers are validated then dropped
+        let req = parse_bytes(
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              3;ext=1\r\nabc\r\n0\r\nx-sum: 3\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.body, b"abc");
+        // coding value is case-insensitive; a zero-chunk body is empty
+        let req = parse_bytes(
+            b"POST /x HTTP/1.1\r\ntransfer-encoding: Chunked\r\n\r\n0\r\n\r\n",
+        )
+        .unwrap();
+        assert!(req.body.is_empty());
+        // the reader consumes exactly the message: pipelining still works
+        let lim = Limits::default();
+        let mut r = HttpReader::new(Cursor::new(
+            b"POST /a HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              2\r\nhi\r\n0\r\n\r\nGET /b HTTP/1.1\r\n\r\n"
+                .to_vec(),
+        ));
+        let a = r.read_request(&lim).unwrap();
+        assert_eq!(a.body, b"hi");
+        assert_eq!(r.read_request(&lim).unwrap().path(), "/b");
+    }
+
+    #[test]
+    fn malformed_chunked_bodies_are_4xx_not_panics() {
+        let cases: &[(&[u8], u16)] = &[
+            // non-hex / empty / signed chunk sizes
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\nab\r\n0\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\r\nab\r\n0\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n-5\r\nab\r\n0\r\n\r\n", 400),
+            // chunk data not followed by its CRLF terminator
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n2\r\nabX\r\n0\r\n\r\n", 400),
+            // a size that overflows usize is over any body limit
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffffffffffffff\r\n", 413),
+            // trailer junk: no colon, empty name
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\njunk trailer\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n: v\r\n\r\n", 400),
+            // ambiguous framing (smuggling) and unsupported codings
+            (
+                b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 2\r\n\r\n0\r\n\r\n",
+                400,
+            ),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked, gzip\r\n\r\n", 501),
+        ];
+        for (bytes, want) in cases {
+            match parse_bytes(bytes) {
+                Err(ReadError::Bad { status, .. }) => {
+                    assert_eq!(status, *want, "input {:?}", String::from_utf8_lossy(bytes));
+                }
+                other => panic!(
+                    "input {:?}: expected Bad({want}), got {other:?}",
+                    String::from_utf8_lossy(bytes)
+                ),
+            }
+        }
+        // truncation mid-chunk is a transport error, not a panic
+        let r = parse_bytes(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nab");
+        assert!(matches!(r, Err(ReadError::Io(_))), "{r:?}");
+        // the cumulative size honours max_body even when each chunk fits
+        let lim = Limits { max_body: 3, ..Limits::default() };
+        let r = HttpReader::new(Cursor::new(
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              2\r\nab\r\n2\r\ncd\r\n0\r\n\r\n"
+                .to_vec(),
+        ))
+        .read_request(&lim);
+        assert!(matches!(r, Err(ReadError::Bad { status: 413, .. })), "{r:?}");
+    }
+
+    #[test]
+    fn prop_chunked_truncations_never_panic_or_misparse() {
+        let wire = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                     4;x=y\r\nWiki\r\n5\r\npedia\r\n0\r\nx-t: 1\r\n\r\n";
+        prop::check(200, |g| {
+            let cut = g.usize_in(0, wire.len());
+            match parse_bytes(&wire[..cut]) {
+                Ok(req) => prop::ensure(
+                    cut == wire.len() && req.body == b"Wikipedia",
+                    format!("parsed a truncated chunked request (cut {cut})"),
+                ),
+                Err(_) => Ok(()), // must fail, must not panic
+            }
+        });
     }
 
     #[test]

@@ -72,6 +72,21 @@ pub struct LoadReport {
     /// `/debug/stats` stage histograms between run start and end. Empty
     /// when the gateway predates the endpoint (best-effort scrape).
     pub stages: Vec<StageSlo>,
+    /// Activation-observer deltas over the run (gateway started with
+    /// `--qstats`); `None` when the observers are off.
+    pub qstats: Option<QstatsDelta>,
+}
+
+/// What the gateway's activation observers accumulated during the run,
+/// summed over layers: the quant-health counterpart of [`StageSlo`].
+#[derive(Clone, Debug)]
+pub struct QstatsDelta {
+    /// Activation values observed during the run.
+    pub observations: u64,
+    /// Endpoint-saturated weight codes counted during the run.
+    pub saturated: u64,
+    /// Layers with at least one observation by run end.
+    pub layers: usize,
 }
 
 /// One request-lifecycle stage's share of the run, as seen by the server.
@@ -124,6 +139,17 @@ impl LoadReport {
             ("mean_ms", Json::Num(self.mean_ms)),
             ("max_ms", Json::Num(self.max_ms)),
             ("stages", Json::Arr(stages)),
+            (
+                "qstats",
+                match &self.qstats {
+                    Some(q) => Json::obj(vec![
+                        ("observations", Json::Num(q.observations as f64)),
+                        ("saturated", Json::Num(q.saturated as f64)),
+                        ("layers", Json::Num(q.layers as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -213,6 +239,33 @@ fn scrape_stages(cfg: &LoadgenConfig) -> BTreeMap<String, (f64, f64)> {
     out
 }
 
+/// Scrape the `"qstats"` section of `/debug/stats`: `(observations,
+/// saturated, live layers)` summed over per-layer observers. `None`
+/// when the observers are disabled or the scrape fails (best-effort,
+/// like [`scrape_stages`]).
+fn scrape_qstats(cfg: &LoadgenConfig) -> Option<(u64, u64, usize)> {
+    let mut s = TcpStream::connect(&cfg.addr).ok()?;
+    s.set_read_timeout(Some(cfg.timeout)).ok()?;
+    write_request(&mut s, "GET", "/debug/stats", None, b"").ok()?;
+    let mut r = HttpReader::new(s);
+    let Ok((200, body)) = r.read_response(&Limits::default()) else { return None };
+    let v = json::parse(std::str::from_utf8(&body).ok()?).ok()?;
+    let q = v.get("qstats")?;
+    if q.get("enabled").and_then(Json::as_bool) != Some(true) {
+        return None;
+    }
+    let layers = q.get("layers").and_then(Json::as_obj)?;
+    let (mut obs, mut sat, mut live) = (0u64, 0u64, 0usize);
+    for l in layers.values() {
+        let count = l.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        obs += count;
+        sat += l.get("sat_low").and_then(Json::as_f64).unwrap_or(0.0) as u64
+            + l.get("sat_high").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        live += usize::from(count > 0);
+    }
+    Some((obs, sat, live))
+}
+
 /// Per-stage deltas between two scrapes, in taxonomy order.
 fn stage_deltas(
     before: &BTreeMap<String, (f64, f64)>,
@@ -235,6 +288,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     ensure_valid(cfg)?;
     let input_dim = discover_input_dim(cfg)?;
     let stages_before = scrape_stages(cfg);
+    let qstats_before = scrape_qstats(cfg);
     let target = format!("/v1/models/{}/infer", cfg.model);
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
     let by_status: Mutex<BTreeMap<u16, usize>> = Mutex::new(BTreeMap::new());
@@ -280,6 +334,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let stages = stage_deltas(&stages_before, &scrape_stages(cfg));
+    let qstats = scrape_qstats(cfg).map(|(obs1, sat1, layers)| {
+        let (obs0, sat0, _) = qstats_before.unwrap_or((0, 0, 0));
+        QstatsDelta {
+            observations: obs1.saturating_sub(obs0),
+            saturated: sat1.saturating_sub(sat0),
+            layers,
+        }
+    });
     let lats = latencies.into_inner().unwrap();
     let ok = ok.into_inner();
     let by_status = by_status.into_inner().unwrap();
@@ -303,6 +365,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         },
         max_ms: lats.iter().copied().fold(0.0f64, f64::max) * 1e3,
         stages,
+        qstats,
     })
 }
 
@@ -374,6 +437,9 @@ mod tests {
 
     #[test]
     fn closed_loop_against_live_gateway() {
+        // hold the qstats test lock so another test's enabled observers
+        // can't leak into this gateway's (observers-off) report
+        let _guard = crate::obs::qstats::test_mutex();
         let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
         let path = std::env::temp_dir().join("msq_loadgen_unit.msqpack");
         pm.save(&path).unwrap();
@@ -418,6 +484,9 @@ mod tests {
         assert!(j.contains("\"p99_ms\""), "{j}");
         assert!(j.contains("\"stages\""), "{j}");
         assert!(j.contains("\"error_rate\""), "{j}");
+        // observers were never enabled → the report says so explicitly
+        assert!(report.qstats.is_none(), "{report:?}");
+        assert!(j.contains("\"qstats\":null"), "{j}");
         // unknown model errors cleanly
         assert!(run(&LoadgenConfig {
             addr: gw.addr().to_string(),
@@ -429,6 +498,50 @@ mod tests {
             timeout: Duration::from_secs(5),
         })
         .is_err());
+        gw.shutdown();
+    }
+
+    #[test]
+    fn qstats_deltas_ride_the_report() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_loadgen_qstats.msqpack");
+        pm.save(&path).unwrap();
+        let gw = Gateway::start(
+            GatewayConfig {
+                port: 0,
+                max_conns: 4,
+                qstats: Some(1.0),
+                server: ServerConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(1),
+                    queue_cap: 256,
+                    threads: 1,
+                },
+                ..Default::default()
+            },
+            &[("lgq".to_string(), path, None)],
+        )
+        .unwrap();
+        let report = run(&LoadgenConfig {
+            addr: gw.addr().to_string(),
+            model: "lgq".into(),
+            requests: 20,
+            concurrency: 2,
+            batch: 1,
+            seed: 5,
+            timeout: Duration::from_secs(30),
+        })
+        .unwrap();
+        assert_eq!(report.ok, 20, "{report:?}");
+        let q = report.qstats.as_ref().expect("observers were on");
+        assert!(q.observations > 0, "{report:?}");
+        assert_eq!(q.layers, 2, "one observer per planned layer: {report:?}");
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"observations\""), "{j}");
+        let qs = crate::obs::qstats::qstats();
+        qs.enable(false);
+        qs.reset_prefix("lgq/");
         gw.shutdown();
     }
 }

@@ -6,11 +6,17 @@
 //! GET  /healthz                    liveness + model inventory (503 when draining)
 //! GET  /metrics                    Prometheus text format
 //! GET  /debug/stats                JSON dump: stage histograms, per-model metrics, profiler
+//! GET  /debug/model/{name}         per-layer quantization health: load-time static
+//!                                  analysis + runtime activation observers
 //! GET  /v1/models                  model inventory
 //! POST /v1/models/{name}/infer     JSON batch [[f32,…],…] → logits
-//! POST /admin/reload               zero-downtime .msqpack hot-swap (Bearer-gated when
-//!                                  an admin token is configured)
+//! POST /admin/reload               zero-downtime .msqpack hot-swap
 //! ```
+//!
+//! When an admin token is configured, `POST /admin/reload` and both
+//! `/debug/*` endpoints require `Authorization: Bearer <token>` (the
+//! debug pages leak layer names and activation ranges, so they sit
+//! behind the same gate as the mutating route).
 //!
 //! Backpressure maps [`SubmitError`] onto status codes: `QueueFull` →
 //! **429** (with `Retry-After`), `ShuttingDown`/drain → **503**,
@@ -18,7 +24,7 @@
 //! swaps the [`Server`] handle under new traffic while handlers that
 //! hold the old `Arc` drain through the old batcher.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
@@ -42,6 +48,15 @@ pub struct ModelEntry {
     pub source: PathBuf,
     pub input_dim_override: Option<usize>,
     pub generation: u64,
+    /// Per-layer activation absmax observed by the *previous* generation
+    /// (qstats keys under `"{model}/"`), snapshotted at swap time so
+    /// [`DRIFT_THRESHOLD`] can compare the new pack's input ranges
+    /// against what the outgoing weights were seeing.
+    pub prev_absmax: BTreeMap<String, f32>,
+    /// Layers that already bumped `msq_act_range_drift_total` this
+    /// generation: the counter fires once per layer per swap, so
+    /// repeated scrapes stay idempotent.
+    pub drift_fired: Mutex<BTreeSet<String>>,
 }
 
 /// Route name a `.msqpack` path implies: its file stem. Shared by
@@ -100,6 +115,10 @@ impl AppState {
         obs.describe("msq_reload_outcomes_total", "Reload attempts by outcome");
         obs.describe("msq_reload_duration_seconds", "Wall time of /admin/reload handling");
         obs.describe("msq_reload_generation", "Generation after the last successful reload");
+        obs.describe(
+            "msq_act_range_drift_total",
+            "Layers whose activation absmax shifted beyond the drift threshold across a reload",
+        );
         AppState {
             models: RwLock::new(BTreeMap::new()),
             server_cfg,
@@ -130,6 +149,14 @@ impl AppState {
                 .with_context(|| format!("loading {path:?}"))?,
         );
         let server = Arc::new(Server::start(model, self.server_cfg.clone()));
+        // snapshot the outgoing generation's activation ranges (empty
+        // unless --qstats saw traffic) and clear the observers, so the
+        // new generation accumulates from scratch and the drift check
+        // compares new-vs-old rather than a running mixture of both
+        let qs = crate::obs::qstats::qstats();
+        let prefix = format!("{name}/");
+        let prev_absmax = qs.absmax_by_prefix(&prefix);
+        qs.reset_prefix(&prefix);
         let mut map = self.models.write().unwrap();
         let generation = map.get(name).map(|e| e.generation + 1).unwrap_or(1);
         let entry = ModelEntry {
@@ -137,6 +164,8 @@ impl AppState {
             source: path.to_path_buf(),
             input_dim_override: override_dim,
             generation,
+            prev_absmax,
+            drift_fired: Mutex::new(BTreeSet::new()),
         };
         let info = Self::entry_info(name, &entry);
         let old = map.insert(name.to_string(), entry);
@@ -261,12 +290,37 @@ pub fn handle(state: &AppState, req: &Request) -> Response {
     tag(route(state, req), &id)
 }
 
+/// Bearer-token check shared by every admin-gated route (`/admin/reload`
+/// and the `/debug/*` pages). With no token configured the gate is open
+/// (dev default); with one, the request must carry `Authorization:
+/// Bearer <token>` exactly.
+fn authorized(state: &AppState, req: &Request) -> bool {
+    match &state.admin_token {
+        None => true,
+        Some(token) => req
+            .header("authorization")
+            .map(str::trim)
+            .and_then(|v| v.strip_prefix("Bearer "))
+            .map(|t| t.trim() == token)
+            .unwrap_or(false),
+    }
+}
+
+fn unauthorized() -> Response {
+    Response::error(401, "this endpoint requires 'Authorization: Bearer <admin-token>'")
+}
+
 fn route(state: &AppState, req: &Request) -> Response {
     let path = req.path();
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(state),
         ("GET", "/metrics") => Response::prometheus(render_metrics(state)),
-        ("GET", "/debug/stats") => debug_stats(state),
+        ("GET", "/debug/stats") => {
+            if !authorized(state, req) {
+                return unauthorized();
+            }
+            debug_stats(state)
+        }
         ("GET", "/v1/models") => {
             Response::json(200, &Json::obj(vec![("models", state.model_infos())]))
         }
@@ -282,6 +336,18 @@ fn route(state: &AppState, req: &Request) -> Response {
                     return Response::error(405, "infer requires POST");
                 }
                 return infer(state, name, req);
+            }
+            if let Some(name) = path.strip_prefix("/debug/model/") {
+                if name.is_empty() || name.contains('/') {
+                    return Response::error(404, "no such route");
+                }
+                if method != "GET" {
+                    return Response::error(405, "debug/model requires GET");
+                }
+                if !authorized(state, req) {
+                    return unauthorized();
+                }
+                return debug_model(state, name);
             }
             match path {
                 "/healthz" | "/metrics" | "/debug/stats" | "/v1/models" | "/admin/reload" => {
@@ -419,6 +485,7 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
 /// snapshots, connection counters, the obs registry dump, and the
 /// kernel profiler table (aggregates + per-layer, when enabled).
 fn debug_stats(state: &AppState) -> Response {
+    eval_drift(state);
     let map = state.models.read().unwrap();
     let mut models = BTreeMap::new();
     for (n, e) in map.iter() {
@@ -466,8 +533,70 @@ fn debug_stats(state: &AppState) -> Response {
         ("models", Json::Obj(models)),
         ("registry", state.obs.to_json()),
         ("profiler", crate::obs::profiler().to_json()),
+        ("qstats", crate::obs::qstats::qstats().to_json()),
     ]);
     Response::json(200, &body)
+}
+
+/// `GET /debug/model/{name}` — the quantization-health page for one
+/// model: the load-time static analysis (per-layer bits / entropy /
+/// quant-error / size, identical by construction to `msq inspect` over
+/// the same pack) plus whatever the runtime activation observers have
+/// accumulated under this model's prefix.
+fn debug_model(state: &AppState, name: &str) -> Response {
+    eval_drift(state);
+    let map = state.models.read().unwrap();
+    let Some(e) = map.get(name) else {
+        return Response::error(404, &format!("no model {name:?} (see /v1/models)"));
+    };
+    let qs = crate::obs::qstats::qstats();
+    let m = &e.server.model;
+    let body = Json::obj(vec![
+        ("model", Json::Str(name.to_string())),
+        ("generation", Json::Num(e.generation as f64)),
+        ("source", Json::Str(e.source.display().to_string())),
+        ("input_dim", Json::Num(m.input_dim as f64)),
+        ("output_dim", Json::Num(m.output_dim() as f64)),
+        ("analysis", m.analysis.to_json()),
+        ("activations", qs.layers_json(&format!("{name}/"))),
+        ("qstats_enabled", Json::Bool(qs.on())),
+    ]);
+    Response::json(200, &body)
+}
+
+/// Relative activation-absmax shift across a reload that counts as
+/// drift: `|now − prev| / max(|prev|, 1e-6) > 0.5`.
+pub const DRIFT_THRESHOLD: f32 = 0.5;
+
+/// Activation-range drift check: compare each layer's current absmax
+/// (live qstats observers) against the snapshot taken from the previous
+/// generation at swap time. A relative shift beyond [`DRIFT_THRESHOLD`]
+/// increments `msq_act_range_drift_total{model}` — once per layer per
+/// generation. Runs on every scrape / debug dump; a no-op while qstats
+/// is disabled or before the first reload.
+fn eval_drift(state: &AppState) {
+    let qs = crate::obs::qstats::qstats();
+    if !qs.on() {
+        return;
+    }
+    let map = state.models.read().unwrap();
+    for (name, e) in map.iter() {
+        if e.prev_absmax.is_empty() {
+            continue;
+        }
+        let now = qs.absmax_by_prefix(&format!("{name}/"));
+        let mut fired = e.drift_fired.lock().unwrap();
+        for (layer, cur) in now {
+            let Some(prev) = e.prev_absmax.get(&layer) else { continue };
+            let rel = (cur - prev).abs() / prev.abs().max(1e-6);
+            if rel > DRIFT_THRESHOLD && fired.insert(layer) {
+                state
+                    .obs
+                    .counter("msq_act_range_drift_total", &[("model", name.as_str())])
+                    .inc();
+            }
+        }
+    }
 }
 
 /// 4xx/5xx mapping for [`SubmitError`] (the documented backpressure
@@ -495,20 +624,12 @@ fn reload(state: &AppState, req: &Request) -> Response {
     }
     // bearer-token gate: when the gateway was started with an admin
     // token, an absent/mismatched Authorization header is a hard 401
-    if let Some(token) = &state.admin_token {
-        let ok = req
-            .header("authorization")
-            .map(str::trim)
-            .and_then(|v| v.strip_prefix("Bearer "))
-            .map(|t| t.trim() == token)
-            .unwrap_or(false);
-        if !ok {
-            state
-                .obs
-                .counter("msq_reload_outcomes_total", &[("outcome", "unauthorized")])
-                .inc();
-            return Response::error(401, "reload requires 'Authorization: Bearer <admin-token>'");
-        }
+    if !authorized(state, req) {
+        state
+            .obs
+            .counter("msq_reload_outcomes_total", &[("outcome", "unauthorized")])
+            .inc();
+        return unauthorized();
     }
     let t_reload = Instant::now();
     let fail = |state: &AppState, resp: Response| {
@@ -678,11 +799,54 @@ pub fn render_metrics(state: &AppState) -> String {
         p.sample("msq_model_generation", &lbl, e.generation as f64);
         p.summary("msq_request_latency_seconds", &lbl, &m.latency_hist(), &[0.5, 0.9, 0.95, 0.99]);
     }
+    // load-time static quantization analysis: constant between reloads,
+    // so a dashboard can join runtime activation ranges onto bits /
+    // entropy / error. Structural records (numel 0) carry no codes and
+    // are skipped.
+    let layer_family = |p: &mut Prom,
+                        fam: &str,
+                        help: &str,
+                        value: &dyn Fn(&crate::serve::LayerAnalysis) -> f64| {
+        p.family(fam, "gauge", help);
+        for (model, e) in map.iter() {
+            for (i, l) in e.server.model.analysis.layers.iter().enumerate() {
+                if l.numel == 0 {
+                    continue;
+                }
+                let layer = format!("{i:02}:{}", l.name);
+                p.sample(fam, &[("model", model.as_str()), ("layer", layer.as_str())], value(l));
+            }
+        }
+    };
+    layer_family(&mut p, "msq_layer_bits", "Packed bit-width per layer", &|l| l.bits as f64);
+    layer_family(
+        &mut p,
+        "msq_layer_entropy_bits",
+        "Shannon entropy of the layer's code histogram (bits per code)",
+        &|l| l.entropy_bits,
+    );
+    layer_family(
+        &mut p,
+        "msq_layer_quant_error",
+        "Histogram-estimated relative error of dropping one bit",
+        &|l| l.qerr_drop_rel,
+    );
+    layer_family(
+        &mut p,
+        "msq_layer_payload_bytes",
+        "Packed payload bytes per layer",
+        &|l| l.payload_bytes as f64,
+    );
     drop(map);
+    // activation-range drift vs the previous generation: evaluated here
+    // so the scrape that reports the counter is the one that detected it
+    eval_drift(state);
     // the obs registry: per-stage lifecycle histograms + reload events
     state.obs.render(&mut p, &crate::obs::QUANTILES);
     // global kernel profiler aggregates (zeros unless profiling is on)
     crate::obs::profiler().render(&mut p);
+    // runtime activation observers (empty unless --qstats is on)
+    crate::obs::qstats::qstats().render(&mut p);
     p.finish()
 }
 
@@ -1027,6 +1191,101 @@ mod tests {
             .status,
             400
         );
+    }
+
+    #[test]
+    fn debug_endpoints_require_bearer_token_when_configured() {
+        let mut state = toy_state();
+        state.admin_token = Some("s3cret".to_string());
+        for target in ["/debug/stats", "/debug/model/toy"] {
+            for auth in [None, Some("Basic s3cret"), Some("Bearer nope")] {
+                let r = handle(&state, &req_with_auth("GET", target, auth, b""));
+                assert_eq!(r.status, 401, "{target} with {auth:?}");
+            }
+            let r = handle(&state, &req_with_auth("GET", target, Some("Bearer s3cret"), b""));
+            assert_eq!(r.status, 200, "{target}: {}", String::from_utf8_lossy(&r.body));
+        }
+        // without a configured token both pages stay open (dev default)
+        let open = toy_state();
+        assert_eq!(handle(&open, &req("GET", "/debug/stats", b"")).status, 200);
+        assert_eq!(handle(&open, &req("GET", "/debug/model/toy", b"")).status, 200);
+    }
+
+    #[test]
+    fn debug_model_reports_the_load_time_analysis() {
+        let state = toy_state();
+        assert_eq!(handle(&state, &req("GET", "/debug/model/ghost", b"")).status, 404);
+        assert_eq!(handle(&state, &req("GET", "/debug/model/", b"")).status, 404);
+        assert_eq!(handle(&state, &req("POST", "/debug/model/toy", b"")).status, 405);
+        let r = handle(&state, &req("GET", "/debug/model/toy", b""));
+        assert_eq!(r.status, 200);
+        let v = body_json(&r);
+        assert_eq!(v.get("model").unwrap().as_str(), Some("toy"));
+        assert_eq!(v.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("input_dim").unwrap().as_usize(), Some(6));
+        // the embedded analysis is byte-for-byte what the served model
+        // computed at load time (the msq-inspect agreement contract)
+        let model = state.server("toy").unwrap().model.clone();
+        assert_eq!(
+            v.get("analysis").unwrap().to_string(),
+            model.analysis.to_json().to_string()
+        );
+        let layers = v.path(&["analysis", "layers"]).unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("bits").unwrap().as_usize(), Some(4));
+        assert_eq!(layers[1].get("bits").unwrap().as_usize(), Some(3));
+        // /metrics renders the matching static per-layer families
+        let text = render_metrics(&state);
+        assert!(text.contains("msq_layer_bits{model=\"toy\",layer=\"00:"), "{text}");
+        assert!(text.contains("msq_layer_entropy_bits{model=\"toy\""), "{text}");
+        assert!(text.contains("msq_layer_quant_error{model=\"toy\""), "{text}");
+        assert!(text.contains("msq_layer_payload_bytes{model=\"toy\""), "{text}");
+    }
+
+    #[test]
+    fn reload_fires_drift_counter_when_activation_ranges_shift() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 64,
+            threads: 1,
+        };
+        let state = AppState::new(cfg, pool);
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_router_drift.msqpack");
+        pm.save(&path).unwrap();
+        state.load_model("driftm", &path, None).unwrap();
+
+        let qs = crate::obs::qstats::qstats();
+        qs.set_rate(1.0);
+        qs.enable(true);
+        // generation 1 sees large activations…
+        let r = handle(&state, &req("POST", "/v1/models/driftm/infer", b"[[64,64,64,64,64,64]]"));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        assert!(!qs.absmax_by_prefix("driftm/").is_empty(), "observers saw no traffic");
+        // …the reload snapshots and clears the observers…
+        let r = handle(&state, &req("POST", "/admin/reload", b""));
+        assert_eq!(r.status, 200);
+        assert!(qs.absmax_by_prefix("driftm/").is_empty(), "reload must reset observers");
+        // …and generation 2 sees tiny ones: relative shift ≫ threshold
+        let r =
+            handle(&state, &req("POST", "/v1/models/driftm/infer", b"[[0.01,0,0,0,0,0.01]]"));
+        assert_eq!(r.status, 200);
+        let text = render_metrics(&state);
+        let line = |t: &str| {
+            t.lines()
+                .find(|l| l.starts_with("msq_act_range_drift_total{model=\"driftm\"}"))
+                .map(str::to_string)
+        };
+        assert!(line(&text).is_some(), "drift counter missing:\n{text}");
+        // once per layer per generation: a second scrape does not double-count
+        let text2 = render_metrics(&state);
+        assert_eq!(line(&text), line(&text2));
+        qs.enable(false);
+        qs.reset_prefix("driftm/");
+        state.clear_models();
     }
 
     #[test]

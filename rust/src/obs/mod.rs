@@ -1,7 +1,7 @@
 //! obs — dependency-free, low-overhead observability core shared by the
 //! serving and training paths.
 //!
-//! Three pieces, all pure `std`:
+//! Four pieces, all pure `std`:
 //!
 //! * a [`Registry`] of named counters / gauges / histograms with
 //!   Prometheus-style label sets. Counters and gauges are lock-free
@@ -20,6 +20,9 @@
 //!   serving kernels load one relaxed `AtomicBool` per call and skip
 //!   every clock read when disabled — guarded by a bench section in
 //!   `benches/serve_throughput.rs`.
+//! * the [`qstats`] activation observers (per-layer min/max, EMA absmax,
+//!   magnitude histogram, weight-code saturation) — the *numeric* twin
+//!   of the profiler, under the same zero-cost-when-off contract.
 //!
 //! The request-lifecycle **stage taxonomy** (see `docs/OBSERVABILITY.md`)
 //! hangs off [`STAGES`]: parse → queue → batch → decode → kernel →
@@ -33,6 +36,8 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::{LatencyHist, Prom};
 use crate::util::json::Json;
+
+pub mod qstats;
 
 /// The request-lifecycle stages, in pipeline order. Every stage is one
 /// `{stage="…"}` series of the `msq_stage_duration_seconds` family.

@@ -1,0 +1,824 @@
+//! qstats — quantization-health activation observers for the serving
+//! kernels (the numeric twin of the kernel [`super::Profiler`]).
+//!
+//! The profiler answers "where does the time go"; this module answers
+//! "what do the *numbers* look like while a quantized model serves
+//! traffic": per-layer activation ranges (running min/max), an EMA of
+//! the per-batch absolute maximum (the calibration statistic an
+//! integer-domain pipeline would consume), a log-bucketed magnitude
+//! histogram, and weight-code saturation counters (codes sitting on the
+//! RoundClamp lattice endpoints, i.e. values the clamp flattened).
+//!
+//! The design mirrors the profiler's zero-cost-when-off contract:
+//!
+//! * **Disabled** (default): each kernel call pays one relaxed
+//!   `AtomicBool` load and a branch — no clocks, no allocation, no
+//!   per-element work (pinned by `tests/qstats_alloc.rs` and the
+//!   `serve_throughput` bench's qstats section).
+//! * **Enabled** (`msq gateway --qstats[=RATE]`): kernels fold
+//!   observations into a stack-local [`LocalObs`] and merge it into the
+//!   shared scratch [`Observer`] once per call / per work block, so
+//!   atomic traffic stays per-block, not per-element. Sampling
+//!   (`RATE < 1`) deterministically observes every Nth kernel call.
+//!
+//! Observation never changes arithmetic — the {serial, pooled} ×
+//! {scalar, simd} bit-exactness invariant holds with qstats on.
+//!
+//! Per-layer attribution works like the profiler's: kernels write into
+//! one global scratch observer, and `ServableModel::infer_batch` drains
+//! it after each layer forward into a named [`LayerStats`] keyed
+//! `"model/NN:layer"`. Exact for a single-model gateway; best-effort
+//! when several models infer concurrently (the process-wide totals stay
+//! exact either way).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::metrics::Prom;
+use crate::util::json::Json;
+
+/// Log-magnitude histogram buckets: one per group of four consecutive
+/// binary exponents. Bucket `b` covers `|v| ∈ [2^(4b−127), 2^(4b−123))`;
+/// bucket 0 also holds zeros and subnormals, bucket 63 holds infinities
+/// and NaNs.
+pub const BUCKETS: usize = 64;
+
+/// EMA smoothing for the per-layer absmax statistic: one update per
+/// observed batch, `ema ← (1−λ)·ema + λ·absmax`.
+pub const EMA_LAMBDA: f32 = 0.1;
+
+/// Sentinel bit pattern for "EMA not seeded yet" (an all-ones NaN no
+/// finite absmax can produce — non-finite batch maxima are dropped).
+const EMA_UNSET: u32 = u32::MAX;
+
+/// Histogram bucket of a value: the top six bits of the biased f32
+/// exponent (`|v|`'s exponent divided by four). Branch-free and exact.
+#[inline]
+pub fn bucket_of(v: f32) -> usize {
+    (((v.to_bits() & 0x7fff_ffff) >> 25) & 0x3f) as usize
+}
+
+// ---------------------------------------------------------------------------
+// stack-local fold
+
+/// Stack-local observation accumulator: kernels fold every element here
+/// (plain scalar work, no atomics) and merge into a shared [`Observer`]
+/// once per call, keeping the contended traffic O(blocks) not O(elems).
+#[derive(Clone, Debug)]
+pub struct LocalObs {
+    pub min: f32,
+    pub max: f32,
+    pub count: u64,
+    pub buckets: [u64; BUCKETS],
+}
+
+impl Default for LocalObs {
+    fn default() -> Self {
+        LocalObs::new()
+    }
+}
+
+impl LocalObs {
+    pub fn new() -> LocalObs {
+        LocalObs {
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            count: 0,
+            buckets: [0; BUCKETS],
+        }
+    }
+
+    /// Fold one value. NaNs never become the min/max (comparisons are
+    /// false) but still count and land in the top bucket, so poisoned
+    /// activations remain visible in the histogram.
+    #[inline]
+    pub fn observe(&mut self, v: f32) {
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.count += 1;
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    pub fn observe_slice(&mut self, xs: &[f32]) {
+        for &v in xs {
+            self.observe(v);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared observer
+
+/// Lock-free shared observer: running min/max (f32 bit-CAS), an element
+/// count, endpoint-saturation counters, and the bucketed magnitude
+/// histogram — all relaxed atomics, mergeable from any number of pool
+/// workers without locks.
+pub struct Observer {
+    min_bits: AtomicU32,
+    max_bits: AtomicU32,
+    count: AtomicU64,
+    sat_low: AtomicU64,
+    sat_high: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Observer {
+    fn default() -> Self {
+        Observer::new()
+    }
+}
+
+/// Point-in-time copy of an [`Observer`] (also what [`Observer::take`]
+/// drains into).
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    /// Smallest observed value (`+∞` when nothing was observed).
+    pub min: f32,
+    /// Largest observed value (`−∞` when nothing was observed).
+    pub max: f32,
+    pub count: u64,
+    pub sat_low: u64,
+    pub sat_high: u64,
+    pub buckets: [u64; BUCKETS],
+}
+
+impl ObsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0 && self.sat_low == 0 && self.sat_high == 0
+    }
+
+    /// Largest observed magnitude; 0 when nothing was observed.
+    pub fn absmax(&self) -> f32 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.min.abs().max(self.max.abs())
+    }
+
+    /// JSON view shared by `/debug/stats` and `/debug/model/{name}`:
+    /// range, counts, and the nonzero histogram buckets as
+    /// `[bucket, count]` pairs (64 mostly-zero entries would bloat every
+    /// dump).
+    pub fn to_json(&self) -> Json {
+        let hist: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| Json::Arr(vec![Json::Num(b as f64), Json::Num(c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("min", Json::Num(if self.count > 0 { self.min as f64 } else { 0.0 })),
+            ("max", Json::Num(if self.count > 0 { self.max as f64 } else { 0.0 })),
+            ("absmax", Json::Num(self.absmax() as f64)),
+            ("sat_low", Json::Num(self.sat_low as f64)),
+            ("sat_high", Json::Num(self.sat_high as f64)),
+            ("hist", Json::Arr(hist)),
+        ])
+    }
+}
+
+impl Observer {
+    pub fn new() -> Observer {
+        Observer {
+            min_bits: AtomicU32::new(f32::INFINITY.to_bits()),
+            max_bits: AtomicU32::new(f32::NEG_INFINITY.to_bits()),
+            count: AtomicU64::new(0),
+            sat_low: AtomicU64::new(0),
+            sat_high: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Merge a stack-local fold: one CAS loop each for min/max, one add
+    /// per touched bucket — the per-block cost the kernels pay.
+    pub fn merge(&self, local: &LocalObs) {
+        if local.count == 0 {
+            return;
+        }
+        self.update_min(local.min);
+        self.update_max(local.max);
+        self.count.fetch_add(local.count, Ordering::Relaxed);
+        for (slot, &c) in self.buckets.iter().zip(local.buckets.iter()) {
+            if c > 0 {
+                slot.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Merge a drained snapshot (per-layer attribution path).
+    pub fn merge_snapshot(&self, s: &ObsSnapshot) {
+        if s.count > 0 {
+            self.update_min(s.min);
+            self.update_max(s.max);
+            self.count.fetch_add(s.count, Ordering::Relaxed);
+            for (slot, &c) in self.buckets.iter().zip(s.buckets.iter()) {
+                if c > 0 {
+                    slot.fetch_add(c, Ordering::Relaxed);
+                }
+            }
+        }
+        if s.sat_low > 0 {
+            self.sat_low.fetch_add(s.sat_low, Ordering::Relaxed);
+        }
+        if s.sat_high > 0 {
+            self.sat_high.fetch_add(s.sat_high, Ordering::Relaxed);
+        }
+    }
+
+    /// Count codes that sat on the lattice endpoints (clamped weights).
+    pub fn add_saturation(&self, low: u64, high: u64) {
+        if low > 0 {
+            self.sat_low.fetch_add(low, Ordering::Relaxed);
+        }
+        if high > 0 {
+            self.sat_high.fetch_add(high, Ordering::Relaxed);
+        }
+    }
+
+    fn update_min(&self, v: f32) {
+        let _ = self.min_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            (v < f32::from_bits(cur)).then(|| v.to_bits())
+        });
+    }
+
+    fn update_max(&self, v: f32) {
+        let _ = self.max_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            (v > f32::from_bits(cur)).then(|| v.to_bits())
+        });
+    }
+
+    /// Non-destructive copy.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        ObsSnapshot {
+            min: f32::from_bits(self.min_bits.load(Ordering::Relaxed)),
+            max: f32::from_bits(self.max_bits.load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sat_low: self.sat_low.load(Ordering::Relaxed),
+            sat_high: self.sat_high.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Drain: swap every field back to its identity and return what was
+    /// there. Concurrent merges are never lost (each merge lands either
+    /// in the taken snapshot or in the reset observer), though a merge
+    /// racing the swap can straddle the two — per-layer attribution is
+    /// best-effort under concurrency, exact single-threaded.
+    pub fn take(&self) -> ObsSnapshot {
+        ObsSnapshot {
+            min: f32::from_bits(
+                self.min_bits.swap(f32::INFINITY.to_bits(), Ordering::Relaxed),
+            ),
+            max: f32::from_bits(
+                self.max_bits.swap(f32::NEG_INFINITY.to_bits(), Ordering::Relaxed),
+            ),
+            count: self.count.swap(0, Ordering::Relaxed),
+            sat_low: self.sat_low.swap(0, Ordering::Relaxed),
+            sat_high: self.sat_high.swap(0, Ordering::Relaxed),
+            buckets: std::array::from_fn(|b| self.buckets[b].swap(0, Ordering::Relaxed)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-layer stats
+
+/// One named layer's cumulative observations plus the EMA absmax
+/// calibration statistic (seeded by the first observed batch).
+pub struct LayerStats {
+    pub obs: Observer,
+    ema_bits: AtomicU32,
+    batches: AtomicU64,
+}
+
+impl Default for LayerStats {
+    fn default() -> Self {
+        LayerStats {
+            obs: Observer::new(),
+            ema_bits: AtomicU32::new(EMA_UNSET),
+            batches: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LayerStats {
+    /// Fold one drained batch snapshot into the cumulative observer and
+    /// advance the EMA by its absmax.
+    pub fn absorb(&self, s: &ObsSnapshot) {
+        self.obs.merge_snapshot(s);
+        if s.count == 0 {
+            return;
+        }
+        let absmax = s.absmax();
+        if !absmax.is_finite() {
+            return;
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let _ = self.ema_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            let next = if cur == EMA_UNSET {
+                absmax
+            } else {
+                (1.0 - EMA_LAMBDA) * f32::from_bits(cur) + EMA_LAMBDA * absmax
+            };
+            Some(next.to_bits())
+        });
+    }
+
+    /// EMA of the per-batch absolute maximum; `None` before the first
+    /// observed batch.
+    pub fn ema_absmax(&self) -> Option<f32> {
+        match self.ema_bits.load(Ordering::Relaxed) {
+            EMA_UNSET => None,
+            bits => Some(f32::from_bits(bits)),
+        }
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        let _ = self.obs.take();
+        self.ema_bits.store(EMA_UNSET, Ordering::Relaxed);
+        self.batches.store(0, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = match self.obs.snapshot().to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("snapshot json is an object"),
+        };
+        j.insert(
+            "absmax_ema".into(),
+            self.ema_absmax().map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+        );
+        j.insert("batches".into(), Json::Num(self.batches() as f64));
+        Json::Obj(j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the process-wide switchboard
+
+/// Process-global activation-observer state: the enable flag + sampling
+/// stride the kernels check, the scratch observer they merge into, and
+/// the named per-layer table `infer_batch` attributes the scratch to.
+pub struct QStats {
+    enabled: AtomicBool,
+    /// Observe one kernel call in `every` (1 = all).
+    every: AtomicU64,
+    seq: AtomicU64,
+    scratch: Observer,
+    layers: RwLock<BTreeMap<String, Arc<LayerStats>>>,
+}
+
+impl Default for QStats {
+    fn default() -> Self {
+        QStats {
+            enabled: AtomicBool::new(false),
+            every: AtomicU64::new(1),
+            seq: AtomicU64::new(0),
+            scratch: Observer::new(),
+            layers: RwLock::new(BTreeMap::new()),
+        }
+    }
+}
+
+impl QStats {
+    pub fn enable(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The disabled-path guard: one relaxed load, nothing else.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Set the sampling rate in `(0, 1]`: rate 1 observes every kernel
+    /// call, rate `r` observes one call in `round(1/r)` (deterministic
+    /// stride, so sampled statistics are reproducible under serial
+    /// execution).
+    pub fn set_rate(&self, rate: f32) {
+        let every = if rate >= 1.0 {
+            1
+        } else if rate > 0.0 {
+            (1.0 / rate as f64).round().max(1.0) as u64
+        } else {
+            u64::MAX
+        };
+        self.every.store(every, Ordering::Relaxed);
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.every.load(Ordering::Relaxed)
+    }
+
+    /// Per-kernel-call gate: enabled AND this call is on the sampling
+    /// stride. Kernels call this once and reuse the bool for both the
+    /// input observation and the per-block saturation count.
+    #[inline]
+    pub fn sample(&self) -> bool {
+        if !self.on() {
+            return false;
+        }
+        let every = self.every.load(Ordering::Relaxed);
+        every <= 1 || self.seq.fetch_add(1, Ordering::Relaxed) % every == 0
+    }
+
+    /// Fold a kernel input into the scratch observer (one merge).
+    pub fn observe_input(&self, x: &[f32]) {
+        let mut local = LocalObs::new();
+        local.observe_slice(x);
+        self.scratch.merge(&local);
+    }
+
+    /// Count weight codes that decoded to a lattice endpoint.
+    pub fn add_saturation(&self, low: u64, high: u64) {
+        self.scratch.add_saturation(low, high);
+    }
+
+    /// Drain the scratch observer and attribute it to `key`
+    /// (`"model/NN:layer"`). No-op when nothing was observed since the
+    /// last drain, so layers whose kernels did not sample cost one swap.
+    pub fn attribute(&self, key: &str) {
+        let snap = self.scratch.take();
+        if snap.is_empty() {
+            return;
+        }
+        let layer = self.layer(key);
+        layer.absorb(&snap);
+    }
+
+    /// Get-or-create the named layer entry.
+    pub fn layer(&self, key: &str) -> Arc<LayerStats> {
+        if let Some(l) = self.layers.read().unwrap().get(key) {
+            return l.clone();
+        }
+        let mut w = self.layers.write().unwrap();
+        w.entry(key.to_string()).or_default().clone()
+    }
+
+    /// Largest observed magnitude per layer key under `prefix`, for
+    /// layers that saw at least one value — the reload drift baseline.
+    pub fn absmax_by_prefix(&self, prefix: &str) -> BTreeMap<String, f32> {
+        let layers = self.layers.read().unwrap();
+        let mut out = BTreeMap::new();
+        for (k, l) in layers.range(prefix.to_string()..) {
+            if !k.starts_with(prefix) {
+                break;
+            }
+            let s = l.obs.snapshot();
+            if s.count > 0 {
+                out.insert(k.clone(), s.absmax());
+            }
+        }
+        out
+    }
+
+    /// Reset every layer observer under `prefix` (post-reload: the new
+    /// generation accumulates fresh ranges against the drift baseline).
+    pub fn reset_prefix(&self, prefix: &str) {
+        let layers = self.layers.read().unwrap();
+        for (k, l) in layers.range(prefix.to_string()..) {
+            if !k.starts_with(prefix) {
+                break;
+            }
+            l.reset();
+        }
+    }
+
+    /// Drop all state (tests and benches; not used by serving).
+    pub fn reset_all(&self) {
+        self.layers.write().unwrap().clear();
+        let _ = self.scratch.take();
+        self.seq.store(0, Ordering::Relaxed);
+    }
+
+    /// Per-layer JSON table for keys under `prefix` (`""` = all).
+    pub fn layers_json(&self, prefix: &str) -> Json {
+        let layers = self.layers.read().unwrap();
+        let mut out = BTreeMap::new();
+        for (k, l) in layers.iter() {
+            if k.starts_with(prefix) {
+                out.insert(k.clone(), l.to_json());
+            }
+        }
+        Json::Obj(out)
+    }
+
+    /// The `/debug/stats` `"qstats"` section.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.on())),
+            ("sample_every", Json::Num(self.sample_every() as f64)),
+            ("layers", self.layers_json("")),
+        ])
+    }
+
+    /// Render the per-layer activation series onto `/metrics`. Layer
+    /// cardinality is bounded by the loaded models' depth, so unlike the
+    /// profiler's per-layer *timing* table these do fit a scrape page.
+    pub fn render(&self, p: &mut Prom) {
+        p.family("msq_qstats_enabled", "gauge", "1 when activation observers are on");
+        p.sample("msq_qstats_enabled", &[], if self.on() { 1.0 } else { 0.0 });
+        let layers = self.layers.read().unwrap();
+        let rows: Vec<(String, ObsSnapshot, Option<f32>)> = layers
+            .iter()
+            .map(|(k, l)| (k.clone(), l.obs.snapshot(), l.ema_absmax()))
+            .collect();
+        drop(layers);
+        p.family(
+            "msq_layer_act_range",
+            "gauge",
+            "Observed activation range per layer (bound=min|max)",
+        );
+        for (k, s, _) in rows.iter().filter(|(_, s, _)| s.count > 0) {
+            let l = [("layer", k.as_str()), ("bound", "min")];
+            p.sample("msq_layer_act_range", &l, s.min as f64);
+            let l = [("layer", k.as_str()), ("bound", "max")];
+            p.sample("msq_layer_act_range", &l, s.max as f64);
+        }
+        p.family(
+            "msq_layer_act_absmax_ema",
+            "gauge",
+            "EMA of the per-batch activation absolute maximum",
+        );
+        for (k, _, ema) in rows.iter() {
+            if let Some(e) = ema {
+                p.sample("msq_layer_act_absmax_ema", &[("layer", k.as_str())], *e as f64);
+            }
+        }
+        p.family(
+            "msq_layer_act_observations_total",
+            "counter",
+            "Activation elements folded into each layer observer",
+        );
+        for (k, s, _) in rows.iter() {
+            p.sample("msq_layer_act_observations_total", &[("layer", k.as_str())], s.count as f64);
+        }
+        p.family(
+            "msq_layer_weight_saturation_total",
+            "counter",
+            "Decoded weight codes observed on a RoundClamp lattice endpoint",
+        );
+        for (k, s, _) in rows.iter() {
+            p.sample(
+                "msq_layer_weight_saturation_total",
+                &[("layer", k.as_str())],
+                (s.sat_low + s.sat_high) as f64,
+            );
+        }
+    }
+}
+
+/// The process-wide activation observer switchboard (off by default).
+pub fn qstats() -> &'static QStats {
+    static QS: OnceLock<QStats> = OnceLock::new();
+    QS.get_or_init(QStats::default)
+}
+
+/// Serializes tests that flip the global [`qstats`] switch. Production
+/// code never calls this; without it, parallel unit tests that enable
+/// and disable the singleton would race each other's assertions.
+#[doc(hidden)]
+pub fn test_mutex() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    M.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fold(xs: &[f32]) -> LocalObs {
+        let mut l = LocalObs::new();
+        l.observe_slice(xs);
+        l
+    }
+
+    #[test]
+    fn bucket_mapping_tracks_exponent_quads() {
+        // bucket = biased exponent / 4, exactly
+        for (v, want) in [
+            (0.0f32, 0usize),
+            (f32::MIN_POSITIVE / 2.0, 0), // subnormal
+            (1.0, 31),                    // exponent 127
+            (-1.0, 31),                   // sign is ignored
+            (16.0, 32),                   // exponent 131
+            (f32::MAX, 63),
+            (f32::INFINITY, 63),
+            (f32::NAN, 63),
+        ] {
+            assert_eq!(bucket_of(v), want, "bucket_of({v})");
+        }
+        // exhaustive vs the arithmetic definition over magnitudes
+        for e in 0..=60 {
+            let v = 2f32.powi(e - 30);
+            let exp = ((v.to_bits() >> 23) & 0xff) as usize;
+            assert_eq!(bucket_of(v), exp / 4, "v = {v}");
+        }
+    }
+
+    #[test]
+    fn observer_merge_is_associative_across_groupings() {
+        // folding the same stream in different block groupings must
+        // produce identical shared state — the pool-worker contract
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 37 % 211) as f32 - 100.0) * 0.3).collect();
+        let grouped = |chunks: usize| -> ObsSnapshot {
+            let o = Observer::new();
+            for c in xs.chunks(xs.len().div_ceil(chunks)) {
+                o.merge(&fold(c));
+            }
+            o.snapshot()
+        };
+        let a = grouped(1);
+        for chunks in [2, 3, 7, 1000] {
+            let b = grouped(chunks);
+            assert_eq!(a.min.to_bits(), b.min.to_bits(), "{chunks} chunks");
+            assert_eq!(a.max.to_bits(), b.max.to_bits(), "{chunks} chunks");
+            assert_eq!(a.count, b.count, "{chunks} chunks");
+            assert_eq!(a.buckets, b.buckets, "{chunks} chunks");
+        }
+    }
+
+    #[test]
+    fn concurrent_merges_are_lossless() {
+        const THREADS: usize = 8;
+        const PER: usize = 500;
+        let o = Observer::new();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let o = &o;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let v = (t * PER + i) as f32 * 0.01 - 10.0;
+                        o.merge(&fold(&[v]));
+                        o.add_saturation(1, 2);
+                    }
+                });
+            }
+        });
+        let s = o.snapshot();
+        assert_eq!(s.count, (THREADS * PER) as u64);
+        assert_eq!(s.buckets.iter().sum::<u64>(), (THREADS * PER) as u64);
+        assert_eq!(s.sat_low, (THREADS * PER) as u64);
+        assert_eq!(s.sat_high, 2 * (THREADS * PER) as u64);
+        assert_eq!(s.min, -10.0);
+        assert_eq!(s.max, (THREADS * PER - 1) as f32 * 0.01 - 10.0);
+    }
+
+    #[test]
+    fn take_drains_to_identity_and_loses_nothing() {
+        let o = Observer::new();
+        o.merge(&fold(&[1.0, -2.0, 3.0]));
+        o.add_saturation(4, 5);
+        let s = o.take();
+        assert_eq!((s.count, s.sat_low, s.sat_high), (3, 4, 5));
+        assert_eq!((s.min, s.max), (-2.0, 3.0));
+        assert_eq!(s.absmax(), 3.0);
+        let empty = o.take();
+        assert!(empty.is_empty());
+        assert_eq!(empty.absmax(), 0.0);
+        // a drained snapshot re-merges exactly
+        o.merge_snapshot(&s);
+        let back = o.snapshot();
+        assert_eq!((back.count, back.sat_low, back.sat_high), (3, 4, 5));
+        assert_eq!((back.min, back.max), (-2.0, 3.0));
+    }
+
+    #[test]
+    fn ema_seeds_then_converges_toward_stationary_absmax() {
+        let l = LayerStats::default();
+        assert!(l.ema_absmax().is_none());
+        let batch = |v: f32| {
+            let o = Observer::new();
+            o.merge(&fold(&[v, -v / 2.0]));
+            l.absorb(&o.take());
+        };
+        batch(4.0);
+        assert_eq!(l.ema_absmax(), Some(4.0), "first batch seeds the EMA");
+        for _ in 0..200 {
+            batch(1.0);
+        }
+        let ema = l.ema_absmax().unwrap();
+        assert!((ema - 1.0).abs() < 1e-3, "EMA {ema} should approach 1.0");
+        assert_eq!(l.batches(), 201);
+    }
+
+    #[test]
+    fn sampling_stride_observes_one_call_in_n() {
+        let qs = QStats::default();
+        qs.enable(true);
+        qs.set_rate(0.25);
+        assert_eq!(qs.sample_every(), 4);
+        let hits = (0..100).filter(|_| qs.sample()).count();
+        assert_eq!(hits, 25, "deterministic 1-in-4 stride");
+        qs.set_rate(1.0);
+        assert_eq!(qs.sample_every(), 1);
+        assert!((0..10).all(|_| qs.sample()));
+        qs.enable(false);
+        assert!(!qs.sample());
+    }
+
+    #[test]
+    fn sampled_stats_agree_with_full_within_bounds() {
+        // the sampled stream is a subset: min/max within the full range,
+        // count exactly count/ every (deterministic stride), absmax ≤ full
+        let xs: Vec<f32> = (0..4000).map(|i| ((i * 73 % 997) as f32 - 500.0) * 0.01).collect();
+        let full = QStats::default();
+        full.enable(true);
+        full.set_rate(1.0);
+        let sampled = QStats::default();
+        sampled.enable(true);
+        sampled.set_rate(0.5);
+        for chunk in xs.chunks(40) {
+            if full.sample() {
+                full.observe_input(chunk);
+            }
+            if sampled.sample() {
+                sampled.observe_input(chunk);
+            }
+        }
+        full.attribute("m/00:l");
+        sampled.attribute("m/00:l");
+        let f = full.layer("m/00:l").obs.snapshot();
+        let s = sampled.layer("m/00:l").obs.snapshot();
+        assert_eq!(f.count, xs.len() as u64);
+        assert_eq!(s.count, xs.len() as u64 / 2);
+        assert!(s.min >= f.min && s.max <= f.max, "sampled range escapes full range");
+        assert!(s.absmax() <= f.absmax() + f32::EPSILON);
+    }
+
+    #[test]
+    fn attribute_routes_scratch_to_named_layers() {
+        let qs = QStats::default();
+        qs.enable(true);
+        qs.observe_input(&[1.0, -3.0]);
+        qs.add_saturation(2, 1);
+        qs.attribute("m/00:fc1");
+        qs.observe_input(&[0.5]);
+        qs.attribute("m/01:fc2");
+        // draining an empty scratch is a no-op, not a new layer entry
+        qs.attribute("m/02:head");
+        let j = qs.to_json();
+        assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(true));
+        let l0 = j.path(&["layers", "m/00:fc1"]).expect("fc1 row");
+        assert_eq!(l0.get("count").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(l0.get("min").and_then(Json::as_f64), Some(-3.0));
+        assert_eq!(l0.get("sat_low").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(l0.get("absmax_ema").and_then(Json::as_f64), Some(3.0));
+        assert!(j.path(&["layers", "m/01:fc2"]).is_some());
+        assert!(j.path(&["layers", "m/02:head"]).is_none(), "empty drain made a layer");
+        // prefix queries see only the asked-for model
+        let abs = qs.absmax_by_prefix("m/");
+        assert_eq!(abs.len(), 2);
+        assert_eq!(abs["m/00:fc1"], 3.0);
+        assert!(qs.absmax_by_prefix("other/").is_empty());
+        qs.reset_prefix("m/");
+        assert!(qs.absmax_by_prefix("m/").is_empty(), "reset cleared the observers");
+        assert!(qs.layer("m/00:fc1").ema_absmax().is_none());
+    }
+
+    #[test]
+    fn prometheus_render_exposes_layer_series() {
+        let qs = QStats::default();
+        qs.enable(true);
+        qs.observe_input(&[2.0, -1.0]);
+        qs.add_saturation(3, 4);
+        qs.attribute("toy/00:fc1");
+        let mut p = Prom::new();
+        qs.render(&mut p);
+        let text = p.finish();
+        assert!(text.contains("msq_qstats_enabled 1"), "{text}");
+        assert!(
+            text.contains("msq_layer_act_range{layer=\"toy/00:fc1\",bound=\"min\"} -1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("msq_layer_act_range{layer=\"toy/00:fc1\",bound=\"max\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("msq_layer_act_observations_total{layer=\"toy/00:fc1\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("msq_layer_weight_saturation_total{layer=\"toy/00:fc1\"} 7"),
+            "{text}"
+        );
+        assert!(text.contains("msq_layer_act_absmax_ema{layer=\"toy/00:fc1\"} 2"), "{text}");
+        qs.enable(false);
+    }
+}

@@ -84,11 +84,21 @@ pub fn qgemm(
     // One relaxed load per call; when off, no clocks are read in the
     // hot loop (see `obs::Profiler` — zero-cost-when-off contract).
     let prof = crate::obs::profiler().on();
+    // Activation observers share the contract: one relaxed load (plus the
+    // sampling stride) per call, decided once here so every block of this
+    // call agrees, and never touching `out` — bit-exactness holds.
+    let qs = crate::obs::qstats::qstats();
+    let qsample = qs.sample();
+    if qsample {
+        qs.observe_input(x);
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
     let row_bytes = (cols * bits as usize).div_ceil(8) as u64;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let r0 = blk * ROW_BLOCK;
         let r1 = (r0 + ROW_BLOCK).min(rows);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
+        let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for r in r0..r1 {
             let t0 = if prof { Some(Instant::now()) } else { None };
             decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
@@ -97,6 +107,17 @@ pub fn qgemm(
                 dec_ns += now.duration_since(t).as_nanos() as u64;
                 now
             });
+            if qsample {
+                // scratch holds RAW codes here (the affine folds out at
+                // write time), so endpoint equality is exact integer math
+                for &c in scratch.iter() {
+                    if c == 0.0 {
+                        sat_lo += 1;
+                    } else if c == max_code {
+                        sat_hi += 1;
+                    }
+                }
+            }
             for b in 0..batch {
                 let acc = dot(scratch, &x[b * cols..(b + 1) * cols]);
                 write(b * rows + r, alpha * acc + beta * xsums[b]);
@@ -108,6 +129,9 @@ pub fn qgemm(
         if prof {
             let nrows = (r1 - r0) as u64;
             crate::obs::profiler().add_kernel(dec_ns, mm_ns, nrows * row_bytes, nrows * cols as u64);
+        }
+        if qsample {
+            qs.add_saturation(sat_lo, sat_hi);
         }
     };
 
@@ -211,11 +235,19 @@ pub fn qconv2d(
 
     let flen = d.filter_len();
     let prof = crate::obs::profiler().on();
+    // Same per-call observation gate as qgemm (see there).
+    let qs = crate::obs::qstats::qstats();
+    let qsample = qs.sample();
+    if qsample {
+        qs.observe_input(x);
+    }
+    let max_code = ((1u32 << bits) - 1) as f32;
     let filter_bytes = (flen * bits as usize).div_ceil(8) as u64;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let oc0 = blk * FILTER_BLOCK;
         let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
+        let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for oc in oc0..oc1 {
             // decode this filter's kh·kw·in_ch codes exactly once
             let t0 = if prof { Some(Instant::now()) } else { None };
@@ -225,6 +257,16 @@ pub fn qconv2d(
                 dec_ns += now.duration_since(t).as_nanos() as u64;
                 now
             });
+            if qsample {
+                // raw filter codes, pre-affine — exact endpoint equality
+                for &c in scratch.iter() {
+                    if c == 0.0 {
+                        sat_lo += 1;
+                    } else if c == max_code {
+                        sat_hi += 1;
+                    }
+                }
+            }
             for b in 0..batch {
                 let xb = &x[b * in_elems..(b + 1) * in_elems];
                 for oy in 0..out_h {
@@ -247,6 +289,9 @@ pub fn qconv2d(
         if prof {
             let nf = (oc1 - oc0) as u64;
             crate::obs::profiler().add_kernel(dec_ns, mm_ns, nf * filter_bytes, nf * flen as u64);
+        }
+        if qsample {
+            qs.add_saturation(sat_lo, sat_hi);
         }
     };
 
@@ -302,9 +347,23 @@ impl ProjWeights {
     /// Decode the full `d × d` lattice matrix (codes → RoundClamp
     /// weights). One allocation per projection per `qattention` call —
     /// the "decode once per generation" contract.
-    fn decode(&self, d: usize) -> Vec<f32> {
+    ///
+    /// When `sat` is given, endpoint codes (0 and `2^bits − 1`) are
+    /// tallied into it *before* the affine is applied — post-affine
+    /// float equality would be rounding-unreliable.
+    fn decode(&self, d: usize, sat: Option<&mut (u64, u64)>) -> Vec<f32> {
         let mut w = vec![0f32; d * d];
         decode_codes_f32(&self.data, 0, self.bits, &mut w);
+        if let Some(s) = sat {
+            let max_code = ((1u32 << self.bits) - 1) as f32;
+            for &c in w.iter() {
+                if c == 0.0 {
+                    s.0 += 1;
+                } else if c == max_code {
+                    s.1 += 1;
+                }
+            }
+        }
         let (alpha, beta) = rc_affine(self.bits as f32, self.scale);
         dequant_affine(&mut w, alpha, beta);
         w
@@ -343,11 +402,21 @@ pub fn qattention(
     if batch == 0 {
         return;
     }
+    // Same per-call observation gate as qgemm (see there).
+    let qs = crate::obs::qstats::qstats();
+    let qsample = qs.sample();
+    if qsample {
+        qs.observe_input(x);
+    }
+    let mut sat = (0u64, 0u64);
     let prof_t0 = if crate::obs::profiler().on() { Some(Instant::now()) } else { None };
-    let mq = wq.decode(d);
-    let mk = wk.decode(d);
-    let mv = wv.decode(d);
-    let mo = wo.decode(d);
+    let mq = wq.decode(d, if qsample { Some(&mut sat) } else { None });
+    let mk = wk.decode(d, if qsample { Some(&mut sat) } else { None });
+    let mv = wv.decode(d, if qsample { Some(&mut sat) } else { None });
+    let mo = wo.decode(d, if qsample { Some(&mut sat) } else { None });
+    if qsample {
+        qs.add_saturation(sat.0, sat.1);
+    }
     let prof_t1 = prof_t0.map(|_| Instant::now());
     // multi-sample batches parallelize across samples; batch == 1 lets
     // the projection matmuls use the pool themselves (no nesting either

@@ -39,5 +39,8 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{BatchConfig, DynamicBatcher, InferResponse, SubmitError};
-pub use registry::{resolve_input_dim, LayerKind, ModelRegistry, QuantLayer, ServableModel};
+pub use registry::{
+    analyze_packed, resolve_input_dim, LayerAnalysis, LayerKind, ModelAnalysis, ModelRegistry,
+    QuantLayer, ServableModel,
+};
 pub use server::{ServeMetrics, Server, ServerConfig};

@@ -34,7 +34,8 @@ use anyhow::{bail, ensure, Context, Result};
 use super::kernels;
 use super::kernels::ProjWeights;
 use crate::kernels::{axpy, gelu, layernorm_rows, LN_EPS};
-use crate::quant::pack::{Conv2dDesc, LayerOp, PackedLayer, PackedModel};
+use crate::quant::pack::{BitReader, Conv2dDesc, LayerOp, PackedLayer, PackedModel};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
 /// Per-sample activation ceiling (elements). Lying conv headers could
@@ -523,6 +524,170 @@ impl QuantLayer {
     }
 }
 
+// ---------------------------------------------------------------------------
+// load-time quantization-health analysis
+
+/// One pack record's static quantization analysis, computed once per
+/// model generation from the code stream alone (see [`analyze_packed`]).
+#[derive(Clone, Debug)]
+pub struct LayerAnalysis {
+    pub name: String,
+    pub kind: &'static str,
+    pub bits: u8,
+    pub numel: usize,
+    pub payload_bytes: usize,
+    /// Shannon entropy of the code histogram, bits per code.
+    pub entropy_bits: f64,
+    /// `entropy_bits / bits` — how much of the allotted width the code
+    /// distribution actually uses (1.0 = uniform codes).
+    pub entropy_util: f64,
+    /// Fraction of codes on a RoundClamp lattice endpoint (0 or
+    /// `2^bits − 1`), i.e. weights the clamp flattened. Trivially 1.0
+    /// for 1-bit layers, where every code is an endpoint.
+    pub sat_frac: f64,
+    /// Relative L2 error of requantizing this layer at `bits − 1`,
+    /// computed exactly from the code histogram (the per-layer
+    /// bit-sensitivity proxy: the original float weights are gone from a
+    /// pack, so ‖W − Ŵ‖ against *them* lives in the training telemetry's
+    /// `quant_error` events instead). 1.0 for 1-bit layers by
+    /// convention — there is no narrower lattice.
+    pub qerr_drop_rel: f64,
+}
+
+impl LayerAnalysis {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("bits", Json::Num(self.bits as f64)),
+            ("numel", Json::Num(self.numel as f64)),
+            ("payload_bytes", Json::Num(self.payload_bytes as f64)),
+            ("entropy_bits", Json::Num(self.entropy_bits)),
+            ("entropy_util", Json::Num(self.entropy_util)),
+            ("sat_frac", Json::Num(self.sat_frac)),
+            ("qerr_drop_rel", Json::Num(self.qerr_drop_rel)),
+        ])
+    }
+}
+
+/// Whole-pack static analysis: the per-record table plus totals.
+#[derive(Clone, Debug, Default)]
+pub struct ModelAnalysis {
+    pub layers: Vec<LayerAnalysis>,
+    pub total_payload_bytes: usize,
+    pub total_numel: usize,
+    /// Element-weighted mean bit-width across payload records.
+    pub avg_bits: f64,
+}
+
+impl ModelAnalysis {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layers", Json::Arr(self.layers.iter().map(LayerAnalysis::to_json).collect())),
+            ("total_payload_bytes", Json::Num(self.total_payload_bytes as f64)),
+            ("total_numel", Json::Num(self.total_numel as f64)),
+            ("avg_bits", Json::Num(self.avg_bits)),
+        ])
+    }
+}
+
+/// Relative L2 error of requantizing a code histogram at one bit less:
+/// each code `c` of `n` bits sits at unit position `u = c/(2^n − 1)`;
+/// dropping to `n − 1` bits moves it to the nearest
+/// `round(u·(2^(n−1) − 1))/(2^(n−1) − 1)`. The layer scale cancels out
+/// of the ratio, so the histogram determines the answer exactly.
+fn qerr_drop_rel(hist: &[u64], bits: u8) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    if bits <= 1 {
+        return 1.0;
+    }
+    let hi = (hist.len() - 1) as f64;
+    let lo_levels = ((1u64 << (bits - 1)) - 1) as f64;
+    let (mut err2, mut mag2) = (0f64, 0f64);
+    for (c, &cnt) in hist.iter().enumerate() {
+        if cnt == 0 {
+            continue;
+        }
+        let u = c as f64 / hi;
+        let w = u - 0.5; // weight magnitude in units of 2s
+        let e = (u * lo_levels).round() / lo_levels - u;
+        err2 += cnt as f64 * e * e;
+        mag2 += cnt as f64 * w * w;
+    }
+    if mag2 <= 0.0 {
+        // all mass at the lattice midpoint: relative error is 0/0 —
+        // report 1.0 if the drop moves anything at all, else 0
+        if err2 > 0.0 { 1.0 } else { 0.0 }
+    } else {
+        (err2 / mag2).sqrt()
+    }
+}
+
+fn analyze_layer(l: &PackedLayer) -> LayerAnalysis {
+    let readable = (1..=16).contains(&l.bits) && l.numel > 0;
+    let levels = if readable { 1usize << l.bits } else { 1 };
+    let mut hist = vec![0u64; levels];
+    if readable {
+        let mut br = BitReader::new(&l.data);
+        for _ in 0..l.numel {
+            hist[br.pull(l.bits) as usize] += 1;
+        }
+    }
+    let n = l.numel as f64;
+    let mut entropy = 0.0;
+    if l.numel > 0 {
+        for &c in &hist {
+            if c > 0 {
+                let p = c as f64 / n;
+                entropy -= p * p.log2();
+            }
+        }
+    }
+    let sat_frac =
+        if readable { (hist[0] + hist[levels - 1]) as f64 / n } else { 0.0 };
+    LayerAnalysis {
+        name: l.name.clone(),
+        kind: l.op.kind_name(),
+        bits: l.bits,
+        numel: l.numel,
+        payload_bytes: l.data.len(),
+        entropy_bits: entropy,
+        entropy_util: if l.bits > 0 { entropy / l.bits as f64 } else { 0.0 },
+        sat_frac,
+        qerr_drop_rel: if readable { qerr_drop_rel(&hist, l.bits) } else { 0.0 },
+    }
+}
+
+/// Static quantization-health analysis of a packed model: per-record
+/// bits, code-histogram entropy, endpoint-saturation fraction, one-bit
+/// requantization error, and size breakdown. Works on any pack version
+/// (no op-graph planning needed — attention records are structural with
+/// `numel == 0`; their projections are ordinary records and analyze as
+/// such), so `msq inspect` handles v1 files the serving planner also
+/// accepts. [`ServableModel::from_packed`] stores the same analysis per
+/// generation, which is what `/metrics` and `/debug/model/{name}`
+/// serve — the CLI and the gateway agree by construction.
+pub fn analyze_packed(pm: &PackedModel) -> ModelAnalysis {
+    let mut layers = Vec::with_capacity(pm.layers.len());
+    let (mut bytes, mut numel) = (0usize, 0usize);
+    let mut bit_elems = 0f64;
+    for l in &pm.layers {
+        layers.push(analyze_layer(l));
+        bytes += l.data.len();
+        numel += l.numel;
+        bit_elems += l.numel as f64 * l.bits as f64;
+    }
+    ModelAnalysis {
+        layers,
+        total_payload_bytes: bytes,
+        total_numel: numel,
+        avg_bits: if numel > 0 { bit_elems / numel as f64 } else { 0.0 },
+    }
+}
+
 /// A packed model ready to answer inference requests: the planned op
 /// graph over the packed layers, ReLU where the descriptors fuse it,
 /// raw logits out of the last layer.
@@ -530,6 +695,9 @@ pub struct ServableModel {
     pub name: String,
     pub input_dim: usize,
     pub layers: Vec<QuantLayer>,
+    /// Static quantization analysis of the source pack, computed once at
+    /// load time (one generation = one analysis).
+    pub analysis: ModelAnalysis,
 }
 
 impl ServableModel {
@@ -582,7 +750,12 @@ impl ServableModel {
             shape = next;
             layers.push(q);
         }
-        Ok(ServableModel { name: name.to_string(), input_dim, layers })
+        Ok(ServableModel {
+            name: name.to_string(),
+            input_dim,
+            layers,
+            analysis: analyze_packed(pm),
+        })
     }
 
     /// Like [`ServableModel::from_packed`], but the input width is
@@ -659,6 +832,12 @@ impl ServableModel {
         // several models infer concurrently.
         let prof = crate::obs::profiler().on();
         let mut kprev = if prof { Some(crate::obs::profiler().kernel_snapshot()) } else { None };
+        // Activation-observer attribution rides the same dispatcher
+        // thread: kernels merged this layer's observations into the
+        // global scratch observer, and draining it right after the
+        // forward names them (exact single-model, best-effort with
+        // concurrent models — the profiler's caveat exactly).
+        let qs_on = crate::obs::qstats::qstats().on();
         let mut cur: Vec<f32> = Vec::new();
         for (i, layer) in self.layers.iter().enumerate() {
             let t0 = if prof { Some(std::time::Instant::now()) } else { None };
@@ -704,6 +883,10 @@ impl ServableModel {
                     now.2.saturating_sub(b0),
                     now.3.saturating_sub(c0),
                 );
+            }
+            if qs_on {
+                crate::obs::qstats::qstats()
+                    .attribute(&format!("{}/{:02}:{}", self.name, i, layer.name));
             }
             if save_set.contains(&i) {
                 saved.insert(i, next.clone());
@@ -1159,6 +1342,87 @@ mod tests {
         let reg = ModelRegistry::new();
         let m2 = reg.load_file("vit", &path, None).unwrap();
         assert_eq!(m2.infer_batch(&x, batch, None).unwrap(), got);
+    }
+
+    #[test]
+    fn qerr_drop_rel_known_values() {
+        // endpoint codes land exactly on the narrower lattice's endpoints
+        assert_eq!(qerr_drop_rel(&[10, 0, 0, 7], 2), 0.0);
+        // 2-bit code 1 sits at u = 1/3; the 1-bit lattice rounds it to 0:
+        // err² = n/9, mag² = n/36 → rel = 2 exactly
+        let r = qerr_drop_rel(&[0, 9, 0, 0], 2);
+        assert!((r - 2.0).abs() < 1e-12, "{r}");
+        // one-bit layers have no narrower lattice
+        assert_eq!(qerr_drop_rel(&[5, 5], 1), 1.0);
+        assert_eq!(qerr_drop_rel(&[0, 0, 0, 0], 2), 0.0);
+    }
+
+    #[test]
+    fn analyze_packed_bounds_and_served_model_agreement() {
+        let pm = toy_model(12, 8, 4);
+        let a = analyze_packed(&pm);
+        assert_eq!(a.layers.len(), 2);
+        assert_eq!(a.total_numel, 12 * 8 + 8 * 4);
+        assert_eq!(a.total_payload_bytes, pm.payload_bytes());
+        // element-weighted mean of a 4-bit and a 3-bit record
+        let want = (96.0 * 4.0 + 32.0 * 3.0) / 128.0;
+        assert!((a.avg_bits - want).abs() < 1e-12, "{}", a.avg_bits);
+        for la in &a.layers {
+            assert!(la.entropy_bits >= 0.0 && la.entropy_bits <= la.bits as f64 + 1e-9);
+            assert!(la.entropy_util <= 1.0 + 1e-9, "{}", la.entropy_util);
+            assert!((0.0..=1.0).contains(&la.sat_frac), "{}", la.sat_frac);
+            assert!(la.qerr_drop_rel >= 0.0);
+            assert_eq!(la.kind, "linear");
+        }
+        // the served model carries the identical analysis — the contract
+        // that makes `msq inspect` match `/debug/model/{name}` exactly
+        let m = ServableModel::from_packed("toy", &pm, 12).unwrap();
+        assert_eq!(m.analysis.to_json().to_string(), a.to_json().to_string());
+    }
+
+    #[test]
+    fn analyze_packed_covers_transformer_records() {
+        let pm = toy_transformer(1, 7);
+        let a = analyze_packed(&pm);
+        // analysis is per pack record: structural rows have numel 0, the
+        // attention projections appear as ordinary linear records
+        assert_eq!(a.layers.len(), pm.layers.len());
+        assert_eq!(a.total_payload_bytes, pm.payload_bytes());
+        let structural: Vec<&LayerAnalysis> =
+            a.layers.iter().filter(|l| l.numel == 0).collect();
+        assert!(!structural.is_empty());
+        for s in structural {
+            assert_eq!(s.payload_bytes, 0);
+            assert_eq!(s.entropy_bits, 0.0);
+        }
+        assert!(a.layers.iter().any(|l| l.kind == "attention"));
+        assert!(a.avg_bits >= 3.0 && a.avg_bits <= 8.0, "{}", a.avg_bits);
+    }
+
+    #[test]
+    fn infer_attributes_qstats_per_layer_and_keeps_logits_identical() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let pm = toy_model(12, 8, 4);
+        let m = ServableModel::from_packed("qsattr", &pm, 12).unwrap();
+        let qs = crate::obs::qstats::qstats();
+        let x = rand_vec(5 * 12, 3);
+        qs.set_rate(1.0);
+        qs.enable(true);
+        let observed = m.infer_batch(&x, 5, None).unwrap();
+        qs.enable(false);
+        let abs = qs.absmax_by_prefix("qsattr/");
+        assert_eq!(abs.len(), 2, "one entry per planned layer: {abs:?}");
+        for key in abs.keys() {
+            let l = qs.layer(key);
+            // ≥: the global scratch is shared, so a concurrent test's
+            // kernels may have contributed extra observations
+            assert!(l.obs.snapshot().count >= 60, "{key}");
+            assert!(l.ema_absmax().is_some(), "{key}");
+        }
+        // observation never changes arithmetic
+        let plain = m.infer_batch(&x, 5, None).unwrap();
+        assert_eq!(observed, plain);
+        qs.reset_prefix("qsattr/");
     }
 
     #[test]

@@ -34,6 +34,27 @@ fn request(addr: std::net::SocketAddr, method: &str, target: &str, body: &[u8]) 
     (status, v)
 }
 
+/// Like [`request`] but with a bearer token; used against token-gated
+/// admin and debug endpoints.
+fn request_auth(
+    addr: std::net::SocketAddr,
+    method: &str,
+    target: &str,
+    token: &str,
+) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer {token}\r\n\
+         Content-Length: 0\r\nConnection: close\r\n\r\n"
+    );
+    std::io::Write::write_all(&mut s, req.as_bytes()).unwrap();
+    let (status, bytes) =
+        HttpReader::new(s).read_response(&Limits::default()).expect("response");
+    let v = json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    (status, v)
+}
+
 fn serve_cfg() -> ServerConfig {
     ServerConfig {
         max_batch: 8,
@@ -358,6 +379,22 @@ fn gateway_admin_token_gates_reload_over_the_wire() {
     assert_eq!(status, 401, "{v:?}");
     assert!(v.get("error").unwrap().as_str().unwrap().contains("Bearer"), "{v:?}");
 
+    // the same token gates both debug endpoints (they expose weight
+    // statistics and layer names — same trust domain as reload)
+    let (status, v) = request(addr, "GET", "/debug/stats", b"");
+    assert_eq!(status, 401, "{v:?}");
+    let (status, v) = request(addr, "GET", "/debug/model/m", b"");
+    assert_eq!(status, 401, "{v:?}");
+    let (status, v) = request_auth(addr, "GET", "/debug/stats", "hunter2");
+    assert_eq!(status, 200, "{v:?}");
+    assert!(v.get("registry").is_some(), "{v:?}");
+    let (status, v) = request_auth(addr, "GET", "/debug/model/m", "hunter2");
+    assert_eq!(status, 200, "{v:?}");
+    assert_eq!(v.get("model").unwrap().as_str(), Some("m"));
+    // a wrong token is still 401, not a fallthrough to 404 probing
+    let (status, _) = request_auth(addr, "GET", "/debug/model/ghost", "wrong");
+    assert_eq!(status, 401);
+
     // correct bearer token → 200, generation bumps
     let mut s = TcpStream::connect(addr).unwrap();
     s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
@@ -372,6 +409,72 @@ fn gateway_admin_token_gates_reload_over_the_wire() {
     std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
     assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
     assert!(raw.contains("\"generation\": 2") || raw.contains("\"generation\":2"), "{raw}");
+    gw.shutdown();
+}
+
+#[test]
+fn qstats_observers_surface_per_layer_series_end_to_end() {
+    // the observers are process-global; serialize against anything else
+    // that flips the switch (nothing else in this binary does today)
+    let _guard = msq::obs::qstats::test_mutex();
+    let path = write_pack(61, "msq_gw_qstats.msqpack");
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: 8,
+            read_timeout: Duration::from_millis(50),
+            qstats: Some(1.0),
+            server: serve_cfg(),
+            ..Default::default()
+        },
+        &[("q".to_string(), path, None)],
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // traffic so the observers have something to fold
+    let mut rng = Rng::new(17);
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+        let body = Json::Arr(vec![Json::arr_f32(&x)]).to_string();
+        let (status, v) = request(addr, "POST", "/v1/models/q/infer", body.as_bytes());
+        assert_eq!(status, 200, "{v:?}");
+    }
+
+    // /metrics: live activation series (from the observers) next to the
+    // static load-time analysis series (from the registry)
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_request(&mut s, "GET", "/metrics", None, b"").unwrap();
+    let (_, bytes) = HttpReader::new(s).read_response(&Limits::default()).unwrap();
+    let text = String::from_utf8(bytes).unwrap();
+    assert!(text.contains("msq_qstats_enabled 1"), "{text}");
+    assert!(text.contains("msq_layer_act_range{layer=\"q/00:"), "{text}");
+    assert!(text.contains("msq_layer_act_absmax_ema{layer=\"q/00:"), "{text}");
+    assert!(text.contains("msq_layer_bits{model=\"q\",layer=\"00:"), "{text}");
+    assert!(text.contains("msq_layer_entropy_bits{model=\"q\",layer=\"00:"), "{text}");
+
+    // /debug/model/q: the static analysis and the live observers agree
+    // on the layer inventory
+    let (status, v) = request(addr, "GET", "/debug/model/q", b"");
+    assert_eq!(status, 200, "{v:?}");
+    assert_eq!(v.get("model").unwrap().as_str(), Some("q"));
+    assert_eq!(v.get("qstats_enabled").unwrap().as_bool(), Some(true));
+    assert_eq!(v.path(&["analysis", "layers", "0", "bits"]).unwrap().as_usize(), Some(5));
+    assert_eq!(v.path(&["analysis", "layers", "1", "bits"]).unwrap().as_usize(), Some(3));
+    let acts = v.get("activations").unwrap().as_obj().unwrap();
+    assert_eq!(acts.len(), 2, "{v:?}");
+    for (k, l) in acts {
+        assert!(k.starts_with("q/"), "{k}");
+        assert!(l.get("count").unwrap().as_f64().unwrap() > 0.0, "{l:?}");
+    }
+
+    // unknown model is a clean 404 (no token configured, so no 401)
+    let (status, _) = request(addr, "GET", "/debug/model/ghost", b"");
+    assert_eq!(status, 404);
+
+    let qs = msq::obs::qstats::qstats();
+    qs.enable(false);
+    qs.reset_prefix("q/");
     gw.shutdown();
 }
 

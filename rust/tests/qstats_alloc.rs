@@ -1,0 +1,94 @@
+//! Allocation accounting for the disabled-qstats fast path.
+//!
+//! The activation-observer contract (`obs::qstats`) is that a gateway
+//! running *without* `--qstats` pays exactly one relaxed atomic load per
+//! kernel call — no locks, no map lookups, and in particular **no heap
+//! allocation**. A counting `#[global_allocator]` makes that claim a
+//! test instead of a comment: this binary wraps the system allocator,
+//! counts every `alloc` (including reallocs, which route through it),
+//! and asserts zero allocations across the disabled guard path and a
+//! per-call-identical allocation profile for whole `qgemm` calls.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! counter is process-global, so sharing a binary with unrelated tests
+//! (which run on other threads) would make the deltas meaningless.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use msq::quant::pack::pack_layer;
+use msq::serve::kernels::qgemm;
+use msq::util::prng::Rng;
+
+/// Pass-through allocator that counts `alloc` calls. `dealloc` is not
+/// counted — the claim under test is about acquiring memory.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Single test on purpose (see module doc): the harness would run
+/// multiple `#[test]` fns concurrently and corrupt the global counter.
+#[test]
+fn disabled_qstats_path_does_not_allocate() {
+    // -- setup: all allocation happens before any measurement window
+    let (rows, cols, batch, bits) = (32usize, 48usize, 4usize, 4u8);
+    let mut rng = Rng::new(9);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.5).collect();
+    let p = pack_layer("alloc-probe", &w, bits);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let mut out = vec![0f32; batch * rows];
+
+    let qs = msq::obs::qstats::qstats(); // singleton init allocates; do it here
+    qs.enable(false);
+
+    // -- the guard branch itself: N on()/sample() checks (what every
+    // kernel call evaluates when observers are off) plus N raw observer
+    // folds must never touch the allocator
+    let before = allocs();
+    for _ in 0..1000 {
+        std::hint::black_box(qs.on());
+        std::hint::black_box(qs.sample());
+        qs.observe_input(std::hint::black_box(&x));
+    }
+    let guard_allocs = allocs() - before;
+    assert_eq!(
+        guard_allocs, 0,
+        "disabled qstats guard allocated {guard_allocs} times over 1000 iterations"
+    );
+
+    // -- whole-kernel profile: with qstats off, every qgemm call must
+    // allocate exactly as much as the previous one (the observers add
+    // nothing call-over-call; scratch reuse stays whatever it was).
+    // Warm up first so one-time lazy init (thread-local scratch, etc.)
+    // doesn't show up as a first-call difference.
+    qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut out, None);
+    let mut per_call = [0u64; 4];
+    for slot in per_call.iter_mut() {
+        let before = allocs();
+        qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut out, None);
+        std::hint::black_box(&out);
+        *slot = allocs() - before;
+    }
+    assert!(
+        per_call.windows(2).all(|w| w[0] == w[1]),
+        "disabled-qstats qgemm allocation profile drifted across calls: {per_call:?}"
+    );
+}
