@@ -12,9 +12,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use msq::bench::{bench, save};
-use msq::kernels::{dequant_affine, rc_affine};
+use msq::kernels::{dequant_affine, rc_affine, ActQuant};
 use msq::quant::pack::{pack_layer, PackedModel};
-use msq::serve::kernels::{decode_codes_f32, qgemm};
+use msq::serve::kernels::{decode_codes_f32, qgemm, qgemm_int};
 use msq::serve::{ServableModel, Server, ServerConfig};
 use msq::util::json::Json;
 use msq::util::prng::Rng;
@@ -161,9 +161,71 @@ fn main() {
         ("speedup_core", Json::Num(speedup_core)),
         ("speedup_pool", Json::Num(speedup_pool)),
     ]);
+    let core_mean_s = r_core.mean_s;
     results.push(r_naive);
     results.push(r_core);
     results.push(r_core_pool);
+
+    // --- integer-domain core: the --int8 serving path over the same
+    // packed layer. Activations quantize to u8 against the batch absmax
+    // (what an observer EMA converges to), the accumulation runs in i32,
+    // and the recorded max_abs_diff is checked against the analytic
+    // per-output bound cols * weight_scale * step/2 — the same bound the
+    // registry property tests assert.
+    let kabsmax = kx.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let kact = ActQuant::from_absmax(kabsmax);
+    let mut kout_ref = vec![0f32; kbatch * krows];
+    qgemm(&kp.data, kbits, kp.scale, krows, kcols, &kx, kbatch, &mut kout_ref, None);
+    let r_int = bench("qgemm_int serial", 2, 10, || {
+        qgemm_int(&kp.data, kbits, kp.scale, krows, kcols, &kx, kbatch, &kact, &mut kout, None);
+        std::hint::black_box(&kout);
+    });
+    r_int.report(None);
+    let int_diff = kout
+        .iter()
+        .zip(&kout_ref)
+        .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    let int_bound = kcols as f32 * kp.scale * kact.step() / 2.0;
+    assert!(
+        int_diff <= int_bound,
+        "int8 drift {int_diff} exceeds analytic bound {int_bound}"
+    );
+    let r_int_pool = bench("qgemm_int pooled", 2, 10, || {
+        qgemm_int(
+            &kp.data,
+            kbits,
+            kp.scale,
+            krows,
+            kcols,
+            &kx,
+            kbatch,
+            &kact,
+            &mut kout,
+            Some(&kpool),
+        );
+        std::hint::black_box(&kout);
+    });
+    r_int_pool.report(None);
+    println!(
+        "int8 core: {krows}x{kcols} b={kbatch} {kbits}-bit — {:.2}x serial vs float core, \
+         max |int - f32| {int_diff:.3e} (bound {int_bound:.3e})",
+        core_mean_s / r_int.mean_s.max(1e-12)
+    );
+    let int8_section = Json::obj(vec![
+        ("rows", Json::Num(krows as f64)),
+        ("cols", Json::Num(kcols as f64)),
+        ("batch", Json::Num(kbatch as f64)),
+        ("bits", Json::Num(kbits as f64)),
+        ("act_scale", Json::Num(kact.scale as f64)),
+        ("core_ms", Json::Num(core_mean_s * 1e3)),
+        ("int_ms", Json::Num(r_int.mean_s * 1e3)),
+        ("int_pool_ms", Json::Num(r_int_pool.mean_s * 1e3)),
+        ("speedup_vs_core", Json::Num(core_mean_s / r_int.mean_s.max(1e-12))),
+        ("max_abs_diff", Json::Num(int_diff as f64)),
+        ("bound", Json::Num(int_bound as f64)),
+    ]);
+    results.push(r_int);
+    results.push(r_int_pool);
 
     // --- profiler overhead: the zero-cost-when-off claim, measured.
     // Same batched forward with kernel profiling disabled vs enabled:

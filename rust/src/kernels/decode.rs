@@ -17,32 +17,86 @@
 //! phase 0..=7) cross-check against the generic path lives in this
 //! module's tests. Decoding widens integer codes exactly (codes < 2²⁴),
 //! so decode results carry no rounding at all — every numeric choice
-//! happens later, in the affine.
+//! happens later, in the affine. [`decode_codes_u8`] is the same decode
+//! landing in raw `u8` codes for the integer serving path
+//! (`serve::kernels::qgemm_int`); both are monomorphizations of one
+//! shared core, so the bit layout still has a single statement.
+//!
+//! All decoders are *total* over `data`: bits past the end of the buffer
+//! decode as zero, matching `quant::pack::BitReader::pull`. A truncated
+//! payload therefore yields zero codes for the missing tail instead of a
+//! panic (the serve registry still rejects short payloads at load time —
+//! zero-extension is the belt under that suspender).
+
+/// One decoded code's destination type: `f32` for the float kernels,
+/// `u8` for the integer path. Code values fit u8 (`bits` ≤ 8).
+trait Code: Copy + Default {
+    fn from_code(c: u32) -> Self;
+}
+
+impl Code for f32 {
+    #[inline(always)]
+    fn from_code(c: u32) -> f32 {
+        c as f32
+    }
+}
+
+impl Code for u8 {
+    #[inline(always)]
+    fn from_code(c: u32) -> u8 {
+        c as u8
+    }
+}
+
+/// Byte `pos` of `data`, zero-extended past the end.
+#[inline(always)]
+fn byte(data: &[u8], pos: usize) -> u8 {
+    data.get(pos).copied().unwrap_or(0)
+}
 
 /// Decode `out.len()` consecutive `bits`-wide codes starting at absolute
 /// bit offset `bit_off` of `data` (LSB-first within each byte, matching
 /// `quant::pack::BitWriter`), widening each code to f32.
 ///
-/// The caller must guarantee `bit_off + out.len() * bits` bits exist in
-/// `data` (the serve registry validates payload sizes at load time).
+/// Total over `data`: bits beyond `bit_off + 8·data.len()` decode as
+/// zero (the serve registry validates payload sizes at load time, so a
+/// well-formed pack never exercises the extension).
 pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
+    decode_codes(data, bit_off, bits, out);
+}
+
+/// [`decode_codes_f32`]'s integer twin: the same bit layout and the same
+/// zero-extension, landing raw codes in `u8` for the i32-accumulate
+/// serving kernels. Requires `bits` ∈ 1..=8 (codes fit a byte).
+pub fn decode_codes_u8(data: &[u8], bit_off: usize, bits: u8, out: &mut [u8]) {
+    decode_codes(data, bit_off, bits, out);
+}
+
+fn decode_codes<T: Code>(data: &[u8], bit_off: usize, bits: u8, out: &mut [T]) {
     debug_assert!((1..=8).contains(&bits));
     let mut pos = bit_off / 8;
     let phase = (bit_off % 8) as u32;
     if bits == 8 {
         if phase == 0 {
-            for (slot, &b) in out.iter_mut().zip(&data[pos..]) {
-                *slot = b as f32;
+            let n = out.len().min(data.len().saturating_sub(pos));
+            for (slot, &b) in out[..n].iter_mut().zip(&data[pos..]) {
+                *slot = T::from_code(b as u32);
+            }
+            // truncated tail: zero-extend, matching BitReader::pull
+            for slot in out[n..].iter_mut() {
+                *slot = T::from_code(0);
             }
         } else {
             // every code straddles the same two-byte window at a fixed
             // phase: consume the leading partial byte and combine, no
-            // bit-buffer loop (the fast path used to bail whenever
-            // phase != 0 and fall through to the generic decoder)
+            // bit-buffer loop. The final code's straddle byte may sit
+            // one past the end of an exact-tail stream — `byte` reads
+            // it as zero instead of panicking.
             let hi = 8 - phase;
             for slot in out.iter_mut() {
-                let c = ((data[pos] as u32) >> phase) | (((data[pos + 1] as u32) << hi) & 0xFF);
-                *slot = c as f32;
+                let c = ((byte(data, pos) as u32) >> phase)
+                    | (((byte(data, pos + 1) as u32) << hi) & 0xFF);
+                *slot = T::from_code(c);
                 pos += 1;
             }
         }
@@ -54,19 +108,19 @@ pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) 
         // count is odd)
         let mut i = 0;
         if phase == 4 && !out.is_empty() {
-            out[0] = (data[pos] >> 4) as f32;
+            out[0] = T::from_code((byte(data, pos) >> 4) as u32);
             pos += 1;
             i = 1;
         }
         while i + 2 <= out.len() {
-            let b = data[pos];
+            let b = byte(data, pos);
             pos += 1;
-            out[i] = (b & 0x0F) as f32;
-            out[i + 1] = (b >> 4) as f32;
+            out[i] = T::from_code((b & 0x0F) as u32);
+            out[i + 1] = T::from_code((b >> 4) as u32);
             i += 2;
         }
         if i < out.len() {
-            out[i] = (data[pos] & 0x0F) as f32;
+            out[i] = T::from_code((byte(data, pos) & 0x0F) as u32);
         }
         return;
     }
@@ -75,17 +129,17 @@ pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) 
         // codes per byte, unrolled
         let mut chunks = out.chunks_exact_mut(8);
         for ch in &mut chunks {
-            let b = data[pos];
+            let b = byte(data, pos);
             pos += 1;
             for (l, slot) in ch.iter_mut().enumerate() {
-                *slot = ((b >> l) & 1) as f32;
+                *slot = T::from_code(((b >> l) & 1) as u32);
             }
         }
         let rem = chunks.into_remainder();
         if !rem.is_empty() {
-            let b = data[pos];
+            let b = byte(data, pos);
             for (l, slot) in rem.iter_mut().enumerate() {
-                *slot = ((b >> l) & 1) as f32;
+                *slot = T::from_code(((b >> l) & 1) as u32);
             }
         }
         return;
@@ -96,14 +150,15 @@ pub fn decode_codes_f32(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) 
 /// The generic bit-buffer decoder: correct for every `bits` ∈ 1..=8 at
 /// every phase, with no specializations. The fast paths above must agree
 /// with it bit-for-bit on their whole domain (pinned exhaustively in
-/// this module's tests) — it is the semantic definition of the layout.
-fn decode_codes_generic(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) {
+/// this module's tests) — it is the semantic definition of the layout,
+/// including the zero-extension past the end of `data`.
+fn decode_codes_generic<T: Code>(data: &[u8], bit_off: usize, bits: u8, out: &mut [T]) {
     let mut pos = bit_off / 8;
     let phase = (bit_off % 8) as u32;
     let mut cur: u64 = 0;
     let mut nbits: u32 = 0;
     if phase != 0 {
-        cur = (data[pos] >> phase) as u64;
+        cur = (byte(data, pos) >> phase) as u64;
         nbits = 8 - phase;
         pos += 1;
     }
@@ -111,11 +166,11 @@ fn decode_codes_generic(data: &[u8], bit_off: usize, bits: u8, out: &mut [f32]) 
     let mask = (1u64 << width) - 1;
     for slot in out.iter_mut() {
         while nbits < width {
-            cur |= (data[pos] as u64) << nbits;
+            cur |= (byte(data, pos) as u64) << nbits;
             pos += 1;
             nbits += 8;
         }
-        *slot = (cur & mask) as f32;
+        *slot = T::from_code((cur & mask) as u32);
         cur >>= width;
         nbits -= width;
     }
@@ -170,11 +225,14 @@ mod tests {
 
     /// Bit-level reference: extract the `bits`-wide code at absolute bit
     /// offset `off` straight from the byte stream, one bit at a time.
+    /// Zero-extended past the end of `data` — the normative totality
+    /// semantics every decode path must match.
     fn code_at(data: &[u8], off: usize, bits: u8) -> u32 {
         let mut v = 0u32;
         for i in 0..bits as usize {
             let bit = off + i;
-            v |= (((data[bit / 8] >> (bit % 8)) & 1) as u32) << i;
+            let b = data.get(bit / 8).copied().unwrap_or(0);
+            v |= (((b >> (bit % 8)) & 1) as u32) << i;
         }
         v
     }
@@ -249,6 +307,92 @@ mod tests {
                     decode_codes_f32(&data, phase, bits, &mut fast);
                     decode_codes_generic(&data, phase, bits, &mut generic);
                     assert_eq!(fast, generic, "bits {bits} phase {phase} n {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_tail_8bit_phase_decodes_instead_of_panicking() {
+        // regression: the 8-bit nonzero-phase fast path read
+        // `data[pos + 1]` unguarded, so a stream whose final straddled
+        // code ended exactly at the last byte panicked. The fixed path
+        // zero-extends: the low `8 - phase` bits of the last code come
+        // from the final byte, the high bits decode as zero.
+        let mut r = Rng::new(80);
+        for phase in 1usize..8 {
+            for n in [1usize, 2, 5, 16] {
+                // exactly n bytes: bits phase..8n present, the final
+                // code's top `phase` bits fall past the end
+                let data: Vec<u8> = (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+                let mut out = vec![f32::NAN; n];
+                decode_codes_f32(&data, phase, 8, &mut out);
+                for (i, &got) in out.iter().enumerate() {
+                    let expect = code_at(&data, phase + 8 * i, 8) as f32;
+                    assert_eq!(got, expect, "phase {phase} n {n} code {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_path_is_total_on_short_buffers() {
+        // exact-tail and shorter-than-contract buffers for every
+        // (bits, phase): fast and generic decoders must agree with the
+        // zero-extended bit-level reference, never panic
+        let mut r = Rng::new(81);
+        let full: Vec<u8> = (0..64).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for bits in 1u8..=8 {
+            for phase in 0usize..8 {
+                for n in [1usize, 2, 7, 8, 9, 25] {
+                    let contract_bytes = (phase + bits as usize * n).div_ceil(8);
+                    // trim to the contract boundary and then below it
+                    for len in (0..=contract_bytes).rev().take(4) {
+                        let data = &full[..len];
+                        let mut fast = vec![f32::NAN; n];
+                        let mut generic = vec![f32::NAN; n];
+                        decode_codes_f32(data, phase, bits, &mut fast);
+                        decode_codes_generic(data, phase, bits, &mut generic);
+                        for i in 0..n {
+                            let expect = code_at(data, phase + bits as usize * i, bits) as f32;
+                            assert_eq!(
+                                fast[i], expect,
+                                "fast: bits {bits} phase {phase} n {n} len {len} code {i}"
+                            );
+                            assert_eq!(
+                                generic[i], expect,
+                                "generic: bits {bits} phase {phase} n {n} len {len} code {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn u8_decode_matches_f32_decode_everywhere() {
+        // decode_codes_u8 is the integer-path twin: same layout, same
+        // zero-extension — exhaustively identical to the f32 decode
+        let mut r = Rng::new(82);
+        let data: Vec<u8> = (0..96).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for bits in 1u8..=8 {
+            for phase in 0usize..8 {
+                for n in [0usize, 1, 2, 7, 8, 9, 25, 40] {
+                    let mut f = vec![0f32; n];
+                    let mut u = vec![0u8; n];
+                    decode_codes_f32(&data, phase, bits, &mut f);
+                    decode_codes_u8(&data, phase, bits, &mut u);
+                    for i in 0..n {
+                        assert_eq!(f[i], u[i] as f32, "bits {bits} phase {phase} n {n} code {i}");
+                    }
+                    // truncated view too
+                    let short = &data[..(phase + bits as usize * n).div_ceil(8).saturating_sub(1)];
+                    decode_codes_f32(short, phase, bits, &mut f);
+                    decode_codes_u8(short, phase, bits, &mut u);
+                    for i in 0..n {
+                        assert_eq!(f[i], u[i] as f32, "short: bits {bits} phase {phase} code {i}");
+                    }
                 }
             }
         }

@@ -23,6 +23,11 @@
 //!   the serve kernels execute;
 //! * [`norm`] — softmax / affine-free LayerNorm / GELU microkernels:
 //!   transcendentals scalar per element, reductions through [`simd`];
+//! * [`qgemm_int`] — the integer-domain (`--int8`) primitives:
+//!   observer-calibrated activation quantization ([`ActQuant`]),
+//!   u8×u8→i32 dot/sum, and the u8 twins of the conv window
+//!   microkernels, with the zero-point correction folded into the
+//!   per-output Σx term;
 //! * [`attn`] — the multi-head self-attention core over projected
 //!   Q/K/V activations, shared by `serve::kernels::qattention` and the
 //!   native ViT trainer.
@@ -48,13 +53,15 @@ pub mod conv;
 pub mod decode;
 pub mod gemm;
 pub mod norm;
+pub mod qgemm_int;
 pub mod simd;
 
 pub use attn::mha_forward_sample;
 pub use conv::{conv2d_forward_sample, krange, window_dot, window_sum};
-pub use decode::{decode_codes_f32, dequant_affine, rc_affine};
+pub use decode::{decode_codes_f32, decode_codes_u8, dequant_affine, rc_affine};
 pub use gemm::{matmul_acc, matmul_bt, matmul_t_acc};
 pub use norm::{gelu, gelu_grad, gelu_slice, layernorm_row, layernorm_rows, softmax_rows, LN_EPS};
+pub use qgemm_int::{dot_u8, sum_u8, window_dot_u8, window_sum_u8, ActQuant, MAX_INT_DOT_COLS};
 pub use simd::{axpy, dot, sum, LANES};
 
 use crate::util::threadpool::ThreadPool;

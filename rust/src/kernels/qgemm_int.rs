@@ -1,0 +1,263 @@
+//! Integer-domain kernel primitives for the `--int8` serving path.
+//!
+//! MSQ weights already live on a small-integer lattice — the float
+//! kernels widen every `bits`-wide code to f32 only to multiply it by a
+//! float activation. This module keeps the inner loop in integers:
+//! activations are affine-quantized to u8 against an observer-calibrated
+//! scale ([`ActQuant`]), weight codes stay u8 (via
+//! `decode::decode_codes_u8`), and dot products accumulate in i32. The
+//! zero-point correction folds into the same per-output Σx term the
+//! float path already carries, so dequantization is one fused affine per
+//! output element:
+//!
+//! ```text
+//! x̂_j = s · (q_j − 128)                  (activation dequant)
+//! y_r = α·Σ_j c_rj·x̂_j + β·Σ_j x̂_j      (the float path's identity)
+//!     = (α·s)·(Σ c_rj·q_j − 128·Σ c_rj) + (β·s)·(Σ q_j − 128·n)
+//! ```
+//!
+//! `Σ c·q` and the code sum `Σ c` come out of one i32 pass over the
+//! decoded row; `Σ q` is one i32 pass per activation row. Integer sums
+//! are order-independent, so serial ≡ pooled holds on this path without
+//! any lane discipline — the float finalize runs exactly once per output
+//! element.
+//!
+//! Accuracy: with calibration absmax `a ≥ max|x|`, each activation's
+//! quantization error is ≤ `s/2 = a/254`, and since every dequantized
+//! weight satisfies `|w| ≤ scale`, each output differs from the f32
+//! kernel by at most `n · scale · s/2` (plus f32 roundoff) — the bound
+//! the serving property tests pin.
+//!
+//! Overflow: `|Σ c·q| ≤ 255·255·n`, so i32 accumulation is exact for
+//! `n ≤` [`MAX_INT_DOT_COLS`] (= 32768); the serving layer planner falls
+//! back to the float kernels beyond that.
+
+/// Largest reduction length the i32 accumulator handles without
+/// overflow: `255 · 255 · 32768 < 2³¹`.
+pub const MAX_INT_DOT_COLS: usize = 32_768;
+
+/// Floor on the calibrated absmax so an all-zero calibration still
+/// yields a usable (if meaningless) lattice instead of a zero scale.
+const MIN_ABSMAX: f32 = 1e-12;
+
+/// Observer-calibrated activation quantizer: symmetric range `[−a, a]`
+/// mapped to u8 with a fixed zero point of 128, i.e.
+/// `q = clamp(round(x/s) + 128, 0, 255)` with `s = a/127`.
+///
+/// The zero point is a constant by construction (symmetric calibration
+/// — qstats tracks EMA *absmax*), which is what lets the correction
+/// fold into the per-output sums instead of a per-lane subtraction.
+/// `x = 0` maps to exactly 128 and back to exactly 0.
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuant {
+    /// Activation step `s = absmax/127` (> 0).
+    pub scale: f32,
+}
+
+impl ActQuant {
+    /// Quantizer covering `[−absmax, absmax]`.
+    pub fn from_absmax(absmax: f32) -> ActQuant {
+        ActQuant { scale: absmax.max(MIN_ABSMAX) / 127.0 }
+    }
+
+    /// The quantization step: inputs within the calibrated range
+    /// round-trip within `step()/2` per element.
+    pub fn step(&self) -> f32 {
+        self.scale
+    }
+
+    /// Quantize one activation: `clamp(round(x/s) + 128, 0, 255)`.
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> u8 {
+        ((x / self.scale).round() + 128.0).clamp(0.0, 255.0) as u8
+    }
+
+    /// Quantize a row of activations into `q` (same length).
+    pub fn quantize(&self, x: &[f32], q: &mut [u8]) {
+        debug_assert_eq!(x.len(), q.len());
+        for (slot, &v) in q.iter_mut().zip(x) {
+            *slot = self.quantize_one(v);
+        }
+    }
+
+    /// Dequantize one code (test/debug helper): `s · (q − 128)`.
+    pub fn dequantize_one(&self, q: u8) -> f32 {
+        self.scale * (q as i32 - 128) as f32
+    }
+}
+
+/// i32 dot product of two u8 rows. Exact for `a.len()` ≤
+/// [`MAX_INT_DOT_COLS`]; order-independent, so pooled ≡ serial for free.
+#[inline]
+pub fn dot_u8(a: &[u8], b: &[u8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() <= MAX_INT_DOT_COLS);
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+/// i32 sum of a u8 row (code sums and activation `Σ q`).
+#[inline]
+pub fn sum_u8(a: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for &x in a {
+        acc += x as i32;
+    }
+    acc
+}
+
+/// Integer twin of `conv::window_dot`: Σ w·q and Σ w over one clipped
+/// receptive-field window of a u8 filter `wf` (OHWI row-major) against a
+/// u8 activation map `qb` (NHWC, one sample). Geometry arguments match
+/// `conv::window_dot` exactly — `seg == 0` yields `(0, 0)`.
+///
+/// The code sum must come from the *same clipped window* as the dot:
+/// `krange` clipping varies per output position, so Σ w is per
+/// (position, filter), not per filter.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn window_dot_u8(
+    wf: &[u8],
+    qb: &[u8],
+    kw: usize,
+    in_w: usize,
+    in_ch: usize,
+    ky0: usize,
+    ky1: usize,
+    iy0: usize,
+    kx0: usize,
+    ix0: usize,
+    seg: usize,
+) -> (i32, i32) {
+    let (mut acc, mut wsum) = (0i32, 0i32);
+    if seg == 0 {
+        return (acc, wsum);
+    }
+    for ky in ky0..ky1 {
+        let wrow = &wf[(ky * kw + kx0) * in_ch..][..seg];
+        let xrow = &qb[((iy0 + (ky - ky0)) * in_w + ix0) * in_ch..][..seg];
+        acc += dot_u8(wrow, xrow);
+        wsum += sum_u8(wrow);
+    }
+    (acc, wsum)
+}
+
+/// Integer twin of `conv::window_sum`: Σ q and the tap count over one
+/// clipped window of a u8 activation map — the per-position Σx̂ term
+/// (and its element count for the zero-point correction).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn window_sum_u8(
+    qb: &[u8],
+    in_w: usize,
+    in_ch: usize,
+    ky0: usize,
+    ky1: usize,
+    iy0: usize,
+    ix0: usize,
+    seg: usize,
+) -> (i32, i32) {
+    let (mut qsum, mut count) = (0i32, 0i32);
+    if seg == 0 {
+        return (qsum, count);
+    }
+    for ky in ky0..ky1 {
+        let xrow = &qb[((iy0 + (ky - ky0)) * in_w + ix0) * in_ch..][..seg];
+        qsum += sum_u8(xrow);
+        count += seg as i32;
+    }
+    (qsum, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::conv::{window_dot, window_sum};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn act_quant_round_trips_within_half_step() {
+        let aq = ActQuant::from_absmax(3.0);
+        assert_eq!(aq.quantize_one(0.0), 128);
+        assert_eq!(aq.dequantize_one(128), 0.0);
+        assert_eq!(aq.quantize_one(3.0), 255);
+        assert_eq!(aq.quantize_one(-3.0), 1);
+        let mut r = Rng::new(9);
+        for _ in 0..2000 {
+            let x = r.normal().clamp(-3.0, 3.0);
+            let back = aq.dequantize_one(aq.quantize_one(x));
+            assert!(
+                (back - x).abs() <= aq.step() / 2.0 + 1e-7,
+                "{x} -> {back} (step {})",
+                aq.step()
+            );
+        }
+    }
+
+    #[test]
+    fn act_quant_clamps_out_of_range() {
+        let aq = ActQuant::from_absmax(1.0);
+        assert_eq!(aq.quantize_one(50.0), 255);
+        assert_eq!(aq.quantize_one(-50.0), 0);
+        assert_eq!(aq.quantize_one(f32::NAN), 0); // `as u8` saturates NaN to 0
+        // zero-scale guard: absmax 0 still yields a positive step
+        assert!(ActQuant::from_absmax(0.0).scale > 0.0);
+    }
+
+    #[test]
+    fn integer_dot_matches_f32_reference() {
+        let mut r = Rng::new(10);
+        for n in [0usize, 1, 7, 64, 300] {
+            let a: Vec<u8> = (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+            let expect: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_u8(&a, &b) as i64, expect);
+            let esum: i64 = a.iter().map(|&x| x as i64).sum();
+            assert_eq!(sum_u8(&a) as i64, esum);
+        }
+    }
+
+    #[test]
+    fn window_twins_match_f32_windows() {
+        // same geometry, u8 payloads widened to f32 for the reference —
+        // the integer windows must agree exactly (values ≤ 255 are exact
+        // in f32, so both sides are exact integers)
+        let mut r = Rng::new(11);
+        let (kh, kw, in_ch) = (3usize, 3usize, 4usize);
+        let (in_h, in_w) = (5usize, 6usize);
+        let wf_u8: Vec<u8> = (0..kh * kw * in_ch).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        let qb_u8: Vec<u8> = (0..in_h * in_w * in_ch).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        let wf_f: Vec<f32> = wf_u8.iter().map(|&v| v as f32).collect();
+        let qb_f: Vec<f32> = qb_u8.iter().map(|&v| v as f32).collect();
+        for (stride, pad) in [(1usize, 1usize), (2, 1), (1, 0)] {
+            for oy in 0..in_h.div_ceil(stride) {
+                for ox in 0..in_w.div_ceil(stride) {
+                    let (ky0, ky1, iy0) = crate::kernels::krange(oy, stride, pad, kh, in_h);
+                    let (kx0, kx1, ix0) = crate::kernels::krange(ox, stride, pad, kw, in_w);
+                    let seg = (kx1 - kx0) * in_ch;
+                    let (acc, wsum) = window_dot_u8(
+                        &wf_u8, &qb_u8, kw, in_w, in_ch, ky0, ky1, iy0, kx0, ix0, seg,
+                    );
+                    let facc =
+                        window_dot(&wf_f, &qb_f, kw, in_w, in_ch, ky0, ky1, iy0, kx0, ix0, seg);
+                    assert_eq!(acc as f32, facc, "dot at ({oy},{ox}) s{stride} p{pad}");
+                    let (qsum, count) =
+                        window_sum_u8(&qb_u8, in_w, in_ch, ky0, ky1, iy0, ix0, seg);
+                    let fsum = window_sum(&qb_f, in_w, in_ch, ky0, ky1, iy0, ix0, seg);
+                    assert_eq!(qsum as f32, fsum, "sum at ({oy},{ox})");
+                    assert_eq!(count as usize, (ky1 - ky0) * seg);
+                    // wsum is the same clipped window's code sum
+                    let mut expect_wsum = 0i32;
+                    for ky in ky0..ky1 {
+                        expect_wsum +=
+                            sum_u8(&wf_u8[(ky * kw + kx0) * in_ch..][..seg]);
+                    }
+                    assert_eq!(wsum, expect_wsum);
+                }
+            }
+        }
+    }
+}

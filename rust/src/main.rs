@@ -78,21 +78,24 @@ fn main() -> Result<()> {
                  \x20            pjrt: XLA artifacts, needs --features pjrt)\n\
                  serve:      --packed model.msqpack [--model M] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
-                 \x20           [--threads 0] [--requests N --concurrency C] [--json]\n\
+                 \x20           [--threads 0] [--requests N --concurrency C] [--int8] [--json]\n\
                  \x20           (no --requests: JSONL requests on stdin, responses on stdout;\n\
-                 \x20            --input-dim only overrides the .msqpack v2 header)\n\
+                 \x20            --input-dim only overrides the .msqpack v2 header;\n\
+                 \x20            --int8 serves matmul/conv layers in the integer domain)\n\
                  gateway:    --packed [name=]model.msqpack … [--host 127.0.0.1] [--port 8080]\n\
                  \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
                  \x20           [--threads 0] [--run-secs N] [--quiet] [--profile]\n\
-                 \x20           [--admin-token TOKEN] [--qstats[=RATE]]\n\
+                 \x20           [--admin-token TOKEN] [--qstats[=RATE]] [--int8]\n\
                  \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
                  \x20            GET /metrics, GET /debug/stats, GET /debug/model/{{name}},\n\
                  \x20            POST /admin/reload; --port 0 = ephemeral; --profile\n\
                  \x20            enables per-layer kernel profiling; --qstats enables\n\
                  \x20            activation observers (RATE in (0,1] samples 1-in-1/RATE\n\
-                 \x20            calls, default 1.0); --admin-token gates /admin/reload\n\
-                 \x20            and GET /debug/* with a Bearer token)\n\
+                 \x20            calls, default 1.0); --int8 serves matmul/conv layers in\n\
+                 \x20            the integer domain, calibrated from qstats observers when\n\
+                 \x20            on; --admin-token gates /admin/reload and GET /debug/*\n\
+                 \x20            with a Bearer token)\n\
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
                  \x20           [--json]\n\
@@ -145,11 +148,9 @@ fn input_dim_override(args: &Args) -> Result<Option<usize>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let packed = args.opt("packed").context("--packed model.msqpack required")?;
     let name = args.opt("model").unwrap_or("mlp").to_string();
-    let model = std::sync::Arc::new(ServableModel::load(
-        &name,
-        Path::new(packed),
-        input_dim_override(args)?,
-    )?);
+    let mut model = ServableModel::load(&name, Path::new(packed), input_dim_override(args)?)?;
+    model.int8 = args.flag("int8");
+    let model = std::sync::Arc::new(model);
     eprintln!(
         "[serve] {}: {} layers, {} -> {}, payload {} B ({:.2}x vs fp32), bits {:?}",
         model.name,
@@ -242,6 +243,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         admin_token: args.opt("admin-token").map(String::from),
         profile: args.flag("profile"),
         qstats,
+        int8: args.flag("int8"),
         server: server_config(args),
     };
     let gw = msq::net::Gateway::start(cfg, &models)?;

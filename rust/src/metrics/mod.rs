@@ -269,12 +269,16 @@ pub struct RateCounter {
     /// the query window, so stale slots need no eager zeroing.
     slots: Vec<(u64, u64)>,
     total: u64,
+    /// Second of the first event ever recorded (`u64::MAX` = none yet):
+    /// early-life rates divide by the seconds actually elapsed, not the
+    /// full window, so a warm-up scrape isn't silently deflated.
+    first: u64,
 }
 
 impl RateCounter {
     pub fn new(window_secs: usize) -> Self {
         let window = window_secs.max(1);
-        RateCounter { window, slots: vec![(u64::MAX, 0); window], total: 0 }
+        RateCounter { window, slots: vec![(u64::MAX, 0); window], total: 0, first: u64::MAX }
     }
 
     pub fn add(&mut self, t_secs: f64, n: u64) {
@@ -285,9 +289,15 @@ impl RateCounter {
         }
         self.slots[slot].1 += n;
         self.total += n;
+        self.first = self.first.min(sec);
     }
 
     /// Events/sec over the window ending at `t_secs` (inclusive second).
+    ///
+    /// The divisor is `min(window, seconds elapsed since the first
+    /// event)`, so a counter queried before a full window has passed
+    /// reports the true average over its lifetime instead of deflating
+    /// the sum by the not-yet-elapsed tail of the window.
     pub fn rate(&self, t_secs: f64) -> f64 {
         let now = t_secs.max(0.0) as u64;
         let lo = (now + 1).saturating_sub(self.window as u64);
@@ -297,7 +307,12 @@ impl RateCounter {
             .filter(|(s, _)| *s >= lo && *s <= now)
             .map(|(_, c)| c)
             .sum();
-        sum as f64 / self.window as f64
+        let elapsed = if self.first == u64::MAX {
+            self.window as u64
+        } else {
+            ((now + 1).saturating_sub(self.first)).clamp(1, self.window as u64)
+        };
+        sum as f64 / elapsed as f64
     }
 
     /// Lifetime event count (not windowed).
@@ -526,6 +541,27 @@ mod tests {
         assert!((r.rate(14.5) - 2.5).abs() < 1e-9);
         // far future: everything aged out
         assert_eq!(r.rate(1000.0), 0.0);
+    }
+
+    #[test]
+    fn rate_counter_cold_start_uses_elapsed_seconds() {
+        // regression: a counter younger than its window used to divide
+        // by the full window, deflating warm-up rates — 5 events in the
+        // first second of a 10 s window reported 0.5/s instead of 5/s.
+        let mut r = RateCounter::new(10);
+        r.add(0.2, 5);
+        assert!((r.rate(0.9) - 5.0).abs() < 1e-9, "t=0: {}", r.rate(0.9));
+        for s in 1..10 {
+            r.add(s as f64 + 0.5, 5);
+            // constant 5/s load must read 5/s at every age t=1..window
+            let got = r.rate(s as f64 + 0.9);
+            assert!((got - 5.0).abs() < 1e-9, "t={s}: {got}");
+        }
+        // beyond the first full window the divisor clamps at `window`
+        assert!((r.rate(9.5) - 5.0).abs() < 1e-9);
+        assert!((r.rate(14.5) - 2.5).abs() < 1e-9);
+        // empty counter stays 0 without dividing by zero
+        assert_eq!(RateCounter::new(10).rate(0.0), 0.0);
     }
 
     #[test]

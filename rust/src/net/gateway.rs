@@ -72,6 +72,13 @@ pub struct GatewayConfig {
     /// `/debug/model/{name}` activations table. `None` (default) keeps
     /// the observers off — one relaxed atomic load per kernel call.
     pub qstats: Option<f32>,
+    /// Serve int-capable layers through the integer kernels (`--int8`):
+    /// activations quantize to u8 against observer-calibrated scales
+    /// (EMA absmax when `qstats` has samples, static analysis bound
+    /// otherwise) and inner loops accumulate in i32. Applies to every
+    /// model the gateway loads, including `/admin/reload`. Off by
+    /// default — the float path is untouched.
+    pub int8: bool,
     /// Batcher/kernel config for every model server the gateway starts.
     pub server: ServerConfig,
 }
@@ -88,6 +95,7 @@ impl Default for GatewayConfig {
             admin_token: None,
             profile: false,
             qstats: None,
+            int8: false,
             server: ServerConfig::default(),
         }
     }
@@ -112,6 +120,7 @@ impl Gateway {
         let pool = Arc::new(ThreadPool::new(cfg.max_conns.max(1)));
         let mut state = AppState::new(cfg.server.clone(), pool.clone());
         state.admin_token = cfg.admin_token.clone();
+        state.int8 = cfg.int8;
         let state = Arc::new(state);
         if cfg.profile {
             crate::obs::profiler().enable(true);

@@ -106,6 +106,10 @@ pub struct AppState {
     /// When set, `POST /admin/reload` requires `Authorization: Bearer
     /// <token>` and answers 401 otherwise.
     pub admin_token: Option<String>,
+    /// Serve int-capable layers through the integer kernels: every model
+    /// loaded (or hot-reloaded) by this gateway gets
+    /// [`ServableModel::int8`] set. Mirrors `GatewayConfig::int8`.
+    pub int8: bool,
 }
 
 impl AppState {
@@ -128,6 +132,7 @@ impl AppState {
             conn_pool,
             obs,
             admin_token: None,
+            int8: false,
         }
     }
 
@@ -144,10 +149,10 @@ impl AppState {
         if name.is_empty() || name.contains('/') {
             bail!("model name {name:?} must be a non-empty path segment");
         }
-        let model = Arc::new(
-            ServableModel::load(name, path, override_dim)
-                .with_context(|| format!("loading {path:?}"))?,
-        );
+        let mut model = ServableModel::load(name, path, override_dim)
+            .with_context(|| format!("loading {path:?}"))?;
+        model.int8 = self.int8;
+        let model = Arc::new(model);
         let server = Arc::new(Server::start(model, self.server_cfg.clone()));
         // snapshot the outgoing generation's activation ranges (empty
         // unless --qstats saw traffic) and clear the observers, so the
@@ -551,12 +556,33 @@ fn debug_model(state: &AppState, name: &str) -> Response {
     };
     let qs = crate::obs::qstats::qstats();
     let m = &e.server.model;
+    // the activation-quant calibration the integer path would use right
+    // now, one row per int-capable *planned* layer (indices match the
+    // qstats attribution keys, not pack record order)
+    let calibration: Vec<Json> = m
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.supports_int())
+        .map(|(i, l)| {
+            let (act, from_ema) = m.act_quant(i);
+            Json::obj(vec![
+                ("layer", Json::Str(format!("{i:02}:{}", l.name))),
+                ("scale", Json::Num(act.scale as f64)),
+                ("zero_point", Json::Num(128.0)),
+                ("act_bound", Json::Num(l.act_bound as f64)),
+                ("source", Json::Str(if from_ema { "ema" } else { "static" }.into())),
+            ])
+        })
+        .collect();
     let body = Json::obj(vec![
         ("model", Json::Str(name.to_string())),
         ("generation", Json::Num(e.generation as f64)),
         ("source", Json::Str(e.source.display().to_string())),
         ("input_dim", Json::Num(m.input_dim as f64)),
         ("output_dim", Json::Num(m.output_dim() as f64)),
+        ("int8", Json::Bool(m.int8)),
+        ("calibration", Json::Arr(calibration)),
         ("analysis", m.analysis.to_json()),
         ("activations", qs.layers_json(&format!("{name}/"))),
         ("qstats_enabled", Json::Bool(qs.on())),
@@ -837,6 +863,31 @@ pub fn render_metrics(state: &AppState) -> String {
         "Packed payload bytes per layer",
         &|l| l.payload_bytes as f64,
     );
+    // activation-quant calibration per int-capable planned layer: the
+    // scale the integer path would use right now (EMA-driven when the
+    // observers have samples, static analysis bound otherwise). Layer
+    // indices here are planned-layer positions — the same keys qstats
+    // attributes under — not pack record order.
+    p.family(
+        "msq_layer_act_scale",
+        "gauge",
+        "Activation quantization scale of the integer serving path",
+    );
+    for (model, e) in map.iter() {
+        let m = &e.server.model;
+        for (i, l) in m.layers.iter().enumerate() {
+            if !l.supports_int() {
+                continue;
+            }
+            let (act, _) = m.act_quant(i);
+            let layer = format!("{i:02}:{}", l.name);
+            p.sample(
+                "msq_layer_act_scale",
+                &[("model", model.as_str()), ("layer", layer.as_str())],
+                act.scale as f64,
+            );
+        }
+    }
     drop(map);
     // activation-range drift vs the previous generation: evaluated here
     // so the scrape that reports the counter is the one that detected it
@@ -1240,6 +1291,51 @@ mod tests {
         assert!(text.contains("msq_layer_entropy_bits{model=\"toy\""), "{text}");
         assert!(text.contains("msq_layer_quant_error{model=\"toy\""), "{text}");
         assert!(text.contains("msq_layer_payload_bytes{model=\"toy\""), "{text}");
+    }
+
+    #[test]
+    fn int8_surfaces_calibration_on_debug_and_metrics() {
+        // serialize against tests that flip the global qstats switch —
+        // with observers on, the infer below would seed an EMA and the
+        // calibration source would read "ema" instead of "static"
+        let _guard = crate::obs::qstats::test_mutex();
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 64,
+            threads: 1,
+        };
+        let mut state = AppState::new(cfg, pool);
+        state.int8 = true;
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_router_int8.msqpack");
+        pm.save(&path).unwrap();
+        state.load_model("qi", &path, None).unwrap();
+        // the loaded model carries the flag (reloads would too)
+        let model = state.server("qi").unwrap().model.clone();
+        assert!(model.int8, "load_model must propagate AppState::int8");
+        let r = handle(&state, &req("POST", "/v1/models/qi/infer", b"[[0.5,1,0,-1,0.25,1]]"));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        // debug page: flag + one calibration row per int-capable layer
+        let d = handle(&state, &req("GET", "/debug/model/qi", b""));
+        assert_eq!(d.status, 200);
+        let v = body_json(&d);
+        assert_eq!(v.get("int8").unwrap().as_bool(), Some(true));
+        let cal = v.get("calibration").unwrap().as_arr().unwrap();
+        assert_eq!(cal.len(), 2, "both linear layers are int-capable");
+        for row in cal {
+            assert_eq!(row.get("zero_point").unwrap().as_usize(), Some(128));
+            assert!(row.get("scale").unwrap().as_f64().unwrap() > 0.0);
+            // qstats is off in this test: the static bound is in effect
+            assert_eq!(row.get("source").unwrap().as_str(), Some("static"));
+            assert!(row.get("act_bound").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // /metrics carries the matching gauge family
+        let text = render_metrics(&state);
+        assert!(text.contains("# TYPE msq_layer_act_scale gauge"), "{text}");
+        assert!(text.contains("msq_layer_act_scale{model=\"qi\",layer=\"00:"), "{text}");
+        state.clear_models();
     }
 
     #[test]

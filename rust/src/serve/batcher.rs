@@ -221,7 +221,16 @@ fn dispatcher(
                 if st.queue.len() >= cfg.max_batch || st.closed {
                     break; // size trigger (or final drain on shutdown)
                 }
-                let deadline = st.queue.front().unwrap().enqueued + cfg.max_delay;
+                // Invariant: non-empty here. The `is_empty` check at the
+                // top re-runs after every wait (spurious or signalled),
+                // we hold the lock, and this dispatcher is the queue's
+                // only consumer. Still: a `front()` miss re-enters the
+                // wait loop instead of panicking the worker (a poisoned
+                // batcher would strand every queued request).
+                let Some(oldest) = st.queue.front() else {
+                    continue;
+                };
+                let deadline = oldest.enqueued + cfg.max_delay;
                 let now = Instant::now();
                 if now >= deadline {
                     break; // deadline trigger
@@ -500,6 +509,40 @@ mod tests {
             other => panic!("expected ShuttingDown, got {other:?}"),
         }
         b.shutdown();
+    }
+
+    #[test]
+    fn deadline_path_survives_wakeup_storms() {
+        // max_batch is unreachable, so every flush goes through the
+        // deadline arm — the one that inspects `queue.front()`. Racing
+        // submitters notify_all on every admit and concurrent depth()
+        // polls contend for the state lock, so the dispatcher re-runs
+        // its wait loop under heavy (including spurious-equivalent)
+        // wakeups. Every admitted request must still complete.
+        let cfg = BatchConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_micros(200),
+            queue_cap: 4096,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        thread::scope(|s| {
+            for t in 0..4 {
+                let b = &b;
+                s.spawn(move || {
+                    for i in 0..100 {
+                        let rx = b.submit(vec![(t * 100 + i) as f32]).unwrap();
+                        if i % 3 == 0 {
+                            // lock-contending poll between submits
+                            let _ = b.depth();
+                        }
+                        let r = recv(&rx);
+                        assert_eq!(r.logits, vec![(t * 100 + i) as f32]);
+                    }
+                });
+            }
+        });
+        assert_eq!(b.admitted(), 400);
+        assert_eq!(b.depth(), 0);
     }
 
     #[test]

@@ -31,10 +31,20 @@
 //! element is one lane-structured reduction, so {serial, pooled} ×
 //! {scalar, simd} all produce identical logits — see the contract in
 //! [`crate::kernels`].
+//!
+//! **Integer path** (`--int8`): [`qgemm_int`] / [`qconv2d_int`] are the
+//! i32-accumulate twins. Activations quantize to u8 against an
+//! observer-calibrated [`ActQuant`], weight codes stay u8, and the
+//! zero-point correction folds into the same per-output Σ term the
+//! float path already carries (see [`crate::kernels::qgemm_int`] for
+//! the identity and the `n·scale·step/2` accuracy bound, both
+//! property-tested below). Integer sums are order-independent, so
+//! serial ≡ pooled holds on this path too.
 
 use crate::kernels::{
-    dequant_affine, dot, matmul_bt, mha_forward_sample, par_blocks, rc_affine, sum, window_dot,
-    window_sum, SendPtr,
+    decode_codes_u8, dequant_affine, dot, dot_u8, matmul_bt, mha_forward_sample, par_blocks,
+    rc_affine, sum, sum_u8, window_dot, window_dot_u8, window_sum, window_sum_u8, ActQuant,
+    SendPtr, MAX_INT_DOT_COLS,
 };
 use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
@@ -314,6 +324,296 @@ pub fn qconv2d(
         }
         _ => {
             let mut scratch = vec![0f32; flen];
+            for blk in 0..nblocks {
+                run_block(blk, &mut scratch[..], &mut |idx, v| out[idx] = v);
+            }
+        }
+    }
+}
+
+/// Integer-domain twin of [`qgemm`]: activations quantize once per call
+/// to u8 against `act` (observer-calibrated), weight codes decode to u8,
+/// and the inner loop is a u8×u8→i32 dot. Dequantization is one fused
+/// affine per output element:
+///
+/// ```text
+/// out[b,r] = (α·s)·(Σ_j c[r,j]·q[b,j] − 128·Σ_j c[r,j])
+///          + (β·s)·(Σ_j q[b,j] − 128·cols)
+/// ```
+///
+/// Each output differs from [`qgemm`] by at most
+/// `cols · scale · act.step()/2` (+ f32 roundoff) when `act` covers the
+/// input range — the property tests below pin this. Requires
+/// `cols ≤ MAX_INT_DOT_COLS` (i32 accumulation is exact there; the
+/// serving planner falls back to the float kernel beyond it). Pooled
+/// runs are bit-identical to serial: integer sums are order-independent
+/// and the float finalize runs once per element.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    act: &ActQuant,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    assert_eq!(x.len(), batch * cols, "qgemm_int: x shape");
+    assert_eq!(out.len(), batch * rows, "qgemm_int: out shape");
+    assert!((1..=8).contains(&bits), "qgemm_int: bits {bits}");
+    assert!(cols <= MAX_INT_DOT_COLS, "qgemm_int: cols {cols} overflows i32 accumulation");
+    if rows == 0 || batch == 0 {
+        return;
+    }
+    let (alpha, beta) = rc_affine(bits as f32, scale);
+    let (af, bf) = (alpha * act.scale, beta * act.scale);
+
+    // Quantize the whole batch once; fold the zero-point half of the
+    // Σx̂ correction into a per-sample constant (the int analog of
+    // qgemm's `xsums`).
+    let mut qx = vec![0u8; batch * cols];
+    let mut xterms = vec![0f32; batch];
+    for b in 0..batch {
+        let qb = &mut qx[b * cols..(b + 1) * cols];
+        act.quantize(&x[b * cols..(b + 1) * cols], qb);
+        xterms[b] = bf * (sum_u8(qb) - 128 * cols as i32) as f32;
+    }
+
+    // Same per-call observation gates as qgemm (see there). The float
+    // input is observed, so calibration keeps tracking the true range
+    // while the integer path serves.
+    let prof = crate::obs::profiler().on();
+    let qs = crate::obs::qstats::qstats();
+    let qsample = qs.sample();
+    if qsample {
+        qs.observe_input(x);
+    }
+    let max_code = ((1u32 << bits) - 1) as u8;
+    let row_bytes = (cols * bits as usize).div_ceil(8) as u64;
+    let run_block = |blk: usize, scratch: &mut [u8], write: &mut dyn FnMut(usize, f32)| {
+        let r0 = blk * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
+        let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
+        for r in r0..r1 {
+            let t0 = if prof { Some(Instant::now()) } else { None };
+            decode_codes_u8(data, r * cols * bits as usize, bits, scratch);
+            let t1 = t0.map(|t| {
+                let now = Instant::now();
+                dec_ns += now.duration_since(t).as_nanos() as u64;
+                now
+            });
+            if qsample {
+                // raw integer codes: endpoint equality is exact
+                for &c in scratch.iter() {
+                    if c == 0 {
+                        sat_lo += 1;
+                    } else if c == max_code {
+                        sat_hi += 1;
+                    }
+                }
+            }
+            let wsum = sum_u8(scratch);
+            for b in 0..batch {
+                let acc = dot_u8(scratch, &qx[b * cols..(b + 1) * cols]);
+                write(b * rows + r, af * (acc - 128 * wsum) as f32 + xterms[b]);
+            }
+            if let Some(t) = t1 {
+                mm_ns += t.elapsed().as_nanos() as u64;
+            }
+        }
+        if prof {
+            let nrows = (r1 - r0) as u64;
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nrows * row_bytes, nrows * cols as u64);
+        }
+        if qsample {
+            qs.add_saturation(sat_lo, sat_hi);
+        }
+    };
+
+    let nblocks = rows.div_ceil(ROW_BLOCK);
+    match pool {
+        Some(pool) if nblocks > 1 => {
+            let optr = SendPtr(out.as_mut_ptr());
+            let optr = &optr;
+            pool.par_for(nblocks, move |blk| {
+                let mut scratch = vec![0u8; cols];
+                run_block(blk, &mut scratch[..], &mut |idx, v| {
+                    // SAFETY: `idx = b*rows + r` and every row `r` belongs
+                    // to exactly one block, so concurrent blocks write
+                    // disjoint cells of `out`, which outlives the scoped
+                    // par_for. No one reads `out` until par_for returns.
+                    unsafe { *optr.get().add(idx) = v }
+                });
+            });
+        }
+        _ => {
+            let mut scratch = vec![0u8; cols];
+            for blk in 0..nblocks {
+                run_block(blk, &mut scratch[..], &mut |idx, v| out[idx] = v);
+            }
+        }
+    }
+}
+
+/// Integer-domain twin of [`qconv2d`]: the same decode-once-per-filter
+/// structure with u8 filter codes against the u8-quantized activation
+/// map. Because `krange` clipping varies per output position, the code
+/// sum `Σ w` comes out of the *same clipped window* as the dot
+/// ([`crate::kernels::window_dot_u8`]); the per-position Σq and its tap
+/// count fold the zero-point correction into one f32 constant per
+/// position (the int analog of `psums`). Accuracy bound and the
+/// pooled ≡ serial guarantee are as in [`qgemm_int`], with the
+/// receptive-field length in place of `cols`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_int(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    x: &[f32],
+    batch: usize,
+    act: &ActQuant,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    let (out_h, out_w) = d.out_hw(in_h, in_w).expect("qconv2d_int: invalid geometry");
+    let in_elems = in_h * in_w * d.in_ch;
+    let out_elems = out_h * out_w * d.out_ch;
+    assert_eq!(x.len(), batch * in_elems, "qconv2d_int: x shape");
+    assert_eq!(out.len(), batch * out_elems, "qconv2d_int: out shape");
+    assert!((1..=8).contains(&bits), "qconv2d_int: bits {bits}");
+    let flen = d.filter_len();
+    assert!(flen <= MAX_INT_DOT_COLS, "qconv2d_int: filter {flen} overflows i32 accumulation");
+    if batch == 0 {
+        return;
+    }
+    let (alpha, beta) = rc_affine(bits as f32, scale);
+    let (af, bf) = (alpha * act.scale, beta * act.scale);
+
+    let mut qx = vec![0u8; batch * in_elems];
+    act.quantize(x, &mut qx);
+
+    // Per-position zero-point-corrected Σx̂ term, prefolded to f32:
+    // `(β·s)·(Σ q − 128·taps)` over each clipped receptive field —
+    // shared by every output channel, parallel over samples like the
+    // float path's psums pass.
+    let mut xterms = vec![0f32; batch * out_h * out_w];
+    let xterm_sample = |b: usize, prow: &mut dyn FnMut(usize, f32)| {
+        let qb = &qx[b * in_elems..(b + 1) * in_elems];
+        for oy in 0..out_h {
+            let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+            for ox in 0..out_w {
+                let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+                let seg = (kx1 - kx0) * d.in_ch;
+                let (qsum, taps) = window_sum_u8(qb, in_w, d.in_ch, ky0, ky1, iy0, ix0, seg);
+                prow((b * out_h + oy) * out_w + ox, bf * (qsum - 128 * taps) as f32);
+            }
+        }
+    };
+    match pool {
+        Some(pool) if batch > 1 => {
+            let pptr = SendPtr(xterms.as_mut_ptr());
+            let pptr = &pptr;
+            pool.par_for(batch, move |b| {
+                // SAFETY: sample `b` writes only indices in
+                // [b·out_h·out_w, (b+1)·out_h·out_w) — disjoint per task;
+                // `xterms` outlives the scoped par_for and is not read
+                // until it returns.
+                xterm_sample(b, &mut |idx, v| unsafe { *pptr.get().add(idx) = v });
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                xterm_sample(b, &mut |idx, v| xterms[idx] = v);
+            }
+        }
+    }
+
+    let prof = crate::obs::profiler().on();
+    // Same per-call observation gate as qgemm (see there).
+    let qs = crate::obs::qstats::qstats();
+    let qsample = qs.sample();
+    if qsample {
+        qs.observe_input(x);
+    }
+    let max_code = ((1u32 << bits) - 1) as u8;
+    let filter_bytes = (flen * bits as usize).div_ceil(8) as u64;
+    let run_block = |blk: usize, scratch: &mut [u8], write: &mut dyn FnMut(usize, f32)| {
+        let oc0 = blk * FILTER_BLOCK;
+        let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
+        let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
+        let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
+        for oc in oc0..oc1 {
+            // decode this filter's kh·kw·in_ch codes exactly once
+            let t0 = if prof { Some(Instant::now()) } else { None };
+            decode_codes_u8(data, oc * flen * bits as usize, bits, scratch);
+            let t1 = t0.map(|t| {
+                let now = Instant::now();
+                dec_ns += now.duration_since(t).as_nanos() as u64;
+                now
+            });
+            if qsample {
+                for &c in scratch.iter() {
+                    if c == 0 {
+                        sat_lo += 1;
+                    } else if c == max_code {
+                        sat_hi += 1;
+                    }
+                }
+            }
+            for b in 0..batch {
+                let qb = &qx[b * in_elems..(b + 1) * in_elems];
+                for oy in 0..out_h {
+                    let (ky0, ky1, iy0) = krange(oy, d.stride, d.pad, d.kh, in_h);
+                    for ox in 0..out_w {
+                        let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
+                        let seg = (kx1 - kx0) * d.in_ch;
+                        let (acc, wsum) = window_dot_u8(
+                            scratch, qb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
+                        );
+                        let pos = (b * out_h + oy) * out_w + ox;
+                        write(pos * d.out_ch + oc, af * (acc - 128 * wsum) as f32 + xterms[pos]);
+                    }
+                }
+            }
+            if let Some(t) = t1 {
+                mm_ns += t.elapsed().as_nanos() as u64;
+            }
+        }
+        if prof {
+            let nf = (oc1 - oc0) as u64;
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nf * filter_bytes, nf * flen as u64);
+        }
+        if qsample {
+            qs.add_saturation(sat_lo, sat_hi);
+        }
+    };
+
+    let nblocks = d.out_ch.div_ceil(FILTER_BLOCK);
+    match pool {
+        Some(pool) if nblocks > 1 => {
+            let optr = SendPtr(out.as_mut_ptr());
+            let optr = &optr;
+            pool.par_for(nblocks, move |blk| {
+                let mut scratch = vec![0u8; flen];
+                run_block(blk, &mut scratch[..], &mut |idx, v| {
+                    // SAFETY: `idx = pos·out_ch + oc` and every filter
+                    // `oc` belongs to exactly one block, so concurrent
+                    // blocks write disjoint cells of `out`, which
+                    // outlives the scoped par_for. No one reads `out`
+                    // until par_for returns.
+                    unsafe { *optr.get().add(idx) = v }
+                });
+            });
+        }
+        _ => {
+            let mut scratch = vec![0u8; flen];
             for blk in 0..nblocks {
                 run_block(blk, &mut scratch[..], &mut |idx, v| out[idx] = v);
             }
@@ -721,6 +1021,161 @@ mod tests {
         let p = pack_layer("c", &rand_vec(d.weight_numel().unwrap(), 1), 4);
         let mut out = vec![0f32; 0];
         qconv2d(&p.data, 4, p.scale, &d, 4, 4, &[], 0, &mut out, None);
+    }
+
+    #[test]
+    fn qgemm_int_within_step_bound_of_f32_core() {
+        // property (the tentpole accuracy contract): with calibration
+        // covering the true input range, every int8 output differs from
+        // the f32 core by at most cols · weight_scale · step/2 — each
+        // activation quantizes within step/2 and every lattice weight
+        // satisfies |w| ≤ scale — plus f32 roundoff slack.
+        crate::util::prop::check(60, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let rows = g.usize_in(1, 70);
+            let cols = g.usize_in(1, 120);
+            let batch = g.usize_in(1, 4);
+            let w = g.vec_normal(rows * cols, 0.5);
+            let p = pack_layer("l", &w, bits);
+            let x = g.vec_normal(batch * cols, 0.8);
+            let absmax = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            let act = ActQuant::from_absmax(absmax);
+
+            let mut f32_out = vec![0f32; batch * rows];
+            let mut int_out = vec![0f32; batch * rows];
+            qgemm(&p.data, bits, p.scale, rows, cols, &x, batch, &mut f32_out, None);
+            qgemm_int(&p.data, bits, p.scale, rows, cols, &x, batch, &act, &mut int_out, None);
+            let bound = cols as f32 * p.scale * act.step() / 2.0;
+            for (i, (a, e)) in int_out.iter().zip(&f32_out).enumerate() {
+                crate::util::prop::ensure(
+                    (a - e).abs() <= bound + 1e-4 * (1.0 + e.abs()),
+                    format!(
+                        "bits {bits} rows {rows} cols {cols} idx {i}: |{a} - {e}| > {bound}"
+                    ),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qgemm_int_pool_is_bitwise_equal_to_serial() {
+        // integer sums are order-independent and the float finalize runs
+        // once per element, so the int path keeps the serial ≡ pooled
+        // half of the bit-exactness contract
+        let pool = ThreadPool::new(4);
+        crate::util::prop::check(25, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let rows = g.usize_in(1, 90);
+            let cols = g.usize_in(1, 70);
+            let batch = g.usize_in(1, 4);
+            let w = g.vec_normal(rows * cols, 0.5);
+            let p = pack_layer("l", &w, bits);
+            let x = g.vec_normal(batch * cols, 0.5);
+            let act = ActQuant::from_absmax(x.iter().fold(0f32, |a, &v| a.max(v.abs())));
+            let mut serial = vec![0f32; batch * rows];
+            let mut pooled = serial.clone();
+            qgemm_int(&p.data, bits, p.scale, rows, cols, &x, batch, &act, &mut serial, None);
+            qgemm_int(
+                &p.data, bits, p.scale, rows, cols, &x, batch, &act, &mut pooled, Some(&pool),
+            );
+            crate::util::prop::ensure(
+                serial == pooled,
+                format!("bits {bits} rows {rows} cols {cols} batch {batch}: pooled != serial"),
+            )
+        });
+    }
+
+    #[test]
+    fn qconv2d_int_within_step_bound_of_f32_core() {
+        // conv twin of the gemm bound, across strides/pads so clipped
+        // (padding) windows are exercised: the bound uses the full
+        // receptive-field length, an upper bound on every clipped window
+        crate::util::prop::check(60, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let d = Conv2dDesc {
+                in_ch: g.usize_in(1, 3),
+                out_ch: g.usize_in(1, 6),
+                kh: g.usize_in(1, 3),
+                kw: g.usize_in(1, 3),
+                stride: g.usize_in(1, 3),
+                pad: g.usize_in(0, 2),
+            };
+            let in_h = g.usize_in(d.kh.saturating_sub(2 * d.pad).max(1), 7);
+            let in_w = g.usize_in(d.kw.saturating_sub(2 * d.pad).max(1), 7);
+            if d.out_hw(in_h, in_w).is_err() {
+                return Ok(());
+            }
+            let batch = g.usize_in(1, 3);
+            let w = g.vec_normal(d.weight_numel().unwrap(), 0.3);
+            let p = pack_layer("c", &w, bits);
+            let x = g.vec_normal(batch * in_h * in_w * d.in_ch, 0.5);
+            let act = ActQuant::from_absmax(x.iter().fold(0f32, |a, &v| a.max(v.abs())));
+            let (oh, ow) = d.out_hw(in_h, in_w).unwrap();
+            let mut f32_out = vec![0f32; batch * oh * ow * d.out_ch];
+            let mut int_out = f32_out.clone();
+            qconv2d(&p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &mut f32_out, None);
+            qconv2d_int(
+                &p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &act, &mut int_out, None,
+            );
+            let bound = d.filter_len() as f32 * p.scale * act.step() / 2.0;
+            for (i, (a, e)) in int_out.iter().zip(&f32_out).enumerate() {
+                crate::util::prop::ensure(
+                    (a - e).abs() <= bound + 1e-4 * (1.0 + e.abs()),
+                    format!("bits {bits} {d:?} idx {i}: |{a} - {e}| > {bound}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qconv2d_int_pool_is_bitwise_equal_to_serial() {
+        let pool = ThreadPool::new(4);
+        crate::util::prop::check(20, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let d = Conv2dDesc {
+                in_ch: g.usize_in(1, 3),
+                out_ch: g.usize_in(5, 13),
+                kh: g.usize_in(1, 3),
+                kw: g.usize_in(1, 3),
+                stride: g.usize_in(1, 2),
+                pad: g.usize_in(0, 1),
+            };
+            let in_h = g.usize_in(d.kh.max(3), 9);
+            let in_w = g.usize_in(d.kw.max(3), 9);
+            if d.out_hw(in_h, in_w).is_err() {
+                return Ok(());
+            }
+            let batch = g.usize_in(1, 4);
+            let w = g.vec_normal(d.weight_numel().unwrap(), 0.3);
+            let p = pack_layer("c", &w, bits);
+            let x = g.vec_normal(batch * in_h * in_w * d.in_ch, 0.3);
+            let act = ActQuant::from_absmax(x.iter().fold(0f32, |a, &v| a.max(v.abs())));
+            let (oh, ow) = d.out_hw(in_h, in_w).unwrap();
+            let mut serial = vec![0f32; batch * oh * ow * d.out_ch];
+            let mut pooled = serial.clone();
+            qconv2d_int(
+                &p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &act, &mut serial, None,
+            );
+            qconv2d_int(
+                &p.data, bits, p.scale, &d, in_h, in_w, &x, batch, &act, &mut pooled,
+                Some(&pool),
+            );
+            crate::util::prop::ensure(
+                serial == pooled,
+                format!("bits {bits} {d:?} batch {batch}: pooled != serial"),
+            )
+        });
+    }
+
+    #[test]
+    fn qgemm_int_empty_batch_and_rows() {
+        let p = pack_layer("l", &rand_vec(12, 1), 3);
+        let act = ActQuant::from_absmax(1.0);
+        let mut out = vec![0f32; 0];
+        qgemm_int(&p.data, 3, p.scale, 4, 3, &[], 0, &act, &mut out, None);
+        qgemm_int(&p.data, 3, p.scale, 0, 3, &[0.0; 3], 1, &act, &mut out, None);
     }
 
     /// Pack a random d×d projection at `bits` and return it alongside its

@@ -33,7 +33,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::kernels;
 use super::kernels::ProjWeights;
-use crate::kernels::{axpy, gelu, layernorm_rows, LN_EPS};
+use crate::kernels::{axpy, gelu, layernorm_rows, ActQuant, LN_EPS, MAX_INT_DOT_COLS};
 use crate::quant::pack::{BitReader, Conv2dDesc, LayerOp, PackedLayer, PackedModel};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -163,6 +163,15 @@ pub struct QuantLayer {
     pub relu: bool,
     /// GELU fused after this layer (v4; exclusive with `relu`).
     pub gelu: bool,
+    /// Static worst-case magnitude of this layer's *input* activations,
+    /// assuming unit-bounded model inputs (|x| ≤ 1) and chaining each
+    /// layer's analytic amplification (see [`QuantLayer::out_bound`]).
+    /// The integer serving path quantizes activations against this when
+    /// the live observers have no EMA yet — conservative (wide lattice,
+    /// coarser step) but never clips in-spec traffic. Set by
+    /// [`ServableModel::from_packed`]; the bare linear constructor leaves
+    /// the unit default.
+    pub act_bound: f32,
     data: Vec<u8>,
 }
 
@@ -231,6 +240,7 @@ impl QuantLayer {
             kind,
             relu: l.relu,
             gelu: l.gelu,
+            act_bound: 1.0,
             data: l.data.clone(),
         };
         Ok((q, out_shape))
@@ -259,6 +269,7 @@ impl QuantLayer {
                     kind,
                     relu: l.relu,
                     gelu: l.gelu,
+                    act_bound: 1.0,
                     data: l.data.clone(),
                 },
                 out,
@@ -439,6 +450,43 @@ impl QuantLayer {
         }
     }
 
+    /// Worst-case output magnitude given input magnitudes ≤ `b` — one
+    /// step of the static activation-bound chain behind `act_bound`:
+    ///
+    /// * (position-wise) linear: `|y| ≤ Σ|w||x| ≤ cols · scale · b`
+    ///   (every dequantized RoundClamp weight satisfies `|w| ≤ scale`);
+    /// * conv2d: the same with `filter_len` taps per output;
+    /// * layernorm (affine-free): a normalized row of `cols` elements
+    ///   has L2 norm `√cols`, so no element exceeds `√cols` — the input
+    ///   bound stops mattering;
+    /// * attention: softmax mixes V rows convexly, so the context is
+    ///   bounded by the V projection's output (`d · v.scale · b`), and
+    ///   the output projection amplifies once more;
+    /// * residual: handled by the caller (needs the source layer's
+    ///   bound, not just the incoming one);
+    /// * seqview / meanpool / fused ReLU / fused GELU never increase a
+    ///   magnitude bound (`|gelu(x)| ≤ |x|`).
+    ///
+    /// Clamped to a sane range so degenerate scales can't produce a zero
+    /// or infinite calibration.
+    fn out_bound(&self, b: f32) -> f32 {
+        let out = match &self.kind {
+            LayerKind::Linear { cols, .. } | LayerKind::LinearSeq { cols, .. } => {
+                b * self.scale * *cols as f32
+            }
+            LayerKind::Conv2d { desc, .. } => b * self.scale * desc.filter_len() as f32,
+            LayerKind::LayerNorm { cols, .. } => (*cols as f32).sqrt(),
+            LayerKind::Attention { heads, head_dim, v, proj, .. } => {
+                let d = (heads * head_dim) as f32;
+                b * v.scale * d * proj.scale * d
+            }
+            LayerKind::Residual { .. }
+            | LayerKind::SeqView { .. }
+            | LayerKind::MeanPool { .. } => b,
+        };
+        out.clamp(1e-6, 1e12)
+    }
+
     /// Packed weight element count (attention counts its four folded
     /// projections).
     pub fn weight_numel(&self) -> usize {
@@ -509,6 +557,46 @@ impl QuantLayer {
                     }
                 }
             }
+        }
+    }
+
+    /// Whether the integer path has a kernel for this layer: payload
+    /// linears and convs whose reduction length fits the i32 accumulator
+    /// ([`MAX_INT_DOT_COLS`]). Structural v4 ops and attention stay on
+    /// the float kernels.
+    pub fn supports_int(&self) -> bool {
+        match &self.kind {
+            LayerKind::Linear { cols, .. } | LayerKind::LinearSeq { cols, .. } => {
+                *cols <= MAX_INT_DOT_COLS
+            }
+            LayerKind::Conv2d { desc, .. } => desc.filter_len() <= MAX_INT_DOT_COLS,
+            _ => false,
+        }
+    }
+
+    /// Integer-domain twin of [`QuantLayer::forward`] for the kinds
+    /// [`QuantLayer::supports_int`] accepts. The caller picks the
+    /// activation quantizer (live EMA calibration or the `act_bound`
+    /// fallback — see [`ServableModel::act_quant`]).
+    pub fn forward_int(
+        &self,
+        x: &[f32],
+        batch: usize,
+        act: &ActQuant,
+        out: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) {
+        match &self.kind {
+            LayerKind::Linear { rows, cols } => kernels::qgemm_int(
+                &self.data, self.bits, self.scale, *rows, *cols, x, batch, act, out, pool,
+            ),
+            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm_int(
+                &self.data, self.bits, self.scale, *rows, *cols, x, batch * seq, act, out, pool,
+            ),
+            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d_int(
+                &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, act, out, pool,
+            ),
+            _ => unreachable!("forward_int on a layer without an integer kernel"),
         }
     }
 
@@ -698,6 +786,11 @@ pub struct ServableModel {
     /// Static quantization analysis of the source pack, computed once at
     /// load time (one generation = one analysis).
     pub analysis: ModelAnalysis,
+    /// Serve int-capable layers through the integer kernels (`--int8`):
+    /// activations quantize to u8 against [`ServableModel::act_quant`]'s
+    /// calibration and the inner loops accumulate in i32. Off by
+    /// default; when off, execution is the float path, bit for bit.
+    pub int8: bool,
 }
 
 impl ServableModel {
@@ -716,11 +809,21 @@ impl ServableModel {
             // a conv pack with a recorded shape the override contradicts
             // can never plan — say so directly instead of letting the
             // conv layer misdiagnose a "missing" shape header
-            Some((h, w, c)) if pm.has_conv() => bail!(
-                "model {name:?}: input dim {input_dim} contradicts the pack's recorded \
-                 input shape {h}x{w}x{c} (= {}) — drop the --input-dim override",
-                h.saturating_mul(w).saturating_mul(c)
-            ),
+            Some((h, w, c)) if pm.has_conv() => {
+                match h.checked_mul(w).and_then(|hw| hw.checked_mul(c)) {
+                    Some(n) => bail!(
+                        "model {name:?}: input dim {input_dim} contradicts the pack's \
+                         recorded input shape {h}x{w}x{c} (= {n}) — drop the --input-dim \
+                         override"
+                    ),
+                    // h·w·c overflowing usize means the header lies; reject
+                    // it outright instead of quoting a saturated product
+                    None => bail!(
+                        "model {name:?}: the pack's recorded input shape {h}x{w}x{c} \
+                         overflows the address space — corrupt or forged header"
+                    ),
+                }
+            }
             // an MLP pack with a disagreeing override falls back to flat;
             // the dim chain then accepts or rejects it as before
             _ => ActShape::Flat(input_dim),
@@ -739,14 +842,27 @@ impl ServableModel {
         let mut layers = Vec::with_capacity(pm.layers.len());
         let mut planned_of = vec![usize::MAX; pm.layers.len()];
         let mut out_shapes: Vec<ActShape> = Vec::with_capacity(pm.layers.len());
+        // static activation-bound chain for the integer path's fallback
+        // calibration: model inputs are assumed unit-bounded, each layer
+        // amplifies analytically (see QuantLayer::out_bound)
+        let mut bound = 1.0f32;
+        let mut out_bounds: Vec<f32> = Vec::with_capacity(pm.layers.len());
         for (i, l) in pm.layers.iter().enumerate() {
             if consumed[i] {
                 continue;
             }
-            let (q, next) = QuantLayer::plan_graph(l, shape, pm, &planned_of, &out_shapes)
+            let (mut q, next) = QuantLayer::plan_graph(l, shape, pm, &planned_of, &out_shapes)
                 .with_context(|| format!("model {name:?}"))?;
+            q.act_bound = bound;
+            bound = match q.kind {
+                // a residual's output is bounded by the sum of both
+                // branches' bounds, not by out_bound's single input
+                LayerKind::Residual { src, .. } => (bound + out_bounds[src]).clamp(1e-6, 1e12),
+                _ => q.out_bound(bound),
+            };
             planned_of[i] = layers.len();
             out_shapes.push(next);
+            out_bounds.push(bound);
             shape = next;
             layers.push(q);
         }
@@ -755,6 +871,7 @@ impl ServableModel {
             input_dim,
             layers,
             analysis: analyze_packed(pm),
+            int8: false,
         })
     }
 
@@ -793,6 +910,24 @@ impl ServableModel {
 
     pub fn compression(&self) -> f64 {
         self.fp32_bytes() as f64 / self.payload_bytes().max(1) as f64
+    }
+
+    /// The activation quantizer the integer path would use for layer
+    /// `idx` right now, and whether it came from the live observers
+    /// (`true`: qstats EMA absmax under this model's per-layer key) or
+    /// from the static `act_bound` fallback (`false`: no samples yet, or
+    /// qstats disabled). Re-resolved per batch, so calibration tightens
+    /// as traffic accumulates without a reload.
+    pub fn act_quant(&self, idx: usize) -> (ActQuant, bool) {
+        let layer = &self.layers[idx];
+        let qs = crate::obs::qstats::qstats();
+        if qs.on() {
+            let key = format!("{}/{:02}:{}", self.name, idx, layer.name);
+            if let Some(a) = qs.layer(&key).ema_absmax() {
+                return (ActQuant::from_absmax(a), true);
+            }
+        }
+        (ActQuant::from_absmax(layer.act_bound), false)
     }
 
     /// Batched forward pass: `x` is `batch` rows of `input_dim`,
@@ -856,7 +991,12 @@ impl ServableModel {
                 }
             } else {
                 next = vec![0f32; batch * layer.out_elems()];
-                layer.forward(src, batch, &mut next, pool);
+                if self.int8 && layer.supports_int() {
+                    let (act, _) = self.act_quant(i);
+                    layer.forward_int(src, batch, &act, &mut next, pool);
+                } else {
+                    layer.forward(src, batch, &mut next, pool);
+                }
             }
             if layer.relu {
                 for v in next.iter_mut() {
@@ -1103,6 +1243,41 @@ mod tests {
             msg.contains("contradicts") && msg.contains("8x8x3"),
             "want a pointed override-vs-shape diagnosis, got: {msg}"
         );
+    }
+
+    #[test]
+    fn forged_overflowing_conv_shape_is_rejected() {
+        // a lying v3/v4 header whose h·w·c overflows usize used to be
+        // quoted as a saturated usize::MAX product; it must be a load
+        // error that names the header as the culprit
+        let mut pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 3).unwrap();
+        let big = u32::MAX as usize;
+        pm.input_hwc = (big, big, big);
+        let err = ServableModel::from_packed("c", &pm, 999).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("overflows"), "want the forged-header diagnosis, got: {msg}");
+    }
+
+    #[test]
+    fn act_bound_chains_through_the_plan() {
+        // layer 0 sees the unit input assumption; layer 1 sees layer 0's
+        // analytic amplification (cols · scale taps per output)
+        let pm = toy_model(12, 8, 4);
+        let m = ServableModel::from_packed("b", &pm, 12).unwrap();
+        assert_eq!(m.layers[0].act_bound, 1.0);
+        let want = m.layers[0].scale * 12.0;
+        let got = m.layers[1].act_bound;
+        assert!((got - want).abs() <= 1e-6 * want, "{got} vs {want}");
+        // conv chain: filter_len taps per output
+        let cpm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 3).unwrap();
+        let cm = ServableModel::from_packed_auto("cb", &cpm, None).unwrap();
+        let flen = match cm.layers[0].kind {
+            LayerKind::Conv2d { desc, .. } => desc.filter_len(),
+            _ => panic!("layer 0 should be conv"),
+        };
+        let want = cm.layers[0].scale * flen as f32;
+        let got = cm.layers[1].act_bound;
+        assert!((got - want).abs() <= 1e-6 * want, "{got} vs {want}");
     }
 
     #[test]
@@ -1423,6 +1598,103 @@ mod tests {
         let plain = m.infer_batch(&x, 5, None).unwrap();
         assert_eq!(observed, plain);
         qs.reset_prefix("qsattr/");
+    }
+
+    #[test]
+    fn int8_static_fallback_respects_error_bound() {
+        // single linear layer, unit-bounded inputs: the static act_bound
+        // (1.0) genuinely covers the traffic, so every logit must sit
+        // within the per-layer bound n · weight_scale · step/2
+        let _guard = crate::obs::qstats::test_mutex();
+        let pm = PackedModel::synth_mlp(&[12, 5], &[4], 2).unwrap();
+        let mut m = ServableModel::from_packed("int8b", &pm, 12).unwrap();
+        let x: Vec<f32> = rand_vec(3 * 12, 21).iter().map(|v| v.clamp(-1.0, 1.0)).collect();
+        let f32_logits = m.infer_batch(&x, 3, None).unwrap();
+        m.int8 = true;
+        let int_logits = m.infer_batch(&x, 3, None).unwrap();
+        let (act, from_ema) = m.act_quant(0);
+        assert!(!from_ema, "qstats is off — the static fallback must be in effect");
+        let bound = 12.0 * m.layers[0].scale * act.step() / 2.0;
+        for (i, (g, e)) in int_logits.iter().zip(&f32_logits).enumerate() {
+            assert!(
+                (g - e).abs() <= bound + 1e-4 * (1.0 + e.abs()),
+                "logit {i}: {g} vs {e}, bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_off_stays_bit_identical_through_a_toggle() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let pm = toy_model(12, 8, 4);
+        let mut m = ServableModel::from_packed("int8t", &pm, 12).unwrap();
+        let x = rand_vec(4 * 12, 33);
+        let before = m.infer_batch(&x, 4, None).unwrap();
+        m.int8 = true;
+        let int = m.infer_batch(&x, 4, None).unwrap();
+        assert_ne!(before, int, "the integer path should actually engage");
+        m.int8 = false;
+        let after = m.infer_batch(&x, 4, None).unwrap();
+        assert_eq!(before, after, "toggling int8 off must restore the float bits");
+    }
+
+    #[test]
+    fn int8_calibration_prefers_observer_ema() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let pm = toy_model(12, 8, 4);
+        let mut m = ServableModel::from_packed("int8c", &pm, 12).unwrap();
+        let qs = crate::obs::qstats::qstats();
+        let x = rand_vec(5 * 12, 3);
+        let (_, from_ema) = m.act_quant(0);
+        assert!(!from_ema, "no observations yet — static fallback");
+        qs.set_rate(1.0);
+        qs.enable(true);
+        let f32_logits = m.infer_batch(&x, 5, None).unwrap();
+        let (a0, from_ema) = m.act_quant(0);
+        assert!(from_ema, "one observed batch is enough to calibrate");
+        let (a1, _) = m.act_quant(1);
+        m.int8 = true;
+        let int_logits = m.infer_batch(&x, 5, None).unwrap();
+        qs.enable(false);
+        // compositional bound: layer 0 contributes e1 per hidden unit
+        // (ReLU is 1-Lipschitz); layer 1 adds its own half-step plus up
+        // to e1 of clipping (its EMA saw the *float* hidden values)
+        let e1 = 12.0 * m.layers[0].scale * a0.step() / 2.0;
+        let bound = 8.0 * m.layers[1].scale * (2.0 * e1 + a1.step() / 2.0);
+        for (i, (g, e)) in int_logits.iter().zip(&f32_logits).enumerate() {
+            assert!(
+                (g - e).abs() <= bound + 1e-4 * (1.0 + e.abs()),
+                "logit {i}: {g} vs {e}, bound {bound}"
+            );
+        }
+        qs.reset_prefix("int8c/");
+    }
+
+    #[test]
+    fn int8_falls_back_to_float_kernels_on_oversized_reductions() {
+        // a reduction longer than the i32 accumulator allows must serve
+        // through the float kernels even with int8 on — bit-identically
+        let cols = MAX_INT_DOT_COLS + 1;
+        let pm = PackedModel::synth_mlp(&[cols, 1], &[4], 3).unwrap();
+        let mut m = ServableModel::from_packed("int8wide", &pm, cols).unwrap();
+        assert!(!m.layers[0].supports_int());
+        let x = rand_vec(cols, 5);
+        let f = m.infer_batch(&x, 1, None).unwrap();
+        m.int8 = true;
+        assert_eq!(m.infer_batch(&x, 1, None).unwrap(), f);
+    }
+
+    #[test]
+    fn int8_conv_pooled_matches_serial() {
+        let _guard = crate::obs::qstats::test_mutex();
+        let cpm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 7).unwrap();
+        let mut m = ServableModel::from_packed_auto("int8cv", &cpm, None).unwrap();
+        m.int8 = true;
+        let x = rand_vec(2 * m.input_dim, 13);
+        let serial = m.infer_batch(&x, 2, None).unwrap();
+        assert!(serial.iter().all(|v| v.is_finite()));
+        let pool = ThreadPool::new(3);
+        assert_eq!(m.infer_batch(&x, 2, Some(&pool)).unwrap(), serial);
     }
 
     #[test]
