@@ -11,12 +11,52 @@
 
 use std::time::Duration;
 
+use std::path::Path;
+
 use msq::bench::BenchResult;
-use msq::net::loadgen::{self, LoadgenConfig};
+use msq::net::loadgen::{self, LoadgenConfig, Scenario};
 use msq::net::{Gateway, GatewayConfig};
 use msq::quant::pack::PackedModel;
 use msq::serve::ServerConfig;
 use msq::util::json::Json;
+
+/// Drive one bursty run against a fresh gateway whose batcher queue is
+/// deliberately small (`queue_cap` 64). With `admit_wait` 0 the bursts
+/// slam straight into the cap and shed (429); with a wait room they
+/// queue up to the 500 ms deadline instead. Returns the loadgen report
+/// as JSON for the `burst` section of `BENCH_http.json`.
+fn burst_run(path: &Path, admit_wait: usize, requests: usize, concurrency: usize) -> Json {
+    let gw = Gateway::start(
+        GatewayConfig {
+            port: 0,
+            max_conns: concurrency + 4,
+            server: ServerConfig {
+                queue_cap: 64,
+                admit_wait,
+                admit_deadline: Duration::from_millis(500),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        &[("mlp".to_string(), path.to_path_buf(), None)],
+    )
+    .expect("gateway start");
+    let report = loadgen::run(&LoadgenConfig {
+        addr: gw.addr().to_string(),
+        model: "mlp".into(),
+        requests,
+        concurrency,
+        batch: 1,
+        seed: 7,
+        timeout: Duration::from_secs(60),
+        scenario: Scenario::Bursty { burst: 32, gap: Duration::from_millis(20) },
+    })
+    .expect("burst loadgen");
+    let mode = if admit_wait == 0 { "shed" } else { "admission" };
+    println!("burst/{mode}: {}", report.summary());
+    gw.shutdown();
+    report.to_json()
+}
 
 fn main() {
     let dims = [3072usize, 512, 128, 10];
@@ -47,7 +87,7 @@ fn main() {
             server: ServerConfig::default(),
             ..Default::default()
         },
-        &[("mlp".to_string(), path, None)],
+        &[("mlp".to_string(), path.clone(), None)],
     )
     .expect("gateway start");
     let addr = gw.addr().to_string();
@@ -61,6 +101,7 @@ fn main() {
         batch: 1,
         seed: 7,
         timeout: Duration::from_secs(60),
+        scenario: Scenario::Steady,
     })
     .expect("loadgen");
     println!("closed loop: {}", report.summary());
@@ -72,6 +113,13 @@ fn main() {
         let server = state.server(&names[0]).expect("model");
         server.metrics.snapshot(server.queue_depth())
     };
+    gw.shutdown();
+
+    // burst comparison: same bursty open-loop traffic against a small
+    // batcher queue, with and without the admission wait room
+    let burst_requests = (requests / 4).max(200);
+    let shed = burst_run(&path, 0, burst_requests, concurrency);
+    let admission = burst_run(&path, 256, burst_requests, concurrency);
 
     let out = Json::obj(vec![
         ("bench", Json::Str("http_gateway".into())),
@@ -83,6 +131,7 @@ fn main() {
         ("concurrency", Json::Num(concurrency as f64)),
         ("loadgen", report.to_json()),
         ("server", server_metrics),
+        ("burst", Json::obj(vec![("shed", shed), ("admission", admission)])),
     ]);
     std::fs::write("BENCH_http.json", out.to_string() + "\n").expect("write BENCH_http.json");
     println!("wrote BENCH_http.json");
@@ -98,6 +147,4 @@ fn main() {
     };
     r.report(Some((1.0, "req")));
     msq::bench::save("http_gateway.csv", &[r]);
-
-    gw.shutdown();
 }

@@ -46,6 +46,8 @@ const VALUE_OPTS: &[&str] = &[
     "queue-cap", "threads", "input-dim", "dims", "bits", "backend", "hidden", "host", "port",
     "max-conns", "read-timeout-ms", "max-body", "run-secs", "addr", "timeout-s", "arch",
     "size", "channels", "seq", "heads", "depth", "dim", "telemetry", "admin-token",
+    "replicas", "weight-cache-mb", "queue-depth", "admit-deadline-ms", "scenario", "burst",
+    "gap-ms",
 ];
 
 fn main() -> Result<()> {
@@ -85,6 +87,8 @@ fn main() -> Result<()> {
                  gateway:    --packed [name=]model.msqpack … [--host 127.0.0.1] [--port 8080]\n\
                  \x20           [--max-conns 64] [--max-body BYTES] [--input-dim D]\n\
                  \x20           [--max-batch 32] [--max-delay-ms 5] [--queue-cap 1024]\n\
+                 \x20           [--queue-depth 0] [--admit-deadline-ms 100] [--replicas 0]\n\
+                 \x20           [--weight-cache-mb 0]\n\
                  \x20           [--threads 0] [--run-secs N] [--quiet] [--profile]\n\
                  \x20           [--admin-token TOKEN] [--qstats[=RATE]] [--int8]\n\
                  \x20           (HTTP: POST /v1/models/{{name}}/infer, GET /healthz,\n\
@@ -95,10 +99,16 @@ fn main() -> Result<()> {
                  \x20            calls, default 1.0); --int8 serves matmul/conv layers in\n\
                  \x20            the integer domain, calibrated from qstats observers when\n\
                  \x20            on; --admin-token gates /admin/reload and GET /debug/*\n\
-                 \x20            with a Bearer token)\n\
+                 \x20            with a Bearer token; --queue-depth > 0 lets queue-full\n\
+                 \x20            requests wait up to --admit-deadline-ms for a slot;\n\
+                 \x20            --replicas 0 = one accept loop per core;\n\
+                 \x20            --weight-cache-mb > 0 shares decoded weights across\n\
+                 \x20            replicas under that LRU byte budget)\n\
                  loadgen:    --addr 127.0.0.1:8080 --model M [--requests 1000]\n\
                  \x20           [--concurrency 8] [--batch 1] [--seed S] [--out report.json]\n\
+                 \x20           [--scenario steady|bursty|zipfian] [--burst 16] [--gap-ms 20]\n\
                  \x20           [--json]\n\
+                 \x20           (zipfian: repeat --model; the k-th listed gets 1/k weight)\n\
                  pack-synth: [--arch mlp|conv|transformer] [--dims 3072,256,10] [--bits 4,8]\n\
                  \x20           [--seed S] [--size 32] [--seq 8 --heads 2 --depth 2]\n\
                  \x20           --out demo.msqpack\n\
@@ -130,6 +140,9 @@ fn server_config(args: &Args) -> ServerConfig {
         max_delay: Duration::from_millis(args.opt_u64("max-delay-ms", 5)),
         queue_cap: args.opt_usize("queue-cap", 1024),
         threads: args.opt_usize("threads", 0),
+        // --queue-depth 0 (default) = legacy immediate shed at the cap
+        admit_wait: args.opt_usize("queue-depth", 0),
+        admit_deadline: Duration::from_millis(args.opt_u64("admit-deadline-ms", 100)),
     }
 }
 
@@ -244,6 +257,8 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         profile: args.flag("profile"),
         qstats,
         int8: args.flag("int8"),
+        replicas: args.opt_usize("replicas", 0),
+        weight_cache_mb: args.opt_usize("weight-cache-mb", 0),
         server: server_config(args),
     };
     let gw = msq::net::Gateway::start(cfg, &models)?;
@@ -268,19 +283,39 @@ fn cmd_gateway(args: &Args) -> Result<()> {
 }
 
 /// `msq loadgen` — closed-loop HTTP load against a running gateway.
+/// `--scenario bursty` sends `--burst` back-to-back then sleeps
+/// `--gap-ms`; `--scenario zipfian` Zipf-mixes every `--model` given
+/// (repeatable, 1/k weight on the k-th).
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    use msq::net::loadgen::Scenario;
+    let models = args.opts("model");
+    let scenario = match args.opt_or("scenario", "steady") {
+        "steady" => Scenario::Steady,
+        "bursty" => Scenario::Bursty {
+            burst: args.opt_usize("burst", 16),
+            gap: Duration::from_millis(args.opt_u64("gap-ms", 20)),
+        },
+        "zipfian" => Scenario::Zipfian { models: models.iter().map(|m| m.to_string()).collect() },
+        other => bail!("bad --scenario {other:?} (steady|bursty|zipfian)"),
+    };
     let cfg = msq::net::LoadgenConfig {
         addr: args.opt_or("addr", "127.0.0.1:8080").to_string(),
-        model: args.opt_or("model", "mlp").to_string(),
+        model: models.first().copied().unwrap_or("mlp").to_string(),
         requests: args.opt_usize("requests", 1000),
         concurrency: args.opt_usize("concurrency", 8),
         batch: args.opt_usize("batch", 1),
         seed: args.opt_u64("seed", 42),
         timeout: Duration::from_secs(args.opt_u64("timeout-s", 30)),
+        scenario,
     };
     eprintln!(
-        "[loadgen] {} -> {} | {} reqs x {} conns, batch {}",
-        cfg.addr, cfg.model, cfg.requests, cfg.concurrency, cfg.batch
+        "[loadgen] {} -> {} | {} reqs x {} conns, batch {}, scenario {}",
+        cfg.addr,
+        cfg.model,
+        cfg.requests,
+        cfg.concurrency,
+        cfg.batch,
+        cfg.scenario.name()
     );
     let report = msq::net::loadgen::run(&cfg)?;
     eprintln!("[loadgen] {}", report.summary());

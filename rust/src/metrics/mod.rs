@@ -256,6 +256,23 @@ impl LatencyHist {
         }
         self.max
     }
+
+    /// Fold another histogram into this one. Equivalent to having
+    /// recorded every one of `other`'s observations here (buckets are
+    /// aligned by construction): counts and sums add, min/max combine.
+    /// The `INFINITY`/`NEG_INFINITY` empty-state sentinels make merging
+    /// an empty histogram the identity in either direction, and the
+    /// operation is associative — replica shards can be folded in any
+    /// order (modulo float-addition rounding of `sum`).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Sliding-window event-rate counter: events/sec averaged over the last
@@ -473,6 +490,64 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         assert_eq!(h.percentile(100.0), 1.0); // exact max
         assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_hist_merge_empty_is_identity_both_ways() {
+        let mut a = LatencyHist::new();
+        a.record(0.25);
+        a.record(0.5);
+        let before = (a.count(), a.sum(), a.min(), a.max(), a.percentile(50.0));
+        a.merge(&LatencyHist::new());
+        assert_eq!((a.count(), a.sum(), a.min(), a.max(), a.percentile(50.0)), before);
+        // merging into an empty histogram reproduces the source exactly
+        let mut e = LatencyHist::new();
+        e.merge(&a);
+        assert_eq!((e.count(), e.sum(), e.min(), e.max(), e.percentile(50.0)), before);
+        assert_eq!(e.percentile(99.0), a.percentile(99.0));
+        // two empties stay empty (the sentinel min/max never leak out)
+        let mut z = LatencyHist::new();
+        z.merge(&LatencyHist::new());
+        assert_eq!(z.count(), 0);
+        assert_eq!(z.min(), 0.0);
+        assert_eq!(z.max(), 0.0);
+        assert_eq!(z.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn latency_hist_merge_is_associative() {
+        // binary-exact values (multiples of 2^-10) so the float sums
+        // compare with == regardless of fold order
+        let mk = |vals: &[f64]| {
+            let mut h = LatencyHist::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = mk(&[0.25, 0.0009765625]);
+        let b = mk(&[0.5]);
+        let c = mk(&[0.125, 2.0, 0.03125]);
+        // (a ∪ b) ∪ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ∪ (b ∪ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.sum(), right.sum());
+        assert_eq!(left.min(), right.min());
+        assert_eq!(left.max(), right.max());
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(left.percentile(p), right.percentile(p), "p{p}");
+        }
+        // and the merged view equals recording everything in one pass
+        let all = mk(&[0.25, 0.0009765625, 0.5, 0.125, 2.0, 0.03125]);
+        assert_eq!(left.count(), all.count());
+        assert_eq!(left.percentile(50.0), all.percentile(50.0));
     }
 
     #[test]

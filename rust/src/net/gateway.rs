@@ -1,30 +1,40 @@
-//! The gateway runtime: TCP accept loop + per-connection workers on the
-//! resident [`ThreadPool`], over the pure [`router`] logic.
+//! The gateway runtime: replicated TCP accept loops + per-connection
+//! workers on the resident [`ThreadPool`], over the pure [`router`]
+//! logic.
 //!
 //! ```text
-//! accept ─► budget check ──► pool worker: read_request ─► router::handle ─► write
-//!    │         │ (503, close)      │ keep-alive loop, idle tick = read timeout
-//!    ▼         ▼                   ▼
-//! listener   shed             per-model Server (dynamic batcher)
+//! accept ×N ─► budget check ──► pool worker: read_request ─► router::handle ─► write
+//!    │            │ (503, close)      │ keep-alive loop, idle tick = read timeout
+//!    ▼            ▼                   ▼
+//! shared      shed               per-model Server (admission gate + batcher)
+//! listener
 //! ```
 //!
+//! **Accept replicas** — `replicas` accept loops (default: one per
+//! core) share one listener via dup'd handles, so a connection burst is
+//! drained by whichever replica the kernel wakes instead of serializing
+//! behind a single accept thread. Each replica labels its admitted
+//! connections (`msq_replica_connections_total{replica}`) and its
+//! serialize-stage latency, so per-replica skew is visible on
+//! `/metrics`.
+//!
 //! **Connection budget** — at most `max_conns` connections are open at
-//! once; excess accepts are answered `503` and closed immediately
-//! (cheap shed at the edge, before any parsing). The worker pool has
-//! exactly `max_conns` threads, so an admitted connection always has a
-//! worker.
+//! once across all replicas; excess accepts are answered `503` and
+//! closed immediately (cheap shed at the edge, before any parsing). The
+//! worker pool has exactly `max_conns` threads, so an admitted
+//! connection always has a worker.
 //!
 //! **Graceful shutdown** ([`Gateway::shutdown`], the SIGTERM-equivalent)
 //! — sets the drain flag, closes every model's batcher to new
-//! admissions, wakes the accept loop with a self-connection, joins the
-//! connection workers (each notices the flag at its next idle tick or
-//! after its in-flight response), then drops the model servers, whose
-//! batchers flush every in-flight batch before joining. No admitted
-//! request is dropped.
+//! admissions, wakes the accept loops with self-connections until every
+//! replica has exited, joins the connection workers (each notices the
+//! flag at its next idle tick or after its in-flight response), then
+//! drops the model servers, whose batchers flush every in-flight batch
+//! before joining. No admitted request is dropped.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -46,6 +56,14 @@ pub struct GatewayConfig {
     /// Connection budget = worker-pool size; accepts beyond it are shed
     /// with an immediate 503.
     pub max_conns: usize,
+    /// Accept-loop replicas sharing the listener. 0 (the default) means
+    /// one per available core; 1 restores the single-loop layout.
+    pub replicas: usize,
+    /// Decoded-weight cache budget in MiB (`--weight-cache-mb`). 0 (the
+    /// default) leaves the process-wide cache untouched — important for
+    /// tests, where flipping the global budget would race other
+    /// gateways; a nonzero value sets it at startup.
+    pub weight_cache_mb: usize,
     /// Keep-alive idle tick: how often a blocked reader wakes to check
     /// the drain flag (also the mid-request stall timeout).
     pub read_timeout: Duration,
@@ -89,6 +107,8 @@ impl Default for GatewayConfig {
             host: "127.0.0.1".into(),
             port: 8080,
             max_conns: 64,
+            replicas: 0,
+            weight_cache_mb: 0,
             read_timeout: Duration::from_millis(250),
             limits: Limits::default(),
             access_log: false,
@@ -110,7 +130,10 @@ pub type ModelSpec = (String, PathBuf, Option<usize>);
 pub struct Gateway {
     addr: SocketAddr,
     state: Arc<AppState>,
-    accept: Option<thread::JoinHandle<()>>,
+    accept: Vec<thread::JoinHandle<()>>,
+    /// Accept replicas still inside their loop; drain wakes the
+    /// listener until this hits zero before joining.
+    live_accepts: Arc<AtomicUsize>,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -130,22 +153,39 @@ impl Gateway {
             qs.set_rate(rate);
             qs.enable(true);
         }
+        if cfg.weight_cache_mb > 0 {
+            crate::serve::weightcache::cache().set_budget_mb(cfg.weight_cache_mb);
+        }
         for (name, path, dim) in models {
             state.load_model(name, path, *dim)?;
         }
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
         let addr = listener.local_addr()?;
-        let accept = {
+        let replicas = match cfg.replicas {
+            0 => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        let live_accepts = Arc::new(AtomicUsize::new(0));
+        let mut accept = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let l = listener.try_clone().context("cloning gateway listener")?;
             let state = state.clone();
             let pool = pool.clone();
             let cfg = cfg.clone();
-            thread::Builder::new()
-                .name("msq-gateway-accept".into())
-                .spawn(move || accept_loop(listener, state, pool, cfg))
-                .context("spawning accept loop")?
-        };
-        Ok(Gateway { addr, state, accept: Some(accept), pool: Some(pool) })
+            let live = live_accepts.clone();
+            live_accepts.fetch_add(1, Ordering::AcqRel);
+            accept.push(
+                thread::Builder::new()
+                    .name(format!("msq-gateway-accept-{i}"))
+                    .spawn(move || {
+                        accept_loop(l, state, pool, cfg, i);
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    })
+                    .context("spawning accept loop")?,
+            );
+        }
+        Ok(Gateway { addr, state, accept, live_accepts, pool: Some(pool) })
     }
 
     /// The bound address (resolves port 0).
@@ -166,10 +206,12 @@ impl Gateway {
     fn drain(&mut self) {
         // 1. flip the flag: routes answer 503, batchers stop admitting
         self.state.start_drain();
-        // 2. wake the accept loop (it re-checks the flag per connection).
-        // An unspecified bind address (0.0.0.0 / [::]) is not dialable on
-        // every platform — connect to the same-family loopback instead,
-        // and bound the dial so a refused wake cannot stall the join.
+        // 2. wake the accept loops (each re-checks the flag per
+        // connection). An unspecified bind address (0.0.0.0 / [::]) is
+        // not dialable on every platform — connect to the same-family
+        // loopback instead, and bound each dial so a refused wake cannot
+        // stall the join. One dial wakes at most one replica, so keep
+        // dialing until every replica has left its loop.
         let mut wake = self.addr;
         if wake.ip().is_unspecified() {
             wake.set_ip(if wake.is_ipv4() {
@@ -178,8 +220,11 @@ impl Gateway {
                 std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
             });
         }
-        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
-        if let Some(h) = self.accept.take() {
+        while self.live_accepts.load(Ordering::Acquire) > 0 {
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+            thread::sleep(Duration::from_millis(1));
+        }
+        for h in self.accept.drain(..) {
             let _ = h.join();
         }
         // 3. join connection workers: each exits at its next idle tick
@@ -197,7 +242,7 @@ impl Gateway {
 
 impl Drop for Gateway {
     fn drop(&mut self) {
-        if self.accept.is_some() {
+        if !self.accept.is_empty() {
             self.drain();
         }
     }
@@ -208,7 +253,14 @@ fn accept_loop(
     state: Arc<AppState>,
     pool: Arc<ThreadPool>,
     cfg: GatewayConfig,
+    replica: usize,
 ) {
+    let label = replica.to_string();
+    let admitted =
+        state.obs.counter("msq_replica_connections_total", &[("replica", &label)]);
+    let serialize = state
+        .obs
+        .hist(crate::obs::STAGE_FAMILY, &[("replica", &label), ("stage", "serialize")]);
     for stream in listener.incoming() {
         if state.draining.load(Ordering::Acquire) {
             break;
@@ -237,12 +289,14 @@ fn accept_loop(
             .write_to(&mut stream, false);
             continue; // stream drops → close
         }
+        admitted.inc();
         state.http.connections_active.fetch_add(1, Ordering::AcqRel);
         let st = state.clone();
         let conn_cfg = ConnConfig {
             read_timeout: cfg.read_timeout,
             limits: cfg.limits.clone(),
             access_log: cfg.access_log,
+            replica_serialize: serialize.clone(),
         };
         pool.submit(move || {
             handle_conn(stream, &st, &conn_cfg);
@@ -255,6 +309,10 @@ struct ConnConfig {
     read_timeout: Duration,
     limits: Limits,
     access_log: bool,
+    /// This replica's labelled serialize-stage histogram, recorded next
+    /// to the aggregate `stage="serialize"` series so per-replica skew
+    /// shows up without breaking existing dashboards.
+    replica_serialize: Arc<crate::obs::Hist>,
 }
 
 fn peer_label(stream: &TcpStream) -> String {
@@ -300,7 +358,9 @@ fn handle_conn(stream: TcpStream, state: &AppState, cfg: &ConnConfig) {
                 // the router already stamped parse/queue/batch/kernel
                 let t_ser = Instant::now();
                 let wrote = resp.write_to(&mut writer, keep);
-                state.obs.stage("serialize").record_duration(t_ser.elapsed());
+                let spent = t_ser.elapsed();
+                state.obs.stage("serialize").record_duration(spent);
+                cfg.replica_serialize.record_duration(spent);
                 if wrote.is_err() || !keep {
                     return;
                 }
@@ -346,6 +406,7 @@ mod tests {
                 max_delay: Duration::from_millis(1),
                 queue_cap: 64,
                 threads: 1,
+                ..ServerConfig::default()
             },
             ..Default::default()
         };
@@ -414,6 +475,87 @@ mod tests {
         std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
         assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
         assert!(raw.contains("x-request-id: msq-"), "{raw}");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order_and_close_honors_the_last() {
+        // three pipelined requests with distinct trace IDs, the last one
+        // Connection: close — responses must come back in request order
+        // and the server must EOF after the third
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        let mut wire = Vec::new();
+        for (id, last) in [("pl-one", false), ("pl-two", false), ("pl-three", true)] {
+            let conn = if last { "Connection: close\r\n" } else { "" };
+            wire.extend_from_slice(
+                format!(
+                    "POST /v1/models/toy/infer HTTP/1.1\r\nHost: t\r\nx-request-id: {id}\r\n\
+                     Content-Type: application/json\r\nContent-Length: 15\r\n{conn}\r\n\
+                     [[1,2,3,4,5,6]]"
+                )
+                .as_bytes(),
+            );
+        }
+        s.write_all(&wire).unwrap();
+        let mut raw = String::new();
+        std::io::Read::read_to_string(&mut s, &mut raw).unwrap(); // EOF ends it
+        assert_eq!(raw.matches("HTTP/1.1 200").count(), 3, "{raw}");
+        let pos = |id: &str| raw.find(id).unwrap_or_else(|| panic!("{id} missing: {raw}"));
+        assert!(pos("pl-one") < pos("pl-two") && pos("pl-two") < pos("pl-three"), "{raw}");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn connection_close_is_honored_with_eof() {
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        // read_to_string returning means the server closed its end
+        std::io::Read::read_to_string(&mut s, &mut raw).unwrap();
+        assert_eq!(raw.matches("HTTP/1.1 200").count(), 1, "{raw}");
+        assert!(raw.to_ascii_lowercase().contains("connection: close"), "{raw}");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn idle_keep_alive_connection_closes_cleanly_during_drain() {
+        let gw = toy_gateway(8);
+        let mut s = TcpStream::connect(gw.addr()).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut r = HttpReader::new(s.try_clone().unwrap());
+        let (code, _) = r.read_response(&Limits::default()).unwrap();
+        assert_eq!(code, 200);
+        // leave the connection idle and drain: the worker must notice at
+        // its next idle tick and close without writing anything else
+        gw.shutdown();
+        let mut rest = Vec::new();
+        std::io::Read::read_to_end(&mut s, &mut rest).unwrap();
+        assert!(rest.is_empty(), "drain must not emit bytes on an idle connection");
+    }
+
+    #[test]
+    fn replicas_share_the_listener_and_label_their_connections() {
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let path = std::env::temp_dir().join("msq_gateway_replicas.msqpack");
+        pm.save(&path).unwrap();
+        let cfg = GatewayConfig {
+            port: 0,
+            max_conns: 8,
+            replicas: 2,
+            read_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let gw = Gateway::start(cfg, &[("toy".to_string(), path, None)]).unwrap();
+        for _ in 0..4 {
+            let (code, _) = roundtrip(gw.addr(), "GET", "/healthz", b"");
+            assert_eq!(code, 200);
+        }
+        let (code, body) = roundtrip(gw.addr(), "GET", "/metrics", b"");
+        assert_eq!(code, 200);
+        let text = String::from_utf8_lossy(&body);
+        assert!(text.contains("msq_replica_connections_total{replica="), "{text}");
         gw.shutdown();
     }
 

@@ -18,6 +18,33 @@ use crate::util::stats::percentile;
 
 use super::http::{write_request, HttpReader, Limits};
 
+/// Traffic shape (`--scenario`). The deterministic part of every shape
+/// — which model each request hits and what its body is — lives in
+/// [`connection_plan`]; the scenario only adds pacing (bursty) or model
+/// mixing (zipfian) on top of the steady closed loop.
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    /// Back-to-back requests: the legacy closed loop.
+    Steady,
+    /// `burst` back-to-back requests, then sleep `gap`, repeat — the
+    /// admission wait room's natural prey.
+    Bursty { burst: usize, gap: Duration },
+    /// Each request picks one of `models` with Zipf weights (1/k on the
+    /// k-th listed name), exercising multi-model cache contention.
+    Zipfian { models: Vec<String> },
+}
+
+impl Scenario {
+    /// The `--scenario` spelling of this shape.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty { .. } => "bursty",
+            Scenario::Zipfian { .. } => "zipfian",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
     /// Gateway address, `host:port`.
@@ -34,6 +61,8 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Per-read socket timeout (a stuck gateway fails fast, not forever).
     pub timeout: Duration,
+    /// Traffic shape: steady, bursty, or multi-model zipfian.
+    pub scenario: Scenario,
 }
 
 impl Default for LoadgenConfig {
@@ -46,6 +75,7 @@ impl Default for LoadgenConfig {
             batch: 1,
             seed: 42,
             timeout: Duration::from_secs(30),
+            scenario: Scenario::Steady,
         }
     }
 }
@@ -53,6 +83,8 @@ impl Default for LoadgenConfig {
 /// Aggregated closed-loop results.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// The [`Scenario::name`] this run used.
+    pub scenario: String,
     pub sent: usize,
     pub ok: usize,
     /// Non-2xx responses by status code (429 shed shows up here).
@@ -126,6 +158,7 @@ impl LoadReport {
             })
             .collect();
         Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
@@ -186,8 +219,18 @@ impl LoadReport {
     }
 }
 
-/// Ask `/healthz` for the model's input width.
-fn discover_input_dim(cfg: &LoadgenConfig) -> Result<usize> {
+/// The model names this run will route to, in Zipf-rank order: the
+/// zipfian list when one is set (and non-empty), else the single
+/// `--model` target.
+fn target_models(cfg: &LoadgenConfig) -> Vec<String> {
+    match &cfg.scenario {
+        Scenario::Zipfian { models } if !models.is_empty() => models.clone(),
+        _ => vec![cfg.model.clone()],
+    }
+}
+
+/// Ask `/healthz` for the input width of every model this run targets.
+fn discover_input_dims(cfg: &LoadgenConfig) -> Result<BTreeMap<String, usize>> {
     let mut s = TcpStream::connect(&cfg.addr)
         .with_context(|| format!("connecting {}", cfg.addr))?;
     s.set_read_timeout(Some(cfg.timeout))?;
@@ -203,15 +246,61 @@ fn discover_input_dim(cfg: &LoadgenConfig) -> Result<usize> {
     let v = json::parse(std::str::from_utf8(&body).context("healthz body not UTF-8")?)
         .map_err(|e| anyhow::anyhow!("healthz JSON: {e}"))?;
     let models = v.get("models").and_then(Json::as_arr).context("healthz lacks models[]")?;
+    let mut dims = BTreeMap::new();
     for m in models {
-        if m.get("name").and_then(Json::as_str) == Some(cfg.model.as_str()) {
-            return m
-                .get("input_dim")
-                .and_then(Json::as_usize)
-                .context("model entry lacks input_dim");
+        if let (Some(name), Some(dim)) = (
+            m.get("name").and_then(Json::as_str),
+            m.get("input_dim").and_then(Json::as_usize),
+        ) {
+            dims.insert(name.to_string(), dim);
         }
     }
-    bail!("gateway does not serve model {:?} (see GET /v1/models)", cfg.model)
+    for want in target_models(cfg) {
+        if !dims.contains_key(&want) {
+            bail!("gateway does not serve model {want:?} (see GET /v1/models)");
+        }
+    }
+    Ok(dims)
+}
+
+/// The deterministic half of one connection's request stream: for each
+/// of its `n` requests, the model it routes to and the JSON body it
+/// sends. Pure in `(cfg.seed, cfg.scenario, c, n, dims)` — no sockets,
+/// no clock — so two runs with the same seed produce byte-identical
+/// traffic (the `--seed` determinism contract). Bursty pacing does not
+/// touch the RNG, so it changes *when* requests go out, never *what*.
+pub fn connection_plan(
+    cfg: &LoadgenConfig,
+    c: usize,
+    n: usize,
+    dims: &BTreeMap<String, usize>,
+) -> Vec<(String, String)> {
+    let mut rng = Rng::new(cfg.seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+    let names = target_models(cfg);
+    // Zipf over list order: the k-th listed model gets weight 1/k
+    let weights: Vec<f32> = (1..=names.len()).map(|k| 1.0 / k as f32).collect();
+    let total: f32 = weights.iter().sum();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pick = if names.len() == 1 {
+            0
+        } else {
+            let mut u = rng.uniform() * total;
+            let mut pick = names.len() - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if u < *w {
+                    pick = i;
+                    break;
+                }
+                u -= w;
+            }
+            pick
+        };
+        let model = &names[pick];
+        let dim = dims.get(model).copied().unwrap_or(0);
+        out.push((model.clone(), random_batch_body(&mut rng, cfg.batch, dim)));
+    }
+    out
 }
 
 /// Scrape `GET /debug/stats` for per-stage `(count, sum_s)` pairs.
@@ -286,10 +375,9 @@ fn stage_deltas(
 /// Run the closed loop; blocks until all requests are answered.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     ensure_valid(cfg)?;
-    let input_dim = discover_input_dim(cfg)?;
+    let dims = discover_input_dims(cfg)?;
     let stages_before = scrape_stages(cfg);
     let qstats_before = scrape_qstats(cfg);
-    let target = format!("/v1/models/{}/infer", cfg.model);
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(cfg.requests));
     let by_status: Mutex<BTreeMap<u16, usize>> = Mutex::new(BTreeMap::new());
     let errors = std::sync::atomic::AtomicUsize::new(0);
@@ -304,16 +392,23 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             let by_status = &by_status;
             let errors = &errors;
             let ok = &ok;
-            let target = &target;
+            let dims = &dims;
             let cfg = &cfg;
             s.spawn(move || {
-                let mut rng = Rng::new(cfg.seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+                let plan = connection_plan(cfg, c, n, dims);
                 let mut conn: Option<HttpReader<TcpStream>> = None;
                 let mut local_lat = Vec::with_capacity(n);
-                for _ in 0..n {
-                    let body = random_batch_body(&mut rng, cfg.batch, input_dim);
+                for (i, (model, body)) in plan.iter().enumerate() {
+                    // bursty pacing: `burst` back-to-back, then a gap —
+                    // pacing only, the plan above is already fixed
+                    if let Scenario::Bursty { burst, gap } = &cfg.scenario {
+                        if i > 0 && i % burst == 0 {
+                            std::thread::sleep(*gap);
+                        }
+                    }
+                    let target = format!("/v1/models/{model}/infer");
                     let t = Instant::now();
-                    match one_request(&mut conn, cfg, target, body.as_bytes()) {
+                    match one_request(&mut conn, cfg, &target, body.as_bytes()) {
                         Ok(status) => {
                             if (200..300).contains(&status) {
                                 ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -348,6 +443,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let errors = errors.into_inner();
     let failed = by_status.values().sum::<usize>() + errors;
     Ok(LoadReport {
+        scenario: cfg.scenario.name().to_string(),
         sent: cfg.requests,
         ok,
         by_status,
@@ -373,7 +469,13 @@ fn ensure_valid(cfg: &LoadgenConfig) -> Result<()> {
     if cfg.requests == 0 || cfg.concurrency == 0 || cfg.batch == 0 {
         bail!("loadgen needs nonzero --requests, --concurrency, and --batch");
     }
-    Ok(())
+    match &cfg.scenario {
+        Scenario::Bursty { burst: 0, .. } => bail!("--scenario bursty needs a nonzero --burst"),
+        Scenario::Zipfian { models } if models.is_empty() => {
+            bail!("--scenario zipfian needs at least one --model")
+        }
+        _ => Ok(()),
+    }
 }
 
 /// `[[f32,…],…]` body of `batch` random normal rows.
@@ -452,6 +554,7 @@ mod tests {
                     max_delay: Duration::from_millis(1),
                     queue_cap: 256,
                     threads: 1,
+                    ..Default::default()
                 },
                 ..Default::default()
             },
@@ -466,6 +569,7 @@ mod tests {
             batch: 2,
             seed: 9,
             timeout: Duration::from_secs(30),
+            scenario: Scenario::Steady,
         })
         .unwrap();
         assert_eq!(report.sent, 60);
@@ -484,6 +588,7 @@ mod tests {
         assert!(j.contains("\"p99_ms\""), "{j}");
         assert!(j.contains("\"stages\""), "{j}");
         assert!(j.contains("\"error_rate\""), "{j}");
+        assert!(j.contains("\"scenario\":\"steady\""), "{j}");
         // observers were never enabled → the report says so explicitly
         assert!(report.qstats.is_none(), "{report:?}");
         assert!(j.contains("\"qstats\":null"), "{j}");
@@ -496,6 +601,7 @@ mod tests {
             batch: 1,
             seed: 1,
             timeout: Duration::from_secs(5),
+            scenario: Scenario::Steady,
         })
         .is_err());
         gw.shutdown();
@@ -517,6 +623,7 @@ mod tests {
                     max_delay: Duration::from_millis(1),
                     queue_cap: 256,
                     threads: 1,
+                    ..Default::default()
                 },
                 ..Default::default()
             },
@@ -531,6 +638,7 @@ mod tests {
             batch: 1,
             seed: 5,
             timeout: Duration::from_secs(30),
+            scenario: Scenario::Steady,
         })
         .unwrap();
         assert_eq!(report.ok, 20, "{report:?}");
@@ -543,5 +651,56 @@ mod tests {
         qs.enable(false);
         qs.reset_prefix("lgq/");
         gw.shutdown();
+    }
+
+    #[test]
+    fn connection_plans_are_seed_deterministic() {
+        // pure-plan determinism: no gateway, no clock — same seed, same
+        // bytes; bursty pacing must not perturb the stream
+        let dims: BTreeMap<String, usize> =
+            [("a".to_string(), 4), ("b".to_string(), 6)].into_iter().collect();
+        let mk = |seed, scenario| LoadgenConfig {
+            model: "a".into(),
+            batch: 2,
+            seed,
+            scenario,
+            ..Default::default()
+        };
+        let steady = mk(7, Scenario::Steady);
+        for c in 0..3 {
+            assert_eq!(
+                connection_plan(&steady, c, 40, &dims),
+                connection_plan(&steady, c, 40, &dims)
+            );
+        }
+        // different connections and different seeds diverge
+        assert_ne!(connection_plan(&steady, 0, 40, &dims), connection_plan(&steady, 1, 40, &dims));
+        assert_ne!(
+            connection_plan(&steady, 0, 40, &dims),
+            connection_plan(&mk(8, Scenario::Steady), 0, 40, &dims)
+        );
+        // bursty is pacing only: the planned traffic is identical
+        let bursty = mk(7, Scenario::Bursty { burst: 8, gap: Duration::from_millis(5) });
+        assert_eq!(connection_plan(&steady, 2, 40, &dims), connection_plan(&bursty, 2, 40, &dims));
+        // steady plans route every request to --model
+        assert!(connection_plan(&steady, 0, 40, &dims).iter().all(|(m, _)| m == "a"));
+    }
+
+    #[test]
+    fn zipfian_plans_skew_toward_the_head_model() {
+        let dims: BTreeMap<String, usize> =
+            [("hot".to_string(), 4), ("cold".to_string(), 4)].into_iter().collect();
+        let cfg = LoadgenConfig {
+            scenario: Scenario::Zipfian { models: vec!["hot".into(), "cold".into()] },
+            seed: 11,
+            ..Default::default()
+        };
+        let plan = connection_plan(&cfg, 0, 300, &dims);
+        let hot = plan.iter().filter(|(m, _)| m == "hot").count();
+        let cold = plan.len() - hot;
+        assert!(hot > cold, "1/k weights must favor the first listed model: {hot} vs {cold}");
+        assert!(cold > 0, "the tail model still sees traffic: {hot} vs {cold}");
+        // determinism holds for the mixed stream too
+        assert_eq!(plan, connection_plan(&cfg, 0, 300, &dims));
     }
 }

@@ -123,6 +123,10 @@ impl AppState {
             "msq_act_range_drift_total",
             "Layers whose activation absmax shifted beyond the drift threshold across a reload",
         );
+        obs.describe(
+            "msq_replica_connections_total",
+            "Connections admitted per gateway accept-loop replica",
+        );
         AppState {
             models: RwLock::new(BTreeMap::new()),
             server_cfg,
@@ -417,7 +421,7 @@ fn infer(state: &AppState, name: &str, req: &Request) -> Response {
     };
     let mut rxs = Vec::with_capacity(batch);
     for row in rows {
-        match server.submit(row) {
+        match server.submit_admit(row) {
             Ok(rx) => rxs.push(rx),
             Err(e) => {
                 // fail fast: drop the receivers of already-admitted rows
@@ -494,7 +498,11 @@ fn debug_stats(state: &AppState) -> Response {
     let map = state.models.read().unwrap();
     let mut models = BTreeMap::new();
     for (n, e) in map.iter() {
-        models.insert(n.clone(), e.server.metrics.snapshot(e.server.queue_depth()));
+        let mut snap = e.server.metrics.snapshot(e.server.queue_depth());
+        if let Json::Obj(m) = &mut snap {
+            m.insert("admission".to_string(), e.server.admission.metrics.to_json());
+        }
+        models.insert(n.clone(), snap);
     }
     drop(map);
     let mut stages = BTreeMap::new();
@@ -536,6 +544,7 @@ fn debug_stats(state: &AppState) -> Response {
         ),
         ("stages", Json::Obj(stages)),
         ("models", Json::Obj(models)),
+        ("weight_cache", crate::serve::weightcache::cache().to_json()),
         ("registry", state.obs.to_json()),
         ("profiler", crate::obs::profiler().to_json()),
         ("qstats", crate::obs::qstats::qstats().to_json()),
@@ -811,6 +820,32 @@ pub fn render_metrics(state: &AppState) -> String {
         "summary",
         "Submit-to-response latency (queue + compute)",
     );
+    p.family(
+        "msq_admission_admitted_total",
+        "counter",
+        "Requests admitted to the batcher queue (immediately or after waiting)",
+    );
+    p.family(
+        "msq_admission_waited_total",
+        "counter",
+        "Requests admitted only after at least one queue-full retry",
+    );
+    p.family(
+        "msq_admission_expired_total",
+        "counter",
+        "Requests that waited the full admission deadline and were rejected",
+    );
+    p.family(
+        "msq_admission_shed_total",
+        "counter",
+        "Requests shed without waiting (wait room full or disabled)",
+    );
+    p.family("msq_admission_waiting", "gauge", "Requests currently in the admission wait room");
+    p.family(
+        "msq_admission_wait_seconds",
+        "summary",
+        "Time spent in the admission wait room (admitted or not)",
+    );
     let map = state.models.read().unwrap();
     for (name, e) in map.iter() {
         let lbl = [("model", name.as_str())];
@@ -824,6 +859,13 @@ pub fn render_metrics(state: &AppState) -> String {
         p.sample("msq_model_payload_bytes", &lbl, e.server.model.payload_bytes() as f64);
         p.sample("msq_model_generation", &lbl, e.generation as f64);
         p.summary("msq_request_latency_seconds", &lbl, &m.latency_hist(), &[0.5, 0.9, 0.95, 0.99]);
+        let a = &e.server.admission.metrics;
+        p.sample("msq_admission_admitted_total", &lbl, a.admitted() as f64);
+        p.sample("msq_admission_waited_total", &lbl, a.waited() as f64);
+        p.sample("msq_admission_expired_total", &lbl, a.expired() as f64);
+        p.sample("msq_admission_shed_total", &lbl, a.shed() as f64);
+        p.sample("msq_admission_waiting", &lbl, a.waiting() as f64);
+        p.summary("msq_admission_wait_seconds", &lbl, &a.wait_hist(), &[0.5, 0.95, 0.99]);
     }
     // load-time static quantization analysis: constant between reloads,
     // so a dashboard can join runtime activation ranges onto bits /
@@ -894,6 +936,8 @@ pub fn render_metrics(state: &AppState) -> String {
     eval_drift(state);
     // the obs registry: per-stage lifecycle histograms + reload events
     state.obs.render(&mut p, &crate::obs::QUANTILES);
+    // process-wide decoded-weight cache (zeros while disabled)
+    crate::serve::weightcache::cache().render(&mut p);
     // global kernel profiler aggregates (zeros unless profiling is on)
     crate::obs::profiler().render(&mut p);
     // runtime activation observers (empty unless --qstats is on)
@@ -915,6 +959,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_cap: 64,
             threads: 1,
+            ..Default::default()
         };
         let state = AppState::new(cfg, pool);
         let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
@@ -978,6 +1023,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_cap: 64,
             threads: 1,
+            ..Default::default()
         };
         let state = AppState::new(cfg, pool);
         let pm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[4, 3], 6).unwrap();
@@ -1107,6 +1153,15 @@ mod tests {
         );
         assert!(text.contains("msq_request_latency_seconds_count{model=\"toy\"} 1"), "{text}");
         assert!(text.contains("msq_queue_depth{model=\"toy\"}"), "{text}");
+        // admission gate: the infer above was admitted without waiting
+        assert!(text.contains("# TYPE msq_admission_admitted_total counter"), "{text}");
+        assert!(text.contains("msq_admission_admitted_total{model=\"toy\"} 1"), "{text}");
+        assert!(text.contains("msq_admission_waited_total{model=\"toy\"} 0"), "{text}");
+        assert!(text.contains("msq_admission_waiting{model=\"toy\"} 0"), "{text}");
+        assert!(text.contains("msq_admission_wait_seconds_count{model=\"toy\"} 0"), "{text}");
+        // decoded-weight cache families render even while disabled
+        assert!(text.contains("# TYPE msq_weight_cache_enabled gauge"), "{text}");
+        assert!(text.contains("msq_weight_cache_hits_total"), "{text}");
     }
 
     #[test]
@@ -1148,6 +1203,10 @@ mod tests {
         // the registry dump and profiler section are present
         assert!(v.path(&["registry"]).is_some());
         assert_eq!(v.path(&["profiler", "enabled"]).unwrap().as_bool(), Some(false));
+        // per-model admission snapshot + top-level weight-cache section
+        let adm = v.path(&["models", "toy", "admission", "admitted"]).unwrap();
+        assert_eq!(adm.as_usize(), Some(1));
+        assert!(v.path(&["weight_cache", "enabled"]).is_some());
         // /metrics renders the stage family alongside the legacy series
         let text = render_metrics(&state);
         assert!(text.contains("# TYPE msq_stage_duration_seconds summary"), "{text}");
@@ -1305,6 +1364,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_cap: 64,
             threads: 1,
+            ..Default::default()
         };
         let mut state = AppState::new(cfg, pool);
         state.int8 = true;
@@ -1347,6 +1407,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_cap: 64,
             threads: 1,
+            ..Default::default()
         };
         let state = AppState::new(cfg, pool);
         let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();

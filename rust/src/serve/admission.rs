@@ -1,0 +1,299 @@
+//! Bounded admission/wait queue in front of a model's batcher.
+//!
+//! The batcher queue is a hard ring: when it is full, `submit` sheds the
+//! request immediately. Under bursty load that turns a few milliseconds
+//! of queue pressure into a wall of 429s even though capacity frees up
+//! almost instantly. [`Admission`] adds a *wait room* in front of the
+//! queue: a request that finds the queue full may wait — bounded both in
+//! population (`wait_cap` concurrent waiters) and in time (`deadline`)
+//! — retrying until a slot opens. Expired and shed requests still map to
+//! 429 + `Retry-After` at the HTTP layer; the difference is that a burst
+//! now drains through the deadline budget instead of being rejected at
+//! first contact.
+//!
+//! Conservation invariant: every call to [`Admission::admit`] resolves
+//! exactly once — admitted (the submit closure returned `Ok`), expired,
+//! shed, or a fatal submit error. The caller records exactly one
+//! submit/reject pair per request around this, so
+//! `completed + rejected == submitted` holds after drain.
+//!
+//! With `wait_cap == 0` (the default) the wait room is disabled and
+//! behavior is byte-for-byte the legacy immediate shed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyHist;
+use crate::util::json::Json;
+
+use super::batcher::SubmitError;
+
+/// How often a waiter re-probes the batcher queue. Coarse on purpose:
+/// the queue drains in `max_delay` (ms) quanta, so finer polling buys
+/// nothing but wakeups.
+const POLL: Duration = Duration::from_millis(1);
+
+/// Admission policy knobs (`--queue-depth`, `--admit-deadline-ms`).
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Max requests allowed to wait for a queue slot at once.
+    /// 0 disables waiting: queue-full sheds immediately (legacy).
+    pub wait_cap: usize,
+    /// How long a waiter may poll for a slot before expiring with 429.
+    pub deadline: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { wait_cap: 0, deadline: Duration::from_millis(100) }
+    }
+}
+
+/// Why a request was not admitted.
+#[derive(Debug)]
+pub enum AdmitError {
+    /// Waited the full deadline and the queue never had a slot.
+    Expired { waited: Duration, depth: usize, cap: usize },
+    /// Wait room full (or waiting disabled) — shed at first contact.
+    Shed { depth: usize, cap: usize },
+    /// Non-retryable submit failure (shutdown, bad input).
+    Fatal(SubmitError),
+}
+
+/// Counters for the `msq_admission_*` metric families. All relaxed:
+/// these are monotonic telemetry, not synchronization.
+#[derive(Default)]
+pub struct AdmissionMetrics {
+    admitted: AtomicU64,
+    waited: AtomicU64,
+    expired: AtomicU64,
+    shed: AtomicU64,
+    waiting: AtomicU64,
+    wait_hist: Mutex<LatencyHist>,
+}
+
+impl AdmissionMetrics {
+    /// Requests admitted (immediately or after waiting).
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Requests admitted only after at least one queue-full retry.
+    pub fn waited(&self) -> u64 {
+        self.waited.load(Ordering::Relaxed)
+    }
+
+    /// Requests that waited the full deadline and were rejected.
+    pub fn expired(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed without waiting (wait room full or disabled).
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Current wait-room population (gauge).
+    pub fn waiting(&self) -> u64 {
+        self.waiting.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the wait-duration histogram (seconds; every request
+    /// that entered the wait room records on exit, admitted or not).
+    pub fn wait_hist(&self) -> LatencyHist {
+        self.wait_hist.lock().unwrap().clone()
+    }
+
+    /// JSON view for `/debug/stats`.
+    pub fn to_json(&self) -> Json {
+        let h = self.wait_hist();
+        Json::obj(vec![
+            ("admitted", Json::Num(self.admitted() as f64)),
+            ("waited", Json::Num(self.waited() as f64)),
+            ("expired", Json::Num(self.expired() as f64)),
+            ("shed", Json::Num(self.shed() as f64)),
+            ("waiting", Json::Num(self.waiting() as f64)),
+            ("wait_p99_ms", Json::Num(h.percentile(99.0) * 1e3)),
+            ("wait_count", Json::Num(h.count() as f64)),
+        ])
+    }
+}
+
+/// The admission gate: one per [`super::Server`].
+pub struct Admission {
+    cfg: AdmissionConfig,
+    pub metrics: AdmissionMetrics,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission { cfg, metrics: AdmissionMetrics::default() }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Run `try_submit` until it succeeds, the deadline expires, or a
+    /// non-retryable error surfaces. `try_submit` must be retryable:
+    /// a `QueueFull` result must leave the request replayable (the
+    /// batcher's `try_submit` hands the input back for exactly this).
+    pub fn admit<T>(
+        &self,
+        mut try_submit: impl FnMut() -> Result<T, SubmitError>,
+    ) -> Result<T, AdmitError> {
+        let (mut depth, mut cap) = match try_submit() {
+            Ok(t) => {
+                self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                return Ok(t);
+            }
+            Err(SubmitError::QueueFull { depth, cap }) => (depth, cap),
+            Err(e) => return Err(AdmitError::Fatal(e)),
+        };
+        if self.cfg.wait_cap == 0 || self.cfg.deadline.is_zero() || !self.enter_wait_room() {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmitError::Shed { depth, cap });
+        }
+        let t0 = Instant::now();
+        let out = loop {
+            let waited = t0.elapsed();
+            if waited >= self.cfg.deadline {
+                break Err(AdmitError::Expired { waited, depth, cap });
+            }
+            std::thread::sleep(POLL.min(self.cfg.deadline - waited));
+            match try_submit() {
+                Ok(t) => break Ok(t),
+                Err(SubmitError::QueueFull { depth: d, cap: c }) => {
+                    depth = d;
+                    cap = c;
+                }
+                Err(e) => break Err(AdmitError::Fatal(e)),
+            }
+        };
+        self.leave_wait_room(t0.elapsed());
+        match &out {
+            Ok(_) => {
+                self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.waited.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(AdmitError::Expired { .. }) => {
+                self.metrics.expired.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {}
+        }
+        out
+    }
+
+    fn enter_wait_room(&self) -> bool {
+        let cap = self.cfg.wait_cap as u64;
+        self.metrics
+            .waiting
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |w| {
+                if w < cap {
+                    Some(w + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    fn leave_wait_room(&self, waited: Duration) {
+        self.metrics.waiting.fetch_sub(1, Ordering::AcqRel);
+        self.metrics.wait_hist.lock().unwrap().record(waited.as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn full() -> Result<u32, SubmitError> {
+        Err(SubmitError::QueueFull { depth: 4, cap: 4 })
+    }
+
+    #[test]
+    fn immediate_admit_skips_the_wait_room() {
+        let a = Admission::new(AdmissionConfig { wait_cap: 8, deadline: Duration::from_secs(1) });
+        assert_eq!(a.admit(|| Ok::<_, SubmitError>(7u32)).unwrap(), 7);
+        assert_eq!(a.metrics.admitted(), 1);
+        assert_eq!(a.metrics.waited(), 0);
+        assert_eq!(a.metrics.wait_hist().count(), 0);
+    }
+
+    #[test]
+    fn wait_cap_zero_is_legacy_immediate_shed() {
+        let a = Admission::new(AdmissionConfig { wait_cap: 0, deadline: Duration::from_secs(1) });
+        match a.admit(full) {
+            Err(AdmitError::Shed { depth: 4, cap: 4 }) => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(a.metrics.shed(), 1);
+        assert_eq!(a.metrics.waiting(), 0);
+    }
+
+    #[test]
+    fn deadline_expiry_reports_time_waited() {
+        let deadline = Duration::from_millis(20);
+        let a = Admission::new(AdmissionConfig { wait_cap: 8, deadline });
+        let t0 = Instant::now();
+        match a.admit(full) {
+            Err(AdmitError::Expired { waited, .. }) => assert!(waited >= deadline, "{waited:?}"),
+            other => panic!("expected expiry, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= deadline);
+        assert_eq!(a.metrics.expired(), 1);
+        assert_eq!(a.metrics.waiting(), 0);
+        assert_eq!(a.metrics.wait_hist().count(), 1);
+    }
+
+    #[test]
+    fn queue_full_then_free_admits_after_wait() {
+        let a = Admission::new(AdmissionConfig { wait_cap: 8, deadline: Duration::from_secs(2) });
+        let calls = AtomicUsize::new(0);
+        let got = a
+            .admit(|| {
+                if calls.fetch_add(1, Ordering::Relaxed) < 3 {
+                    Err(SubmitError::QueueFull { depth: 4, cap: 4 })
+                } else {
+                    Ok(42u32)
+                }
+            })
+            .unwrap();
+        assert_eq!(got, 42);
+        assert_eq!(a.metrics.admitted(), 1);
+        assert_eq!(a.metrics.waited(), 1);
+        assert_eq!(a.metrics.waiting(), 0);
+        assert_eq!(a.metrics.wait_hist().count(), 1);
+    }
+
+    #[test]
+    fn fatal_errors_pass_through_without_retry() {
+        let a = Admission::new(AdmissionConfig { wait_cap: 8, deadline: Duration::from_secs(1) });
+        let calls = AtomicUsize::new(0);
+        match a.admit(|| -> Result<u32, SubmitError> {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err(SubmitError::ShuttingDown)
+        }) {
+            Err(AdmitError::Fatal(SubmitError::ShuttingDown)) => {}
+            other => panic!("expected fatal, got {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        assert_eq!(a.metrics.shed() + a.metrics.expired() + a.metrics.admitted(), 0);
+    }
+
+    #[test]
+    fn wait_room_population_is_bounded() {
+        let a = Admission::new(AdmissionConfig { wait_cap: 2, deadline: Duration::from_secs(1) });
+        assert!(a.enter_wait_room());
+        assert!(a.enter_wait_room());
+        assert!(!a.enter_wait_room(), "third waiter must be refused");
+        a.leave_wait_room(Duration::from_millis(1));
+        assert!(a.enter_wait_room(), "slot frees after a waiter leaves");
+        a.leave_wait_room(Duration::from_millis(1));
+        a.leave_wait_room(Duration::from_millis(1));
+        assert_eq!(a.metrics.waiting(), 0);
+    }
+}

@@ -141,13 +141,25 @@ impl DynamicBatcher {
 
     /// Enqueue one request; the returned channel yields its response.
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        self.try_submit(input).map_err(|(e, _)| e)
+    }
+
+    /// Like [`Self::submit`], but hands the input back on failure so
+    /// retrying callers (the admission wait queue) replay the same
+    /// request without cloning the row.
+    #[allow(clippy::type_complexity)]
+    pub fn try_submit(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<Receiver<InferResponse>, (SubmitError, Vec<f32>)> {
         let (tx, rx) = mpsc::channel();
         let mut st = self.shared.state.lock().unwrap();
         if st.closed {
-            return Err(SubmitError::ShuttingDown);
+            return Err((SubmitError::ShuttingDown, input));
         }
         if st.queue.len() >= self.cfg.queue_cap {
-            return Err(SubmitError::QueueFull { depth: st.queue.len(), cap: self.cfg.queue_cap });
+            let depth = st.queue.len();
+            return Err((SubmitError::QueueFull { depth, cap: self.cfg.queue_cap }, input));
         }
         let id = st.next_id;
         st.next_id += 1;
@@ -384,6 +396,29 @@ mod tests {
         assert_eq!(recv(&rx_a).logits, vec![0.0]);
         assert_eq!(recv(&rx_b).logits, vec![1.0]);
         assert_eq!(recv(&rx_c).logits, vec![2.0]);
+    }
+
+    #[test]
+    fn try_submit_hands_the_input_back_on_failure() {
+        // no flush trigger can fire: the queued request pins the queue
+        let cfg = BatchConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_secs(600),
+            queue_cap: 1,
+        };
+        let b = DynamicBatcher::new(cfg, echo());
+        let _rx = b.submit(vec![1.0]).unwrap();
+        match b.try_submit(vec![2.0, 3.0]) {
+            Err((SubmitError::QueueFull { depth: 1, cap: 1 }, input)) => {
+                assert_eq!(input, vec![2.0, 3.0], "input must come back intact");
+            }
+            other => panic!("expected QueueFull with input, got {:?}", other.map(|_| ())),
+        }
+        b.close();
+        match b.try_submit(vec![4.0]) {
+            Err((SubmitError::ShuttingDown, input)) => assert_eq!(input, vec![4.0]),
+            other => panic!("expected ShuttingDown with input, got {:?}", other.map(|_| ())),
+        }
     }
 
     #[test]

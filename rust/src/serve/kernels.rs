@@ -48,7 +48,10 @@ use crate::kernels::{
 };
 use crate::quant::pack::Conv2dDesc;
 use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
 use std::time::Instant;
+
+use super::weightcache::{self, CacheKey};
 
 // Re-exported for API continuity: the decode primitive and the window
 // geometry moved into the shared kernel core, but they remain part of
@@ -64,6 +67,103 @@ const ROW_BLOCK: usize = 32;
 /// map of work per sample, so blocks are smaller than gemm rows.
 const FILTER_BLOCK: usize = 4;
 
+/// Resolve a layer's full decoded f32 code matrix through the shared
+/// weight cache: on a miss, `fill` decodes all `total` values (running
+/// the *same* per-row/per-filter `decode_codes_f32` calls the scratch
+/// path would) and endpoint saturation is tallied once at fill time.
+/// Returns `None` when the cache is disabled or the key is absent —
+/// callers then run their legacy scratch-decode path.
+///
+/// Telemetry at fill mirrors one whole-layer decode (bytes/codes
+/// accounted once); cache *hits* skip decode profiling and saturation
+/// sampling entirely — that, and nothing numeric, is the observable
+/// difference between cache on and off.
+fn cached_f32(
+    key: Option<CacheKey>,
+    total: usize,
+    max_code: f32,
+    prof: bool,
+    qsample: bool,
+    qs: &'static crate::obs::qstats::QStats,
+    bytes: u64,
+    fill: impl FnOnce(&mut [f32]),
+) -> Option<Arc<Vec<f32>>> {
+    let k = key?;
+    let mut fill_sat = (0u64, 0u64);
+    let mut filled = false;
+    let t0 = if prof { Some(Instant::now()) } else { None };
+    let got = weightcache::cache().get_or_decode_f32(k, || {
+        filled = true;
+        let mut w = vec![0f32; total];
+        fill(&mut w);
+        if qsample {
+            // raw codes, pre-affine: endpoint equality is exact
+            for &c in w.iter() {
+                if c == 0.0 {
+                    fill_sat.0 += 1;
+                } else if c == max_code {
+                    fill_sat.1 += 1;
+                }
+            }
+        }
+        w
+    });
+    if filled {
+        if let Some(t) = t0 {
+            let dec_ns = t.elapsed().as_nanos() as u64;
+            crate::obs::profiler().add_kernel(dec_ns, 0, bytes, total as u64);
+        }
+        if qsample {
+            qs.add_saturation(fill_sat.0, fill_sat.1);
+        }
+    }
+    got
+}
+
+/// u8 twin of [`cached_f32`] for the integer path (`decode_codes_u8`
+/// fills, same fill-time telemetry contract).
+#[allow(clippy::too_many_arguments)]
+fn cached_u8(
+    key: Option<CacheKey>,
+    total: usize,
+    max_code: u8,
+    prof: bool,
+    qsample: bool,
+    qs: &'static crate::obs::qstats::QStats,
+    bytes: u64,
+    fill: impl FnOnce(&mut [u8]),
+) -> Option<Arc<Vec<u8>>> {
+    let k = key?;
+    let mut fill_sat = (0u64, 0u64);
+    let mut filled = false;
+    let t0 = if prof { Some(Instant::now()) } else { None };
+    let got = weightcache::cache().get_or_decode_u8(k, || {
+        filled = true;
+        let mut w = vec![0u8; total];
+        fill(&mut w);
+        if qsample {
+            for &c in w.iter() {
+                if c == 0 {
+                    fill_sat.0 += 1;
+                } else if c == max_code {
+                    fill_sat.1 += 1;
+                }
+            }
+        }
+        w
+    });
+    if filled {
+        if let Some(t) = t0 {
+            let dec_ns = t.elapsed().as_nanos() as u64;
+            crate::obs::profiler().add_kernel(dec_ns, 0, bytes, total as u64);
+        }
+        if qsample {
+            qs.add_saturation(fill_sat.0, fill_sat.1);
+        }
+    }
+    got
+}
+
 /// Quantized GEMM over a packed layer: `out[b*rows + r] = Σ_j w[r,j] ·
 /// x[b*cols + j]` with `w` decoded on the fly from `data`.
 ///
@@ -72,6 +172,28 @@ const FILTER_BLOCK: usize = 4;
 /// results are identical to the serial path.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    qgemm_keyed(None, data, bits, scale, rows, cols, x, batch, out, pool)
+}
+
+/// [`qgemm`] with a weight-cache identity: when `key` is set and the
+/// shared cache is enabled, the layer's raw-code f32 matrix is decoded
+/// once per (model generation, layer) and row slices are served from the
+/// arena instead of per-call scratch. Bit-identical to `qgemm` — the
+/// cached rows are produced by the same decode and consumed by the same
+/// dot/affine — so the cache is purely a decode-work eliminator.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_keyed(
+    key: Option<CacheKey>,
     data: &[u8],
     bits: u8,
     scale: f32,
@@ -104,32 +226,48 @@ pub fn qgemm(
     }
     let max_code = ((1u32 << bits) - 1) as f32;
     let row_bytes = (cols * bits as usize).div_ceil(8) as u64;
+    // Whole-layer raw-code matrix out of the shared arena (None = cache
+    // off / unkeyed call → legacy per-row scratch decode below).
+    let layer_bytes = rows as u64 * row_bytes;
+    let cached = cached_f32(key, rows * cols, max_code, prof, qsample, qs, layer_bytes, |w| {
+        for r in 0..rows {
+            let row = &mut w[r * cols..(r + 1) * cols];
+            decode_codes_f32(data, r * cols * bits as usize, bits, row);
+        }
+    });
+    let cached = &cached;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let r0 = blk * ROW_BLOCK;
         let r1 = (r0 + ROW_BLOCK).min(rows);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for r in r0..r1 {
-            let t0 = if prof { Some(Instant::now()) } else { None };
-            decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
-            let t1 = t0.map(|t| {
-                let now = Instant::now();
-                dec_ns += now.duration_since(t).as_nanos() as u64;
-                now
-            });
-            if qsample {
-                // scratch holds RAW codes here (the affine folds out at
-                // write time), so endpoint equality is exact integer math
-                for &c in scratch.iter() {
-                    if c == 0.0 {
-                        sat_lo += 1;
-                    } else if c == max_code {
-                        sat_hi += 1;
+            let wrow: &[f32] = if let Some(w) = cached.as_deref() {
+                // same bytes the scratch decode would produce (filled by
+                // the identical decode_codes_f32 call at cache-fill time)
+                &w[r * cols..(r + 1) * cols]
+            } else {
+                let t0 = if prof { Some(Instant::now()) } else { None };
+                decode_codes_f32(data, r * cols * bits as usize, bits, scratch);
+                if let Some(t) = t0 {
+                    dec_ns += t.elapsed().as_nanos() as u64;
+                }
+                if qsample {
+                    // scratch holds RAW codes here (the affine folds out at
+                    // write time), so endpoint equality is exact integer math
+                    for &c in scratch.iter() {
+                        if c == 0.0 {
+                            sat_lo += 1;
+                        } else if c == max_code {
+                            sat_hi += 1;
+                        }
                     }
                 }
-            }
+                scratch
+            };
+            let t1 = if prof { Some(Instant::now()) } else { None };
             for b in 0..batch {
-                let acc = dot(scratch, &x[b * cols..(b + 1) * cols]);
+                let acc = dot(wrow, &x[b * cols..(b + 1) * cols]);
                 write(b * rows + r, alpha * acc + beta * xsums[b]);
             }
             if let Some(t) = t1 {
@@ -138,7 +276,9 @@ pub fn qgemm(
         }
         if prof {
             let nrows = (r1 - r0) as u64;
-            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nrows * row_bytes, nrows * cols as u64);
+            let (bytes, codes) =
+                if cached.is_some() { (0, 0) } else { (nrows * row_bytes, nrows * cols as u64) };
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, bytes, codes);
         }
         if qsample {
             qs.add_saturation(sat_lo, sat_hi);
@@ -184,6 +324,27 @@ pub fn qgemm(
 /// blocks run in parallel; results are bit-identical to the serial path.
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    qconv2d_keyed(None, data, bits, scale, d, in_h, in_w, x, batch, out, pool)
+}
+
+/// [`qconv2d`] with a weight-cache identity — the conv twin of
+/// [`qgemm_keyed`]: the layer's full raw-code filter bank decodes once
+/// per (model generation, layer) and per-filter slices come out of the
+/// shared arena. Bit-identical to the uncached path.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_keyed(
+    key: Option<CacheKey>,
     data: &[u8],
     bits: u8,
     scale: f32,
@@ -253,30 +414,45 @@ pub fn qconv2d(
     }
     let max_code = ((1u32 << bits) - 1) as f32;
     let filter_bytes = (flen * bits as usize).div_ceil(8) as u64;
+    let layer_bytes = d.out_ch as u64 * filter_bytes;
+    let cached = cached_f32(key, d.out_ch * flen, max_code, prof, qsample, qs, layer_bytes, |w| {
+        for oc in 0..d.out_ch {
+            let fil = &mut w[oc * flen..(oc + 1) * flen];
+            decode_codes_f32(data, oc * flen * bits as usize, bits, fil);
+        }
+    });
+    let cached = &cached;
     let run_block = |blk: usize, scratch: &mut [f32], write: &mut dyn FnMut(usize, f32)| {
         let oc0 = blk * FILTER_BLOCK;
         let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for oc in oc0..oc1 {
-            // decode this filter's kh·kw·in_ch codes exactly once
-            let t0 = if prof { Some(Instant::now()) } else { None };
-            decode_codes_f32(data, oc * flen * bits as usize, bits, scratch);
-            let t1 = t0.map(|t| {
-                let now = Instant::now();
-                dec_ns += now.duration_since(t).as_nanos() as u64;
-                now
-            });
-            if qsample {
-                // raw filter codes, pre-affine — exact endpoint equality
-                for &c in scratch.iter() {
-                    if c == 0.0 {
-                        sat_lo += 1;
-                    } else if c == max_code {
-                        sat_hi += 1;
+            let wfil: &[f32] = if let Some(w) = cached.as_deref() {
+                // cache hit: the arena slice holds the same codes
+                // decode_codes_f32 would produce (it was filled by the
+                // identical call at cache-fill time)
+                &w[oc * flen..(oc + 1) * flen]
+            } else {
+                // decode this filter's kh·kw·in_ch codes exactly once
+                let t0 = if prof { Some(Instant::now()) } else { None };
+                decode_codes_f32(data, oc * flen * bits as usize, bits, scratch);
+                if let Some(t) = t0 {
+                    dec_ns += t.elapsed().as_nanos() as u64;
+                }
+                if qsample {
+                    // raw filter codes, pre-affine — exact endpoint equality
+                    for &c in scratch.iter() {
+                        if c == 0.0 {
+                            sat_lo += 1;
+                        } else if c == max_code {
+                            sat_hi += 1;
+                        }
                     }
                 }
-            }
+                scratch
+            };
+            let t1 = if prof { Some(Instant::now()) } else { None };
             for b in 0..batch {
                 let xb = &x[b * in_elems..(b + 1) * in_elems];
                 for oy in 0..out_h {
@@ -285,7 +461,7 @@ pub fn qconv2d(
                         let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
                         let seg = (kx1 - kx0) * d.in_ch;
                         let acc = window_dot(
-                            scratch, xb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
+                            wfil, xb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
                         );
                         let pos = (b * out_h + oy) * out_w + ox;
                         write(pos * d.out_ch + oc, alpha * acc + beta * psums[pos]);
@@ -298,7 +474,14 @@ pub fn qconv2d(
         }
         if prof {
             let nf = (oc1 - oc0) as u64;
-            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nf * filter_bytes, nf * flen as u64);
+            // cached layers already charged their decode bytes/codes at
+            // fill time; per-block reports count only fresh decodes.
+            let (bytes, codes) = if cached.is_some() {
+                (0, 0)
+            } else {
+                (nf * filter_bytes, nf * flen as u64)
+            };
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, bytes, codes);
         }
         if qsample {
             qs.add_saturation(sat_lo, sat_hi);
@@ -361,6 +544,27 @@ pub fn qgemm_int(
     out: &mut [f32],
     pool: Option<&ThreadPool>,
 ) {
+    qgemm_int_keyed(None, data, bits, scale, rows, cols, x, batch, act, out, pool)
+}
+
+/// [`qgemm_int`] with a weight-cache identity: the layer's u8 code
+/// matrix decodes once per (model generation, layer) into the shared
+/// arena. Bit-identical to the uncached path — the integer row sums and
+/// dots read the exact same u8 codes either way.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int_keyed(
+    key: Option<CacheKey>,
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    act: &ActQuant,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
     assert_eq!(x.len(), batch * cols, "qgemm_int: x shape");
     assert_eq!(out.len(), batch * rows, "qgemm_int: out shape");
     assert!((1..=8).contains(&bits), "qgemm_int: bits {bits}");
@@ -393,32 +597,49 @@ pub fn qgemm_int(
     }
     let max_code = ((1u32 << bits) - 1) as u8;
     let row_bytes = (cols * bits as usize).div_ceil(8) as u64;
+    let layer_bytes = rows as u64 * row_bytes;
+    let cached = cached_u8(key, rows * cols, max_code, prof, qsample, qs, layer_bytes, |w| {
+        for r in 0..rows {
+            let row = &mut w[r * cols..(r + 1) * cols];
+            decode_codes_u8(data, r * cols * bits as usize, bits, row);
+        }
+    });
+    let cached = &cached;
     let run_block = |blk: usize, scratch: &mut [u8], write: &mut dyn FnMut(usize, f32)| {
         let r0 = blk * ROW_BLOCK;
         let r1 = (r0 + ROW_BLOCK).min(rows);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for r in r0..r1 {
-            let t0 = if prof { Some(Instant::now()) } else { None };
-            decode_codes_u8(data, r * cols * bits as usize, bits, scratch);
-            let t1 = t0.map(|t| {
-                let now = Instant::now();
-                dec_ns += now.duration_since(t).as_nanos() as u64;
-                now
-            });
-            if qsample {
-                // raw integer codes: endpoint equality is exact
-                for &c in scratch.iter() {
-                    if c == 0 {
-                        sat_lo += 1;
-                    } else if c == max_code {
-                        sat_hi += 1;
+            let wrow: &[u8] = if let Some(w) = cached.as_deref() {
+                // cache hit: the arena slice holds the same codes
+                // decode_codes_u8 would produce (it was filled by the
+                // identical call at cache-fill time)
+                &w[r * cols..(r + 1) * cols]
+            } else {
+                let t0 = if prof { Some(Instant::now()) } else { None };
+                decode_codes_u8(data, r * cols * bits as usize, bits, scratch);
+                if let Some(t) = t0 {
+                    dec_ns += t.elapsed().as_nanos() as u64;
+                }
+                if qsample {
+                    // raw integer codes: endpoint equality is exact
+                    for &c in scratch.iter() {
+                        if c == 0 {
+                            sat_lo += 1;
+                        } else if c == max_code {
+                            sat_hi += 1;
+                        }
                     }
                 }
-            }
-            let wsum = sum_u8(scratch);
+                scratch
+            };
+            let t1 = if prof { Some(Instant::now()) } else { None };
+            // `wsum` is an exact integer sum, so recomputing it from the
+            // cached row is bit-identical to the scratch-decode path.
+            let wsum = sum_u8(wrow);
             for b in 0..batch {
-                let acc = dot_u8(scratch, &qx[b * cols..(b + 1) * cols]);
+                let acc = dot_u8(wrow, &qx[b * cols..(b + 1) * cols]);
                 write(b * rows + r, af * (acc - 128 * wsum) as f32 + xterms[b]);
             }
             if let Some(t) = t1 {
@@ -427,7 +648,12 @@ pub fn qgemm_int(
         }
         if prof {
             let nrows = (r1 - r0) as u64;
-            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nrows * row_bytes, nrows * cols as u64);
+            let (bytes, codes) = if cached.is_some() {
+                (0, 0)
+            } else {
+                (nrows * row_bytes, nrows * cols as u64)
+            };
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, bytes, codes);
         }
         if qsample {
             qs.add_saturation(sat_lo, sat_hi);
@@ -470,6 +696,25 @@ pub fn qgemm_int(
 /// receptive-field length in place of `cols`.
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_int(
+    data: &[u8],
+    bits: u8,
+    scale: f32,
+    d: &Conv2dDesc,
+    in_h: usize,
+    in_w: usize,
+    x: &[f32],
+    batch: usize,
+    act: &ActQuant,
+    out: &mut [f32],
+    pool: Option<&ThreadPool>,
+) {
+    qconv2d_int_keyed(None, data, bits, scale, d, in_h, in_w, x, batch, act, out, pool)
+}
+
+/// [`qconv2d_int`] with a weight-cache identity — see [`qgemm_int_keyed`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_int_keyed(
+    key: Option<CacheKey>,
     data: &[u8],
     bits: u8,
     scale: f32,
@@ -544,29 +789,42 @@ pub fn qconv2d_int(
     }
     let max_code = ((1u32 << bits) - 1) as u8;
     let filter_bytes = (flen * bits as usize).div_ceil(8) as u64;
+    let layer_bytes = d.out_ch as u64 * filter_bytes;
+    let cached = cached_u8(key, d.out_ch * flen, max_code, prof, qsample, qs, layer_bytes, |w| {
+        for oc in 0..d.out_ch {
+            let fil = &mut w[oc * flen..(oc + 1) * flen];
+            decode_codes_u8(data, oc * flen * bits as usize, bits, fil);
+        }
+    });
+    let cached = &cached;
     let run_block = |blk: usize, scratch: &mut [u8], write: &mut dyn FnMut(usize, f32)| {
         let oc0 = blk * FILTER_BLOCK;
         let oc1 = (oc0 + FILTER_BLOCK).min(d.out_ch);
         let (mut dec_ns, mut mm_ns) = (0u64, 0u64);
         let (mut sat_lo, mut sat_hi) = (0u64, 0u64);
         for oc in oc0..oc1 {
-            // decode this filter's kh·kw·in_ch codes exactly once
-            let t0 = if prof { Some(Instant::now()) } else { None };
-            decode_codes_u8(data, oc * flen * bits as usize, bits, scratch);
-            let t1 = t0.map(|t| {
-                let now = Instant::now();
-                dec_ns += now.duration_since(t).as_nanos() as u64;
-                now
-            });
-            if qsample {
-                for &c in scratch.iter() {
-                    if c == 0 {
-                        sat_lo += 1;
-                    } else if c == max_code {
-                        sat_hi += 1;
+            let wfil: &[u8] = if let Some(w) = cached.as_deref() {
+                // cache hit: same u8 codes the scratch decode would yield
+                &w[oc * flen..(oc + 1) * flen]
+            } else {
+                // decode this filter's kh·kw·in_ch codes exactly once
+                let t0 = if prof { Some(Instant::now()) } else { None };
+                decode_codes_u8(data, oc * flen * bits as usize, bits, scratch);
+                if let Some(t) = t0 {
+                    dec_ns += t.elapsed().as_nanos() as u64;
+                }
+                if qsample {
+                    for &c in scratch.iter() {
+                        if c == 0 {
+                            sat_lo += 1;
+                        } else if c == max_code {
+                            sat_hi += 1;
+                        }
                     }
                 }
-            }
+                scratch
+            };
+            let t1 = if prof { Some(Instant::now()) } else { None };
             for b in 0..batch {
                 let qb = &qx[b * in_elems..(b + 1) * in_elems];
                 for oy in 0..out_h {
@@ -575,7 +833,7 @@ pub fn qconv2d_int(
                         let (kx0, kx1, ix0) = krange(ox, d.stride, d.pad, d.kw, in_w);
                         let seg = (kx1 - kx0) * d.in_ch;
                         let (acc, wsum) = window_dot_u8(
-                            scratch, qb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
+                            wfil, qb, d.kw, in_w, d.in_ch, ky0, ky1, iy0, kx0, ix0, seg,
                         );
                         let pos = (b * out_h + oy) * out_w + ox;
                         write(pos * d.out_ch + oc, af * (acc - 128 * wsum) as f32 + xterms[pos]);
@@ -588,7 +846,12 @@ pub fn qconv2d_int(
         }
         if prof {
             let nf = (oc1 - oc0) as u64;
-            crate::obs::profiler().add_kernel(dec_ns, mm_ns, nf * filter_bytes, nf * flen as u64);
+            let (bytes, codes) = if cached.is_some() {
+                (0, 0)
+            } else {
+                (nf * filter_bytes, nf * flen as u64)
+            };
+            crate::obs::profiler().add_kernel(dec_ns, mm_ns, bytes, codes);
         }
         if qsample {
             qs.add_saturation(sat_lo, sat_hi);
@@ -631,6 +894,10 @@ pub struct ProjWeights {
     pub bits: u8,
     pub scale: f32,
     pub data: Vec<u8>,
+    /// Weight-cache identity for this projection (slot 1..=4 of the
+    /// owning attention layer), stamped by the registry once the model
+    /// generation is known; `None` decodes fresh on every call.
+    pub cache_key: Option<CacheKey>,
 }
 
 impl std::fmt::Debug for ProjWeights {
@@ -639,19 +906,38 @@ impl std::fmt::Debug for ProjWeights {
             .field("bits", &self.bits)
             .field("scale", &self.scale)
             .field("payload_bytes", &self.data.len())
+            .field("cache_key", &self.cache_key)
             .finish()
     }
 }
 
 impl ProjWeights {
     /// Decode the full `d × d` lattice matrix (codes → RoundClamp
-    /// weights). One allocation per projection per `qattention` call —
-    /// the "decode once per generation" contract.
+    /// weights), through the shared weight cache when this projection
+    /// carries a [`CacheKey`] — otherwise one allocation per projection
+    /// per `qattention` call (the "decode once per generation"
+    /// contract).
     ///
     /// When `sat` is given, endpoint codes (0 and `2^bits − 1`) are
     /// tallied into it *before* the affine is applied — post-affine
-    /// float equality would be rounding-unreliable.
-    fn decode(&self, d: usize, sat: Option<&mut (u64, u64)>) -> Vec<f32> {
+    /// float equality would be rounding-unreliable. Cache hits tally
+    /// nothing: saturation was already counted when the entry was
+    /// filled.
+    fn decode(&self, d: usize, mut sat: Option<&mut (u64, u64)>) -> Arc<Vec<f32>> {
+        if let Some(key) = self.cache_key {
+            if weightcache::cache().enabled() {
+                let sat_ref = &mut sat;
+                let got = weightcache::cache()
+                    .get_or_decode_f32(key, || self.decode_fresh(d, sat_ref.take()));
+                if let Some(w) = got {
+                    return w;
+                }
+            }
+        }
+        Arc::new(self.decode_fresh(d, sat))
+    }
+
+    fn decode_fresh(&self, d: usize, sat: Option<&mut (u64, u64)>) -> Vec<f32> {
         let mut w = vec![0f32; d * d];
         decode_codes_f32(&self.data, 0, self.bits, &mut w);
         if let Some(s) = sat {
@@ -1188,7 +1474,7 @@ mod tests {
         let w = g.vec_normal(d * d, 0.4);
         let p = pack_layer("p", &w, bits);
         let wq = unpack_layer(&p).unwrap();
-        (ProjWeights { bits, scale: p.scale, data: p.data }, wq)
+        (ProjWeights { bits, scale: p.scale, data: p.data, cache_key: None }, wq)
     }
 
     #[test]

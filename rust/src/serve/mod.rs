@@ -20,27 +20,37 @@
 //!   {serial, pooled} × {scalar, simd} configurations;
 //! * [`batcher`] — dynamic batching with size- and deadline-triggered
 //!   flush plus queue-capacity admission control;
+//! * [`admission`] — a bounded wait room with per-request deadlines in
+//!   front of the batcher queue, so bursts drain instead of shedding at
+//!   first contact;
+//! * [`weightcache`] — a process-wide LRU arena of decoded weight
+//!   blocks keyed by (model generation, layer), shared across gateway
+//!   replicas under a byte budget;
 //! * [`server`] — the front end wiring model + batcher + [`ServeMetrics`]
 //!   (throughput, p50/p95/p99 latency via `metrics::LatencyHist`).
 //!
 //! ```text
-//! submit(x) ──► bounded queue ──► dispatcher ──► qgemm over packed codes
-//!                  │ (cap)           │ (size | deadline)      │
-//!                  ▼                 ▼                        ▼
-//!             QueueFull          batch of ≤ max_batch    per-request rx
+//! submit(x) ─► admission gate ─► bounded queue ─► dispatcher ─► qgemm
+//!                  │ (wait ≤ deadline) │ (cap)        │ (size | deadline)
+//!                  ▼                   ▼              ▼
+//!          429 expired/shed        QueueFull     batch of ≤ max_batch
 //! ```
 //!
 //! Entry points: `msq serve --model mlp --packed model.msqpack` (CLI,
 //! stdin JSONL or synthetic load) and the `serve_throughput` bench.
 
+pub mod admission;
 pub mod batcher;
 pub mod kernels;
 pub mod registry;
 pub mod server;
+pub mod weightcache;
 
+pub use admission::{Admission, AdmissionConfig, AdmitError};
 pub use batcher::{BatchConfig, DynamicBatcher, InferResponse, SubmitError};
 pub use registry::{
     analyze_packed, resolve_input_dim, LayerAnalysis, LayerKind, ModelAnalysis, ModelRegistry,
     QuantLayer, ServableModel,
 };
 pub use server::{ServeMetrics, Server, ServerConfig};
+pub use weightcache::{CacheKey, WeightCache, WeightCacheStats};

@@ -27,12 +27,14 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::kernels;
 use super::kernels::ProjWeights;
+use super::weightcache::{self, CacheKey};
 use crate::kernels::{axpy, gelu, layernorm_rows, ActQuant, LN_EPS, MAX_INT_DOT_COLS};
 use crate::quant::pack::{BitReader, Conv2dDesc, LayerOp, PackedLayer, PackedModel};
 use crate::util::json::Json;
@@ -172,6 +174,10 @@ pub struct QuantLayer {
     /// [`ServableModel::from_packed`]; the bare linear constructor leaves
     /// the unit default.
     pub act_bound: f32,
+    /// Weight-cache identity `(model generation uid, planned layer
+    /// index)`, stamped by [`ServableModel::from_packed`]. `None` for
+    /// hand-built layers — those decode fresh on every call.
+    cache_id: Option<(u64, u32)>,
     data: Vec<u8>,
 }
 
@@ -241,6 +247,7 @@ impl QuantLayer {
             relu: l.relu,
             gelu: l.gelu,
             act_bound: 1.0,
+            cache_id: None,
             data: l.data.clone(),
         };
         Ok((q, out_shape))
@@ -270,6 +277,7 @@ impl QuantLayer {
                     relu: l.relu,
                     gelu: l.gelu,
                     act_bound: 1.0,
+                    cache_id: None,
                     data: l.data.clone(),
                 },
                 out,
@@ -395,7 +403,12 @@ impl QuantLayer {
                         t.name,
                         t.bits
                     );
-                    Ok(ProjWeights { bits: t.bits, scale: t.scale, data: t.data.clone() })
+                    Ok(ProjWeights {
+                        bits: t.bits,
+                        scale: t.scale,
+                        data: t.data.clone(),
+                        cache_key: None,
+                    })
                 };
                 Ok(structural(
                     LayerKind::Attention {
@@ -422,6 +435,24 @@ impl QuantLayer {
             l.name
         );
         Ok(Self::plan(l, ActShape::Flat(cols))?.0)
+    }
+
+    /// Stamp this layer's weight-cache identity: `(model, layer)` for
+    /// the main code stream (slot 0), slots 1..=4 for an attention
+    /// layer's consumed q/k/v/proj projections. Called once per layer by
+    /// [`ServableModel::from_packed`] after the generation uid is known.
+    fn set_cache_id(&mut self, model: u64, layer: u32) {
+        self.cache_id = Some((model, layer));
+        if let LayerKind::Attention { q, k, v, proj, .. } = &mut self.kind {
+            for (slot, p) in [q, k, v, proj].into_iter().enumerate() {
+                p.cache_key = Some(CacheKey { model, layer, slot: slot as u8 + 1 });
+            }
+        }
+    }
+
+    /// This layer's main-stream cache key (slot 0), if stamped.
+    fn cache_key(&self) -> Option<CacheKey> {
+        self.cache_id.map(|(model, layer)| CacheKey { model, layer, slot: 0 })
     }
 
     /// Features flowing into this layer (per sample).
@@ -521,16 +552,17 @@ impl QuantLayer {
     /// caller; `Residual` is resolved by the executor and never reaches
     /// here.
     pub fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], pool: Option<&ThreadPool>) {
+        let ck = self.cache_key();
         match &self.kind {
-            LayerKind::Linear { rows, cols } => kernels::qgemm(
-                &self.data, self.bits, self.scale, *rows, *cols, x, batch, out, pool,
+            LayerKind::Linear { rows, cols } => kernels::qgemm_keyed(
+                ck, &self.data, self.bits, self.scale, *rows, *cols, x, batch, out, pool,
             ),
-            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d(
-                &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, out, pool,
+            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d_keyed(
+                ck, &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, out, pool,
             ),
             // position-wise linear IS a qgemm with batch·seq rows of cols
-            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm(
-                &self.data, self.bits, self.scale, *rows, *cols, x, batch * seq, out, pool,
+            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm_keyed(
+                ck, &self.data, self.bits, self.scale, *rows, *cols, x, batch * seq, out, pool,
             ),
             LayerKind::SeqView { .. } => out.copy_from_slice(x),
             LayerKind::LayerNorm { rows, cols } => {
@@ -586,15 +618,37 @@ impl QuantLayer {
         out: &mut [f32],
         pool: Option<&ThreadPool>,
     ) {
+        let ck = self.cache_key();
         match &self.kind {
-            LayerKind::Linear { rows, cols } => kernels::qgemm_int(
-                &self.data, self.bits, self.scale, *rows, *cols, x, batch, act, out, pool,
+            LayerKind::Linear { rows, cols } => kernels::qgemm_int_keyed(
+                ck, &self.data, self.bits, self.scale, *rows, *cols, x, batch, act, out, pool,
             ),
-            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm_int(
-                &self.data, self.bits, self.scale, *rows, *cols, x, batch * seq, act, out, pool,
+            LayerKind::LinearSeq { rows, cols, seq } => kernels::qgemm_int_keyed(
+                ck,
+                &self.data,
+                self.bits,
+                self.scale,
+                *rows,
+                *cols,
+                x,
+                batch * seq,
+                act,
+                out,
+                pool,
             ),
-            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d_int(
-                &self.data, self.bits, self.scale, desc, *in_h, *in_w, x, batch, act, out, pool,
+            LayerKind::Conv2d { desc, in_h, in_w, .. } => kernels::qconv2d_int_keyed(
+                ck,
+                &self.data,
+                self.bits,
+                self.scale,
+                desc,
+                *in_h,
+                *in_w,
+                x,
+                batch,
+                act,
+                out,
+                pool,
             ),
             _ => unreachable!("forward_int on a layer without an integer kernel"),
         }
@@ -781,6 +835,11 @@ pub fn analyze_packed(pm: &PackedModel) -> ModelAnalysis {
 /// raw logits out of the last layer.
 pub struct ServableModel {
     pub name: String,
+    /// Process-unique generation id: every load gets a fresh one, so a
+    /// hot-reloaded model never collides with its predecessor's decoded
+    /// blocks in the shared weight cache. `Drop` evicts this
+    /// generation's entries.
+    pub uid: u64,
     pub input_dim: usize,
     pub layers: Vec<QuantLayer>,
     /// Static quantization analysis of the source pack, computed once at
@@ -866,8 +925,16 @@ impl ServableModel {
             shape = next;
             layers.push(q);
         }
+        // one fresh generation uid per load — reloads of the same name
+        // must never alias the old generation's cached decoded blocks
+        static NEXT_UID: AtomicU64 = AtomicU64::new(1);
+        let uid = NEXT_UID.fetch_add(1, Ordering::Relaxed);
+        for (i, q) in layers.iter_mut().enumerate() {
+            q.set_cache_id(uid, i as u32);
+        }
         Ok(ServableModel {
             name: name.to_string(),
+            uid,
             input_dim,
             layers,
             analysis: analyze_packed(pm),
@@ -1034,6 +1101,15 @@ impl ServableModel {
             cur = next;
         }
         Ok(cur)
+    }
+}
+
+impl Drop for ServableModel {
+    /// Retire this generation's decoded blocks from the shared weight
+    /// cache — the last `Arc<ServableModel>` handle going away is
+    /// exactly when no in-flight inference can touch them anymore.
+    fn drop(&mut self) {
+        weightcache::cache().invalidate_model(self.uid);
     }
 }
 
@@ -1706,6 +1782,87 @@ mod tests {
         pm.layers[0].op = LayerOp::LayerNorm;
         let err = ServableModel::from_packed_auto("vit", &pm, None).unwrap_err();
         assert!(format!("{err:#}").contains("token sequence"), "{err:#}");
+    }
+
+    #[test]
+    fn weight_cache_toggle_is_bit_identical() {
+        // the ISSUE acceptance gate: served logits with the decoded-weight
+        // cache on must be bit-identical to the cache-off path, across
+        // linear, attention (all four projections), and structural layers
+        let _wc = weightcache::test_mutex();
+        let c = weightcache::cache();
+        c.clear();
+        let bits = [8u8; 8];
+        let pm = PackedModel::synth_transformer(4, 6, 4, 2, 1, 3, &bits, 5).unwrap();
+        let m = ServableModel::from_packed_auto("wcvit", &pm, None).unwrap();
+        let x = rand_vec(2 * m.input_dim, 17);
+        let cold = m.infer_batch(&x, 2, None).unwrap();
+        c.set_budget_bytes(64 << 20);
+        let fill = m.infer_batch(&x, 2, None).unwrap(); // decodes + fills
+        let hit = m.infer_batch(&x, 2, None).unwrap(); // served from the arena
+        assert_eq!(cold, fill, "cache fill pass must not change the logits");
+        assert_eq!(cold, hit, "cache hit pass must not change the logits");
+        let lin = m
+            .layers
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Linear { .. } | LayerKind::LinearSeq { .. }))
+            .expect("transformer plan has a payload linear");
+        assert!(
+            c.contains(CacheKey { model: m.uid, layer: lin as u32, slot: 0 }),
+            "the linear's decoded block must be resident"
+        );
+        let attn = m
+            .layers
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Attention { .. }))
+            .expect("transformer plan has an attention layer");
+        assert!(
+            c.contains(CacheKey { model: m.uid, layer: attn as u32, slot: 1 }),
+            "the q projection's decoded block must be resident"
+        );
+        c.set_budget_bytes(0);
+        let off = m.infer_batch(&x, 2, None).unwrap();
+        assert_eq!(cold, off, "turning the cache off must restore the legacy path");
+    }
+
+    #[test]
+    fn weight_cache_covers_conv_and_int8_paths() {
+        let _wc = weightcache::test_mutex();
+        let _qs = crate::obs::qstats::test_mutex();
+        let c = weightcache::cache();
+        c.clear();
+        let cpm = PackedModel::synth_conv(8, 8, &[3, 4, 5], &[5, 4], 7).unwrap();
+        let mut m = ServableModel::from_packed_auto("wcconv", &cpm, None).unwrap();
+        let x = rand_vec(2 * m.input_dim, 23);
+        let cold = m.infer_batch(&x, 2, None).unwrap();
+        c.set_budget_bytes(64 << 20);
+        assert_eq!(cold, m.infer_batch(&x, 2, None).unwrap(), "conv fill pass");
+        assert_eq!(cold, m.infer_batch(&x, 2, None).unwrap(), "conv hit pass");
+        // the int path caches u8 codes under the same keys; a domain
+        // mismatch is a miss and the slot is taken over, never a panic
+        m.int8 = true;
+        let int_cached = m.infer_batch(&x, 2, None).unwrap();
+        assert_eq!(int_cached, m.infer_batch(&x, 2, None).unwrap(), "int hit pass");
+        c.set_budget_bytes(0);
+        let int_plain = m.infer_batch(&x, 2, None).unwrap();
+        assert_eq!(int_cached, int_plain, "cached int path must match the legacy int path");
+    }
+
+    #[test]
+    fn dropping_a_model_retires_its_cache_generation() {
+        let _wc = weightcache::test_mutex();
+        let c = weightcache::cache();
+        c.clear();
+        c.set_budget_bytes(64 << 20);
+        let pm = toy_model(12, 8, 4);
+        let m = ServableModel::from_packed("wcdrop", &pm, 12).unwrap();
+        let x = rand_vec(2 * 12, 19);
+        let _ = m.infer_batch(&x, 2, None).unwrap();
+        let k0 = CacheKey { model: m.uid, layer: 0, slot: 0 };
+        assert!(c.contains(k0), "inference must fill the arena");
+        drop(m);
+        assert!(!c.contains(k0), "drop must invalidate the generation");
+        c.set_budget_bytes(0);
     }
 
     #[test]

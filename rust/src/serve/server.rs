@@ -18,6 +18,7 @@ use crate::util::json::Json;
 use crate::util::stats::Running;
 use crate::util::threadpool::ThreadPool;
 
+use super::admission::{Admission, AdmissionConfig, AdmitError};
 use super::batcher::{BatchConfig, BatchFn, DynamicBatcher, InferResponse, SubmitError};
 use super::registry::ServableModel;
 
@@ -28,6 +29,13 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Worker threads for row-parallel kernels (0 = machine default).
     pub threads: usize,
+    /// Admission wait-room cap (`--queue-depth`): how many requests may
+    /// wait for a batcher slot when the queue is full. 0 = legacy
+    /// immediate shed.
+    pub admit_wait: usize,
+    /// How long a waiting request may poll before expiring with 429
+    /// (`--admit-deadline-ms`). Only meaningful with `admit_wait > 0`.
+    pub admit_deadline: Duration,
 }
 
 impl Default for ServerConfig {
@@ -37,6 +45,8 @@ impl Default for ServerConfig {
             max_delay: Duration::from_millis(5),
             queue_cap: 1024,
             threads: 0,
+            admit_wait: 0,
+            admit_deadline: Duration::from_millis(100),
         }
     }
 }
@@ -195,6 +205,9 @@ impl Default for ServeMetrics {
 pub struct Server {
     pub model: Arc<ServableModel>,
     pub metrics: Arc<ServeMetrics>,
+    /// The admission gate in front of the batcher queue (public so the
+    /// gateway can render `msq_admission_*` from its counters).
+    pub admission: Admission,
     batcher: DynamicBatcher,
 }
 
@@ -233,7 +246,11 @@ impl Server {
             queue_cap: cfg.queue_cap.max(1),
         };
         let batcher = DynamicBatcher::with_hook(batch_cfg, run, Some(hook));
-        Server { model, metrics, batcher }
+        let admission = Admission::new(AdmissionConfig {
+            wait_cap: cfg.admit_wait,
+            deadline: cfg.admit_deadline,
+        });
+        Server { model, metrics, admission, batcher }
     }
 
     /// Validate + enqueue; the receiver yields this request's response.
@@ -249,6 +266,37 @@ impl Server {
         self.batcher.submit(input).map_err(|e| {
             self.metrics.record_reject();
             e
+        })
+    }
+
+    /// [`Self::submit`] behind the admission gate: a queue-full request
+    /// may wait (bounded in population and time by the server's
+    /// [`AdmissionConfig`]) for a slot instead of shedding instantly.
+    /// Expired and shed waiters surface as `QueueFull` so the HTTP
+    /// layer's 429 + `Retry-After` mapping is unchanged. With the
+    /// default `admit_wait == 0` this is exactly `submit`.
+    pub fn submit_admit(&self, input: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        self.metrics.record_submit();
+        if input.len() != self.model.input_dim {
+            self.metrics.record_reject();
+            return Err(SubmitError::BadInput { got: input.len(), want: self.model.input_dim });
+        }
+        let mut held = Some(input);
+        let res = self.admission.admit(|| {
+            let x = held.take().expect("input is replaced on every retryable failure");
+            self.batcher.try_submit(x).map_err(|(e, x)| {
+                held = Some(x);
+                e
+            })
+        });
+        res.map_err(|e| {
+            self.metrics.record_reject();
+            match e {
+                AdmitError::Expired { depth, cap, .. } | AdmitError::Shed { depth, cap } => {
+                    SubmitError::QueueFull { depth, cap }
+                }
+                AdmitError::Fatal(e) => e,
+            }
         })
     }
 
@@ -289,6 +337,21 @@ mod tests {
             max_delay: Duration::from_millis(2),
             queue_cap,
             threads: 2,
+            ..Default::default()
+        };
+        Server::start(model, cfg)
+    }
+
+    fn toy_server_admit(queue_cap: usize, admit_wait: usize) -> Server {
+        let pm = PackedModel::synth_mlp(&[6, 8, 3], &[4, 3], 3).unwrap();
+        let model = Arc::new(ServableModel::from_packed("toy", &pm, 6).unwrap());
+        let cfg = ServerConfig {
+            max_batch: 2,
+            max_delay: Duration::from_millis(1),
+            queue_cap,
+            threads: 1,
+            admit_wait,
+            admit_deadline: Duration::from_millis(500),
         };
         Server::start(model, cfg)
     }
@@ -320,6 +383,45 @@ mod tests {
         assert_eq!(s.metrics.rejected(), 1);
         assert_eq!(s.metrics.completed(), 0);
         s.shutdown();
+    }
+
+    #[test]
+    fn admission_rides_out_queue_pressure_and_conserves_counts() {
+        // queue of 1 against 4 hammering threads: without the wait room
+        // most submits would shed; with it, waiters drain through and
+        // the conservation invariant still closes exactly.
+        let s = Arc::new(toy_server_admit(1, 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let sv = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut r = Rng::new(40 + t);
+                let mut got = 0u32;
+                for _ in 0..25 {
+                    let x: Vec<f32> = (0..6).map(|_| r.normal()).collect();
+                    match sv.submit_admit(x) {
+                        Ok(rx) => {
+                            rx.recv().expect("admitted request must get its response");
+                            got += 1;
+                        }
+                        Err(SubmitError::QueueFull { .. }) => {}
+                        Err(e) => panic!("unexpected: {e:?}"),
+                    }
+                }
+                got
+            }));
+        }
+        let ok: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(ok > 0, "waiters must make progress");
+        let m = &s.metrics;
+        assert_eq!(m.submitted(), 100);
+        assert_eq!(m.completed() + m.rejected(), m.submitted());
+        let a = &s.admission.metrics;
+        assert_eq!(a.admitted(), u64::from(ok));
+        assert_eq!(a.admitted() + a.expired() + a.shed(), 100);
+        assert_eq!(a.waiting(), 0, "wait room must be empty after the storm");
+        assert_eq!(s.queue_depth(), 0, "every admitted request was drained");
+        Arc::try_unwrap(s).ok().expect("all clones joined").shutdown();
     }
 
     #[test]

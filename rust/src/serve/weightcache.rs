@@ -1,0 +1,437 @@
+//! Shared decoded-weight cache: decode each hot layer once per model
+//! generation, not once per request block.
+//!
+//! Serving kernels decode n-bit weight codes on every call — `qgemm`
+//! re-inflates each row per request, `qattention` re-inflates four
+//! projection matrices per batch. With N accept-loop replicas hammering
+//! the same models, that decode work is pure duplication. This module is
+//! a process-wide arena keyed by `(model generation uid, layer, slot)`:
+//! the float path caches the raw-code f32 matrix (pre-affine, exactly
+//! the bytes the per-row decode would have produced), the `--int8` path
+//! caches the u8 code matrix, and attention caches each projection's
+//! post-affine weights. Entries are LRU-evicted under a byte budget
+//! (`--weight-cache-mb`); a model's entries die with it via
+//! `invalidate_model` from `ServableModel::drop`, so a hot reload never
+//! serves stale weights.
+//!
+//! Bit-identity: a cached matrix is filled by the *same*
+//! `decode_codes_f32` / `decode_codes_u8` calls the uncached path runs,
+//! and consumers read the same row slices they would have decoded into
+//! scratch — the arithmetic downstream is unchanged, so cache on/off
+//! logits are bit-identical (pinned by a registry toggle test). The only
+//! observable difference is telemetry: decode-time profiling and
+//! saturation sampling happen at fill, not on every hit.
+//!
+//! Budget 0 (the default) disables the cache entirely: `get_*` returns
+//! `None` without taking any lock and kernels run their legacy path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::metrics::Prom;
+use crate::util::json::Json;
+
+/// Identity of one cacheable weight block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Model generation uid (`ServableModel::uid`) — fresh per load, so
+    /// a hot reload changes every key and never aliases old weights.
+    pub model: u64,
+    /// Planned layer index within the model.
+    pub layer: u32,
+    /// Sub-slot: 0 = the layer's main payload, 1..=4 = attention
+    /// q/k/v/proj projections.
+    pub slot: u8,
+}
+
+enum CacheVal {
+    F32(Arc<Vec<f32>>),
+    U8(Arc<Vec<u8>>),
+}
+
+impl CacheVal {
+    fn bytes(&self) -> usize {
+        match self {
+            CacheVal::F32(v) => v.len() * std::mem::size_of::<f32>(),
+            CacheVal::U8(v) => v.len(),
+        }
+    }
+}
+
+struct Entry {
+    val: CacheVal,
+    /// Last-touch tick for LRU eviction (global monotonic counter).
+    tick: AtomicU64,
+}
+
+#[derive(Default)]
+struct Arena {
+    map: HashMap<CacheKey, Entry>,
+    bytes: usize,
+}
+
+/// The process-wide decoded-weight arena. Obtain via [`cache`].
+pub struct WeightCache {
+    inner: RwLock<Arena>,
+    /// Byte budget; 0 = disabled (checked lock-free on the hot path).
+    budget: AtomicUsize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Point-in-time counters for `/debug/stats` and tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WeightCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget: usize,
+}
+
+/// The global cache singleton (same idiom as `obs::profiler`).
+pub fn cache() -> &'static WeightCache {
+    static CACHE: OnceLock<WeightCache> = OnceLock::new();
+    CACHE.get_or_init(|| WeightCache {
+        inner: RwLock::new(Arena::default()),
+        budget: AtomicUsize::new(0),
+        tick: AtomicU64::new(0),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+        inserts: AtomicU64::new(0),
+        evictions: AtomicU64::new(0),
+    })
+}
+
+impl WeightCache {
+    /// Set the byte budget. Shrinking (including to 0 = off) evicts down
+    /// to the new budget immediately.
+    pub fn set_budget_bytes(&self, bytes: usize) {
+        self.budget.store(bytes, Ordering::Release);
+        let mut g = self.inner.write().unwrap();
+        while g.bytes > bytes {
+            self.evict_lru(&mut g);
+        }
+    }
+
+    /// Convenience for the `--weight-cache-mb` flag.
+    pub fn set_budget_mb(&self, mb: usize) {
+        self.set_budget_bytes(mb.saturating_mul(1 << 20));
+    }
+
+    /// Lock-free fast gate: is caching on at all?
+    pub fn enabled(&self) -> bool {
+        self.budget.load(Ordering::Acquire) > 0
+    }
+
+    /// Fetch the f32 block for `key`, decoding via `make` on a miss.
+    /// Returns `None` when the cache is disabled (caller runs its
+    /// legacy scratch-decode path). `make` runs outside any lock, so
+    /// two concurrent misses may both decode; last insert wins.
+    pub fn get_or_decode_f32(
+        &self,
+        key: CacheKey,
+        make: impl FnOnce() -> Vec<f32>,
+    ) -> Option<Arc<Vec<f32>>> {
+        if !self.enabled() {
+            return None;
+        }
+        if let Some(CacheVal::F32(v)) = self.lookup(key, |v| matches!(v, CacheVal::F32(_))) {
+            return Some(v);
+        }
+        let v = Arc::new(make());
+        self.insert(key, CacheVal::F32(v.clone()));
+        Some(v)
+    }
+
+    /// u8 twin of [`Self::get_or_decode_f32`] for the `--int8` path.
+    pub fn get_or_decode_u8(
+        &self,
+        key: CacheKey,
+        make: impl FnOnce() -> Vec<u8>,
+    ) -> Option<Arc<Vec<u8>>> {
+        if !self.enabled() {
+            return None;
+        }
+        if let Some(CacheVal::U8(v)) = self.lookup(key, |v| matches!(v, CacheVal::U8(_))) {
+            return Some(v);
+        }
+        let v = Arc::new(make());
+        self.insert(key, CacheVal::U8(v.clone()));
+        Some(v)
+    }
+
+    /// Drop every entry belonging to model generation `model`. Called
+    /// from `ServableModel::drop`; cheap no-op when the arena is empty.
+    pub fn invalidate_model(&self, model: u64) {
+        {
+            let g = self.inner.read().unwrap();
+            if g.map.is_empty() {
+                return;
+            }
+        }
+        let mut g = self.inner.write().unwrap();
+        let dead: Vec<CacheKey> = g.map.keys().filter(|k| k.model == model).copied().collect();
+        for k in dead {
+            if let Some(e) = g.map.remove(&k) {
+                g.bytes -= e.val.bytes();
+            }
+        }
+    }
+
+    /// Drop everything (budget unchanged). Test hygiene.
+    pub fn clear(&self) {
+        let mut g = self.inner.write().unwrap();
+        g.map.clear();
+        g.bytes = 0;
+    }
+
+    pub fn stats(&self) -> WeightCacheStats {
+        let g = self.inner.read().unwrap();
+        WeightCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: g.map.len(),
+            bytes: g.bytes,
+            budget: self.budget.load(Ordering::Acquire),
+        }
+    }
+
+    /// Render the `msq_weight_cache_*` families into a scrape.
+    pub fn render(&self, p: &mut Prom) {
+        let s = self.stats();
+        p.family(
+            "msq_weight_cache_enabled",
+            "gauge",
+            "1 when a decoded-weight cache budget is set",
+        );
+        p.sample("msq_weight_cache_enabled", &[], if s.budget > 0 { 1.0 } else { 0.0 });
+        p.family("msq_weight_cache_budget_bytes", "gauge", "Decoded-weight cache byte budget");
+        p.sample("msq_weight_cache_budget_bytes", &[], s.budget as f64);
+        p.family("msq_weight_cache_bytes", "gauge", "Decoded-weight cache resident bytes");
+        p.sample("msq_weight_cache_bytes", &[], s.bytes as f64);
+        p.family("msq_weight_cache_entries", "gauge", "Decoded-weight cache resident entries");
+        p.sample("msq_weight_cache_entries", &[], s.entries as f64);
+        p.family("msq_weight_cache_hits_total", "counter", "Decoded-weight cache hits");
+        p.sample("msq_weight_cache_hits_total", &[], s.hits as f64);
+        p.family(
+            "msq_weight_cache_misses_total",
+            "counter",
+            "Decoded-weight cache misses (decode + fill)",
+        );
+        p.sample("msq_weight_cache_misses_total", &[], s.misses as f64);
+        p.family(
+            "msq_weight_cache_evictions_total",
+            "counter",
+            "Decoded-weight cache LRU evictions",
+        );
+        p.sample("msq_weight_cache_evictions_total", &[], s.evictions as f64);
+        p.family("msq_weight_cache_inserts_total", "counter", "Decoded-weight cache fills");
+        p.sample("msq_weight_cache_inserts_total", &[], s.inserts as f64);
+    }
+
+    /// JSON view for `/debug/stats`.
+    pub fn to_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("enabled", Json::Bool(s.budget > 0)),
+            ("budget_bytes", Json::Num(s.budget as f64)),
+            ("bytes", Json::Num(s.bytes as f64)),
+            ("entries", Json::Num(s.entries as f64)),
+            ("hits", Json::Num(s.hits as f64)),
+            ("misses", Json::Num(s.misses as f64)),
+            ("evictions", Json::Num(s.evictions as f64)),
+            ("inserts", Json::Num(s.inserts as f64)),
+        ])
+    }
+
+    /// Whether `key` is resident right now (no LRU touch, no counter
+    /// bumps). Test-only observability — concurrent tests make global
+    /// entry counts racy, but a specific key's residency is exact.
+    #[doc(hidden)]
+    pub fn contains(&self, key: CacheKey) -> bool {
+        self.inner.read().unwrap().map.contains_key(&key)
+    }
+
+    fn lookup(&self, key: CacheKey, want: impl Fn(&CacheVal) -> bool) -> Option<CacheVal> {
+        let g = self.inner.read().unwrap();
+        if let Some(e) = g.map.get(&key) {
+            if want(&e.val) {
+                e.tick.store(self.tick.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(match &e.val {
+                    CacheVal::F32(v) => CacheVal::F32(v.clone()),
+                    CacheVal::U8(v) => CacheVal::U8(v.clone()),
+                });
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    fn insert(&self, key: CacheKey, val: CacheVal) {
+        let budget = self.budget.load(Ordering::Acquire);
+        let bytes = val.bytes();
+        if bytes > budget {
+            // Uncacheable block: bigger than the whole budget. The
+            // caller still gets its Arc; we just never retain it.
+            return;
+        }
+        let mut g = self.inner.write().unwrap();
+        if let Some(old) = g.map.remove(&key) {
+            g.bytes -= old.val.bytes();
+        }
+        while g.bytes + bytes > budget {
+            self.evict_lru(&mut g);
+        }
+        g.bytes += bytes;
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        g.map.insert(key, Entry { val, tick: AtomicU64::new(tick) });
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn evict_lru(&self, g: &mut Arena) {
+        let victim = g
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.tick.load(Ordering::Relaxed))
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                if let Some(e) = g.map.remove(&k) {
+                    g.bytes -= e.val.bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => g.bytes = 0,
+        }
+    }
+}
+
+/// Serializes tests that flip the global cache budget; same idiom as
+/// `obs::qstats::test_mutex`. Production code never calls this.
+#[doc(hidden)]
+pub fn test_mutex() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    M.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(model: u64, layer: u32) -> CacheKey {
+        CacheKey { model, layer, slot: 0 }
+    }
+
+    /// Reset to a known state under the test mutex.
+    fn fresh(budget: usize) -> &'static WeightCache {
+        let c = cache();
+        c.clear();
+        c.set_budget_bytes(budget);
+        c
+    }
+
+    #[test]
+    fn disabled_cache_returns_none_and_decodes_nothing() {
+        let _g = test_mutex();
+        let c = fresh(0);
+        let mut ran = false;
+        let got = c.get_or_decode_f32(key(1, 0), || {
+            ran = true;
+            vec![1.0]
+        });
+        assert!(got.is_none());
+        assert!(!ran, "make must not run when the cache is off");
+    }
+
+    #[test]
+    fn second_lookup_hits_without_redecoding() {
+        let _g = test_mutex();
+        let c = fresh(1 << 20);
+        let h0 = c.stats().hits;
+        let a = c.get_or_decode_f32(key(2, 0), || vec![1.0, 2.0]).unwrap();
+        let b = c.get_or_decode_f32(key(2, 0), || panic!("hit must not decode")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit returns the shared arc");
+        assert_eq!(c.stats().hits, h0 + 1);
+        c.set_budget_bytes(0);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_under_budget_pressure() {
+        let _g = test_mutex();
+        // room for two 40-byte entries
+        let c = fresh(80);
+        c.get_or_decode_f32(key(3, 0), || vec![0.0; 10]).unwrap();
+        c.get_or_decode_f32(key(3, 1), || vec![0.0; 10]).unwrap();
+        // touch layer 0 so layer 1 is coldest
+        c.get_or_decode_f32(key(3, 0), || panic!("must hit")).unwrap();
+        c.get_or_decode_f32(key(3, 2), || vec![0.0; 10]).unwrap();
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert!(s.bytes <= 80);
+        // layer 1 was evicted; layer 0 survives
+        c.get_or_decode_f32(key(3, 0), || panic!("hot entry was evicted")).unwrap();
+        c.get_or_decode_f32(key(3, 1), || vec![0.0; 10]).unwrap(); // refill = miss
+        assert!(c.stats().evictions >= 2);
+        c.set_budget_bytes(0);
+    }
+
+    #[test]
+    fn invalidate_model_drops_only_that_generation() {
+        let _g = test_mutex();
+        let c = fresh(1 << 20);
+        c.get_or_decode_f32(key(10, 0), || vec![0.0; 4]).unwrap();
+        c.get_or_decode_u8(CacheKey { model: 10, layer: 1, slot: 0 }, || vec![0u8; 4]).unwrap();
+        c.get_or_decode_f32(key(11, 0), || vec![0.0; 4]).unwrap();
+        c.invalidate_model(10);
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 16);
+        c.get_or_decode_f32(key(11, 0), || panic!("other model must survive")).unwrap();
+        c.set_budget_bytes(0);
+    }
+
+    #[test]
+    fn domain_mismatch_is_a_miss_not_a_panic() {
+        let _g = test_mutex();
+        let c = fresh(1 << 20);
+        c.get_or_decode_f32(key(20, 0), || vec![1.0; 4]).unwrap();
+        // same key, int domain: must re-decode and take over the slot
+        let v = c.get_or_decode_u8(key(20, 0), || vec![7u8; 4]).unwrap();
+        assert_eq!(v.as_slice(), &[7u8; 4]);
+        c.set_budget_bytes(0);
+    }
+
+    #[test]
+    fn oversize_blocks_pass_through_without_insert() {
+        let _g = test_mutex();
+        let c = fresh(16);
+        let v = c.get_or_decode_f32(key(30, 0), || vec![0.0; 100]).unwrap();
+        assert_eq!(v.len(), 100);
+        assert_eq!(c.stats().entries, 0);
+        c.set_budget_bytes(0);
+    }
+
+    #[test]
+    fn shrinking_budget_evicts_immediately() {
+        let _g = test_mutex();
+        let c = fresh(1 << 20);
+        for l in 0..4 {
+            c.get_or_decode_f32(key(40, l), || vec![0.0; 10]).unwrap();
+        }
+        assert_eq!(c.stats().entries, 4);
+        c.set_budget_bytes(80);
+        assert!(c.stats().bytes <= 80);
+        c.set_budget_bytes(0);
+        assert_eq!(c.stats().entries, 0);
+    }
+}

@@ -61,6 +61,7 @@ fn serve_cfg() -> ServerConfig {
         max_delay: Duration::from_millis(1),
         queue_cap: 1024,
         threads: 2,
+        ..Default::default()
     }
 }
 
@@ -265,6 +266,7 @@ fn gateway_backpressure_maps_queue_full_to_429() {
                 max_delay: Duration::from_secs(600),
                 queue_cap: 2,
                 threads: 1,
+                ..Default::default()
             },
             ..Default::default()
         },

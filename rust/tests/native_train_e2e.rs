@@ -91,6 +91,7 @@ fn native_train_prune_pack_serve_loop() {
             max_delay: Duration::from_millis(2),
             queue_cap: 64,
             threads: 2,
+            ..Default::default()
         },
     );
     let mut rng = Rng::new(3);
@@ -236,6 +237,7 @@ fn native_conv_train_pack_serve_loop() {
             max_delay: Duration::from_millis(2),
             queue_cap: 64,
             threads: 2,
+            ..Default::default()
         },
     );
     for _ in 0..10 {

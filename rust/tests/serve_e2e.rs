@@ -34,6 +34,7 @@ fn packed_file_serves_end_to_end() {
             max_delay: Duration::from_millis(2),
             queue_cap: 256,
             threads: 2,
+            ..Default::default()
         },
     );
 
